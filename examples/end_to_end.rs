@@ -1,0 +1,170 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Proves every layer composes:
+//!
+//! 1. **L1/L2 (build time)** — `make artifacts` lowered the Pallas matvec +
+//!    encode kernels through JAX to HLO text;
+//! 2. **runtime** — this binary loads `artifacts/manifest.txt`, compiles the
+//!    modules on the PJRT CPU client;
+//! 3. **L3** — the coordinator encodes a real data matrix **through the AOT
+//!    encode executable**, serves a batch of matvec requests over worker
+//!    threads with injected heterogeneous straggle (each worker computing
+//!    through the AOT matvec executable), decodes each answer from the first
+//!    `k` rows, and verifies against the direct product.
+//!
+//! Reports the latency distribution and compares the proposed allocation
+//! against uniform allocation on the same live system. Falls back with a
+//! clear message if artifacts are missing.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use hetcoded::allocation::{proposed_allocation, uniform_allocation};
+use hetcoded::coding::{Generator, GeneratorKind, Matrix};
+use hetcoded::coordinator::{serve_requests, JobConfig, XlaService};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use hetcoded::runtime::DEFAULT_ARTIFACT_DIR;
+use std::sync::Arc;
+
+const K: usize = 256; // must match the encode artifact's k
+const D: usize = 256; // must match artifact d
+const REQUESTS: usize = 16;
+
+fn main() -> hetcoded::Result<()> {
+    // 24 workers across three heterogeneity tiers.
+    let spec = ClusterSpec::new(
+        vec![
+            Group::new(6, 8.0, 1.0)?,
+            Group::new(8, 4.0, 1.0)?,
+            Group::new(10, 1.0, 1.0)?,
+        ],
+        K,
+    )?;
+
+    let svc = match XlaService::new(DEFAULT_ARTIFACT_DIR.into()) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("cannot load AOT artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "loaded AOT artifacts (d={}); backend = PJRT CPU via xla crate",
+        svc.cols()
+    );
+
+    // Real data matrix + requests.
+    let mut rng = Rng::new(99);
+    let a = Matrix::from_fn(K, D, |_, _| rng.normal());
+    let requests: Vec<Vec<f64>> = (0..REQUESTS)
+        .map(|_| (0..D).map(|_| rng.normal()).collect())
+        .collect();
+
+    // Allocations to compare on the same live system.
+    let proposed = proposed_allocation(LatencyModel::A, &spec)?;
+    let uniform = uniform_allocation(LatencyModel::A, &spec, proposed.n)?;
+    let cfg = JobConfig { time_scale: 0.05, seed: 31, ..Default::default() };
+
+    // Setup-time encode through the AOT encode executable: pad G up to the
+    // artifact's (n=1024, k=256) shape, run Ã = G·A on PJRT, and verify
+    // against the native encode.
+    let (en, ek, _ed) = (1024usize, K, D); // aot.py defaults
+    let n_int = proposed.integer_n(&spec);
+    assert!(n_int <= en, "allocation n={n_int} exceeds encode artifact n={en}");
+    let gen = Generator::new(GeneratorKind::SystematicRandom, n_int, K, 5)?;
+    let mut gpad = Matrix::zeros(en, ek);
+    for i in 0..n_int {
+        for j in 0..K {
+            gpad[(i, j)] = gen.matrix()[(i, j)];
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let coded = svc.encode(&gpad, &a)?;
+    let native = gpad.matmul(&a);
+    let mut enc_err = 0.0f64;
+    for i in 0..en {
+        for j in 0..D {
+            enc_err = enc_err.max((coded[(i, j)] - native[(i, j)]).abs());
+        }
+    }
+    println!(
+        "AOT encode: G({en}x{ek}) @ A({K}x{D}) on PJRT in {:.1} ms, \
+         max |err| vs native = {enc_err:.2e}",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    assert!(enc_err < 1e-2, "encode error too large");
+
+    for (name, alloc) in [("proposed", &proposed), ("uniform(n*)", &uniform)] {
+        let n_int = alloc.integer_n(&spec);
+        let report =
+            serve_requests(&spec, alloc, &a, &requests, svc.clone() as _, &cfg)?;
+        println!("\n[{name}] n={} rate={:.3}", n_int, K as f64 / n_int as f64);
+        println!("  {}", report.recorder.report());
+        println!("  worst decode error: {:.2e}", report.worst_error);
+        assert!(
+            report.worst_error < 1e-2,
+            "decode error too large (f32 artifact path)"
+        );
+        let mean_model: f64 = report
+            .jobs
+            .iter()
+            .filter_map(|j| j.model_latency)
+            .sum::<f64>()
+            / report.jobs.len() as f64;
+        println!(
+            "  mean model-time latency: {:.4} (bound T* = {})",
+            mean_model,
+            alloc
+                .latency_bound
+                .map_or("-".into(), |b| format!("{b:.4}"))
+        );
+    }
+    // Pipelined serving: all requests in flight concurrently — the
+    // throughput view. Shown with the native backend (the PJRT service is a
+    // single thread on this box, so overlapping pays off when straggle, not
+    // compute, dominates — the regime the paper models).
+    let native: Arc<dyn hetcoded::coordinator::Compute> =
+        Arc::new(hetcoded::coordinator::NativeCompute);
+    let t_seq = std::time::Instant::now();
+    let seq = serve_requests(&spec, &proposed, &a, &requests, native.clone(), &cfg)?;
+    let seq_makespan = t_seq.elapsed();
+    let pip = hetcoded::coordinator::serve_requests_pipelined(
+        &spec, &proposed, &a, &requests, native, &cfg,
+    )?;
+    let makespan = pip.makespan.unwrap();
+    println!(
+        "\n[pipelined, native backend] {} requests: makespan {:.1} ms \
+         ({:.0} req/s) vs sequential {:.1} ms ({:.1}x)",
+        requests.len(),
+        makespan.as_secs_f64() * 1e3,
+        requests.len() as f64 / makespan.as_secs_f64(),
+        seq_makespan.as_secs_f64() * 1e3,
+        seq_makespan.as_secs_f64() / makespan.as_secs_f64(),
+    );
+    assert!(pip.worst_error.max(seq.worst_error) < 1e-8);
+
+    // Batched serving: 8 requests share ONE dispatch per worker — the
+    // straggle penalty is paid once for the whole batch and each worker's
+    // contraction is the MXU-shaped (l_i × d)·(d × 8) batched artifact.
+    let batch: Vec<Vec<f64>> = requests[..8].to_vec();
+    let t0 = std::time::Instant::now();
+    let reports = hetcoded::coordinator::run_job_batched(
+        &spec, &proposed, &a, &batch, svc.clone() as _, &cfg,
+    )?;
+    let batch_wall = t0.elapsed();
+    let worst = reports.iter().map(|r| r.max_error).fold(0.0f64, f64::max);
+    println!(
+        "\n[batched] {} requests in one coded job: {:.1} ms total \
+         ({:.1} ms per request), worst decode error {:.1e}",
+        reports.len(),
+        batch_wall.as_secs_f64() * 1e3,
+        batch_wall.as_secs_f64() * 1e3 / reports.len() as f64,
+        worst
+    );
+    assert!(worst < 1e-2);
+
+    println!("\nend_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Fully-heterogeneous fleet (paper footnote 1): every worker has its own
+//! `(μ_i, α_i)`. We cluster workers into G groups with the in-repo k-means,
+//! apply the proposed allocation to the clustered model, and Monte-Carlo
+//! compare against (a) uniform allocation and (b) the allocation computed
+//! from the true (oracle) group structure.
+//!
+//! ```sh
+//! cargo run --release --example heterogeneous_fleet [G]
+//! ```
+
+use hetcoded::allocation::{proposed_allocation, uniform_allocation};
+use hetcoded::math::Rng;
+use hetcoded::model::clustering::{cluster_workers, WorkerParams};
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use hetcoded::sim::{latency_any_k, SimConfig};
+
+fn main() -> hetcoded::Result<()> {
+    let g: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let k = 10_000usize;
+
+    // A fleet drawn from 4 latent tiers with 15% per-worker jitter.
+    let tiers = [(150usize, 16.0, 1.0), (250, 8.0, 1.0), (300, 4.0, 1.2), (300, 1.0, 1.5)];
+    let mut rng = Rng::new(42);
+    let mut fleet = Vec::new();
+    for &(n, mu, alpha) in &tiers {
+        for _ in 0..n {
+            fleet.push(WorkerParams {
+                mu: mu * (1.0 + 0.15 * (rng.next_f64() - 0.5)),
+                alpha: alpha * (1.0 + 0.15 * (rng.next_f64() - 0.5)),
+            });
+        }
+    }
+    println!("fleet: {} fully-heterogeneous workers, clustering into G={g}", fleet.len());
+
+    // Cluster and build the approximate group model.
+    let (groups, _assign) = cluster_workers(&fleet, g, 7)?;
+    let spec = ClusterSpec::new(groups.clone(), k)?;
+    for (j, grp) in spec.groups.iter().enumerate() {
+        println!(
+            "  cluster {j}: {} workers, centroid mu={:.2} alpha={:.2}",
+            grp.n, grp.mu, grp.alpha
+        );
+    }
+
+    // Oracle model: the true tiers.
+    let oracle = ClusterSpec::new(
+        tiers
+            .iter()
+            .map(|&(n, mu, alpha)| Group { n, mu, alpha })
+            .collect(),
+        k,
+    )?;
+
+    let cfg = SimConfig { samples: 10_000, seed: 11, threads: 0 };
+    let clustered_alloc = proposed_allocation(LatencyModel::A, &spec)?;
+    let oracle_alloc = proposed_allocation(LatencyModel::A, &oracle)?;
+    let uniform = uniform_allocation(LatencyModel::A, &oracle, oracle_alloc.n)?;
+
+    // Evaluate ALL allocations on the ORACLE model (the "real" cluster):
+    // map each clustered load to the oracle groups by rank (both sorted by
+    // mu descending get the fast-group loads).
+    let mapped = map_loads_by_mu(&spec, &clustered_alloc.loads, &oracle);
+    let l_clustered = latency_any_k(&oracle, &mapped, LatencyModel::A, &cfg)?;
+    let l_oracle = latency_any_k(&oracle, &oracle_alloc.loads, LatencyModel::A, &cfg)?;
+    let l_uniform = latency_any_k(&oracle, &uniform.loads, LatencyModel::A, &cfg)?;
+
+    println!("\nexpected latency on the true cluster (10k samples):");
+    println!("  proposed w/ oracle groups   : {:.5e}", l_oracle.mean());
+    println!("  proposed w/ k-means groups  : {:.5e}", l_clustered.mean());
+    println!("  uniform (same n*)           : {:.5e}", l_uniform.mean());
+    let penalty = (l_clustered.mean() - l_oracle.mean()) / l_oracle.mean();
+    let gain = (l_uniform.mean() - l_clustered.mean()) / l_uniform.mean();
+    println!(
+        "\nclustering penalty vs oracle: {:.2}% ; gain over uniform: {:.1}%",
+        100.0 * penalty,
+        100.0 * gain
+    );
+    assert!(penalty < 0.2, "clustered allocation should be near-oracle");
+    println!("heterogeneous_fleet OK");
+    Ok(())
+}
+
+/// Assign per-group loads computed on `from` to the groups of `to`, pairing
+/// groups by their straggling-parameter rank.
+fn map_loads_by_mu(from: &ClusterSpec, loads: &[f64], to: &ClusterSpec) -> Vec<f64> {
+    let mut from_idx: Vec<usize> = (0..from.groups.len()).collect();
+    from_idx.sort_by(|&a, &b| from.groups[b].mu.partial_cmp(&from.groups[a].mu).unwrap());
+    let mut to_idx: Vec<usize> = (0..to.groups.len()).collect();
+    to_idx.sort_by(|&a, &b| to.groups[b].mu.partial_cmp(&to.groups[a].mu).unwrap());
+    let mut out = vec![0.0; to.groups.len()];
+    for (rank, &tj) in to_idx.iter().enumerate() {
+        // If G differs, clamp to the nearest available rank.
+        let fj = from_idx[rank.min(from_idx.len() - 1)];
+        out[tj] = loads[fj];
+    }
+    out
+}

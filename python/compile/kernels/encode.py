@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: MDS encode ``A_tilde = G @ A`` as a tiled matmul.
+
+Setup-time operation (runs once per data matrix). Classic three-level
+Pallas matmul: grid over ``(n_tiles, d_tiles, k_tiles)`` with a VMEM
+scratch accumulator; the ``k`` loop is the innermost grid dimension so the
+accumulator stays resident while G/A slabs stream through VMEM — the TPU
+equivalent of a CUDA shared-memory blocked matmul. MXU does the
+``(TILE_M, TILE_K) x (TILE_K, TILE_N)`` contractions in f32.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 64
+
+
+def _encode_kernel(g_ref, a_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid step (i, j, kk): acc += G[i, kk] @ A[kk, j]."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        g_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def encode(g, a, *, tile: int = DEFAULT_TILE):
+    """Compute ``g @ a`` with a blocked Pallas matmul.
+
+    ``g`` is ``(n, k)``, ``a`` is ``(k, d)``; all of ``n, k, d`` must be
+    divisible by ``tile``.
+    """
+    n, k = g.shape
+    k2, d = a.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: G {g.shape} vs A {a.shape}")
+    for name, dim in (("n", n), ("k", k), ("d", d)):
+        if dim % tile:
+            raise ValueError(f"{name}={dim} not divisible by tile={tile}")
+    k_steps = k // tile
+    grid = (n // tile, d // tile, k_steps)
+    kernel = partial(_encode_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        # VMEM scratch accumulator (ANY resolves to VMEM on TPU and a plain
+        # buffer in interpret mode).
+        scratch_shapes=[pl.MemorySpace.ANY((tile, tile), jnp.float32)],
+        interpret=True,
+    )(g, a)

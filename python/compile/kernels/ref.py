@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the build-time pytest suite checks the kernels
+against (``assert_allclose``); they also serve as the L2 fallback path when
+experimenting with kernel variants.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x):
+    """Reference ``a @ x`` in f32."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def encode_ref(g, a):
+    """Reference ``g @ a`` in f32."""
+    return jnp.dot(
+        g.astype(jnp.float32),
+        a.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

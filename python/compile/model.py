@@ -1,0 +1,63 @@
+"""L2: the JAX compute graph for worker subtasks and setup-time encode.
+
+The paper's per-worker computation is the inner product of a coded row
+block with the input vector; the setup-time computation is the MDS encode
+``A_tilde = G @ A``. Both are thin JAX functions over the L1 Pallas
+kernels so that ``aot.py`` lowers kernel + glue into a single HLO module
+per tile shape. Python never runs at serve time — the rust runtime
+executes the lowered artifacts via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.encode import encode as _encode_kernel
+from compile.kernels.matvec import matvec as _matvec_kernel
+from compile.kernels.matvec import matvec_batched as _matvec_batched_kernel
+
+
+def worker_matvec(a_tile, x, *, tile_r: int = 128):
+    """Worker subtask: ``A_tile @ x`` through the Pallas matvec kernel.
+
+    Returns a 1-tuple so the lowered HLO has a tuple root (the rust loader
+    unwraps with ``to_tuple1``).
+    """
+    return (_matvec_kernel(a_tile, x, tile_r=tile_r),)
+
+
+def worker_matvec_batched(a_tile, xs, *, tile_r: int = 128):
+    """Batched worker subtask: ``A_tile @ Xs`` for ``Xs`` of shape (d, B).
+
+    Serving systems batch concurrent requests; the contraction becomes an
+    MXU-shaped matmul (see kernels.matvec).
+    """
+    return (_matvec_batched_kernel(a_tile, xs, tile_r=tile_r),)
+
+
+def setup_encode(g, a, *, tile: int = 64):
+    """Setup-time MDS encode ``G @ A`` through the Pallas matmul kernel."""
+    return (_encode_kernel(g, a, tile=tile),)
+
+
+def lower_worker_matvec(rows: int, d: int, tile_r: int = 128):
+    """jit-lower the worker matvec for a concrete ``(rows, d)`` tile."""
+    a_spec = jax.ShapeDtypeStruct((rows, d), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    fn = lambda a, x: worker_matvec(a, x, tile_r=min(tile_r, rows))
+    return jax.jit(fn).lower(a_spec, x_spec)
+
+
+def lower_worker_matvec_batched(rows: int, d: int, batch: int, tile_r: int = 128):
+    """jit-lower the batched worker matvec for ``(rows, d) x (d, batch)``."""
+    a_spec = jax.ShapeDtypeStruct((rows, d), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((d, batch), jnp.float32)
+    fn = lambda a, xs: worker_matvec_batched(a, xs, tile_r=min(tile_r, rows))
+    return jax.jit(fn).lower(a_spec, x_spec)
+
+
+def lower_setup_encode(n: int, k: int, d: int, tile: int = 64):
+    """jit-lower the encode for concrete ``(n, k, d)``."""
+    g_spec = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    a_spec = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    fn = lambda g, a: setup_encode(g, a, tile=tile)
+    return jax.jit(fn).lower(g_spec, a_spec)

@@ -1,0 +1,46 @@
+"""AOT pipeline test: run aot.py end-to-end into a temp dir and validate
+the manifest + artifact files."""
+
+import os
+import subprocess
+import sys
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_aot_writes_manifest_and_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--d",
+            "64",
+            "--tiles",
+            "64,128",
+            "--encode-n",
+            "128",
+            "--encode-k",
+            "64",
+        ],
+        cwd=PY_DIR,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    entries = [l for l in manifest if l and not l.startswith("#")]
+    # two matvec tiles + two batched tiles + one encode
+    assert len(entries) == 5
+    for line in entries:
+        parts = line.split()
+        fname = parts[-1]
+        text = (out / fname).read_text()
+        assert "HloModule" in text
+        assert "custom-call" not in text.lower()
+    kinds = sorted(e.split()[0] for e in entries)
+    assert kinds == ["encode", "matvec", "matvec", "matvecb", "matvecb"]

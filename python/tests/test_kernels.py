@@ -1,0 +1,208 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+hypothesis sweeps shapes and input distributions; every case asserts
+allclose against the pure-jnp oracle in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.encode import encode
+from compile.kernels.matvec import matvec
+from compile.kernels.ref import encode_ref, matvec_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rng_array(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- matvec
+
+
+class TestMatvec:
+    def test_basic(self):
+        a = rng_array((256, 256), 0)
+        x = rng_array((256,), 1)
+        np.testing.assert_allclose(matvec(a, x), matvec_ref(a, x), **TOL)
+
+    def test_single_tile(self):
+        a = rng_array((128, 64), 2)
+        x = rng_array((64,), 3)
+        np.testing.assert_allclose(
+            matvec(a, x, tile_r=128), matvec_ref(a, x), **TOL
+        )
+
+    def test_many_tiles(self):
+        a = rng_array((512, 32), 4)
+        x = rng_array((32,), 5)
+        np.testing.assert_allclose(
+            matvec(a, x, tile_r=64), matvec_ref(a, x), **TOL
+        )
+
+    def test_zero_matrix(self):
+        a = jnp.zeros((128, 16), jnp.float32)
+        x = rng_array((16,), 6)
+        np.testing.assert_allclose(matvec(a, x), jnp.zeros(128), **TOL)
+
+    def test_identity_rows(self):
+        d = 128
+        a = jnp.eye(d, dtype=jnp.float32)
+        x = rng_array((d,), 7)
+        np.testing.assert_allclose(matvec(a, x, tile_r=64), x, **TOL)
+
+    def test_rejects_non_divisible_rows(self):
+        a = rng_array((100, 16), 8)
+        x = rng_array((16,), 9)
+        with pytest.raises(ValueError):
+            matvec(a, x, tile_r=64)
+
+    def test_rejects_bad_x_shape(self):
+        a = rng_array((128, 16), 10)
+        x = rng_array((32,), 11)
+        with pytest.raises(ValueError):
+            matvec(a, x)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows_tiles=st.integers(1, 4),
+        tile_r=st.sampled_from([32, 64, 128]),
+        d=st.sampled_from([16, 64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_matches_ref_swept(self, rows_tiles, tile_r, d, seed, scale):
+        rows = rows_tiles * tile_r
+        a = rng_array((rows, d), seed, scale)
+        x = rng_array((d,), seed + 1, scale)
+        got = matvec(a, x, tile_r=tile_r)
+        want = matvec_ref(a, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * scale)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_linearity(self, seed):
+        # matvec(a, x+y) == matvec(a, x) + matvec(a, y)
+        a = rng_array((128, 32), seed)
+        x = rng_array((32,), seed + 1)
+        y = rng_array((32,), seed + 2)
+        lhs = matvec(a, x + y, tile_r=64)
+        rhs = matvec(a, x, tile_r=64) + matvec(a, y, tile_r=64)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- encode
+
+
+class TestEncode:
+    def test_basic(self):
+        g = rng_array((256, 128), 20, scale=0.1)
+        a = rng_array((128, 192), 21)
+        np.testing.assert_allclose(
+            encode(g, a, tile=64), encode_ref(g, a), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity_generator(self):
+        k = 128
+        g = jnp.eye(k, dtype=jnp.float32)
+        a = rng_array((k, 64), 22)
+        np.testing.assert_allclose(
+            encode(g, a, tile=64), a, rtol=1e-5, atol=1e-5
+        )
+
+    def test_single_tile(self):
+        g = rng_array((64, 64), 23, scale=0.2)
+        a = rng_array((64, 64), 24)
+        np.testing.assert_allclose(
+            encode(g, a, tile=64), encode_ref(g, a), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rejects_shape_mismatch(self):
+        g = rng_array((64, 64), 25)
+        a = rng_array((128, 64), 26)
+        with pytest.raises(ValueError):
+            encode(g, a)
+
+    def test_rejects_non_divisible(self):
+        g = rng_array((96, 96), 27)
+        a = rng_array((96, 96), 28)
+        with pytest.raises(ValueError):
+            encode(g, a, tile=64)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        nt=st.integers(1, 3),
+        kt=st.integers(1, 3),
+        dt=st.integers(1, 3),
+        tile=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_swept(self, nt, kt, dt, tile, seed):
+        g = rng_array((nt * tile, kt * tile), seed, scale=0.3)
+        a = rng_array((kt * tile, dt * tile), seed + 1)
+        got = encode(g, a, tile=tile)
+        want = encode_ref(g, a)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------- composition property
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encode_then_matvec_commutes(seed):
+    """(G @ A) @ x == G @ (A @ x): the identity MDS decoding relies on."""
+    n, k, d = 128, 64, 64
+    g = rng_array((n, k), seed, scale=0.3)
+    a = rng_array((k, d), seed + 1)
+    x = rng_array((d,), seed + 2)
+    coded = encode(g, a, tile=64)
+    lhs = matvec(coded, x, tile_r=64)
+    rhs = matvec_ref(g, matvec_ref(a, x))
+    np.testing.assert_allclose(lhs, rhs, rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------------------------- batched
+
+
+class TestMatvecBatched:
+    def test_matches_per_vector_matvec(self):
+        from compile.kernels.matvec import matvec_batched
+
+        a = rng_array((256, 64), 30)
+        xs = rng_array((64, 8), 31)
+        got = matvec_batched(a, xs, tile_r=128)
+        for b in range(8):
+            np.testing.assert_allclose(
+                got[:, b], matvec_ref(a, xs[:, b]), rtol=5e-5, atol=5e-5
+            )
+
+    def test_rejects_bad_shapes(self):
+        from compile.kernels.matvec import matvec_batched
+
+        a = rng_array((128, 64), 32)
+        with pytest.raises(ValueError):
+            matvec_batched(a, rng_array((32, 8), 33))
+        with pytest.raises(ValueError):
+            matvec_batched(rng_array((100, 64), 34), rng_array((64, 8), 35))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        batch=st.integers(1, 16),
+        tiles=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_swept_batches(self, batch, tiles, seed):
+        from compile.kernels.matvec import matvec_batched
+
+        rows, d = tiles * 64, 32
+        a = rng_array((rows, d), seed)
+        xs = rng_array((d, batch), seed + 1)
+        got = matvec_batched(a, xs, tile_r=64)
+        want = encode_ref(a, xs)  # plain matmul oracle
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,71 @@
+"""L2 model-level tests: lowering shapes, HLO structure, AOT text."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels.ref import matvec_ref
+
+
+class TestWorkerMatvec:
+    def test_returns_tuple(self):
+        a = jnp.zeros((128, 64), jnp.float32)
+        x = jnp.zeros((64,), jnp.float32)
+        out = model.worker_matvec(a, x)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (128,)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        (y,) = model.worker_matvec(a, x)
+        np.testing.assert_allclose(y, matvec_ref(a, x), rtol=2e-5, atol=2e-5)
+
+    def test_tile_clamped_to_rows(self):
+        # rows=64 < default tile 128: lowering must clamp, not fail.
+        lowered = model.lower_worker_matvec(64, 32)
+        assert lowered is not None
+
+
+class TestLowering:
+    @pytest.mark.parametrize("rows", [64, 128, 256])
+    def test_matvec_hlo_text_shape(self, rows):
+        d = 64
+        text = to_hlo_text(model.lower_worker_matvec(rows, d))
+        assert "HloModule" in text
+        assert f"f32[{rows},{d}]" in text
+        # Tuple root for the rust loader's to_tuple1.
+        assert f"(f32[{rows}]" in text
+
+    def test_encode_hlo_text_shape(self):
+        text = to_hlo_text(model.lower_setup_encode(256, 64, 128))
+        assert "HloModule" in text
+        assert "f32[256,64]" in text
+        assert "f32[64,128]" in text
+
+    def test_hlo_has_no_custom_calls(self):
+        # interpret=True must lower to plain HLO ops a CPU PJRT can run —
+        # a mosaic custom-call here would break the rust runtime.
+        text = to_hlo_text(model.lower_worker_matvec(128, 64))
+        assert "custom-call" not in text.lower()
+
+    def test_matvec_is_fused_dot(self):
+        # L2 perf check: the lowered module contains a single dot per tile
+        # loop, no transposes of the row block.
+        text = to_hlo_text(model.lower_worker_matvec(128, 64, tile_r=128))
+        assert text.lower().count("dot(") >= 1
+
+
+class TestBatchedLowering:
+    def test_batched_hlo_shape(self):
+        from compile.aot import to_hlo_text
+        from compile import model
+
+        text = to_hlo_text(model.lower_worker_matvec_batched(128, 64, 8))
+        assert "HloModule" in text
+        assert "f32[128,64]" in text
+        assert "f32[64,8]" in text
+        assert "custom-call" not in text.lower()

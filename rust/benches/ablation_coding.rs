@@ -1,0 +1,49 @@
+//! Ablation bench: MDS generator construction (DESIGN.md design choice).
+//!
+//! Compares the two generator families on (a) decode numerical error and
+//! (b) decode wall time, as the code dimension `k` grows. Demonstrates why
+//! `SystematicRandom` is the default: Chebyshev-Vandermonde decoding is
+//! exact-MDS but its conditioning collapses past k ≈ 24, while the random
+//! construction stays at f64 roundoff for practical k.
+
+use hetcoded::bench::{black_box, run_quick, section};
+use hetcoded::coding::{decoder::roundtrip_check, Generator, GeneratorKind, Matrix};
+use hetcoded::math::Rng;
+
+fn decode_error(kind: GeneratorKind, k: usize, seed: u64) -> f64 {
+    let n = k * 2;
+    let gen = Generator::new(kind, n, k, seed).unwrap();
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let a = Matrix::from_fn(k, 4, |_, _| rng.normal());
+    let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+    // Worst case: all-parity decode.
+    let rows: Vec<usize> = (n - k..n).collect();
+    roundtrip_check(&gen, &a, &x, &rows).unwrap_or(f64::INFINITY)
+}
+
+fn main() {
+    section("ablation: decode error vs k (all-parity rows, rate 1/2)");
+    println!(
+        "{:>6} {:>24} {:>24}",
+        "k", "vandermonde max|err|", "systematic-random max|err|"
+    );
+    for k in [4usize, 8, 12, 16, 20, 24, 32, 64, 128, 256] {
+        let v = decode_error(GeneratorKind::Vandermonde, k, 1);
+        let s = decode_error(GeneratorKind::SystematicRandom, k, 1);
+        println!("{k:>6} {v:>24.3e} {s:>24.3e}");
+    }
+
+    section("ablation: decode time vs k (systematic-random)");
+    for k in [64usize, 128, 256, 512] {
+        let n = k * 3 / 2;
+        let gen = Generator::new(GeneratorKind::SystematicRandom, n, k, 2).unwrap();
+        let rows: Vec<usize> = (n - k..n).collect();
+        let sub = gen.submatrix(&rows);
+        let mut rng = Rng::new(3);
+        let b: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        run_quick(&format!("LU factor+solve k={k}"), || {
+            let lu = sub.lu().unwrap();
+            black_box(lu.solve(&b).unwrap());
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Shared plumbing for the figure-regeneration benches.
+//!
+//! Each `figN_*` bench regenerates its paper figure through the library's
+//! figure harness (same code the CLI uses), prints the data table + ASCII
+//! plot, writes the CSV under `results/`, and times the generation with the
+//! in-repo bench harness. `cargo bench` therefore reproduces every table
+//! and figure in the paper's evaluation in one command.
+
+use hetcoded::figures::{generate, Figure, FigureOpts};
+
+/// Samples per MC point used by benches: smaller than the paper's 1e4 so a
+/// full `cargo bench` stays tractable, overridable via HETCODED_BENCH_SAMPLES.
+pub fn bench_opts() -> FigureOpts {
+    let samples = std::env::var("HETCODED_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4_000);
+    let points = std::env::var("HETCODED_BENCH_POINTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    FigureOpts { samples, points, seed: 2019, threads: 0 }
+}
+
+/// Regenerate figure `n`, print it, persist the CSV, and report timing.
+pub fn run_figure_bench(n: u8) {
+    let opts = bench_opts();
+    hetcoded::bench::section(&format!(
+        "figure {n} (samples={}, points={})",
+        opts.samples, opts.points
+    ));
+    let t0 = std::time::Instant::now();
+    let fig: Figure = generate(n, &opts).expect("figure generation failed");
+    let elapsed = t0.elapsed();
+    println!("{}", fig.ascii_plot());
+    print_table(&fig);
+    let path = fig
+        .write_csv(std::path::Path::new("results"))
+        .expect("write csv");
+    println!(
+        "generated in {} -> {}",
+        hetcoded::bench::fmt_time(elapsed.as_secs_f64()),
+        path.display()
+    );
+}
+
+/// Print the numeric series table (the "rows the paper reports").
+pub fn print_table(fig: &Figure) {
+    for s in &fig.series {
+        println!("series: {}", s.name);
+        for &(x, y) in &s.points {
+            println!("  {x:>14.6e}  {y:>14.6e}");
+        }
+    }
+}

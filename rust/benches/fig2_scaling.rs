@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's N*T* scaling vs q (Fig 2).
+mod common;
+
+fn main() {
+    common::run_figure_bench(2);
+}

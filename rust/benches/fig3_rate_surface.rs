@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's rate k/n* over (N2,mu2) (Fig 3).
+mod common;
+
+fn main() {
+    common::run_figure_bench(3);
+}

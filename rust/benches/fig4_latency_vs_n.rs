@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's latency vs N, five groups (Fig 4).
+mod common;
+
+fn main() {
+    common::run_figure_bench(4);
+}

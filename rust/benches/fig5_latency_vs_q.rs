@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's latency vs q at N=2500 (Fig 5).
+mod common;
+
+fn main() {
+    common::run_figure_bench(5);
+}

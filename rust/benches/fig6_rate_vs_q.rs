@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's rate k/n* vs q (Fig 6).
+mod common;
+
+fn main() {
+    common::run_figure_bench(6);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's uniform fixed-rate sweep vs q (Fig 7).
+mod common;
+
+fn main() {
+    common::run_figure_bench(7);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's latency vs rate, two groups (Fig 8).
+mod common;
+
+fn main() {
+    common::run_figure_bench(8);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's model-B proposed vs [32] (Fig 9).
+mod common;
+
+fn main() {
+    common::run_figure_bench(9);
+}

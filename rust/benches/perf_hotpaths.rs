@@ -1,0 +1,90 @@
+//! Micro-benchmarks over the hot paths the §Perf pass optimizes:
+//!
+//! - Lambert W evaluation (allocation inner loop);
+//! - proposed allocation end-to-end;
+//! - Monte-Carlo latency sampling (`latency_any_k` / `latency_per_group`);
+//! - LU factorization + decode at serving sizes;
+//! - MDS encode (setup path);
+//! - end-to-end `run_job` through the thread coordinator (native backend).
+
+use hetcoded::allocation::proposed_allocation;
+use hetcoded::bench::{black_box, run, run_quick, section};
+use hetcoded::coding::{Generator, GeneratorKind, Matrix};
+use hetcoded::coordinator::{run_job, JobConfig, NativeCompute};
+use hetcoded::math::{wm1_neg_exp, Rng};
+use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::sim::{latency_any_k, latency_per_group, SimConfig};
+use std::sync::Arc;
+
+fn main() {
+    section("math");
+    run("lambertw: wm1_neg_exp over t in [1, 750]", || {
+        let mut acc = 0.0;
+        for i in 0..1_000 {
+            acc += wm1_neg_exp(1.0 + i as f64 * 0.749);
+        }
+        black_box(acc);
+    });
+
+    section("allocation");
+    let spec = ClusterSpec::paper_five_group(2500, 10_000);
+    run("proposed_allocation (G=5, N=2500)", || {
+        black_box(proposed_allocation(LatencyModel::A, &spec).unwrap());
+    });
+
+    section("monte-carlo");
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let cfg = SimConfig { samples: 1_000, seed: 7, threads: 1 };
+    run_quick("latency_any_k: N=2500, 1k samples, 1 thread", || {
+        black_box(latency_any_k(&spec, &alloc.loads, LatencyModel::A, &cfg).unwrap());
+    });
+    let cfg_mt = SimConfig { samples: 1_000, seed: 7, threads: 0 };
+    run_quick("latency_any_k: N=2500, 1k samples, auto threads", || {
+        black_box(latency_any_k(&spec, &alloc.loads, LatencyModel::A, &cfg_mt).unwrap());
+    });
+    let r = vec![20.0, 20.0, 20.0, 20.0, 20.0];
+    run_quick("latency_per_group: N=2500, 1k samples", || {
+        black_box(
+            latency_per_group(&spec, &alloc.loads, &r, LatencyModel::A, &cfg).unwrap(),
+        );
+    });
+
+    section("coding");
+    let mut rng = Rng::new(3);
+    for k in [128usize, 256] {
+        let n = k * 3 / 2;
+        let gen = Generator::new(GeneratorKind::SystematicRandom, n, k, 1).unwrap();
+        let sub_rows: Vec<usize> = (n - k..n).collect();
+        let sub = gen.submatrix(&sub_rows);
+        let b: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        run(&format!("LU solve k={k} (decode hot path)"), || {
+            let lu = sub.lu().unwrap();
+            black_box(lu.solve(&b).unwrap());
+        });
+        let a = Matrix::from_fn(k, 64, |_, _| rng.normal());
+        run_quick(&format!("encode G({n}x{k}) @ A({k}x64)"), || {
+            black_box(gen.matrix().matmul(&a));
+        });
+    }
+
+    section("coordinator end-to-end (native backend)");
+    let live_spec = ClusterSpec::new(
+        vec![
+            hetcoded::model::Group { n: 6, mu: 8.0, alpha: 1.0 },
+            hetcoded::model::Group { n: 8, mu: 4.0, alpha: 1.0 },
+            hetcoded::model::Group { n: 10, mu: 1.0, alpha: 1.0 },
+        ],
+        256,
+    )
+    .unwrap();
+    let live_alloc = proposed_allocation(LatencyModel::A, &live_spec).unwrap();
+    let a = Matrix::from_fn(256, 256, |_, _| rng.normal());
+    let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+    let jcfg = JobConfig { time_scale: 0.001, ..Default::default() };
+    run_quick("run_job: N=24 workers, k=256, d=256", || {
+        black_box(
+            run_job(&live_spec, &live_alloc, &a, &x, Arc::new(NativeCompute), &jcfg)
+                .unwrap(),
+        );
+    });
+}

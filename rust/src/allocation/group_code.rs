@@ -1,0 +1,268 @@
+//! The fixed-`r` group-code scheme of Kim/Sohn/Moon [33] (paper §III-D-2).
+//!
+//! The data matrix is split into `r` equal submatrices (`l = k/r` rows per
+//! worker regardless of `N`), group `j` is assigned `r_j` submatrices encoded
+//! with an `(N_j, r_j)` MDS code, and the master decodes group-wise after
+//! receiving `r_j` results from each group. The per-group counts solve
+//! eq. (29):
+//!
+//! ```text
+//! r_j + Σ_{j'≠j} N_j' (1 - (1 - r_j/N_j)^{μ_j'/μ_j}) = r .
+//! ```
+//!
+//! **Reproduction note on the paper's no-solution claim.** The paper states
+//! that (29) may have no solution for `G > 2`, citing
+//! `G=3, r=200, N=(100,200,300), μ=(3,2,1)`. In the *real-valued* relaxation
+//! this is not so: substituting the equalization variable
+//! `c = (1/μ_j) log(N_j/(N_j - r_j))` collapses all `G` equations into the
+//! single strictly-increasing equation `Σ_j N_j (1 - e^{-μ_j c}) = r`,
+//! which has a unique root for every `0 < r < N` (the cited instance gives
+//! `r = (53.26, 79.55, 67.19)`). What genuinely can fail is an **integer**
+//! solution — `(N_j, r_j)` MDS codes need integer `r_j`, and rounding the
+//! real root generally breaks `Σ r_j = r`; [`integer_group_r`] reports that.
+//! The asymptotic latency of the scheme is `1/r` (model A), which Fig. 4
+//! plots as "lower bound of group code".
+
+use crate::allocation::Allocation;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+
+/// Solve eq. (29) for group `j`'s completion count `r_j` by bisection.
+///
+/// The left-hand side is strictly increasing in `r_j` on `(0, N_j)`, so a
+/// solution exists iff `lim_{r_j→N_j⁻} LHS > r` (the limit may be finite
+/// when some exponent `μ_j'/μ_j < 1` keeps other groups below saturation —
+/// that is exactly the paper's no-solution case).
+pub fn solve_group_r(spec: &ClusterSpec, j: usize, r: f64) -> Result<f64> {
+    let nj = spec.groups[j].n as f64;
+    let muj = spec.groups[j].mu;
+    let lhs = |rj: f64| -> f64 {
+        let mut acc = rj;
+        for (jp, grp) in spec.groups.iter().enumerate() {
+            if jp == j {
+                continue;
+            }
+            let njp = grp.n as f64;
+            let expo = grp.mu / muj;
+            acc += njp * (1.0 - (1.0 - rj / nj).powf(expo));
+        }
+        acc
+    };
+    // Feasibility: LHS at r_j -> N_j^- saturates to N (every group finishes),
+    // but approach it numerically.
+    let hi0 = nj * (1.0 - 1e-12);
+    if lhs(hi0) < r {
+        return Err(Error::NoSolution(format!(
+            "group {j}: max attainable aggregate {:.3} < r = {r}",
+            lhs(hi0)
+        )));
+    }
+    let (mut lo, mut hi) = (0.0f64, hi0);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if lhs(mid) < r {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-13 * nj {
+            break;
+        }
+    }
+    Ok(0.5 * (lo + hi))
+}
+
+/// Integer per-group counts for the `(N_j, r_j)` MDS codes: rounds the
+/// real-valued solution and reports whether an exact integer solution with
+/// `Σ r_j = r` exists under equalization (generally it does not — the
+/// phenomenon behind the paper's `G > 2` no-solution remark).
+///
+/// Returns `(r_int, exact)` where `r_int` is the nearest-integer rounding
+/// with the total fixed up greedily to `r` and `exact` is whether plain
+/// rounding already summed to `r`.
+pub fn integer_group_r(spec: &ClusterSpec, r: f64) -> Result<(Vec<usize>, bool)> {
+    let mut rs = Vec::with_capacity(spec.num_groups());
+    for j in 0..spec.num_groups() {
+        rs.push(solve_group_r(spec, j, r)?);
+    }
+    let target = r.round() as i64;
+    let mut ints: Vec<i64> = rs.iter().map(|&x| x.round() as i64).collect();
+    let exact = ints.iter().sum::<i64>() == target;
+    // Greedy fix-up: adjust the entries with the largest rounding slack.
+    let mut diff = target - ints.iter().sum::<i64>();
+    let mut order: Vec<usize> = (0..ints.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = (rs[a] - rs[a].round()).abs();
+        let fb = (rs[b] - rs[b].round()).abs();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut oi = 0;
+    while diff != 0 && !order.is_empty() {
+        let j = order[oi % order.len()];
+        let step = diff.signum();
+        let cand = ints[j] + step;
+        if cand >= 1 && cand < spec.groups[j].n as i64 {
+            ints[j] = cand;
+            diff -= step;
+        }
+        oi += 1;
+        if oi > 10_000 {
+            return Err(Error::NoSolution(format!(
+                "cannot reach integer total r = {target}"
+            )));
+        }
+    }
+    Ok((ints.into_iter().map(|x| x as usize).collect(), exact))
+}
+
+/// Full fixed-`r` allocation: uniform load `l = k/r`, per-group `r_j` from
+/// eq. (29), consistency-checked (`Σ r_j ≈ r`). Requires equal shift
+/// parameters across groups (paper footnote 4) and `r <= N`.
+pub fn group_code_allocation(
+    model: LatencyModel,
+    spec: &ClusterSpec,
+    r: f64,
+) -> Result<Allocation> {
+    let k = spec.k as f64;
+    let total = spec.total_workers() as f64;
+    if r <= 0.0 || r > total {
+        return Err(Error::InvalidSpec(format!(
+            "need 0 < r <= N (r={r}, N={total})"
+        )));
+    }
+    let alpha0 = spec.groups[0].alpha;
+    if spec
+        .groups
+        .iter()
+        .any(|g| (g.alpha - alpha0).abs() > 1e-12)
+    {
+        return Err(Error::InvalidSpec(
+            "group-code scheme of [33] requires equal shift parameters".into(),
+        ));
+    }
+    let mut rs = Vec::with_capacity(spec.num_groups());
+    for j in 0..spec.num_groups() {
+        rs.push(solve_group_r(spec, j, r)?);
+    }
+    // Consistency: the same aggregate equation must give Σ r_j = r.
+    let sum: f64 = rs.iter().sum();
+    if (sum - r).abs() > 1e-3 * r {
+        return Err(Error::NoSolution(format!(
+            "inconsistent per-group solution: Σ r_j = {sum:.4} != r = {r}"
+        )));
+    }
+    let l = k / r;
+    let n = l * total;
+    // Asymptotic latency of the scheme (paper §III-D-2): 1/r under model A,
+    // k/r under model B.
+    let bound = match model {
+        LatencyModel::A => 1.0 / r,
+        LatencyModel::B => k / r,
+    };
+    Ok(Allocation {
+        model,
+        policy: format!("group-code(r={r})"),
+        loads: vec![l; spec.num_groups()],
+        r: rs,
+        n,
+        latency_bound: Some(bound),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+
+    #[test]
+    fn two_group_solution_satisfies_eq29() {
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 300, mu: 4.0, alpha: 1.0 },
+                Group { n: 600, mu: 0.5, alpha: 1.0 },
+            ],
+            10_000,
+        )
+        .unwrap();
+        let r = 400.0;
+        let a = group_code_allocation(LatencyModel::A, &spec, r).unwrap();
+        assert!((a.r.iter().sum::<f64>() - r).abs() < 1e-6 * r);
+        // Check eq. (28) equalization: (1/mu_j) log(N_j/(N_j-r_j)) equal.
+        let v0 = (300.0f64 / (300.0 - a.r[0])).ln() / 4.0;
+        let v1 = (600.0f64 / (600.0 - a.r[1])).ln() / 0.5;
+        assert!((v0 - v1).abs() < 1e-6 * v0.max(v1), "{v0} vs {v1}");
+    }
+
+    #[test]
+    fn paper_no_solution_example_real_vs_integer() {
+        // §III-D cites G=3, r=200, N=(100,200,300), μ=(3,2,1) as having no
+        // solution. The real-valued relaxation *does* solve (see module
+        // docs): r ≈ (53.26, 79.55, 67.19). The failure is integrality:
+        // plain rounding misses Σ r_j = r.
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 100, mu: 3.0, alpha: 1.0 },
+                Group { n: 200, mu: 2.0, alpha: 1.0 },
+                Group { n: 300, mu: 1.0, alpha: 1.0 },
+            ],
+            10_000,
+        )
+        .unwrap();
+        let a = group_code_allocation(LatencyModel::A, &spec, 200.0).unwrap();
+        assert!((a.r[0] - 53.26).abs() < 0.05, "r_1 = {}", a.r[0]);
+        assert!((a.r[1] - 79.55).abs() < 0.05, "r_2 = {}", a.r[1]);
+        assert!((a.r[2] - 67.19).abs() < 0.05, "r_3 = {}", a.r[2]);
+        // Integer fix-up still produces a usable assignment.
+        let (ints, exact) = integer_group_r(&spec, 200.0).unwrap();
+        assert_eq!(ints.iter().sum::<usize>(), 200);
+        let _ = exact; // exactness is instance-dependent
+    }
+
+    #[test]
+    fn five_group_paper_setting_solves() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = group_code_allocation(LatencyModel::A, &spec, 100.0).unwrap();
+        assert!((a.r.iter().sum::<f64>() - 100.0).abs() < 0.1);
+        assert!((a.loads[0] - 100.0).abs() < 1e-9); // l = k/r = 10000/100
+        assert!((a.latency_bound.unwrap() - 0.01).abs() < 1e-12); // 1/r
+    }
+
+    #[test]
+    fn load_is_k_over_r_independent_of_n() {
+        // The defining property of [33]: load fixed as N grows.
+        for total in [1000usize, 2000, 4000] {
+            let spec = ClusterSpec::paper_five_group(total, 10_000);
+            let a = group_code_allocation(LatencyModel::A, &spec, 100.0).unwrap();
+            assert!((a.loads[0] - 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_unequal_alpha() {
+        let spec = ClusterSpec::paper_three_group_b(1000, 10_000);
+        assert!(group_code_allocation(LatencyModel::A, &spec, 100.0).is_err());
+    }
+
+    #[test]
+    fn rejects_r_out_of_range() {
+        let spec = ClusterSpec::paper_two_group(1000);
+        assert!(group_code_allocation(LatencyModel::A, &spec, 0.0).is_err());
+        assert!(group_code_allocation(LatencyModel::A, &spec, 1e9).is_err());
+    }
+
+    #[test]
+    fn homogeneous_split_proportional() {
+        // Equal mu: r_j proportional to N_j.
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 100, mu: 2.0, alpha: 1.0 },
+                Group { n: 300, mu: 2.0, alpha: 1.0 },
+            ],
+            1000,
+        )
+        .unwrap();
+        let a = group_code_allocation(LatencyModel::A, &spec, 200.0).unwrap();
+        assert!((a.r[0] - 50.0).abs() < 1e-6);
+        assert!((a.r[1] - 150.0).abs() < 1e-6);
+    }
+}

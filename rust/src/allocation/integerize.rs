@@ -1,0 +1,174 @@
+//! Integer load refinement.
+//!
+//! The paper rounds `l*_(j)` with a plain ceil and argues the effect is
+//! negligible for large `k`. For small/medium `k` (where the live
+//! coordinator operates) the ceil can shift latency by several percent, so
+//! this module provides two better integerizations:
+//!
+//! - [`largest_remainder_loads`]: rounds while preserving the *total* coded
+//!   row count `n = Σ N_j l_j` as closely as an integer per-group split
+//!   allows (Hamilton apportionment on the fractional parts);
+//! - [`optimize_integer_loads`]: local search around the rounded point that
+//!   minimizes the CLT analytic latency ([`crate::model::analytic`]) subject
+//!   to decodability (`Σ N_j l_j ≥ k`).
+
+use crate::allocation::Allocation;
+use crate::model::{clt_expected_latency, ClusterSpec};
+use crate::{Error, Result};
+
+/// Hamilton (largest-remainder) rounding of per-group loads: floor each
+/// `l_j`, then hand out one extra row per group in order of descending
+/// fractional part until the integer total `Σ N_j l_j` first reaches the
+/// real-valued `n` (so the code never loses decodability).
+pub fn largest_remainder_loads(spec: &ClusterSpec, loads: &[f64]) -> Result<Vec<usize>> {
+    if loads.len() != spec.num_groups() {
+        return Err(Error::InvalidSpec("load vector length mismatch".into()));
+    }
+    let mut ints: Vec<usize> = loads.iter().map(|&l| l.floor().max(0.0) as usize).collect();
+    let target: f64 = loads
+        .iter()
+        .zip(&spec.groups)
+        .map(|(&l, g)| l * g.n as f64)
+        .sum();
+    let mut order: Vec<usize> = (0..loads.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = loads[a] - loads[a].floor();
+        let fb = loads[b] - loads[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let total = |ints: &[usize]| -> usize {
+        ints.iter().zip(&spec.groups).map(|(&l, g)| l * g.n).sum()
+    };
+    let mut oi = 0;
+    while (total(&ints) as f64) < target && oi < order.len() * 4 {
+        ints[order[oi % order.len()]] += 1;
+        oi += 1;
+    }
+    // Guarantee every group gets at least one row.
+    for v in ints.iter_mut() {
+        if *v == 0 {
+            *v = 1;
+        }
+    }
+    Ok(ints)
+}
+
+/// Local search over integer loads minimizing the analytic latency.
+///
+/// Starts from [`largest_remainder_loads`] and tries single-group ±1 moves
+/// while `Σ N_j l_j ≥ k` holds, accepting strict improvements, until a local
+/// optimum (or `max_iters`).
+pub fn optimize_integer_loads(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    max_iters: usize,
+) -> Result<Vec<usize>> {
+    let mut ints = largest_remainder_loads(spec, &alloc.loads)?;
+    let model = alloc.model;
+    let eval = |ints: &[usize]| -> Result<f64> {
+        let loads: Vec<f64> = ints.iter().map(|&l| l as f64).collect();
+        clt_expected_latency(spec, &loads, model)
+    };
+    let mut best = eval(&ints)?;
+    for _ in 0..max_iters {
+        let mut improved = false;
+        for j in 0..ints.len() {
+            for delta in [-1i64, 1] {
+                let cand_j = ints[j] as i64 + delta;
+                if cand_j < 1 {
+                    continue;
+                }
+                let mut cand = ints.clone();
+                cand[j] = cand_j as usize;
+                let total: usize =
+                    cand.iter().zip(&spec.groups).map(|(&l, g)| l * g.n).sum();
+                if total < spec.k {
+                    continue;
+                }
+                if let Ok(t) = eval(&cand) {
+                    if t < best * (1.0 - 1e-12) {
+                        best = t;
+                        ints = cand;
+                        improved = true;
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok(ints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::proposed_allocation;
+    use crate::model::{Group, LatencyModel};
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 8, mu: 8.0, alpha: 1.0 },
+                Group { n: 12, mu: 2.0, alpha: 1.0 },
+            ],
+            256,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn largest_remainder_preserves_decodability() {
+        let s = spec();
+        let a = proposed_allocation(LatencyModel::A, &s).unwrap();
+        let ints = largest_remainder_loads(&s, &a.loads).unwrap();
+        let total: usize = ints.iter().zip(&s.groups).map(|(&l, g)| l * g.n).sum();
+        assert!(total >= s.k, "total {total} < k");
+        // Total within one worker-group of the real-valued n.
+        let max_group = s.groups.iter().map(|g| g.n).max().unwrap();
+        assert!((total as f64 - a.n) < max_group as f64 + 1.0);
+    }
+
+    #[test]
+    fn largest_remainder_beats_or_ties_plain_ceil_total() {
+        // Plain ceil over-allocates; largest remainder should allocate no
+        // more than ceil does.
+        let s = spec();
+        let a = proposed_allocation(LatencyModel::A, &s).unwrap();
+        let lr = largest_remainder_loads(&s, &a.loads).unwrap();
+        let ceil = a.integer_loads();
+        let t_lr: usize = lr.iter().zip(&s.groups).map(|(&l, g)| l * g.n).sum();
+        let t_ceil: usize = ceil.iter().zip(&s.groups).map(|(&l, g)| l * g.n).sum();
+        assert!(t_lr <= t_ceil, "LR total {t_lr} > ceil total {t_ceil}");
+    }
+
+    #[test]
+    fn optimizer_never_worse_than_rounding() {
+        let s = spec();
+        let a = proposed_allocation(LatencyModel::A, &s).unwrap();
+        let rounded = largest_remainder_loads(&s, &a.loads).unwrap();
+        let optimized = optimize_integer_loads(&s, &a, 32).unwrap();
+        let eval = |ints: &[usize]| {
+            let loads: Vec<f64> = ints.iter().map(|&l| l as f64).collect();
+            clt_expected_latency(&s, &loads, LatencyModel::A).unwrap()
+        };
+        assert!(eval(&optimized) <= eval(&rounded) * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn optimizer_stays_decodable_and_positive() {
+        let s = spec();
+        let a = proposed_allocation(LatencyModel::A, &s).unwrap();
+        let opt = optimize_integer_loads(&s, &a, 32).unwrap();
+        assert!(opt.iter().all(|&l| l >= 1));
+        let total: usize = opt.iter().zip(&s.groups).map(|(&l, g)| l * g.n).sum();
+        assert!(total >= s.k);
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let s = spec();
+        assert!(largest_remainder_loads(&s, &[1.0]).is_err());
+    }
+}

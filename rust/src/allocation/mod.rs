@@ -1,0 +1,177 @@
+//! Load-allocation policies.
+//!
+//! Every policy evaluated in the paper's §IV is implemented:
+//!
+//! | Policy | Paper reference | Module |
+//! |--------|-----------------|--------|
+//! | Proposed optimum | Theorem 2 (model A), Corollary 2 (model B) | [`proposed`] |
+//! | Uniform given `n` (incl. uncoded `n=k`) | §III-D-1 | [`uniform`] |
+//! | Fixed-`r` group code of [33] | §III-D-2, Theorem 4 | [`group_code`] |
+//! | Heterogeneous scheme of [32] | Appendix D | [`reisizadeh`] |
+//!
+//! All policies produce an [`Allocation`]: per-group real-valued loads
+//! `l_(j)`, the implied `(n, k)` MDS code, and (where the paper defines one)
+//! the analytic latency lower bound.
+
+pub mod group_code;
+pub mod integerize;
+pub mod proposed;
+pub mod reisizadeh;
+pub mod uniform;
+
+pub use group_code::{group_code_allocation, integer_group_r, solve_group_r};
+pub use integerize::{largest_remainder_loads, optimize_integer_loads};
+pub use proposed::{optimal_latency_bound, proposed_allocation};
+pub use reisizadeh::reisizadeh_allocation;
+pub use uniform::{uncoded_allocation, uniform_allocation};
+
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+
+/// Result of running an allocation policy on a cluster.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Which latency model the analytic quantities refer to.
+    pub model: LatencyModel,
+    /// Human-readable policy name (for figures/logs).
+    pub policy: String,
+    /// Real-valued per-group loads `l_(j)` (coded rows per worker).
+    pub loads: Vec<f64>,
+    /// Per-group expected completion counts `r_j` used by the analysis
+    /// (empty when the policy does not define them, e.g. plain uniform).
+    pub r: Vec<f64>,
+    /// Real-valued code length `n = Σ N_j l_(j)`.
+    pub n: f64,
+    /// Analytic expected-latency lower bound, when the policy defines one.
+    pub latency_bound: Option<f64>,
+}
+
+impl Allocation {
+    /// Code rate `k/n`.
+    pub fn rate(&self, k: f64) -> f64 {
+        k / self.n
+    }
+
+    /// Integer per-group loads `⌈l_(j)⌉` (paper §III-B: ceil; effect is
+    /// negligible at practical `k`).
+    pub fn integer_loads(&self) -> Vec<usize> {
+        self.loads.iter().map(|&l| l.ceil().max(1.0) as usize).collect()
+    }
+
+    /// Integer code length implied by [`Allocation::integer_loads`].
+    pub fn integer_n(&self, spec: &ClusterSpec) -> usize {
+        self.integer_loads()
+            .iter()
+            .zip(&spec.groups)
+            .map(|(&l, g)| l * g.n)
+            .sum()
+    }
+
+    /// Expand per-group loads into one entry per worker (group-major order),
+    /// using integer loads.
+    pub fn per_worker_loads(&self, spec: &ClusterSpec) -> Vec<usize> {
+        let ints = self.integer_loads();
+        let mut out = Vec::with_capacity(spec.total_workers());
+        for (l, g) in ints.iter().zip(&spec.groups) {
+            out.extend(std::iter::repeat(*l).take(g.n));
+        }
+        out
+    }
+
+    /// Validate structural invariants against a spec.
+    pub fn validate(&self, spec: &ClusterSpec) -> Result<()> {
+        if self.loads.len() != spec.num_groups() {
+            return Err(Error::InvalidSpec(format!(
+                "allocation has {} groups, spec has {}",
+                self.loads.len(),
+                spec.num_groups()
+            )));
+        }
+        if self.loads.iter().any(|&l| !(l > 0.0) || !l.is_finite()) {
+            return Err(Error::InvalidSpec(format!(
+                "non-positive load in {:?}",
+                self.loads
+            )));
+        }
+        let n: f64 = self
+            .loads
+            .iter()
+            .zip(&spec.groups)
+            .map(|(&l, g)| l * g.n as f64)
+            .sum();
+        if (n - self.n).abs() > 1e-6 * n.max(1.0) {
+            return Err(Error::InvalidSpec(format!(
+                "n field {} inconsistent with loads ({n})",
+                self.n
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 10, mu: 2.0, alpha: 1.0 },
+                Group { n: 20, mu: 1.0, alpha: 1.0 },
+            ],
+            1000,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn integerization_rounds_up() {
+        let a = Allocation {
+            model: LatencyModel::A,
+            policy: "test".into(),
+            loads: vec![10.2, 5.9],
+            r: vec![],
+            n: 10.2 * 10.0 + 5.9 * 20.0,
+            latency_bound: None,
+        };
+        assert_eq!(a.integer_loads(), vec![11, 6]);
+        assert_eq!(a.integer_n(&spec()), 11 * 10 + 6 * 20);
+    }
+
+    #[test]
+    fn per_worker_expansion() {
+        let a = Allocation {
+            model: LatencyModel::A,
+            policy: "test".into(),
+            loads: vec![3.0, 2.0],
+            r: vec![],
+            n: 3.0 * 10.0 + 2.0 * 20.0,
+            latency_bound: None,
+        };
+        let w = a.per_worker_loads(&spec());
+        assert_eq!(w.len(), 30);
+        assert!(w[..10].iter().all(|&l| l == 3));
+        assert!(w[10..].iter().all(|&l| l == 2));
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        let mut a = Allocation {
+            model: LatencyModel::A,
+            policy: "test".into(),
+            loads: vec![3.0, 2.0],
+            r: vec![],
+            n: 70.0,
+            latency_bound: None,
+        };
+        assert!(a.validate(&spec()).is_ok());
+        a.n = 50.0;
+        assert!(a.validate(&spec()).is_err());
+        a.n = 70.0;
+        a.loads = vec![3.0];
+        assert!(a.validate(&spec()).is_err());
+        a.loads = vec![3.0, -1.0];
+        assert!(a.validate(&spec()).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! The paper's proposed optimal load allocation (Theorem 2 / Corollary 2).
+//!
+//! For each group `j` with parameters `(N_j, μ_j, α_j)`:
+//!
+//! ```text
+//! w_j  = W_{-1}(-e^{-(α_j μ_j + 1)})                      (Lambert lower branch)
+//! r*_j = N_j (1 + 1/w_j)                                   (eq. 15)
+//! ξ*_j = α_j + log(-w_j)/μ_j                               (eq. 17)
+//! S    = Σ_j r*_j/ξ*_j = Σ_j (-μ_j N_j / w_j)              (eq. 17)
+//! l*_j = k / (ξ*_j · S)                                    (eq. 16, refactored)
+//! T*   = 1/S            [model A, eq. 18]
+//! T*_b = k/S            [model B, eq. 33]
+//! ```
+//!
+//! The load vector is the same under both models (Corollary 2 has the same
+//! `r*` and `l*`); only the bound scales by `k`.
+
+use crate::allocation::Allocation;
+use crate::math::wm1_neg_exp;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::Result;
+
+/// Compute the proposed optimal allocation for `spec` under `model`.
+pub fn proposed_allocation(model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+    let k = spec.k as f64;
+    let g = spec.num_groups();
+    let mut w = Vec::with_capacity(g);
+    let mut r_star = Vec::with_capacity(g);
+    let mut xi_star = Vec::with_capacity(g);
+    for grp in &spec.groups {
+        let t = grp.alpha * grp.mu + 1.0;
+        let wj = wm1_neg_exp(t);
+        w.push(wj);
+        r_star.push(grp.n as f64 * (1.0 + 1.0 / wj));
+        // log(-w) = -(t + w), avoiding a second transcendental call.
+        xi_star.push(grp.alpha + (-(t + wj)) / grp.mu);
+    }
+    // S = Σ r*_j / ξ*_j = Σ (-μ_j N_j / w_j).
+    let s: f64 = spec
+        .groups
+        .iter()
+        .zip(&w)
+        .map(|(grp, &wj)| -grp.mu * grp.n as f64 / wj)
+        .sum();
+    let loads: Vec<f64> = xi_star.iter().map(|&xj| k / (xj * s)).collect();
+    let n: f64 = loads
+        .iter()
+        .zip(&spec.groups)
+        .map(|(&l, grp)| l * grp.n as f64)
+        .sum();
+    let bound = optimal_latency_bound(model, spec);
+    Ok(Allocation {
+        model,
+        policy: "proposed".into(),
+        loads,
+        r: r_star,
+        n,
+        latency_bound: Some(bound),
+    })
+}
+
+/// The analytic minimum expected latency: `T*` (eq. 18) for model A,
+/// `T*_b = k·T*` (eq. 33) for model B.
+pub fn optimal_latency_bound(model: LatencyModel, spec: &ClusterSpec) -> f64 {
+    let s: f64 = spec
+        .groups
+        .iter()
+        .map(|grp| {
+            let wj = wm1_neg_exp(grp.alpha * grp.mu + 1.0);
+            -grp.mu * grp.n as f64 / wj
+        })
+        .sum();
+    match model {
+        LatencyModel::A => 1.0 / s,
+        LatencyModel::B => spec.k as f64 / s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::wm1_neg_exp;
+    use crate::model::{order_stats, Group};
+
+    fn homogeneous(n: usize, mu: f64, alpha: f64, k: usize) -> ClusterSpec {
+        ClusterSpec::new(vec![Group { n, mu, alpha }], k).unwrap()
+    }
+
+    #[test]
+    fn homogeneous_reduces_to_lee_et_al() {
+        // Remark 1: with one group, l* = k / (N (1 + 1/W)) and
+        // T* = -W/(μN), the result of [4].
+        let (n, mu, alpha, k) = (100usize, 2.0, 1.0, 10_000usize);
+        let spec = homogeneous(n, mu, alpha, k);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let w = wm1_neg_exp(alpha * mu + 1.0);
+        let l_expect = k as f64 / (n as f64 * (1.0 + 1.0 / w));
+        assert!((a.loads[0] - l_expect).abs() < 1e-9 * l_expect);
+        let t_expect = -w / (mu * n as f64);
+        assert!((a.latency_bound.unwrap() - t_expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_b_bound_scales_by_k() {
+        let spec = ClusterSpec::paper_three_group_b(1000, 100_000);
+        let ta = optimal_latency_bound(LatencyModel::A, &spec);
+        let tb = optimal_latency_bound(LatencyModel::B, &spec);
+        assert!((tb / ta - 100_000.0).abs() < 1e-6 * 100_000.0);
+        // Loads are identical across models (Corollary 2).
+        let aa = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let ab = proposed_allocation(LatencyModel::B, &spec).unwrap();
+        for (x, y) in aa.loads.iter().zip(&ab.loads) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn constraint_eq5_satisfied() {
+        // Σ_j r*_j l*_j = k (the MDS recovery constraint).
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let sum: f64 = a.r.iter().zip(&a.loads).map(|(r, l)| r * l).sum();
+        assert!((sum - 10_000.0).abs() < 1e-6 * 10_000.0, "sum={sum}");
+    }
+
+    #[test]
+    fn group_latencies_equalized_theorem_1() {
+        // λ^{l*}_{r*_j:N_j} must be equal across groups (Theorem 1) and equal
+        // to the bound T*.
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let t_star = a.latency_bound.unwrap();
+        for (j, grp) in spec.groups.iter().enumerate() {
+            let lam = order_stats::group_latency(
+                LatencyModel::A,
+                a.loads[j],
+                spec.k as f64,
+                grp.n as f64,
+                a.r[j],
+                grp.mu,
+                grp.alpha,
+            );
+            assert!(
+                (lam - t_star).abs() < 1e-9 * t_star,
+                "group {j}: {lam} vs {t_star}"
+            );
+        }
+    }
+
+    #[test]
+    fn r_star_strictly_inside_groups() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        for (rj, grp) in a.r.iter().zip(&spec.groups) {
+            assert!(*rj > 0.0 && *rj < grp.n as f64);
+        }
+    }
+
+    #[test]
+    fn t_star_is_theta_one_over_n() {
+        // Fig. 2 claim: T* = Θ(1/N). Doubling every group should halve T*.
+        let spec = ClusterSpec::paper_fig2(10_000);
+        let t1 = optimal_latency_bound(LatencyModel::A, &spec);
+        let spec2 = spec.scaled_workers(2.0);
+        let t2 = optimal_latency_bound(LatencyModel::A, &spec2);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_groups_get_more_load() {
+        // With equal alpha, a larger mu (less straggling in model A scale
+        // 1/(k mu)) ... the optimal load l*_j = k/(ξ*_j S) decreases in ξ*_j;
+        // ξ* decreases with mu, so higher-mu groups receive MORE rows.
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 100, mu: 8.0, alpha: 1.0 },
+                Group { n: 100, mu: 1.0, alpha: 1.0 },
+            ],
+            10_000,
+        )
+        .unwrap();
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        assert!(
+            a.loads[0] > a.loads[1],
+            "fast group load {} <= slow group load {}",
+            a.loads[0],
+            a.loads[1]
+        );
+    }
+
+    #[test]
+    fn validates_against_spec() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        a.validate(&spec).unwrap();
+        assert!(a.rate(10_000.0) > 0.0 && a.rate(10_000.0) < 1.0);
+    }
+
+    #[test]
+    fn large_mu_stays_finite() {
+        // Paper evaluates up to mu < 750; allocation must not overflow.
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 100, mu: 740.0, alpha: 1.0 },
+                Group { n: 100, mu: 1.0, alpha: 1.0 },
+            ],
+            10_000,
+        )
+        .unwrap();
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        assert!(a.loads.iter().all(|l| l.is_finite() && *l > 0.0));
+        assert!(a.latency_bound.unwrap().is_finite());
+    }
+}

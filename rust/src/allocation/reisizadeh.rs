@@ -1,0 +1,101 @@
+//! The load allocation of Reisizadeh et al. [32] (paper Appendix D).
+//!
+//! Under group heterogeneity:
+//!
+//! ```text
+//! δ_j = -(W_{-1}(-e^{-(α_j μ_j + 1)}) + 1) / μ_j
+//! s   = Σ_j N_j μ_j / (1 + μ_j δ_j)
+//! l̃_j = k / (s δ_j),     ñ = Σ_j N_j l̃_j .
+//! ```
+//!
+//! A pleasing structural fact (asserted in the tests): with
+//! `w_j = W_{-1}(-e^{-(α_j μ_j+1)})` one has `1 + μ_j δ_j = -w_j` and
+//! `δ_j = ξ*_j`, so `s` equals the paper's `S = Σ r*_j/ξ*_j` and the [32]
+//! allocation **coincides with the proposed allocation** of Theorem 2 /
+//! Corollary 2 under group heterogeneity — which is exactly why Fig. 9 shows
+//! both achieving the lower bound `T*_b`.
+
+use crate::allocation::Allocation;
+use crate::math::wm1_neg_exp;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::Result;
+
+/// Compute the [32] allocation (Appendix D) for `spec`.
+pub fn reisizadeh_allocation(model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+    let k = spec.k as f64;
+    let deltas: Vec<f64> = spec
+        .groups
+        .iter()
+        .map(|g| {
+            let w = wm1_neg_exp(g.alpha * g.mu + 1.0);
+            -(w + 1.0) / g.mu
+        })
+        .collect();
+    let s: f64 = spec
+        .groups
+        .iter()
+        .zip(&deltas)
+        .map(|(g, &d)| g.n as f64 * g.mu / (1.0 + g.mu * d))
+        .sum();
+    let loads: Vec<f64> = deltas.iter().map(|&d| k / (s * d)).collect();
+    let n: f64 = loads
+        .iter()
+        .zip(&spec.groups)
+        .map(|(&l, g)| l * g.n as f64)
+        .sum();
+    Ok(Allocation {
+        model,
+        policy: "reisizadeh".into(),
+        loads,
+        r: vec![],
+        n,
+        latency_bound: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::proposed_allocation;
+    use crate::model::{xi_star, Group};
+
+    #[test]
+    fn delta_equals_xi_star() {
+        // δ_j = -(w+1)/μ and ξ* = α + log(-w)/μ coincide because
+        // log(-w) = -(αμ+1) - w.
+        for (mu, alpha) in [(1.0, 1.0), (4.0, 4.0), (8.0, 12.0), (0.5, 1.0)] {
+            let w = wm1_neg_exp(alpha * mu + 1.0);
+            let delta = -(w + 1.0) / mu;
+            let xs = xi_star(mu, alpha);
+            assert!((delta - xs).abs() < 1e-10 * xs, "{delta} vs {xs}");
+        }
+    }
+
+    #[test]
+    fn coincides_with_proposed_under_group_heterogeneity() {
+        // The structural identity behind Fig. 9: [32]'s allocation equals the
+        // proposed one.
+        let spec = ClusterSpec::paper_three_group_b(1000, 100_000);
+        let rz = reisizadeh_allocation(LatencyModel::B, &spec).unwrap();
+        let prop = proposed_allocation(LatencyModel::B, &spec).unwrap();
+        for (a, b) in rz.loads.iter().zip(&prop.loads) {
+            assert!((a - b).abs() < 1e-9 * b, "{a} vs {b}");
+        }
+        assert!((rz.n - prop.n).abs() < 1e-9 * prop.n);
+    }
+
+    #[test]
+    fn validates_and_positive() {
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 50, mu: 1.0, alpha: 2.0 },
+                Group { n: 70, mu: 6.0, alpha: 1.0 },
+            ],
+            5_000,
+        )
+        .unwrap();
+        let a = reisizadeh_allocation(LatencyModel::B, &spec).unwrap();
+        a.validate(&spec).unwrap();
+        assert!(a.loads.iter().all(|&l| l > 0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Uniform load allocation (paper §III-D-1) and the uncoded baseline.
+//!
+//! Every worker receives `l = n/N` coded rows regardless of its group. The
+//! recovery condition becomes `Σ r_j = kN/n` completions from anywhere in the
+//! cluster. The uncoded scheme is the special case `n = k` (rate 1), which
+//! requires *all* workers to finish.
+
+use crate::allocation::Allocation;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+
+/// Uniform allocation for a given code length `n >= k`.
+pub fn uniform_allocation(
+    model: LatencyModel,
+    spec: &ClusterSpec,
+    n: f64,
+) -> Result<Allocation> {
+    let k = spec.k as f64;
+    if n < k {
+        return Err(Error::InvalidSpec(format!(
+            "uniform allocation needs n >= k (n={n}, k={k})"
+        )));
+    }
+    let total = spec.total_workers() as f64;
+    let l = n / total;
+    // Completions required: r = kN/n (eq. 26).
+    let r_needed = k * total / n;
+    if r_needed > total {
+        return Err(Error::InvalidSpec(format!(
+            "required completions {r_needed} exceed worker count {total}"
+        )));
+    }
+    Ok(Allocation {
+        model,
+        policy: format!("uniform(rate {:.3})", k / n),
+        loads: vec![l; spec.num_groups()],
+        r: vec![],
+        n,
+        latency_bound: None,
+    })
+}
+
+/// The uncoded baseline: `n = k`, all `N` workers must finish.
+pub fn uncoded_allocation(model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+    let mut a = uniform_allocation(model, spec, spec.k as f64)?;
+    a.policy = "uncoded".into();
+    Ok(a)
+}
+
+/// Number of worker completions the master must wait for under uniform
+/// allocation (`⌈ kN/n ⌉` with real-valued analysis value `kN/n`).
+pub fn uniform_completions_needed(spec: &ClusterSpec, n: f64) -> f64 {
+    spec.k as f64 * spec.total_workers() as f64 / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_loads_equal_across_groups() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = uniform_allocation(LatencyModel::A, &spec, 20_000.0).unwrap();
+        assert!(a.loads.iter().all(|&l| (l - 8.0).abs() < 1e-12));
+        a.validate(&spec).unwrap();
+    }
+
+    #[test]
+    fn rate_half_doubles_load_vs_uncoded() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let coded = uniform_allocation(LatencyModel::A, &spec, 20_000.0).unwrap();
+        let uncoded = uncoded_allocation(LatencyModel::A, &spec).unwrap();
+        assert!((coded.loads[0] / uncoded.loads[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completions_formula_eq26() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        // rate 1/2: need kN/n = N/2 completions.
+        let r = uniform_completions_needed(&spec, 20_000.0);
+        assert!((r - 1250.0).abs() < 1e-9);
+        // uncoded: need all N.
+        let r = uniform_completions_needed(&spec, 10_000.0);
+        assert!((r - 2500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_n_below_k() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        assert!(uniform_allocation(LatencyModel::A, &spec, 5_000.0).is_err());
+    }
+
+    #[test]
+    fn uncoded_is_rate_one() {
+        let spec = ClusterSpec::paper_two_group(6_000);
+        let a = uncoded_allocation(LatencyModel::A, &spec).unwrap();
+        assert!((a.rate(6_000.0) - 1.0).abs() < 1e-12);
+    }
+}

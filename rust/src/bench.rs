@@ -1,0 +1,123 @@
+//! In-repo micro/macro benchmark harness (the vendored crate set has no
+//! `criterion`).
+//!
+//! Benches live in `rust/benches/*.rs` with `harness = false` and call
+//! [`run`] / [`run_with_args`]; `cargo bench` drives them. The harness
+//! auto-calibrates the iteration count to a target measurement window and
+//! reports min / median / p95 wall time plus derived throughput.
+
+use crate::math::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Iterations measured (after warm-up).
+    pub iters: u64,
+    /// Median wall time per iteration (seconds).
+    pub median: f64,
+    /// Minimum wall time per iteration (seconds).
+    pub min: f64,
+    /// 95th-percentile wall time per iteration (seconds).
+    pub p95: f64,
+    /// Mean wall time per iteration (seconds).
+    pub mean: f64,
+}
+
+impl BenchResult {
+    /// Pretty one-line report (time auto-scaled).
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (min {}, p95 {}, {} iters)",
+            self.name,
+            fmt_time(self.median),
+            fmt_time(self.min),
+            fmt_time(self.p95),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with an auto-scaled unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating iterations to ~`target` of measurement.
+pub fn run_with_target<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // Warm-up & calibration: time one call, derive iteration count.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target.as_secs_f64() / once).ceil() as u64).clamp(3, 10_000);
+    let mut s = Summary::keeping_samples();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median: s.median(),
+        min: s.min(),
+        p95: s.percentile(95.0),
+        mean: s.mean(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Benchmark with the default 2-second target window.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    run_with_target(name, Duration::from_secs(2), f)
+}
+
+/// Quick benchmark for long-running macro benches (smaller window).
+pub fn run_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    run_with_target(name, Duration::from_millis(300), f)
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = run_with_target("noop-ish", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median >= 0.0);
+        assert!(r.min <= r.median && r.median <= r.p95.max(r.median));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the vendored set).
+//!
+//! Grammar: `hetcoded <subcommand> [--flag value | --switch] [positional...]`.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub subcommand: Option<String>,
+    /// `--key value` pairs.
+    flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens.
+    switches: Vec<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token iterator (testable).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::InvalidSpec("empty flag `--`".into()));
+                }
+                // `--key=value` or `--key value` or bare switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw flag value.
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::InvalidSpec(format!("flag --{key}: cannot parse `{v}`"))
+            }),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        match self.flags.get(key) {
+            None => Err(Error::InvalidSpec(format!("missing required flag --{key}"))),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::InvalidSpec(format!("flag --{key}: cannot parse `{v}`"))
+            }),
+        }
+    }
+
+    /// Is a bare switch present?
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        let a = Args::parse(toks("figures --fig 4 --samples 1000 out.csv")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get::<u32>("fig", 0).unwrap(), 4);
+        assert_eq!(a.get::<usize>("samples", 0).unwrap(), 1000);
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = Args::parse(toks("run --seed=42 --verbose")).unwrap();
+        assert_eq!(a.get::<u64>("seed", 0).unwrap(), 42);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(toks("x")).unwrap();
+        assert_eq!(a.get::<f64>("q", 1.5).unwrap(), 1.5);
+        assert!(a.require::<f64>("q").is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        let a = Args::parse(toks("x --n abc")).unwrap();
+        assert!(a.get::<u32>("n", 0).is_err());
+        assert!(Args::parse(toks("x --")).is_err());
+    }
+
+    #[test]
+    fn negative_flag_values() {
+        let a = Args::parse(toks("x --offset -3")).unwrap();
+        assert_eq!(a.get::<i32>("offset", 0).unwrap(), -3);
+    }
+}

@@ -1,0 +1,161 @@
+//! Row encoder: `Ã = G·A` and per-worker chunking.
+
+use crate::coding::{Generator, Matrix};
+use crate::{Error, Result};
+
+/// Encodes a data matrix and slices the coded rows into per-worker chunks
+/// according to a load allocation.
+#[derive(Clone, Debug)]
+pub struct Encoder {
+    generator: Generator,
+}
+
+/// One worker's coded chunk: the coded rows it must multiply with `x`,
+/// together with their global row indices in `Ã` (needed for decoding).
+#[derive(Clone, Debug)]
+pub struct WorkerChunk {
+    /// Worker id (0-based, global across groups).
+    pub worker: usize,
+    /// Global coded-row indices covered by this chunk.
+    pub row_range: std::ops::Range<usize>,
+    /// The coded rows `Ã_i ∈ R^{l_i × d}`.
+    pub rows: Matrix,
+}
+
+impl Encoder {
+    /// Wrap a generator.
+    pub fn new(generator: Generator) -> Self {
+        Encoder { generator }
+    }
+
+    /// The underlying generator.
+    pub fn generator(&self) -> &Generator {
+        &self.generator
+    }
+
+    /// Encode: `Ã = G·A`, where `A ∈ R^{k×d}`.
+    pub fn encode(&self, a: &Matrix) -> Result<Matrix> {
+        if a.rows() != self.generator.k() {
+            return Err(Error::InvalidSpec(format!(
+                "data matrix has {} rows, code dimension k={}",
+                a.rows(),
+                self.generator.k()
+            )));
+        }
+        Ok(self.generator.matrix().matmul(a))
+    }
+
+    /// Split coded rows into per-worker chunks by an integer load vector
+    /// (one entry per worker, `Σ l_i = n`).
+    pub fn chunk(&self, coded: &Matrix, loads: &[usize]) -> Result<Vec<WorkerChunk>> {
+        let total: usize = loads.iter().sum();
+        if total != self.generator.n() {
+            return Err(Error::InvalidSpec(format!(
+                "loads sum to {total}, code length n={}",
+                self.generator.n()
+            )));
+        }
+        if coded.rows() != self.generator.n() {
+            return Err(Error::InvalidSpec(format!(
+                "coded matrix has {} rows, expected n={}",
+                coded.rows(),
+                self.generator.n()
+            )));
+        }
+        let mut chunks = Vec::with_capacity(loads.len());
+        let mut start = 0usize;
+        for (w, &l) in loads.iter().enumerate() {
+            if l == 0 {
+                return Err(Error::InvalidSpec(format!("worker {w} assigned zero rows")));
+            }
+            let range = start..start + l;
+            let idx: Vec<usize> = range.clone().collect();
+            chunks.push(WorkerChunk {
+                worker: w,
+                row_range: range,
+                rows: coded.select_rows(&idx),
+            });
+            start += l;
+        }
+        Ok(chunks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::GeneratorKind;
+    use crate::math::Rng;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn systematic_encode_preserves_data_rows() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 6, 2);
+        let coded = enc.encode(&a).unwrap();
+        assert_eq!(coded.rows(), 10);
+        for i in 0..4 {
+            assert_eq!(coded.row(i), a.row(i), "systematic row {i}");
+        }
+    }
+
+    #[test]
+    fn encode_rejects_wrong_k() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(5, 6, 2);
+        assert!(enc.encode(&a).is_err());
+    }
+
+    #[test]
+    fn chunking_partitions_all_rows() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 12, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 3, 3);
+        let coded = enc.encode(&a).unwrap();
+        let chunks = enc.chunk(&coded, &[3, 3, 3, 3]).unwrap();
+        assert_eq!(chunks.len(), 4);
+        let mut covered = vec![false; 12];
+        for ch in &chunks {
+            assert_eq!(ch.rows.rows(), 3);
+            for (local, global) in ch.row_range.clone().enumerate() {
+                assert!(!covered[global]);
+                covered[global] = true;
+                assert_eq!(ch.rows.row(local), coded.row(global));
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn chunking_validates_loads() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 12, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 3, 3);
+        let coded = enc.encode(&a).unwrap();
+        assert!(enc.chunk(&coded, &[3, 3, 3]).is_err()); // sums to 9 != 12
+        assert!(enc.chunk(&coded, &[12, 0]).is_err()); // zero load
+    }
+
+    #[test]
+    fn chunk_inner_products_match_direct_computation() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 8, 4, 5).unwrap();
+        let enc = Encoder::new(g.clone());
+        let a = random_matrix(4, 5, 7);
+        let x: Vec<f64> = (0..5).map(|i| i as f64 + 0.5).collect();
+        let coded = enc.encode(&a).unwrap();
+        let chunks = enc.chunk(&coded, &[2, 2, 2, 2]).unwrap();
+        let full = coded.matvec(&x);
+        for ch in &chunks {
+            let y = ch.rows.matvec(&x);
+            for (local, global) in ch.row_range.clone().enumerate() {
+                assert!((y[local] - full[global]).abs() < 1e-12);
+            }
+        }
+    }
+}

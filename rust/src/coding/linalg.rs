@@ -1,0 +1,360 @@
+//! Dense linear-algebra substrate (no external numerics crates).
+//!
+//! Row-major `f64` matrices with the operations the coding layer needs:
+//! matmul, matvec, LU decomposition with partial pivoting, solve, and a
+//! condition-number estimate for decode diagnostics.
+
+use crate::{Error, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vec. Panics on size mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Immutable view of a row.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Extract the submatrix made of the given rows (in order).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (oi, &i) in idx.iter().enumerate() {
+            assert!(i < self.rows, "row index {i} out of bounds");
+            out.data[oi * self.cols..(oi + 1) * self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Matrix–vector product `self · x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Matrix product `self · other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "dimension mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // i-k-j loop order: streams `other` rows, cache-friendly row-major.
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self.data[i * self.cols + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[kk * other.cols..(kk + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Max-abs entry (used in error norms).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Infinity norm (max row sum).
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// LU-factorize (square) and return the factorization.
+    pub fn lu(&self) -> Result<Lu> {
+        Lu::factor(self)
+    }
+
+    /// Solve `self · x = b` for square `self`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        self.lu()?.solve(b)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// LU factorization with partial pivoting: `P·A = L·U`.
+pub struct Lu {
+    n: usize,
+    /// Combined L (strict lower, unit diagonal implicit) and U (upper).
+    lu: Vec<f64>,
+    /// Row permutation: `perm[i]` is the original row in position `i`.
+    perm: Vec<usize>,
+    /// Parity of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Fails on structural singularity.
+    pub fn factor(a: &Matrix) -> Result<Lu> {
+        if a.rows != a.cols {
+            return Err(Error::Numerical(format!(
+                "LU requires square matrix, got {}x{}",
+                a.rows, a.cols
+            )));
+        }
+        let n = a.rows;
+        let mut lu = a.data.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for col in 0..n {
+            // Partial pivot: find max |entry| in this column at/below diag.
+            let mut piv = col;
+            let mut max = lu[col * n + col].abs();
+            for r in (col + 1)..n {
+                let v = lu[r * n + col].abs();
+                if v > max {
+                    max = v;
+                    piv = r;
+                }
+            }
+            if max == 0.0 || !max.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "singular matrix at column {col} (pivot {max})"
+                )));
+            }
+            if piv != col {
+                for j in 0..n {
+                    lu.swap(col * n + j, piv * n + j);
+                }
+                perm.swap(col, piv);
+                sign = -sign;
+            }
+            let d = lu[col * n + col];
+            for r in (col + 1)..n {
+                let f = lu[r * n + col] / d;
+                lu[r * n + col] = f;
+                if f != 0.0 {
+                    // Split the row buffer so we can read the pivot row while
+                    // updating row r (r > col always holds here).
+                    let (top, bottom) = lu.split_at_mut(r * n);
+                    let pivot_row = &top[col * n..col * n + n];
+                    let row_r = &mut bottom[..n];
+                    for j in (col + 1)..n {
+                        row_r[j] -= f * pivot_row[j];
+                    }
+                }
+            }
+        }
+        Ok(Lu { n, lu, perm, sign })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n {
+            return Err(Error::Numerical("rhs length mismatch".into()));
+        }
+        let n = self.n;
+        // Apply permutation.
+        let mut x: Vec<f64> = (0..n).map(|i| b[self.perm[i]]).collect();
+        // Forward substitution (unit lower).
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = acc;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = acc / self.lu[i * n + i];
+        }
+        Ok(x)
+    }
+
+    /// Determinant from the factorization.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.n {
+            d *= self.lu[i * self.n + i];
+        }
+        d
+    }
+
+    /// Cheap conditioning proxy: ratio of max to min |U diagonal|.
+    pub fn diag_ratio(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for i in 0..self.n {
+            let v = self.lu[i * self.n + i].abs();
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        hi / lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Rng;
+
+    #[test]
+    fn matvec_and_matmul_small() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = a.matvec(&[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![-2.0, -2.0]);
+        let b = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::from_fn(5, 5, |_, _| rng.next_f64());
+        let i = Matrix::identity(5);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn lu_solves_known_system() {
+        // [[2,1],[1,3]] x = [3,5]  =>  x = [4/5, 7/5]
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = a.solve(&[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-14);
+        assert!((x[1] - 1.4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lu_random_roundtrip() {
+        let mut rng = Rng::new(2);
+        for n in [1usize, 2, 5, 16, 64] {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = a.solve(&b).unwrap();
+            for (xs, xt) in x.iter().zip(&x_true) {
+                assert!((xs - xt).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(a.lu().is_err());
+        let z = Matrix::zeros(3, 3);
+        assert!(z.lu().is_err());
+    }
+
+    #[test]
+    fn lu_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn determinant() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 1.0, 1.0, 2.0]);
+        assert!((a.lu().unwrap().det() - 5.0).abs() < 1e-12);
+        let i = Matrix::identity(4);
+        assert!((i.lu().unwrap().det() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn select_rows_and_transpose() {
+        let a = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.data(), &[5.0, 6.0, 1.0, 2.0]);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.data(), &[1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, -7.0, 3.0, 2.0]);
+        assert_eq!(a.max_abs(), 7.0);
+        assert_eq!(a.norm_inf(), 8.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Real-valued MDS coding over the rows of the data matrix.
+//!
+//! The paper applies an `(n, k)` MDS code to the rows of `A ∈ R^{k×d}`:
+//! `Ã = G·A` with `G ∈ R^{n×k}` such that any `k` rows of `G` are linearly
+//! independent. The master recovers `A·x` from any `k` coded inner products
+//! by solving `G_B · z = y_B`.
+//!
+//! Two generator families are provided:
+//!
+//! - [`GeneratorKind::Vandermonde`]: rows `[1, x_i, …, x_i^{k-1}]` on distinct
+//!   Chebyshev nodes — *provably* MDS over the reals, but the decode system's
+//!   conditioning degrades exponentially in `k` (fine for `k ≲ 24`).
+//! - [`GeneratorKind::SystematicRandom`]: `G = [I_k; R]` with Gaussian `R` —
+//!   MDS with probability 1 and well-conditioned at practical `k` (the
+//!   default; this is what the live coordinator uses).
+//!
+//! The dense linear algebra (LU with partial pivoting, matmul, matvec) is
+//! implemented in [`linalg`] from scratch.
+
+pub mod bjorck_pereyra;
+pub mod decoder;
+pub mod encoder;
+pub mod generator;
+pub mod linalg;
+
+pub use decoder::Decoder;
+pub use encoder::Encoder;
+pub use generator::{Generator, GeneratorKind};
+pub use linalg::Matrix;

@@ -1,0 +1,109 @@
+//! Minimal TOML-subset configuration parser (no serde in the vendored set).
+//!
+//! Supports exactly what cluster specs need:
+//!
+//! ```toml
+//! # comment
+//! k = 10000
+//! name = "fig4"
+//! rate = 0.5
+//! flag = true
+//! mus = [16.0, 12.0, 8.0]
+//!
+//! [[group]]
+//! workers = 300
+//! mu = 16.0
+//! alpha = 1.0
+//! ```
+//!
+//! i.e. scalar keys (int / float / string / bool), flat arrays of numbers,
+//! and repeated `[[table]]` sections. Single `[table]` sections are also
+//! accepted.
+
+mod parser;
+
+pub use parser::{parse, Table, Value};
+
+use crate::model::{ClusterSpec, Group};
+use crate::{Error, Result};
+
+impl ClusterSpec {
+    /// Parse a cluster spec from TOML-subset text: a root-level `k` plus one
+    /// `[[group]]` per worker group with `workers`, `mu`, `alpha` keys.
+    pub fn from_toml(text: &str) -> Result<ClusterSpec> {
+        let root = parse(text)?;
+        let k = root
+            .get_int("k")
+            .ok_or_else(|| Error::Config("missing root key `k`".into()))?;
+        if k <= 0 {
+            return Err(Error::Config(format!("k must be positive, got {k}")));
+        }
+        let tables = root
+            .get_tables("group")
+            .ok_or_else(|| Error::Config("missing [[group]] sections".into()))?;
+        let mut groups = Vec::with_capacity(tables.len());
+        for (i, t) in tables.iter().enumerate() {
+            let workers = t
+                .get_int("workers")
+                .ok_or_else(|| Error::Config(format!("group {i}: missing `workers`")))?;
+            let mu = t
+                .get_float("mu")
+                .ok_or_else(|| Error::Config(format!("group {i}: missing `mu`")))?;
+            let alpha = t.get_float("alpha").unwrap_or(1.0);
+            groups.push(Group::new(workers as usize, mu, alpha)?);
+        }
+        ClusterSpec::new(groups, k as usize)
+    }
+
+    /// Load a spec from a file path.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<ClusterSpec> {
+        let text = std::fs::read_to_string(path)?;
+        ClusterSpec::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Fig. 8 cluster
+k = 10000
+
+[[group]]
+workers = 300
+mu = 4.0
+alpha = 1.0
+
+[[group]]
+workers = 600
+mu = 0.5
+# alpha defaults to 1.0
+"#;
+
+    #[test]
+    fn parses_cluster_spec() {
+        let spec = ClusterSpec::from_toml(SAMPLE).unwrap();
+        assert_eq!(spec.k, 10_000);
+        assert_eq!(spec.num_groups(), 2);
+        assert_eq!(spec.groups[0].n, 300);
+        assert_eq!(spec.groups[1].mu, 0.5);
+        assert_eq!(spec.groups[1].alpha, 1.0);
+    }
+
+    #[test]
+    fn missing_k_rejected() {
+        assert!(ClusterSpec::from_toml("[[group]]\nworkers = 3\nmu = 1.0").is_err());
+    }
+
+    #[test]
+    fn missing_groups_rejected() {
+        assert!(ClusterSpec::from_toml("k = 100").is_err());
+    }
+
+    #[test]
+    fn bad_group_values_rejected() {
+        let text = "k = 100\n[[group]]\nworkers = 0\nmu = 1.0";
+        assert!(ClusterSpec::from_toml(text).is_err());
+    }
+}

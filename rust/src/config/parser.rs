@@ -1,0 +1,271 @@
+//! The TOML-subset tokenizer/parser.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// 64-bit integer literal.
+    Int(i64),
+    /// Float literal (also produced by `1e-3` style).
+    Float(f64),
+    /// Double-quoted string.
+    Str(String),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<Value>),
+    /// Repeated `[[name]]` tables.
+    Tables(Vec<Table>),
+}
+
+/// A table: ordered key → value map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Integer (accepts Int only).
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.get(key)? {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Float (accepts Float or Int).
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// String.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Bool.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array of floats (Int entries are widened).
+    pub fn get_float_array(&self, key: &str) -> Option<Vec<f64>> {
+        match self.get(key)? {
+            Value::Array(xs) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Some(*f),
+                    Value::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Repeated tables (`[[name]]`).
+    pub fn get_tables(&self, key: &str) -> Option<&[Table]> {
+        match self.get(key)? {
+            Value::Tables(ts) => Some(ts),
+            _ => None,
+        }
+    }
+
+    fn insert(&mut self, key: String, value: Value) -> Result<()> {
+        if self.entries.contains_key(&key) {
+            return Err(Error::Config(format!("duplicate key `{key}`")));
+        }
+        self.entries.insert(key, value);
+        Ok(())
+    }
+}
+
+/// Parse TOML-subset text into the root table.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut root = Table::default();
+    // Path of the table currently being filled: None = root,
+    // Some(name) = last [[name]] or [name].
+    let mut current: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| Error::Config(format!("line {}: {msg}", lineno + 1));
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            match root.entries.entry(name.clone()) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(Value::Tables(vec![Table::default()]));
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => match e.get_mut() {
+                    Value::Tables(ts) => ts.push(Table::default()),
+                    _ => return Err(err("key exists with non-table type")),
+                },
+            }
+            current = Some(name);
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            if root.entries.contains_key(&name) {
+                return Err(err(&format!("duplicate table `{name}`")));
+            }
+            root.entries
+                .insert(name.clone(), Value::Tables(vec![Table::default()]));
+            current = Some(name);
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&format!("bad value for `{key}`: {m}")))?;
+            let target = match &current {
+                None => &mut root,
+                Some(name) => match root.entries.get_mut(name) {
+                    Some(Value::Tables(ts)) => ts.last_mut().unwrap(),
+                    _ => unreachable!("current table always exists"),
+                },
+            };
+            target.insert(key, value)?;
+        } else {
+            return Err(err("expected `key = value` or `[table]`"));
+        }
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // No # inside strings in our subset (strings may not contain '#').
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        if inner.contains('"') {
+            return Err("embedded quote".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: std::result::Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    // Number: int if it parses as i64 and has no float markers.
+    let is_floaty = s.contains('.') || s.contains('e') || s.contains('E');
+    if !is_floaty {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("not a number: `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let t = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = 1e-3").unwrap();
+        assert_eq!(t.get_int("a"), Some(1));
+        assert_eq!(t.get_float("b"), Some(2.5));
+        assert_eq!(t.get_str("c"), Some("hi"));
+        assert_eq!(t.get_bool("d"), Some(true));
+        assert_eq!(t.get_float("e"), Some(1e-3));
+        // Int widens to float.
+        assert_eq!(t.get_float("a"), Some(1.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("xs = [1, 2.5, 3]").unwrap();
+        assert_eq!(t.get_float_array("xs"), Some(vec![1.0, 2.5, 3.0]));
+        let t = parse("xs = []").unwrap();
+        assert_eq!(t.get_float_array("xs"), Some(vec![]));
+    }
+
+    #[test]
+    fn repeated_tables() {
+        let t = parse("[[g]]\nx = 1\n[[g]]\nx = 2").unwrap();
+        let gs = t.get_tables("g").unwrap();
+        assert_eq!(gs.len(), 2);
+        assert_eq!(gs[0].get_int("x"), Some(1));
+        assert_eq!(gs[1].get_int("x"), Some(2));
+    }
+
+    #[test]
+    fn single_table() {
+        let t = parse("[s]\nx = 3").unwrap();
+        assert_eq!(t.get_tables("s").unwrap()[0].get_int("x"), Some(3));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let t = parse("# header\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(t.get_int("a"), Some(1));
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        for bad in ["a ==", "= 1", "[unclosed", "a = [1,", "a = \"x", "junk"] {
+            let e = parse(bad).unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains("line 1"), "{bad} -> {msg}");
+        }
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[t]\n[t]").is_err());
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let t = parse("a = -5\nb = -2.5e2").unwrap();
+        assert_eq!(t.get_int("a"), Some(-5));
+        assert_eq!(t.get_float("b"), Some(-250.0));
+    }
+}

@@ -1,0 +1,223 @@
+//! Worker compute backends.
+//!
+//! Workers either compute natively (pure-Rust matvec — useful for tests and
+//! for clusters larger than the PJRT service can serve efficiently) or
+//! through [`XlaService`], a dedicated thread owning the PJRT [`Runtime`]
+//! that serves matvec requests over a channel. PJRT wrapper handles are not
+//! `Sync`, so the service thread is the ownership boundary; worker threads
+//! hold only a cloneable submission handle.
+
+use crate::coding::Matrix;
+use crate::runtime::Runtime;
+use crate::{Error, Result};
+use std::sync::mpsc;
+
+/// A compute backend workers call to evaluate `rows · x`.
+pub trait Compute: Send + Sync {
+    /// Evaluate the chunk inner products.
+    fn matvec(&self, rows: &Matrix, x: &[f64]) -> Result<Vec<f64>>;
+
+    /// Evaluate the chunk against a *batch* of request vectors; returns one
+    /// result vector per request. Default: loop over [`Compute::matvec`];
+    /// backends with a batched artifact (`XlaService`) override this with a
+    /// single MXU-shaped dispatch.
+    fn matvec_batch(&self, rows: &Matrix, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        xs.iter().map(|x| self.matvec(rows, x)).collect()
+    }
+
+    /// Backend display name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend.
+pub struct NativeCompute;
+
+impl Compute for NativeCompute {
+    fn matvec(&self, rows: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+        if rows.cols() != x.len() {
+            return Err(Error::InvalidSpec(format!(
+                "chunk cols {} vs x len {}",
+                rows.cols(),
+                x.len()
+            )));
+        }
+        Ok(rows.matvec(x))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+enum Request {
+    Matvec {
+        rows: Matrix,
+        x: Vec<f64>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Encode {
+        g: Matrix,
+        a: Matrix,
+        reply: mpsc::Sender<Result<Matrix>>,
+    },
+    MatvecBatch {
+        rows: Matrix,
+        xs: Vec<Vec<f64>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f64>>>>,
+    },
+    Shutdown,
+}
+
+/// Channel-fronted PJRT compute service.
+///
+/// PJRT wrapper handles are not `Send` (they hold `Rc`s over raw pointers),
+/// so the [`Runtime`] is constructed *inside* the service thread and never
+/// crosses a thread boundary. Requests are serialized through that thread;
+/// with realistic straggle injection the queueing delay is negligible
+/// relative to the injected delays, and the numerics are exactly the AOT
+/// artifact's.
+pub struct XlaService {
+    tx: mpsc::Sender<Request>,
+    handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+    cols: usize,
+}
+
+impl XlaService {
+    /// Spawn the service thread, loading artifacts from `dir` in-thread.
+    /// Fails fast if the artifacts cannot be loaded/compiled.
+    pub fn new(dir: std::path::PathBuf) -> Result<XlaService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(rt.cols()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Matvec { rows, x, reply } => {
+                            let _ = reply.send(runtime.matvec(&rows, &x));
+                        }
+                        Request::Encode { g, a, reply } => {
+                            let _ = reply.send(runtime.encode(&g, &a));
+                        }
+                        Request::MatvecBatch { rows, xs, reply } => {
+                            let _ = reply.send(runtime.matvec_batched(&rows, &xs));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn xla service: {e}")))?;
+        let cols = ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla service died during load".into()))??;
+        Ok(XlaService {
+            tx,
+            handle: std::sync::Mutex::new(Some(handle)),
+            cols,
+        })
+    }
+
+    /// Input width `d` the loaded artifacts expect.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Run the AOT encode executable `G · A` (setup path). Shapes must match
+    /// the encode artifact exactly.
+    pub fn encode(&self, g: &Matrix, a: &Matrix) -> Result<Matrix> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Encode {
+                g: g.clone(),
+                a: a.clone(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("xla service stopped".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla service dropped reply".into()))?
+    }
+
+    /// Gracefully stop the service thread.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Compute for XlaService {
+    fn matvec(&self, rows: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Matvec {
+                rows: rows.clone(),
+                x: x.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("xla service stopped".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla service dropped reply".into()))?
+    }
+
+    fn matvec_batch(&self, rows: &Matrix, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::MatvecBatch {
+                rows: rows.clone(),
+                xs: xs.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("xla service stopped".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla service dropped reply".into()))?
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Rng;
+
+    #[test]
+    fn native_matches_matrix_matvec() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::from_fn(7, 5, |_, _| rng.normal());
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let y = NativeCompute.matvec(&m, &x).unwrap();
+        assert_eq!(y, m.matvec(&x));
+        assert_eq!(NativeCompute.name(), "native");
+    }
+
+    #[test]
+    fn native_rejects_bad_shapes() {
+        let m = Matrix::zeros(3, 4);
+        assert!(NativeCompute.matvec(&m, &[1.0, 2.0]).is_err());
+    }
+}

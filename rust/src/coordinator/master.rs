@@ -1,0 +1,583 @@
+//! The master: dispatch, collect-until-`k`, decode.
+
+use crate::allocation::Allocation;
+use crate::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use crate::coordinator::{Compute, LatencyRecorder, StragglerInjector};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration for one coded matvec job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    /// Latency model used for straggle injection.
+    pub model: LatencyModel,
+    /// Seconds of wall time per unit of model time.
+    pub time_scale: f64,
+    /// RNG seed (straggle delays + generator matrix).
+    pub seed: u64,
+    /// Workers that never respond (permanent failures).
+    pub dead_workers: Vec<usize>,
+    /// MDS generator construction.
+    pub generator: GeneratorKind,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            model: LatencyModel::A,
+            time_scale: 0.02,
+            seed: 0xAB5,
+            dead_workers: vec![],
+            generator: GeneratorKind::SystematicRandom,
+        }
+    }
+}
+
+/// Outcome of one coded matvec job.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    /// Wall time from dispatch to successful decode.
+    pub wall_latency: Duration,
+    /// The model-time latency the analysis would record for this sample.
+    pub model_latency: Option<f64>,
+    /// Decoded `A·x`.
+    pub decoded: Vec<f64>,
+    /// Max abs error vs the directly computed `A·x`.
+    pub max_error: f64,
+    /// Worker responses consumed before decoding.
+    pub workers_used: usize,
+    /// Coded rows aggregated before decoding.
+    pub rows_collected: usize,
+    /// Code length actually used (integer).
+    pub n: usize,
+    /// Compute backend name.
+    pub backend: &'static str,
+}
+
+struct WorkerReply {
+    #[allow(dead_code)] // kept for diagnostics/logging hooks
+    worker: usize,
+    pairs: Vec<(usize, f64)>,
+}
+
+/// Run one coded distributed matvec job end-to-end.
+///
+/// `a` is the uncoded data matrix (`k × d`, `k = spec.k`); `x` the input
+/// vector. Workers are real threads: each sleeps its injected straggle
+/// delay, evaluates its chunk through `compute`, and replies; the master
+/// returns as soon as `k` rows are aggregated and decoded. Worker threads
+/// still sleeping are detached (their late results are discarded), so the
+/// measured wall latency is the master's, not the stragglers'.
+pub fn run_job(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    x: &[f64],
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<JobReport> {
+    if a.rows() != spec.k {
+        return Err(Error::InvalidSpec(format!(
+            "data matrix has {} rows, spec.k = {}",
+            a.rows(),
+            spec.k
+        )));
+    }
+    alloc.validate(spec)?;
+    let per_worker = alloc.per_worker_loads(spec);
+    let n: usize = per_worker.iter().sum();
+
+    // Encode & chunk.
+    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ 0x6E6)?;
+    let encoder = Encoder::new(gen.clone());
+    let coded = encoder.encode(a)?;
+    let chunks = encoder.chunk(&coded, &per_worker)?;
+
+    // Straggle injection.
+    let injector = StragglerInjector::sample(
+        spec,
+        cfg.model,
+        &per_worker,
+        cfg.time_scale,
+        cfg.seed ^ STRAGGLE_SEED_TAG,
+    )?
+    .with_dead(cfg.dead_workers.iter().copied());
+    let model_latency = injector.analytic_completion(&per_worker, spec.k);
+
+    let x_arc: Arc<Vec<f64>> = Arc::new(x.to_vec());
+    let (tx, rx) = mpsc::channel::<WorkerReply>();
+
+    let start = Instant::now();
+    for chunk in chunks {
+        let w = chunk.worker;
+        if injector.is_dead(w) {
+            continue; // dead worker: its sender never exists
+        }
+        let delay = injector.wall_delay(w);
+        let xref = Arc::clone(&x_arc);
+        let cmp = Arc::clone(&compute);
+        let sender = tx.clone();
+        std::thread::Builder::new()
+            .name(format!("worker-{w}"))
+            .spawn(move || {
+                std::thread::sleep(delay);
+                if let Ok(y) = cmp.matvec(&chunk.rows, &xref) {
+                    let pairs: Vec<(usize, f64)> =
+                        chunk.row_range.clone().zip(y).collect();
+                    let _ = sender.send(WorkerReply { worker: w, pairs });
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn worker {w}: {e}")))?;
+    }
+    drop(tx); // master holds only the receiver
+
+    // Collect until k rows.
+    let mut received: Vec<(usize, f64)> = Vec::with_capacity(spec.k + 64);
+    let mut workers_used = 0usize;
+    while received.len() < spec.k {
+        match rx.recv() {
+            Ok(reply) => {
+                workers_used += 1;
+                received.extend(reply.pairs);
+            }
+            Err(_) => {
+                return Err(Error::Decode(format!(
+                    "all live workers replied but only {} of {} rows arrived \
+                     (too many dead workers?)",
+                    received.len(),
+                    spec.k
+                )));
+            }
+        }
+    }
+    let rows_collected = received.len();
+    let decoded = Decoder::new(gen).decode(&received)?;
+    let wall_latency = start.elapsed();
+
+    let truth = a.matvec(x);
+    let max_error = decoded
+        .iter()
+        .zip(&truth)
+        .map(|(d, t)| (d - t).abs())
+        .fold(0.0f64, f64::max);
+
+    Ok(JobReport {
+        wall_latency,
+        model_latency,
+        decoded,
+        max_error,
+        workers_used,
+        rows_collected,
+        n,
+        backend: compute.name(),
+    })
+}
+
+/// Domain-separation tag so straggle delays and generator entries never share
+/// an RNG stream even though both derive from `JobConfig::seed`.
+const STRAGGLE_SEED_TAG: u64 = 0x57A6_61E5_57A6_61E5;
+
+/// Result of serving a batch of requests.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Per-request latency metrics.
+    pub recorder: LatencyRecorder,
+    /// Max decode error across requests.
+    pub worst_error: f64,
+    /// Per-request reports.
+    pub jobs: Vec<JobReport>,
+    /// Wall time for the whole batch (pipelined serving only).
+    pub makespan: Option<Duration>,
+}
+
+/// Run one **batched** coded matvec job: each worker receives its chunk
+/// once and evaluates it against all `B` request vectors in a single
+/// backend dispatch (vLLM-style request batching — the contraction becomes
+/// an MXU-shaped `(l_i × d)·(d × B)` matmul on the XLA backend). The master
+/// waits until the aggregated rows reach `k`, then decodes every request
+/// from the *same* row support.
+///
+/// Compared to [`serve_requests`], a batch pays the straggle penalty once
+/// for all `B` requests — per-request latency equals the batch latency, but
+/// throughput rises by ~`B`.
+pub fn run_job_batched(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<Vec<JobReport>> {
+    if requests.is_empty() {
+        return Err(Error::InvalidSpec("empty request batch".into()));
+    }
+    if a.rows() != spec.k {
+        return Err(Error::InvalidSpec(format!(
+            "data matrix has {} rows, spec.k = {}",
+            a.rows(),
+            spec.k
+        )));
+    }
+    alloc.validate(spec)?;
+    let per_worker = alloc.per_worker_loads(spec);
+    let n: usize = per_worker.iter().sum();
+    let b = requests.len();
+
+    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ 0x6E6)?;
+    let encoder = Encoder::new(gen.clone());
+    let coded = encoder.encode(a)?;
+    let chunks = encoder.chunk(&coded, &per_worker)?;
+
+    let injector = StragglerInjector::sample(
+        spec,
+        cfg.model,
+        &per_worker,
+        cfg.time_scale,
+        cfg.seed ^ STRAGGLE_SEED_TAG,
+    )?
+    .with_dead(cfg.dead_workers.iter().copied());
+    let model_latency = injector.analytic_completion(&per_worker, spec.k);
+
+    struct BatchReply {
+        range: std::ops::Range<usize>,
+        /// One result column per request.
+        ys: Vec<Vec<f64>>,
+    }
+    let xs_arc: Arc<Vec<Vec<f64>>> = Arc::new(requests.to_vec());
+    let (tx, rx) = mpsc::channel::<BatchReply>();
+    let start = Instant::now();
+    for chunk in chunks {
+        let w = chunk.worker;
+        if injector.is_dead(w) {
+            continue;
+        }
+        let delay = injector.wall_delay(w);
+        let xs = Arc::clone(&xs_arc);
+        let cmp = Arc::clone(&compute);
+        let sender = tx.clone();
+        std::thread::Builder::new()
+            .name(format!("worker-{w}"))
+            .spawn(move || {
+                std::thread::sleep(delay);
+                if let Ok(ys) = cmp.matvec_batch(&chunk.rows, &xs) {
+                    let _ = sender.send(BatchReply { range: chunk.row_range.clone(), ys });
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn worker {w}: {e}")))?;
+    }
+    drop(tx);
+
+    // Collect per-request row/value pairs until k rows (shared support).
+    let mut received: Vec<Vec<(usize, f64)>> = vec![Vec::with_capacity(spec.k + 64); b];
+    let mut workers_used = 0usize;
+    while received[0].len() < spec.k {
+        match rx.recv() {
+            Ok(reply) => {
+                workers_used += 1;
+                for (bi, y) in reply.ys.iter().enumerate() {
+                    received[bi].extend(reply.range.clone().zip(y.iter().copied()));
+                }
+            }
+            Err(_) => {
+                return Err(Error::Decode(format!(
+                    "only {} of {} rows arrived (too many dead workers?)",
+                    received[0].len(),
+                    spec.k
+                )))
+            }
+        }
+    }
+    let rows_collected = received[0].len();
+    let decoder = Decoder::new(gen);
+    let wall_latency = start.elapsed();
+    let mut reports = Vec::with_capacity(b);
+    for (bi, pairs) in received.iter().enumerate() {
+        let decoded = decoder.decode(pairs)?;
+        let truth = a.matvec(&requests[bi]);
+        let max_error = decoded
+            .iter()
+            .zip(&truth)
+            .map(|(d, t)| (d - t).abs())
+            .fold(0.0f64, f64::max);
+        reports.push(JobReport {
+            wall_latency,
+            model_latency,
+            decoded,
+            max_error,
+            workers_used,
+            rows_collected,
+            n,
+            backend: compute.name(),
+        });
+    }
+    Ok(reports)
+}
+
+/// Serve `requests` concurrently (pipelined): every request's workers are
+/// dispatched immediately on their own threads, so request `i+1` does not
+/// wait for request `i`'s stragglers. Returns per-request latencies plus the
+/// batch makespan — the throughput view of the system.
+pub fn serve_requests_pipelined(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<ServeReport> {
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(requests.len());
+    for (i, x) in requests.iter().enumerate() {
+        let mut jcfg = cfg.clone();
+        jcfg.seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(i as u64 + 1));
+        let spec = spec.clone();
+        let alloc = alloc.clone();
+        let a = a.clone();
+        let x = x.clone();
+        let cmp = Arc::clone(&compute);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("request-{i}"))
+                .spawn(move || run_job(&spec, &alloc, &a, &x, cmp, &jcfg))
+                .map_err(|e| Error::Runtime(format!("spawn request {i}: {e}")))?,
+        );
+    }
+    let mut recorder = LatencyRecorder::new();
+    let mut jobs = Vec::with_capacity(requests.len());
+    let mut worst = 0.0f64;
+    for h in handles {
+        let report = h.join().map_err(|_| {
+            Error::Runtime("request thread panicked".into())
+        })??;
+        recorder.record(report.wall_latency, report.decoded.len());
+        worst = worst.max(report.max_error);
+        jobs.push(report);
+    }
+    let mut out = ServeReport { recorder, worst_error: worst, jobs, makespan: None };
+    out.makespan = Some(start.elapsed());
+    Ok(out)
+}
+
+/// Serve `requests` input vectors sequentially over the same cluster and
+/// allocation, recording latency percentiles (the serving-loop view of the
+/// system). Each request draws fresh straggle delays (seed-derived).
+pub fn serve_requests(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<ServeReport> {
+    let mut recorder = LatencyRecorder::new();
+    let mut jobs = Vec::with_capacity(requests.len());
+    let mut worst = 0.0f64;
+    for (i, x) in requests.iter().enumerate() {
+        let mut jcfg = cfg.clone();
+        jcfg.seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(i as u64 + 1));
+        let report = run_job(spec, alloc, a, x, Arc::clone(&compute), &jcfg)?;
+        recorder.record(report.wall_latency, report.decoded.len());
+        worst = worst.max(report.max_error);
+        jobs.push(report);
+    }
+    Ok(ServeReport { recorder, worst_error: worst, jobs, makespan: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::proposed_allocation;
+    use crate::coordinator::NativeCompute;
+    use crate::math::Rng;
+    use crate::model::Group;
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap()
+    }
+
+    fn data(k: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let x = (0..d).map(|_| rng.normal()).collect();
+        (a, x)
+    }
+
+    fn fast_cfg() -> JobConfig {
+        JobConfig { time_scale: 0.002, ..Default::default() }
+    }
+
+    #[test]
+    fn job_decodes_correctly() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, x) = data(64, 8, 42);
+        let report = run_job(
+            &spec,
+            &alloc,
+            &a,
+            &x,
+            Arc::new(NativeCompute),
+            &fast_cfg(),
+        )
+        .unwrap();
+        assert!(report.max_error < 1e-8, "err {}", report.max_error);
+        assert_eq!(report.decoded.len(), 64);
+        assert!(report.rows_collected >= 64);
+        assert!(report.workers_used <= 10);
+        assert!(report.model_latency.is_some());
+    }
+
+    #[test]
+    fn job_survives_dead_workers() {
+        // Use a rate-1/2 uniform allocation so the code carries enough
+        // redundancy to lose two workers (the proposed allocation on this
+        // small cluster is near rate 1 and tolerates almost no failures).
+        let spec = small_spec();
+        let alloc =
+            crate::allocation::uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let (a, x) = data(64, 8, 43);
+        let mut cfg = fast_cfg();
+        cfg.dead_workers = vec![0, 5];
+        let report =
+            run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg).unwrap();
+        assert!(report.max_error < 1e-8);
+    }
+
+    #[test]
+    fn job_fails_with_too_many_dead() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, x) = data(64, 8, 44);
+        let mut cfg = fast_cfg();
+        cfg.dead_workers = (0..9).collect(); // one survivor cannot cover k
+        let res = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn wall_latency_tracks_model_latency() {
+        // The measured wall latency should be close to
+        // model_latency * time_scale (compute time is tiny here).
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, x) = data(64, 8, 45);
+        let cfg = JobConfig { time_scale: 0.05, ..Default::default() };
+        let report =
+            run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg).unwrap();
+        let expected = report.model_latency.unwrap() * 0.05;
+        let wall = report.wall_latency.as_secs_f64();
+        assert!(
+            wall >= expected * 0.9 && wall < expected * 2.0 + 0.05,
+            "wall {wall} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn batched_job_decodes_every_request() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, _) = data(64, 8, 50);
+        let mut rng = Rng::new(51);
+        let requests: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let reports = run_job_batched(
+            &spec,
+            &alloc,
+            &a,
+            &requests,
+            Arc::new(NativeCompute),
+            &fast_cfg(),
+        )
+        .unwrap();
+        assert_eq!(reports.len(), 4);
+        for r in &reports {
+            assert!(r.max_error < 1e-8, "err {}", r.max_error);
+            assert_eq!(r.decoded.len(), 64);
+        }
+        // All requests share one straggle realization → identical latency.
+        assert!(reports.windows(2).all(|w| w[0].wall_latency == w[1].wall_latency));
+        // Empty batch rejected.
+        assert!(run_job_batched(
+            &spec,
+            &alloc,
+            &a,
+            &[],
+            Arc::new(NativeCompute),
+            &fast_cfg()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pipelined_serving_beats_sequential_makespan() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, _) = data(64, 8, 48);
+        let mut rng = Rng::new(49);
+        let requests: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let cfg = JobConfig { time_scale: 0.05, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let seq = serve_requests(
+            &spec,
+            &alloc,
+            &a,
+            &requests,
+            Arc::new(NativeCompute),
+            &cfg,
+        )
+        .unwrap();
+        let seq_makespan = t0.elapsed();
+        let pip = serve_requests_pipelined(
+            &spec,
+            &alloc,
+            &a,
+            &requests,
+            Arc::new(NativeCompute),
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(pip.recorder.count(), 6);
+        assert!(pip.worst_error < 1e-8);
+        let makespan = pip.makespan.unwrap();
+        // All six requests overlap: makespan ≈ one request's latency, far
+        // below the sequential sum.
+        assert!(
+            makespan < seq_makespan / 2,
+            "pipelined {makespan:?} !< sequential {seq_makespan:?} / 2"
+        );
+        let _ = seq;
+    }
+
+    #[test]
+    fn serve_records_all_requests() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, _) = data(64, 8, 46);
+        let mut rng = Rng::new(47);
+        let requests: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let report = serve_requests(
+            &spec,
+            &alloc,
+            &a,
+            &requests,
+            Arc::new(NativeCompute),
+            &fast_cfg(),
+        )
+        .unwrap();
+        assert_eq!(report.recorder.count(), 5);
+        assert!(report.worst_error < 1e-8);
+        assert_eq!(report.jobs.len(), 5);
+    }
+}

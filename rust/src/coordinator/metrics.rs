@@ -1,0 +1,102 @@
+//! Latency metrics for the serving path.
+
+use crate::math::Summary;
+use std::time::Duration;
+
+/// Records per-request latencies and exposes percentiles/throughput.
+#[derive(Clone, Debug)]
+pub struct LatencyRecorder {
+    summary: Summary,
+    total_rows: u64,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    /// New empty recorder.
+    pub fn new() -> Self {
+        LatencyRecorder {
+            summary: Summary::keeping_samples(),
+            total_rows: 0,
+        }
+    }
+
+    /// Record one request's wall latency and decoded row count.
+    pub fn record(&mut self, latency: Duration, rows: usize) {
+        self.summary.add(latency.as_secs_f64());
+        self.total_rows += rows as u64;
+    }
+
+    /// Requests recorded.
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+
+    /// Mean latency in seconds.
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Latency percentile (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.summary.percentile(p)
+    }
+
+    /// Rows decoded per second of cumulative latency (sequential-serving
+    /// throughput proxy).
+    pub fn rows_per_second(&self) -> f64 {
+        let total_time = self.summary.mean() * self.summary.count() as f64;
+        if total_time <= 0.0 {
+            0.0
+        } else {
+            self.total_rows as f64 / total_time
+        }
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        if self.count() == 0 {
+            return "no requests recorded".into();
+        }
+        format!(
+            "requests={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms rows/s={:.0}",
+            self.count(),
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            self.rows_per_second()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut rec = LatencyRecorder::new();
+        for ms in [10u64, 20, 30, 40, 50] {
+            rec.record(Duration::from_millis(ms), 100);
+        }
+        assert_eq!(rec.count(), 5);
+        assert!((rec.mean() - 0.030).abs() < 1e-9);
+        assert!((rec.percentile(50.0) - 0.030).abs() < 1e-9);
+        // 500 rows over 0.15s cumulative.
+        assert!((rec.rows_per_second() - 500.0 / 0.15).abs() < 1e-6);
+        assert!(rec.report().contains("requests=5"));
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let rec = LatencyRecorder::new();
+        assert_eq!(rec.count(), 0);
+        assert_eq!(rec.rows_per_second(), 0.0);
+        assert_eq!(rec.report(), "no requests recorded");
+    }
+}

@@ -1,0 +1,27 @@
+//! Live master/worker coordinator.
+//!
+//! This is the system the paper *assumes* (Fig. 1): a master holding the
+//! input vector `x` dispatches coded subtasks `Ã_i` to `N` workers; worker
+//! `i` computes `Ã_i·x` (through the AOT-compiled XLA executable or the
+//! native fallback) and replies; the master decodes `A·x` as soon as the
+//! aggregated rows reach `k`.
+//!
+//! Heterogeneous straggling is produced by **injecting** per-worker delays
+//! sampled from the paper's shifted-exponential models — the same stochastic
+//! process the analysis studies, scaled to wall-clock via
+//! [`JobConfig::time_scale`]. Dead workers (permanent failures) are
+//! supported; the MDS code tolerates them as long as the surviving load
+//! covers `k`.
+
+pub mod compute;
+pub mod master;
+pub mod metrics;
+pub mod straggler;
+
+pub use compute::{Compute, NativeCompute, XlaService};
+pub use master::{
+    run_job, run_job_batched, serve_requests, serve_requests_pipelined,
+    JobConfig, JobReport, ServeReport,
+};
+pub use metrics::LatencyRecorder;
+pub use straggler::StragglerInjector;

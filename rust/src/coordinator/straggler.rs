@@ -1,0 +1,209 @@
+//! Straggle-delay injection.
+//!
+//! Deterministically samples each worker's delay from its group's
+//! shifted-exponential runtime distribution and scales to wall-clock time.
+//! This reproduces the paper's stochastic process on real threads: the model
+//! *is* the cluster's behaviour, so injecting it exercises the full
+//! coordinator code path (dispatch → straggle → compute → collect → decode)
+//! under exactly the analyzed distribution.
+
+use crate::math::Rng;
+use crate::model::{ClusterSpec, LatencyModel, RuntimeDist};
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+/// Per-worker injected delays plus the dead-worker set.
+#[derive(Clone, Debug)]
+pub struct StragglerInjector {
+    delays: Vec<f64>,
+    dead: BTreeSet<usize>,
+    time_scale: f64,
+}
+
+impl StragglerInjector {
+    /// Sample one delay per worker (group-major order matching
+    /// `Allocation::per_worker_loads`). `loads` are the *integer* per-worker
+    /// row counts; `time_scale` converts model time to wall seconds.
+    pub fn sample(
+        spec: &ClusterSpec,
+        model: LatencyModel,
+        per_worker_loads: &[usize],
+        time_scale: f64,
+        seed: u64,
+    ) -> Result<StragglerInjector> {
+        if per_worker_loads.len() != spec.total_workers() {
+            return Err(Error::InvalidSpec(format!(
+                "{} loads for {} workers",
+                per_worker_loads.len(),
+                spec.total_workers()
+            )));
+        }
+        if !(time_scale > 0.0) {
+            return Err(Error::InvalidSpec("time_scale must be positive".into()));
+        }
+        let mut rng = Rng::new(seed);
+        let mut delays = Vec::with_capacity(per_worker_loads.len());
+        let mut w = 0usize;
+        for g in &spec.groups {
+            for _ in 0..g.n {
+                let dist = RuntimeDist::new(
+                    model,
+                    per_worker_loads[w] as f64,
+                    spec.k as f64,
+                    g.mu,
+                    g.alpha,
+                );
+                delays.push(dist.sample(&mut rng));
+                w += 1;
+            }
+        }
+        Ok(StragglerInjector {
+            delays,
+            dead: BTreeSet::new(),
+            time_scale,
+        })
+    }
+
+    /// Mark workers as permanently failed (they never respond).
+    pub fn with_dead(mut self, dead: impl IntoIterator<Item = usize>) -> Self {
+        self.dead = dead.into_iter().collect();
+        self
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.delays.len()
+    }
+
+    /// True when no workers are configured.
+    pub fn is_empty(&self) -> bool {
+        self.delays.is_empty()
+    }
+
+    /// Is this worker dead?
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.dead.contains(&worker)
+    }
+
+    /// Model-time delay for a worker.
+    pub fn model_delay(&self, worker: usize) -> f64 {
+        self.delays[worker]
+    }
+
+    /// Wall-clock delay for a worker.
+    pub fn wall_delay(&self, worker: usize) -> Duration {
+        Duration::from_secs_f64(self.delays[worker] * self.time_scale)
+    }
+
+    /// The model-time the paper's analysis would record for this sample:
+    /// the instant cumulative collected load first reaches `k`, given the
+    /// per-worker loads (dead workers excluded).
+    pub fn analytic_completion(&self, per_worker_loads: &[usize], k: usize) -> Option<f64> {
+        let mut order: Vec<usize> = (0..self.delays.len())
+            .filter(|w| !self.is_dead(*w))
+            .collect();
+        order.sort_by(|&a, &b| self.delays[a].partial_cmp(&self.delays[b]).unwrap());
+        let mut cum = 0usize;
+        for w in order {
+            cum += per_worker_loads[w];
+            if cum >= k {
+                return Some(self.delays[w]);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 4.0, alpha: 1.0 },
+                Group { n: 6, mu: 1.0, alpha: 1.0 },
+            ],
+            100,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_delay_per_worker_deterministic() {
+        let loads = vec![20usize; 10];
+        let a = StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 5).unwrap();
+        let b = StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 5).unwrap();
+        assert_eq!(a.len(), 10);
+        for w in 0..10 {
+            assert_eq!(a.model_delay(w), b.model_delay(w));
+        }
+    }
+
+    #[test]
+    fn delays_respect_model_shift() {
+        let loads = vec![50usize; 10];
+        let inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 6).unwrap();
+        // Model A shift = alpha * l / k = 0.5 for all groups here.
+        for w in 0..10 {
+            assert!(inj.model_delay(w) >= 0.5, "worker {w}");
+        }
+    }
+
+    #[test]
+    fn wall_delay_scaling() {
+        let loads = vec![50usize; 10];
+        let inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 0.001, 6).unwrap();
+        for w in 0..10 {
+            let wall = inj.wall_delay(w).as_secs_f64();
+            // Duration has ns resolution; compare at that granularity.
+            assert!((wall - inj.model_delay(w) * 0.001).abs() < 2e-9);
+        }
+    }
+
+    #[test]
+    fn dead_workers_tracked() {
+        let loads = vec![20usize; 10];
+        let inj = StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 7)
+            .unwrap()
+            .with_dead([2, 5]);
+        assert!(inj.is_dead(2));
+        assert!(!inj.is_dead(3));
+    }
+
+    #[test]
+    fn analytic_completion_matches_definition() {
+        let loads = vec![30usize; 10]; // 300 total, k=100 → need 4 fastest
+        let inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 8).unwrap();
+        let t = inj.analytic_completion(&loads, 100).unwrap();
+        // Exactly ceil(100/30)=4 workers must have delay <= t.
+        let done = (0..10).filter(|&w| inj.model_delay(w) <= t).count();
+        assert_eq!(done, 4);
+    }
+
+    #[test]
+    fn analytic_completion_none_when_too_many_dead() {
+        let loads = vec![30usize; 10];
+        let inj = StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 9)
+            .unwrap()
+            .with_dead(0..8); // only 2 alive → 60 rows < k
+        assert!(inj.analytic_completion(&loads, 100).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let loads = vec![20usize; 9];
+        assert!(
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 5).is_err()
+        );
+        let loads = vec![20usize; 10];
+        assert!(
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 0.0, 5).is_err()
+        );
+    }
+}

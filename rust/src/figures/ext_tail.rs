@@ -1,0 +1,81 @@
+//! Extension figure (beyond the paper): **tail latency** of the proposed vs
+//! uniform allocation.
+//!
+//! The paper optimizes the *expected* latency; production serving systems
+//! care about p95/p99. This figure shows that the proposed allocation's
+//! advantage widens in the tail — uniform allocation leaves the slow group
+//! holding loads it occasionally cannot absorb, fattening the upper
+//! percentiles, while the proposed allocation equalizes group completion
+//! profiles (Theorem 1) and thereby compresses the distribution.
+
+use crate::allocation::{proposed_allocation, uniform_allocation};
+use crate::figures::{Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::latency_any_k_detailed;
+use crate::Result;
+
+/// Generate the tail-latency extension figure (percentile vs N).
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let all_ns: [usize; 5] = [250, 500, 1000, 2500, 5000];
+    let ns: Vec<usize> = all_ns.iter().copied().take(opts.points.max(3)).collect();
+    let cfg = opts.sim_config();
+
+    let mut series: Vec<Series> = ["proposed p50", "proposed p99", "uniform p50", "uniform p99"]
+        .iter()
+        .map(|name| Series { name: (*name).into(), points: vec![] })
+        .collect();
+    for &n_total in &ns {
+        let spec = ClusterSpec::paper_five_group(n_total, k);
+        let x = spec.total_workers() as f64;
+        let prop = proposed_allocation(LatencyModel::A, &spec)?;
+        let uni = uniform_allocation(LatencyModel::A, &spec, prop.n)?;
+        let sp = latency_any_k_detailed(&spec, &prop.loads, LatencyModel::A, &cfg)?;
+        let su = latency_any_k_detailed(&spec, &uni.loads, LatencyModel::A, &cfg)?;
+        series[0].points.push((x, sp.percentile(50.0)));
+        series[1].points.push((x, sp.percentile(99.0)));
+        series[2].points.push((x, su.percentile(50.0)));
+        series[3].points.push((x, su.percentile(99.0)));
+    }
+    Ok(Figure {
+        id: "ext_tail".into(),
+        title: "Extension: tail latency, proposed vs uniform(n*)".into(),
+        xlabel: "total workers N".into(),
+        ylabel: "latency percentile".into(),
+        log: (true, true),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposed_tail_tighter_than_uniform() {
+        let mut opts = FigureOpts::quick();
+        opts.samples = 3_000;
+        let fig = generate(&opts).unwrap();
+        let p99_prop = &fig.series[1].points;
+        let p99_uni = &fig.series[3].points;
+        for (p, u) in p99_prop.iter().zip(p99_uni) {
+            assert!(
+                p.1 < u.1,
+                "proposed p99 {} !< uniform p99 {} at N={}",
+                p.1,
+                u.1,
+                p.0
+            );
+        }
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut opts = FigureOpts::quick();
+        opts.samples = 2_000;
+        let fig = generate(&opts).unwrap();
+        for (p50, p99) in fig.series[0].points.iter().zip(&fig.series[1].points) {
+            assert!(p50.1 <= p99.1);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig. 2: `N·T*` as a function of the straggling-parameter scale `q`.
+//!
+//! Paper setting: `N = (1000, 2000, 3000)`, `μ = (2, 1, 0.5)`, `α = 1`.
+//! Because `T* = Θ(1/N)` (the paper's claim), `N·T*` curves for scaled
+//! clusters must collapse onto each other; we plot the paper's cluster plus
+//! 2× and 4× scalings to exhibit the collapse.
+
+use crate::allocation::optimal_latency_bound;
+use crate::figures::{logspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::Result;
+
+/// Generate Fig. 2.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let base = ClusterSpec::paper_fig2(10_000);
+    let qs = logspace(-2.0, 1.5, opts.points.max(8));
+    let mut series = Vec::new();
+    for scale in [1.0, 2.0, 4.0] {
+        let spec = base.scaled_workers(scale);
+        let n_total = spec.total_workers() as f64;
+        let points = qs
+            .iter()
+            .map(|&q| {
+                let scaled = spec.scaled_mu(q);
+                (q, n_total * optimal_latency_bound(LatencyModel::A, &scaled))
+            })
+            .collect();
+        series.push(Series {
+            name: format!("N = {} (x{scale:.0})", spec.total_workers()),
+            points,
+        });
+    }
+    Ok(Figure {
+        id: "fig2".into(),
+        title: "N x T* vs scale q of mu (T* = Theta(1/N))".into(),
+        xlabel: "q (scale of mu)".into(),
+        ylabel: "N x T*".into(),
+        log: (true, true),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_collapse() {
+        // N·T* identical across worker scalings at every q.
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        assert_eq!(fig.series.len(), 3);
+        let a = &fig.series[0].points;
+        let b = &fig.series[2].points;
+        for (pa, pb) in a.iter().zip(b) {
+            assert!((pa.1 - pb.1).abs() < 1e-9 * pa.1, "{} vs {}", pa.1, pb.1);
+        }
+    }
+
+    #[test]
+    fn n_t_star_decreases_with_q() {
+        // More reliable workers (larger mu) => lower latency.
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let pts = &fig.series[0].points;
+        for w in pts.windows(2) {
+            assert!(w[1].1 < w[0].1, "not decreasing at q={}", w[1].0);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig. 3: MDS rate `k/n*` of the proposed allocation for a fixed group 1
+//! (`N₁ = 100, μ₁ = 1, α₁ = 1`) as `(N₂, μ₂)` vary (`α₂ = 1`).
+//!
+//! The paper highlights that, unlike the single-group case, the rate is
+//! **not** monotone increasing in `μ₂`.
+
+use crate::allocation::proposed_allocation;
+use crate::figures::{logspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, Group, LatencyModel};
+use crate::Result;
+
+/// Generate Fig. 3 (one series per `N₂`, sweeping `μ₂`).
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let mus = logspace(-2.0, 2.0, (opts.points * 3).max(24));
+    let mut series = Vec::new();
+    for n2 in [25usize, 50, 100, 200, 400] {
+        let mut points = Vec::with_capacity(mus.len());
+        for &mu2 in &mus {
+            let spec = ClusterSpec::new(
+                vec![
+                    Group { n: 100, mu: 1.0, alpha: 1.0 },
+                    Group { n: n2, mu: mu2, alpha: 1.0 },
+                ],
+                k,
+            )?;
+            let a = proposed_allocation(LatencyModel::A, &spec)?;
+            points.push((mu2, a.rate(k as f64)));
+        }
+        series.push(Series { name: format!("N2 = {n2}"), points });
+    }
+    Ok(Figure {
+        id: "fig3".into(),
+        title: "MDS rate k/n* vs (N2, mu2); N1=100, mu1=1, alpha=1".into(),
+        xlabel: "mu2".into(),
+        ylabel: "rate k/n*".into(),
+        log: (true, false),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_in_unit_interval() {
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        for s in &fig.series {
+            for &(_, rate) in &s.points {
+                assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_non_monotone_in_mu2() {
+        // The paper's "interestingly, it is not true" observation: for some
+        // N2 the rate dips then rises (or vice versa) as mu2 grows.
+        let fig = generate(&FigureOpts::default()).unwrap();
+        let mut found_non_monotone = false;
+        for s in &fig.series {
+            let ys: Vec<f64> = s.points.iter().map(|p| p.1).collect();
+            let increasing = ys.windows(2).all(|w| w[1] >= w[0] - 1e-12);
+            let decreasing = ys.windows(2).all(|w| w[1] <= w[0] + 1e-12);
+            if !increasing && !decreasing {
+                found_non_monotone = true;
+            }
+        }
+        assert!(found_non_monotone, "expected a non-monotone rate curve");
+    }
+}

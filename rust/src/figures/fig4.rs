@@ -1,0 +1,123 @@
+//! Fig. 4: expected latency vs total worker count `N` for the five-group
+//! cluster (`N_j = (3,4,5,6,7)·N/25`, `μ = (16,12,8,4,1)`, `α = 1`,
+//! group-code `r = 100`).
+//!
+//! Series (as in the paper): proposed (MC), uncoded, uniform with `n*`,
+//! uniform with rate ½, group-code lower bound `1/r`, proposed lower bound
+//! `T*` — plus, as an extension, the *simulated* group-code scheme.
+
+use crate::allocation::optimal_latency_bound;
+use crate::figures::{Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{simulate_scheme, Scheme};
+use crate::Result;
+
+const GROUP_R: f64 = 100.0;
+
+/// Generate Fig. 4.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    // Total-N sweep, log-ish spacing; multiples of 25 keep group sizes exact.
+    let all_ns: [usize; 7] = [250, 500, 1000, 2500, 5000, 10_000, 20_000];
+    let ns: Vec<usize> = all_ns.iter().copied().take(opts.points.max(4)).collect();
+    let cfg = opts.sim_config();
+
+    let mut proposed = vec![];
+    let mut uncoded = vec![];
+    let mut uniform_nstar = vec![];
+    let mut uniform_half = vec![];
+    let mut group_sim = vec![];
+    let mut group_bound = vec![];
+    let mut t_star = vec![];
+    for &n_total in &ns {
+        let spec = ClusterSpec::paper_five_group(n_total, k);
+        let x = spec.total_workers() as f64;
+        let p = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?;
+        proposed.push((x, p.mean));
+        uncoded.push((
+            x,
+            simulate_scheme(&spec, Scheme::Uncoded, LatencyModel::A, &cfg)?.mean,
+        ));
+        uniform_nstar.push((
+            x,
+            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
+                .mean,
+        ));
+        uniform_half.push((
+            x,
+            simulate_scheme(&spec, Scheme::UniformRate(0.5), LatencyModel::A, &cfg)?.mean,
+        ));
+        if n_total as f64 > GROUP_R {
+            group_sim.push((
+                x,
+                simulate_scheme(&spec, Scheme::GroupCode(GROUP_R), LatencyModel::A, &cfg)?
+                    .mean,
+            ));
+        }
+        group_bound.push((x, 1.0 / GROUP_R));
+        t_star.push((x, optimal_latency_bound(LatencyModel::A, &spec)));
+    }
+    Ok(Figure {
+        id: "fig4".into(),
+        title: "Expected latency vs N (five groups, r = 100)".into(),
+        xlabel: "total workers N".into(),
+        ylabel: "expected latency".into(),
+        log: (true, true),
+        series: vec![
+            Series { name: "proposed".into(), points: proposed },
+            Series { name: "uncoded".into(), points: uncoded },
+            Series { name: "uniform n*".into(), points: uniform_nstar },
+            Series { name: "uniform rate 1/2".into(), points: uniform_half },
+            Series { name: "group code (sim)".into(), points: group_sim },
+            Series { name: "group-code bound 1/r".into(), points: group_bound },
+            Series { name: "proposed bound T*".into(), points: t_star },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series<'f>(fig: &'f Figure, name: &str) -> &'f [(f64, f64)] {
+        &fig.series.iter().find(|s| s.name == name).unwrap().points
+    }
+
+    #[test]
+    fn proposed_tracks_bound_and_beats_group_code() {
+        let mut opts = FigureOpts::quick();
+        opts.points = 5; // up to N=5000
+        let fig = generate(&opts).unwrap();
+        let prop = series(&fig, "proposed");
+        let bound = series(&fig, "proposed bound T*");
+        for (p, b) in prop.iter().zip(bound) {
+            assert!(p.1 >= b.1 * 0.995, "mean {} below bound {}", p.1, b.1);
+            assert!(p.1 <= b.1 * 1.35, "mean {} too far above bound {}", p.1, b.1);
+        }
+        // At the largest N, proposed is far below the group-code floor 1/r.
+        let last = prop.last().unwrap();
+        assert!(
+            last.1 < 0.01 / 3.0,
+            "expected >3x gain over 1/r at N=5000, got latency {}",
+            last.1
+        );
+    }
+
+    #[test]
+    fn latency_decreases_with_n_for_proposed_only() {
+        let mut opts = FigureOpts::quick();
+        opts.points = 5;
+        let fig = generate(&opts).unwrap();
+        let prop = series(&fig, "proposed");
+        for w in prop.windows(2) {
+            assert!(w[1].1 < w[0].1, "proposed not improving at N={}", w[1].0);
+        }
+        // Group-code sim saturates near 1/r: last two points within 20%.
+        let gc = series(&fig, "group code (sim)");
+        if gc.len() >= 2 {
+            let a = gc[gc.len() - 2].1;
+            let b = gc[gc.len() - 1].1;
+            assert!((a / b - 1.0).abs() < 0.5, "group code should flatten");
+        }
+    }
+}

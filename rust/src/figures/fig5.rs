@@ -1,0 +1,107 @@
+//! Fig. 5: expected latency vs `q` (scale of `μ`) at fixed `N = 2500`
+//! for the five-group cluster of Fig. 4.
+
+use crate::allocation::optimal_latency_bound;
+use crate::figures::{logspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{simulate_scheme, Scheme};
+use crate::Result;
+
+const GROUP_R: f64 = 100.0;
+
+/// Generate Fig. 5.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let base = ClusterSpec::paper_five_group(2500, k);
+    let qs = logspace(-2.0, 1.5, opts.points.max(6));
+    let cfg = opts.sim_config();
+
+    let mut proposed = vec![];
+    let mut uncoded = vec![];
+    let mut uniform_nstar = vec![];
+    let mut uniform_half = vec![];
+    let mut group_bound = vec![];
+    let mut t_star = vec![];
+    for &q in &qs {
+        let spec = base.scaled_mu(q);
+        proposed.push((
+            q,
+            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?.mean,
+        ));
+        uncoded.push((
+            q,
+            simulate_scheme(&spec, Scheme::Uncoded, LatencyModel::A, &cfg)?.mean,
+        ));
+        uniform_nstar.push((
+            q,
+            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
+                .mean,
+        ));
+        uniform_half.push((
+            q,
+            simulate_scheme(&spec, Scheme::UniformRate(0.5), LatencyModel::A, &cfg)?.mean,
+        ));
+        group_bound.push((q, 1.0 / GROUP_R));
+        t_star.push((q, optimal_latency_bound(LatencyModel::A, &spec)));
+    }
+    Ok(Figure {
+        id: "fig5".into(),
+        title: "Expected latency vs q at N = 2500 (five groups)".into(),
+        xlabel: "q (scale of mu)".into(),
+        ylabel: "expected latency".into(),
+        log: (true, true),
+        series: vec![
+            Series { name: "proposed".into(), points: proposed },
+            Series { name: "uncoded".into(), points: uncoded },
+            Series { name: "uniform n*".into(), points: uniform_nstar },
+            Series { name: "uniform rate 1/2".into(), points: uniform_half },
+            Series { name: "group-code bound 1/r".into(), points: group_bound },
+            Series { name: "proposed bound T*".into(), points: t_star },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series<'f>(fig: &'f Figure, name: &str) -> &'f [(f64, f64)] {
+        &fig.series.iter().find(|s| s.name == name).unwrap().points
+    }
+
+    #[test]
+    fn proposed_achieves_bound_across_q() {
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let prop = series(&fig, "proposed");
+        let bound = series(&fig, "proposed bound T*");
+        for (p, b) in prop.iter().zip(bound) {
+            let gap = (p.1 - b.1) / b.1;
+            assert!(gap > -0.01 && gap < 0.25, "q={} gap {gap}", p.0);
+        }
+    }
+
+    #[test]
+    fn uncoded_approaches_bound_at_large_q() {
+        // Paper: uncoded approaches T* as q -> 10^1.5.
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let unc = series(&fig, "uncoded");
+        let bound = series(&fig, "proposed bound T*");
+        let first_ratio = unc[0].1 / bound[0].1;
+        let last_ratio = unc.last().unwrap().1 / bound.last().unwrap().1;
+        assert!(
+            last_ratio < first_ratio,
+            "uncoded/bound should shrink with q: {first_ratio} -> {last_ratio}"
+        );
+        assert!(last_ratio < 2.0, "uncoded should be near bound at q=10^1.5");
+    }
+
+    #[test]
+    fn uniform_nstar_achieves_bound_at_small_q() {
+        // Paper: for q <= 1e-2 uniform-with-n* sits on the lower bound.
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let uni = series(&fig, "uniform n*");
+        let bound = series(&fig, "proposed bound T*");
+        let ratio = uni[0].1 / bound[0].1;
+        assert!(ratio < 1.1, "at q=1e-2 uniform n* ratio {ratio}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Fig. 6: MDS rate `k/n*` of the proposed allocation vs `q` at `N = 2500`
+//! (five-group cluster). Analytic — no simulation needed.
+//!
+//! Paper observations: rate ≈ ½ in `q ∈ [10^-1.5, 10^-1]`, rate ≈ 0.99 at
+//! `q = 10^1.5`.
+
+use crate::allocation::proposed_allocation;
+use crate::figures::{logspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::Result;
+
+/// Generate Fig. 6.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let base = ClusterSpec::paper_five_group(2500, k);
+    let qs = logspace(-2.0, 1.5, (opts.points * 3).max(30));
+    let points: Result<Vec<(f64, f64)>> = qs
+        .iter()
+        .map(|&q| {
+            let spec = base.scaled_mu(q);
+            let a = proposed_allocation(LatencyModel::A, &spec)?;
+            Ok((q, a.rate(k as f64)))
+        })
+        .collect();
+    Ok(Figure {
+        id: "fig6".into(),
+        title: "Rate k/n* vs q at N = 2500 (five groups)".into(),
+        xlabel: "q (scale of mu)".into(),
+        ylabel: "rate k/n*".into(),
+        log: (true, false),
+        series: vec![Series { name: "k/n*".into(), points: points? }],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_points() {
+        let fig = generate(&FigureOpts::default()).unwrap();
+        let pts = &fig.series[0].points;
+        // Rate near 1/2 somewhere in q ∈ [10^-1.5, 10^-1].
+        let mid: Vec<&(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.0 >= 10f64.powf(-1.5) && p.0 <= 0.1)
+            .collect();
+        assert!(!mid.is_empty());
+        assert!(
+            mid.iter().any(|p| (p.1 - 0.5).abs() < 0.08),
+            "no rate near 1/2 in the mid-q band: {mid:?}"
+        );
+        // Rate ≈ 0.99 at q = 10^1.5.
+        let last = pts.last().unwrap();
+        assert!(last.1 > 0.95, "rate at q=10^1.5 is {}", last.1);
+    }
+
+    #[test]
+    fn rate_monotone_increasing_in_q() {
+        // Scaling all mus together preserves ordering => rate increases.
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let pts = &fig.series[0].points;
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "rate dipped at q={}", w[1].0);
+        }
+    }
+}

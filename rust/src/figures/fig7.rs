@@ -1,0 +1,116 @@
+//! Fig. 7: expected latency of uniform load allocation at several fixed MDS
+//! rates vs `q`, compared with the proposed allocation (N = 2500, five
+//! groups).
+//!
+//! Paper observation: at `q = 1` the rate-⅔ uniform code beats the uniform
+//! scheme that reuses the optimal `n*`.
+
+use crate::figures::{logspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{simulate_scheme, Scheme};
+use crate::Result;
+
+/// Generate Fig. 7.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let base = ClusterSpec::paper_five_group(2500, k);
+    let qs = logspace(-2.0, 1.5, opts.points.max(6));
+    let cfg = opts.sim_config();
+    let rates = [0.5, 2.0 / 3.0, 0.75, 0.9];
+
+    let mut series: Vec<Series> = Vec::new();
+    let mut proposed = vec![];
+    let mut uniform_nstar = vec![];
+    let mut per_rate: Vec<Vec<(f64, f64)>> = vec![vec![]; rates.len()];
+    for &q in &qs {
+        let spec = base.scaled_mu(q);
+        proposed.push((
+            q,
+            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?.mean,
+        ));
+        uniform_nstar.push((
+            q,
+            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
+                .mean,
+        ));
+        for (i, &rate) in rates.iter().enumerate() {
+            per_rate[i].push((
+                q,
+                simulate_scheme(&spec, Scheme::UniformRate(rate), LatencyModel::A, &cfg)?
+                    .mean,
+            ));
+        }
+    }
+    series.push(Series { name: "proposed".into(), points: proposed });
+    series.push(Series { name: "uniform n*".into(), points: uniform_nstar });
+    for (i, &rate) in rates.iter().enumerate() {
+        series.push(Series {
+            name: format!("uniform rate {rate:.3}"),
+            points: per_rate[i].clone(),
+        });
+    }
+    Ok(Figure {
+        id: "fig7".into(),
+        title: "Uniform allocation at fixed rates vs q (N = 2500)".into(),
+        xlabel: "q (scale of mu)".into(),
+        ylabel: "expected latency".into(),
+        log: (true, true),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposed_never_beaten() {
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let prop = &fig.series[0].points;
+        for s in &fig.series[1..] {
+            for (p, other) in prop.iter().zip(&s.points) {
+                assert!(
+                    p.1 <= other.1 * 1.03,
+                    "proposed {} beaten by {} ({}) at q={}",
+                    p.1,
+                    s.name,
+                    other.1,
+                    p.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rate_two_thirds_beats_nstar_uniform_at_q1() {
+        // The paper's q=1 observation.
+        let mut opts = FigureOpts::quick();
+        opts.points = 8; // ensure a q near 1 exists
+        let fig = generate(&opts).unwrap();
+        let nstar = &fig.series[1].points;
+        let two_thirds = &fig
+            .series
+            .iter()
+            .find(|s| s.name.starts_with("uniform rate 0.667"))
+            .unwrap()
+            .points;
+        // Closest sweep point to q = 1.
+        let idx = nstar
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                (a.1 .0 - 1.0)
+                    .abs()
+                    .partial_cmp(&(b.1 .0 - 1.0).abs())
+                    .unwrap()
+            })
+            .unwrap()
+            .0;
+        assert!(
+            two_thirds[idx].1 < nstar[idx].1 * 1.05,
+            "rate-2/3 {} should be <= uniform-n* {} near q=1",
+            two_thirds[idx].1,
+            nstar[idx].1
+        );
+    }
+}

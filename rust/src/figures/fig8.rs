@@ -1,0 +1,91 @@
+//! Fig. 8: expected latency vs MDS code rate under uniform allocation for
+//! the two-group cluster `N = (300, 600)`, `μ = (4, 0.5)`, `α = 1`.
+//!
+//! Paper observations: the best uniform rate is near **0.52**, and the
+//! proposed allocation is ≈**10 % below** that best uniform point.
+
+use crate::figures::{linspace, Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{simulate_scheme, Scheme};
+use crate::Result;
+
+/// Generate Fig. 8.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 10_000usize;
+    let spec = ClusterSpec::paper_two_group(k);
+    let cfg = opts.sim_config();
+    let rates = linspace(0.35, 0.95, (opts.points * 2).max(13));
+
+    let mut uniform = Vec::with_capacity(rates.len());
+    for &rate in &rates {
+        let r =
+            simulate_scheme(&spec, Scheme::UniformRate(rate), LatencyModel::A, &cfg)?;
+        uniform.push((rate, r.mean));
+    }
+    let prop = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?;
+    let proposed_line: Vec<(f64, f64)> =
+        rates.iter().map(|&rt| (rt, prop.mean)).collect();
+    let bound_line: Vec<(f64, f64)> =
+        rates.iter().map(|&rt| (rt, prop.bound.unwrap())).collect();
+
+    Ok(Figure {
+        id: "fig8".into(),
+        title: "Latency vs rate, uniform allocation (2 groups)".into(),
+        xlabel: "rate k/n".into(),
+        ylabel: "expected latency".into(),
+        log: (false, false),
+        series: vec![
+            Series { name: "uniform (rate sweep)".into(), points: uniform },
+            Series { name: "proposed".into(), points: proposed_line },
+            Series { name: "proposed bound T*".into(), points: bound_line },
+        ],
+    })
+}
+
+/// The best uniform rate and its latency (used by EXPERIMENTS.md and tests).
+pub fn best_uniform_rate(fig: &Figure) -> (f64, f64) {
+    fig.series[0]
+        .points
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("non-empty sweep")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_near_paper_value() {
+        let mut opts = FigureOpts::quick();
+        opts.samples = 2_000;
+        opts.points = 12;
+        let fig = generate(&opts).unwrap();
+        let (best_rate, best_latency) = best_uniform_rate(&fig);
+        assert!(
+            (0.40..0.65).contains(&best_rate),
+            "best uniform rate {best_rate} far from paper's 0.52"
+        );
+        // Proposed ~10% better than the best uniform point.
+        let prop = fig.series[1].points[0].1;
+        let gain = (best_latency - prop) / best_latency;
+        assert!(
+            gain > 0.02 && gain < 0.30,
+            "proposed gain over best uniform = {gain} (paper: ~0.10)"
+        );
+    }
+
+    #[test]
+    fn sweep_is_u_shaped() {
+        let mut opts = FigureOpts::quick();
+        opts.samples = 2_000;
+        opts.points = 12;
+        let fig = generate(&opts).unwrap();
+        let pts = &fig.series[0].points;
+        let first = pts.first().unwrap().1;
+        let last = pts.last().unwrap().1;
+        let (_, best) = best_uniform_rate(&fig);
+        assert!(best < first && best < last, "no interior minimum");
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig. 9: model-B comparison — the proposed allocation (Corollary 2) vs the
+//! load-allocation algorithm of [32] — on the three-group cluster
+//! `N = (3,3,4)·N/10`, `μ = (1,4,8)`, `α = (1,4,12)`, `k = 10⁵`.
+//!
+//! Both schemes achieve the lower bound `T*_b` (they coincide under group
+//! heterogeneity; see `allocation::reisizadeh`).
+
+use crate::allocation::optimal_latency_bound;
+use crate::figures::{Figure, FigureOpts, Series};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{simulate_scheme, Scheme};
+use crate::Result;
+
+/// Generate Fig. 9.
+pub fn generate(opts: &FigureOpts) -> Result<Figure> {
+    let k = 100_000usize;
+    let all_ns: [usize; 6] = [250, 500, 1000, 2000, 4000, 8000];
+    let ns: Vec<usize> = all_ns.iter().copied().take(opts.points.max(4)).collect();
+    let cfg = opts.sim_config();
+
+    let mut proposed = vec![];
+    let mut reisizadeh = vec![];
+    let mut bound = vec![];
+    for &n_total in &ns {
+        let spec = ClusterSpec::paper_three_group_b(n_total, k);
+        let x = spec.total_workers() as f64;
+        proposed.push((
+            x,
+            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::B, &cfg)?.mean,
+        ));
+        reisizadeh.push((
+            x,
+            simulate_scheme(&spec, Scheme::Reisizadeh, LatencyModel::B, &cfg)?.mean,
+        ));
+        bound.push((x, optimal_latency_bound(LatencyModel::B, &spec)));
+    }
+    Ok(Figure {
+        id: "fig9".into(),
+        title: "Model B: proposed vs [32] allocation (3 groups, k = 1e5)".into(),
+        xlabel: "total workers N".into(),
+        ylabel: "expected latency".into(),
+        log: (true, true),
+        series: vec![
+            Series { name: "proposed (Cor. 2)".into(), points: proposed },
+            Series { name: "reisizadeh [32]".into(), points: reisizadeh },
+            Series { name: "lower bound T*_b".into(), points: bound },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_schemes_achieve_bound() {
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let prop = &fig.series[0].points;
+        let reis = &fig.series[1].points;
+        let bound = &fig.series[2].points;
+        for ((p, z), b) in prop.iter().zip(reis).zip(bound) {
+            assert!(p.1 >= b.1 * 0.99, "proposed {} below bound {}", p.1, b.1);
+            // Schemes coincide.
+            assert!(
+                (p.1 - z.1).abs() / p.1 < 0.05,
+                "proposed {} vs reisizadeh {}",
+                p.1,
+                z.1
+            );
+            // Achieves the bound to within ~15% at these N.
+            assert!((p.1 - b.1) / b.1 < 0.30, "gap at N={}: {} vs {}", p.0, p.1, b.1);
+        }
+    }
+
+    #[test]
+    fn latency_scales_one_over_n() {
+        let fig = generate(&FigureOpts::quick()).unwrap();
+        let b = &fig.series[2].points;
+        let ratio = b[0].1 / b.last().unwrap().1;
+        let n_ratio = b.last().unwrap().0 / b[0].0;
+        assert!((ratio / n_ratio - 1.0).abs() < 0.05, "bound not ~1/N");
+    }
+}

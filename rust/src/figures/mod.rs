@@ -1,0 +1,288 @@
+//! Figure harness: regenerates every figure in the paper's evaluation.
+//!
+//! Each `figN` module produces a [`Figure`] — named series of `(x, y)`
+//! points — from the same simulation/analytic code paths the library
+//! exposes. The CLI (`hetcoded figures`) writes CSVs and renders ASCII
+//! plots; EXPERIMENTS.md records the paper-vs-measured comparison.
+
+pub mod ext_tail;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::{Error, Result};
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub name: String,
+    /// `(x, y)` points in sweep order.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A regenerated figure.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    /// Identifier, e.g. `"fig4"`.
+    pub id: String,
+    /// Human title matching the paper.
+    pub title: String,
+    /// Axis labels.
+    pub xlabel: String,
+    /// Axis labels.
+    pub ylabel: String,
+    /// Log-scale flags for (x, y).
+    pub log: (bool, bool),
+    /// The series.
+    pub series: Vec<Series>,
+}
+
+/// Options shared by all figure generators.
+#[derive(Clone, Copy, Debug)]
+pub struct FigureOpts {
+    /// Monte-Carlo samples per point (paper: 10^4).
+    pub samples: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Sweep resolution (points per series; generators may clamp).
+    pub points: usize,
+    /// Simulation threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts { samples: 10_000, seed: 2019, points: 12, threads: 0 }
+    }
+}
+
+impl FigureOpts {
+    /// Reduced-cost options for tests/smoke runs.
+    pub fn quick() -> Self {
+        FigureOpts { samples: 800, seed: 2019, points: 5, threads: 0 }
+    }
+
+    pub(crate) fn sim_config(&self) -> crate::sim::SimConfig {
+        crate::sim::SimConfig {
+            samples: self.samples,
+            seed: self.seed,
+            threads: self.threads,
+        }
+    }
+}
+
+/// Generate a figure by number (2–9).
+pub fn generate(fig: u8, opts: &FigureOpts) -> Result<Figure> {
+    match fig {
+        2 => fig2::generate(opts),
+        3 => fig3::generate(opts),
+        4 => fig4::generate(opts),
+        5 => fig5::generate(opts),
+        6 => fig6::generate(opts),
+        7 => fig7::generate(opts),
+        8 => fig8::generate(opts),
+        9 => fig9::generate(opts),
+        // Extension beyond the paper: tail-latency percentiles.
+        10 => ext_tail::generate(opts),
+        other => Err(Error::InvalidSpec(format!(
+            "unknown figure {other} (paper has figures 2-9; 10 = tail extension)"
+        ))),
+    }
+}
+
+/// All figure numbers in the paper's evaluation, plus the tail-latency
+/// extension (10).
+pub const ALL_FIGURES: [u8; 9] = [2, 3, 4, 5, 6, 7, 8, 9, 10];
+
+impl Figure {
+    /// CSV rendering: `x,<series...>` header then one row per x value
+    /// (series are re-keyed on x; missing points are empty cells).
+    pub fn to_csv(&self) -> String {
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.0))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12 * a.abs().max(1e-300));
+        let mut out = String::new();
+        out.push_str("x");
+        for s in &self.series {
+            out.push(',');
+            out.push_str(&s.name.replace(',', ";"));
+        }
+        out.push('\n');
+        for &x in &xs {
+            out.push_str(&format!("{x:.10e}"));
+            for s in &self.series {
+                out.push(',');
+                if let Some(p) = s
+                    .points
+                    .iter()
+                    .find(|p| (p.0 - x).abs() < 1e-12 * x.abs().max(1e-300))
+                {
+                    out.push_str(&format!("{:.10e}", p.1));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV to `dir/<id>.csv`, creating `dir` if needed.
+    pub fn write_csv(&self, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Terminal ASCII plot (70×22 grid, one marker char per series).
+    pub fn ascii_plot(&self) -> String {
+        const W: usize = 70;
+        const H: usize = 22;
+        const MARKS: [char; 8] = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+        let map = |v: f64, log: bool| if log { v.max(1e-300).log10() } else { v };
+        let (mut xlo, mut xhi) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ylo, mut yhi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let (mx, my) = (map(x, self.log.0), map(y, self.log.1));
+                if mx.is_finite() && my.is_finite() {
+                    xlo = xlo.min(mx);
+                    xhi = xhi.max(mx);
+                    ylo = ylo.min(my);
+                    yhi = yhi.max(my);
+                }
+            }
+        }
+        if !xlo.is_finite() || !ylo.is_finite() {
+            return format!("{}: no finite points\n", self.id);
+        }
+        if (xhi - xlo).abs() < 1e-12 {
+            xhi = xlo + 1.0;
+        }
+        if (yhi - ylo).abs() < 1e-12 {
+            yhi = ylo + 1.0;
+        }
+        let mut grid = vec![vec![' '; W]; H];
+        for (si, s) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in &s.points {
+                let (mx, my) = (map(x, self.log.0), map(y, self.log.1));
+                if !mx.is_finite() || !my.is_finite() {
+                    continue;
+                }
+                let col = (((mx - xlo) / (xhi - xlo)) * (W - 1) as f64).round() as usize;
+                let row = (((my - ylo) / (yhi - ylo)) * (H - 1) as f64).round() as usize;
+                grid[H - 1 - row.min(H - 1)][col.min(W - 1)] = mark;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{} — {}\n", self.id, self.title));
+        let scale = |lo: f64, hi: f64, log: bool| {
+            if log {
+                format!("[1e{lo:.1}, 1e{hi:.1}] (log)")
+            } else {
+                format!("[{lo:.4}, {hi:.4}]")
+            }
+        };
+        out.push_str(&format!(
+            "y: {} = {}\n",
+            self.ylabel,
+            scale(ylo, yhi, self.log.1)
+        ));
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.extend(std::iter::repeat('-').take(W));
+        out.push('\n');
+        out.push_str(&format!(
+            "x: {} = {}\n",
+            self.xlabel,
+            scale(xlo, xhi, self.log.0)
+        ));
+        for (si, s) in self.series.iter().enumerate() {
+            out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+        }
+        out
+    }
+}
+
+/// Log-spaced sweep values `10^lo .. 10^hi` inclusive.
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| 10f64.powf(lo + (hi - lo) * i as f64 / (n - 1) as f64))
+        .collect()
+}
+
+/// Linearly spaced sweep values.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_figure() -> Figure {
+        Figure {
+            id: "test".into(),
+            title: "t".into(),
+            xlabel: "x".into(),
+            ylabel: "y".into(),
+            log: (false, false),
+            series: vec![
+                Series { name: "a".into(), points: vec![(1.0, 2.0), (2.0, 3.0)] },
+                Series { name: "b".into(), points: vec![(1.0, 5.0)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_figure().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].contains("2.0000000000e0"));
+        // b has no point at x=2 → trailing empty cell.
+        assert!(lines[2].ends_with(','));
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let plot = sample_figure().ascii_plot();
+        assert!(plot.contains('*'));
+        assert!(plot.contains('+'));
+        assert!(plot.contains("test"));
+    }
+
+    #[test]
+    fn spacing_helpers() {
+        let l = logspace(-2.0, 1.0, 4);
+        assert!((l[0] - 0.01).abs() < 1e-12);
+        assert!((l[3] - 10.0).abs() < 1e-9);
+        let s = linspace(0.0, 1.0, 3);
+        assert_eq!(s, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(generate(1, &FigureOpts::quick()).is_err());
+        assert!(generate(11, &FigureOpts::quick()).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! # hetcoded
+//!
+//! Production-quality reproduction of *"Optimal Load Allocation for Coded
+//! Distributed Computation in Heterogeneous Clusters"* (Kim, Park, Choi, 2019).
+//!
+//! The library implements, from scratch:
+//!
+//! - the **math substrate**: Lambert W (both real branches), harmonic numbers,
+//!   a deterministic xoshiro/SplitMix RNG, summary statistics ([`math`]);
+//! - the paper's two **shifted-exponential runtime models** (eqs. (1) and
+//!   (30)) and analytic order statistics (eq. (6)) ([`model`]);
+//! - every **load-allocation policy** evaluated by the paper: the proposed
+//!   optimum (Theorem 2), its model-B variant (Corollary 2), uniform / uncoded
+//!   allocation, the fixed-`r` group code of [33] (Theorem 4), and the scheme
+//!   of Reisizadeh et al. [32] (Appendix D) ([`allocation`]);
+//! - a real-valued systematic **MDS coding layer** (Vandermonde generator,
+//!   encoder, any-k decoder) with its own dense linear algebra ([`coding`]);
+//! - a **Monte-Carlo cluster simulator** reproducing Figs. 4–9 ([`sim`]);
+//! - a **live master/worker coordinator** that executes AOT-compiled XLA
+//!   artifacts via PJRT with injected straggle delays ([`coordinator`],
+//!   [`runtime`]);
+//! - the **figure harness** regenerating every plot in the paper
+//!   ([`figures`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod allocation;
+pub mod bench;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod math;
+pub mod model;
+pub mod proptest;
+pub mod runtime;
+pub mod sim;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A cluster/allocation specification was invalid.
+    #[error("invalid specification: {0}")]
+    InvalidSpec(String),
+    /// A numerical routine failed to converge or hit a domain error.
+    #[error("numerical error: {0}")]
+    Numerical(String),
+    /// Decoding failed (singular system / not enough rows).
+    #[error("decode error: {0}")]
+    Decode(String),
+    /// The fixed-r group-code equation (29) has no solution (paper §III-D).
+    #[error("group-code equation has no solution: {0}")]
+    NoSolution(String),
+    /// Configuration file parse error.
+    #[error("config error: {0}")]
+    Config(String),
+    /// XLA/PJRT runtime error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}

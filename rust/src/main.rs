@@ -1,0 +1,332 @@
+//! `hetcoded` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! - `allocate` — print the allocation every policy produces for a cluster;
+//! - `simulate` — Monte-Carlo latency of one scheme on a cluster;
+//! - `figures`  — regenerate paper figures (CSV + ASCII);
+//! - `run`      — live coded matvec over the coordinator (native or PJRT);
+//! - `help`     — this text.
+
+use hetcoded::allocation::{
+    group_code_allocation, proposed_allocation, reisizadeh_allocation,
+    uncoded_allocation, uniform_allocation,
+};
+use hetcoded::cli::Args;
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{
+    serve_requests, JobConfig, NativeCompute, XlaService,
+};
+use hetcoded::figures::{self, FigureOpts};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, LatencyModel};
+
+use hetcoded::sim::{simulate_scheme, Scheme, SimConfig};
+use hetcoded::{Error, Result};
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("allocate") => cmd_allocate(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("figures") => cmd_figures(args),
+        Some("run") => cmd_run(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(Error::InvalidSpec(format!(
+            "unknown subcommand `{other}` (see `hetcoded help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+hetcoded — optimal load allocation for coded distributed computation
+          (Kim, Park, Choi 2019 reproduction)
+
+USAGE: hetcoded <subcommand> [flags]
+
+SUBCOMMANDS
+  allocate  --config <toml> | --paper <fig2|fig4|fig8|fig9> [--n-total N] [--q Q]
+            Print every policy's allocation for the cluster.
+  simulate  --config <toml> | --paper <...> --scheme <name> [--samples S]
+            [--seed S] [--model a|b] [--rate R] [--group-r R] [--n-total N] [--q Q]
+            Monte-Carlo expected latency of one scheme.
+            Schemes: proposed, uncoded, uniform-nstar, uniform-rate,
+                     group-code, reisizadeh.
+  figures   [--fig N | --all] [--samples S] [--points P] [--seed S]
+            [--out DIR] [--quick]
+            Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
+  run       [--backend native|xla] [--config <toml>] [--k K] [--d D]
+            [--requests R] [--time-scale T] [--seed S] [--dead i,j,...]
+            Live coded matvec jobs over the thread coordinator.
+  help      This text.
+";
+
+fn load_spec(args: &Args) -> Result<ClusterSpec> {
+    let n_total = args.get::<usize>("n-total", 2500)?;
+    let k = args.get::<usize>("k", 10_000)?;
+    let q = args.get::<f64>("q", 1.0)?;
+    let spec = if let Some(path) = args.flag("config") {
+        ClusterSpec::from_toml_file(std::path::Path::new(path))?
+    } else {
+        match args.flag("paper").unwrap_or("fig4") {
+            "fig2" => ClusterSpec::paper_fig2(k),
+            "fig4" | "fig5" | "fig6" | "fig7" => ClusterSpec::paper_five_group(n_total, k),
+            "fig8" => ClusterSpec::paper_two_group(k),
+            "fig9" => ClusterSpec::paper_three_group_b(n_total, 100_000),
+            other => {
+                return Err(Error::InvalidSpec(format!(
+                    "unknown --paper preset `{other}`"
+                )))
+            }
+        }
+    };
+    Ok(spec.scaled_mu(q))
+}
+
+fn parse_model(args: &Args) -> Result<LatencyModel> {
+    match args.flag("model").unwrap_or("a") {
+        "a" | "A" => Ok(LatencyModel::A),
+        "b" | "B" => Ok(LatencyModel::B),
+        other => Err(Error::InvalidSpec(format!("unknown model `{other}`"))),
+    }
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    let spec = load_spec(args)?;
+    let model = parse_model(args)?;
+    let k = spec.k as f64;
+    println!(
+        "cluster: G={} N={} k={}",
+        spec.num_groups(),
+        spec.total_workers(),
+        spec.k
+    );
+    for (j, g) in spec.groups.iter().enumerate() {
+        println!("  group {j}: N_j={} mu={} alpha={}", g.n, g.mu, g.alpha);
+    }
+    println!();
+    let mut rows: Vec<(String, Vec<f64>, f64, Option<f64>)> = Vec::new();
+    let p = proposed_allocation(model, &spec)?;
+    rows.push((p.policy.clone(), p.loads.clone(), p.n, p.latency_bound));
+    let u = uncoded_allocation(model, &spec)?;
+    rows.push((u.policy.clone(), u.loads.clone(), u.n, u.latency_bound));
+    if let Ok(un) = uniform_allocation(model, &spec, p.n) {
+        rows.push(("uniform(n*)".into(), un.loads.clone(), un.n, None));
+    }
+    let gr = args.get::<f64>("group-r", 100.0)?;
+    match group_code_allocation(model, &spec, gr) {
+        Ok(g) => rows.push((g.policy.clone(), g.loads.clone(), g.n, g.latency_bound)),
+        Err(e) => println!("group-code(r={gr}): {e}"),
+    }
+    let z = reisizadeh_allocation(model, &spec)?;
+    rows.push((z.policy.clone(), z.loads.clone(), z.n, z.latency_bound));
+    // `--analytic` adds the CLT expected-latency estimate (no Monte Carlo).
+    let analytic = args.switch("analytic");
+    println!(
+        "{:<22} {:>10} {:>8}  {:>12}{}  loads l_(j)",
+        "policy",
+        "n",
+        "rate",
+        "bound",
+        if analytic { "   E[T] (CLT)" } else { "" }
+    );
+    for (name, loads, n, bound) in rows {
+        let loads_s: Vec<String> = loads.iter().map(|l| format!("{l:.2}")).collect();
+        let clt = if analytic {
+            match hetcoded::model::clt_expected_latency(&spec, &loads, model) {
+                Ok(t) => format!("   {t:>10.4e}"),
+                Err(_) => "            -".into(),
+            }
+        } else {
+            String::new()
+        };
+        println!(
+            "{:<22} {:>10.1} {:>8.4}  {:>12}{}  [{}]",
+            name,
+            n,
+            k / n,
+            bound.map_or("-".into(), |b| format!("{b:.4e}")),
+            clt,
+            loads_s.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn parse_scheme(args: &Args) -> Result<Scheme> {
+    match args.flag("scheme").unwrap_or("proposed") {
+        "proposed" => Ok(Scheme::Proposed),
+        "uncoded" => Ok(Scheme::Uncoded),
+        "uniform-nstar" => Ok(Scheme::UniformWithOptimalN),
+        "uniform-rate" => Ok(Scheme::UniformRate(args.get::<f64>("rate", 0.5)?)),
+        "group-code" => Ok(Scheme::GroupCode(args.get::<f64>("group-r", 100.0)?)),
+        "reisizadeh" => Ok(Scheme::Reisizadeh),
+        other => Err(Error::InvalidSpec(format!("unknown scheme `{other}`"))),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let spec = load_spec(args)?;
+    let model = parse_model(args)?;
+    let scheme = parse_scheme(args)?;
+    let cfg = SimConfig {
+        samples: args.get::<usize>("samples", 10_000)?,
+        seed: args.get::<u64>("seed", 2019)?,
+        threads: args.get::<usize>("threads", 0)?,
+    };
+    let r = simulate_scheme(&spec, scheme, model, &cfg)?;
+    println!(
+        "scheme={} model={model:?} N={} k={}",
+        r.scheme,
+        spec.total_workers(),
+        spec.k
+    );
+    println!(
+        "E[T] = {:.6e} ± {:.2e}   rate k/n = {:.4}   n = {:.1}",
+        r.mean, r.stderr, r.rate, r.n
+    );
+    if let Some(b) = r.bound {
+        println!(
+            "analytic bound = {:.6e}   (gap {:+.2}%)",
+            b,
+            100.0 * (r.mean - b) / b
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let mut opts = if args.switch("quick") {
+        FigureOpts::quick()
+    } else {
+        FigureOpts::default()
+    };
+    opts.samples = args.get::<usize>("samples", opts.samples)?;
+    opts.points = args.get::<usize>("points", opts.points)?;
+    opts.seed = args.get::<u64>("seed", opts.seed)?;
+    opts.threads = args.get::<usize>("threads", opts.threads)?;
+    let out_dir =
+        std::path::PathBuf::from(args.flag("out").unwrap_or("results").to_string());
+    let figs: Vec<u8> = if args.switch("all") || args.flag("fig").is_none() {
+        figures::ALL_FIGURES.to_vec()
+    } else {
+        vec![args.require::<u8>("fig")?]
+    };
+    for f in figs {
+        let t0 = std::time::Instant::now();
+        let fig = figures::generate(f, &opts)?;
+        let path = fig.write_csv(&out_dir)?;
+        println!("{}", fig.ascii_plot());
+        println!(
+            "wrote {} ({} series, {:.1}s)\n",
+            path.display(),
+            fig.series.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let k = args.get::<usize>("k", 256)?;
+    let d = args.get::<usize>("d", 256)?;
+    let requests = args.get::<usize>("requests", 8)?;
+    let seed = args.get::<u64>("seed", 7)?;
+    let spec = if let Some(path) = args.flag("config") {
+        ClusterSpec::from_toml_file(std::path::Path::new(path))?
+    } else {
+        // Default live cluster: 3 heterogeneous groups, 24 workers.
+        ClusterSpec::new(
+            vec![
+                hetcoded::model::Group { n: 6, mu: 8.0, alpha: 1.0 },
+                hetcoded::model::Group { n: 8, mu: 4.0, alpha: 1.0 },
+                hetcoded::model::Group { n: 10, mu: 1.0, alpha: 1.0 },
+            ],
+            k,
+        )?
+    };
+    let model = parse_model(args)?;
+    let alloc = proposed_allocation(model, &spec)?;
+    let mut cfg = JobConfig {
+        model,
+        time_scale: args.get::<f64>("time-scale", 0.02)?,
+        seed,
+        ..Default::default()
+    };
+    if let Some(dead) = args.flag("dead") {
+        cfg.dead_workers = dead
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| Error::InvalidSpec(format!("bad --dead entry `{s}`")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(spec.k, d, |_, _| rng.normal());
+    let reqs: Vec<Vec<f64>> = (0..requests)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+
+    let backend_name = args.flag("backend").unwrap_or("native");
+    let compute: Arc<dyn hetcoded::coordinator::Compute> = match backend_name {
+        "native" => Arc::new(NativeCompute),
+        "xla" => {
+            let svc = XlaService::new(std::path::PathBuf::from(
+                hetcoded::runtime::DEFAULT_ARTIFACT_DIR,
+            ))?;
+            if svc.cols() != d {
+                return Err(Error::Runtime(format!(
+                    "artifacts compiled for d={}, got --d {d}",
+                    svc.cols()
+                )));
+            }
+            Arc::new(svc)
+        }
+        other => return Err(Error::InvalidSpec(format!("unknown backend `{other}`"))),
+    };
+
+    println!(
+        "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
+         n={} (rate {:.3})",
+        spec.total_workers(),
+        spec.num_groups(),
+        alloc.integer_n(&spec),
+        spec.k as f64 / alloc.integer_n(&spec) as f64,
+    );
+    let report = serve_requests(&spec, &alloc, &a, &reqs, compute, &cfg)?;
+    println!("{}", report.recorder.report());
+    println!("worst decode error vs direct A·x: {:.3e}", report.worst_error);
+    for (i, j) in report.jobs.iter().enumerate() {
+        println!(
+            "  req {i}: wall {:.1}ms model {:.4} workers {} rows {}",
+            j.wall_latency.as_secs_f64() * 1e3,
+            j.model_latency.unwrap_or(f64::NAN),
+            j.workers_used,
+            j.rows_collected
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Harmonic numbers and the expected order statistics of exponentials.
+//!
+//! The paper's eq. (6) derives the expected `r`-th order statistic of `N`
+//! shifted exponentials via `H_N - H_{N-r}` and then uses the approximation
+//! `H_N - H_{N-r} ≈ log(N / (N - r))`. Both forms are provided; the figure
+//! harness uses the exact harmonic form for finite-N analytic curves and the
+//! log form where the paper does.
+
+/// Euler–Mascheroni constant.
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+/// `H_n = Σ_{i=1..n} 1/i`, exact summation for small `n`, asymptotic
+/// expansion (`ln n + γ + 1/2n - 1/12n² + 1/120n⁴`) for large `n`.
+pub fn harmonic(n: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= 128 {
+        let mut h = 0.0;
+        // Sum smallest-first for accuracy.
+        for i in (1..=n).rev() {
+            h += 1.0 / i as f64;
+        }
+        return h;
+    }
+    let x = n as f64;
+    x.ln() + EULER_GAMMA + 1.0 / (2.0 * x) - 1.0 / (12.0 * x * x)
+        + 1.0 / (120.0 * x * x * x * x)
+}
+
+/// The paper's approximation `H_N - H_{N-r} ≈ log(N / (N - r))`.
+///
+/// Requires `r < N`; `r` may be real-valued (the analysis relaxes integrality).
+pub fn harmonic_diff_log_approx(n: f64, r: f64) -> f64 {
+    assert!(r < n && r >= 0.0, "need 0 <= r < n, got r={r}, n={n}");
+    (n / (n - r)).ln()
+}
+
+/// Expected `r`-th order statistic of `N` i.i.d. `Exp(μ)` variables:
+/// `(H_N - H_{N-r}) / μ` (exact harmonic form).
+pub fn order_stat_exp_mean(n: u64, r: u64, mu: f64) -> f64 {
+    assert!(r <= n && r >= 1, "need 1 <= r <= n");
+    assert!(mu > 0.0);
+    (harmonic(n) - harmonic(n - r)) / mu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_harmonics_exact() {
+        assert_eq!(harmonic(0), 0.0);
+        assert_eq!(harmonic(1), 1.0);
+        assert!((harmonic(2) - 1.5).abs() < 1e-15);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn asymptotic_matches_exact_at_crossover() {
+        // Exact sum for n slightly above the crossover vs the expansion.
+        let exact: f64 = (1..=200u64).map(|i| 1.0 / i as f64).sum();
+        assert!((harmonic(200) - exact).abs() < 1e-12);
+        let exact128: f64 = (1..=128u64).map(|i| 1.0 / i as f64).sum();
+        let exact129 = exact128 + 1.0 / 129.0;
+        assert!((harmonic(129) - exact129).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_approx_quality() {
+        // The approximation error H_N - H_{N-r} vs log(N/(N-r)) is O(r/(N(N-r))).
+        let n = 1000u64;
+        let r = 500u64;
+        let exact = harmonic(n) - harmonic(n - r);
+        let approx = harmonic_diff_log_approx(n as f64, r as f64);
+        assert!((exact - approx).abs() < 1e-3, "{exact} vs {approx}");
+    }
+
+    #[test]
+    fn order_stat_exp_known_values() {
+        // Max of N exponentials: E = H_N / μ.
+        let e = order_stat_exp_mean(10, 10, 2.0);
+        assert!((e - harmonic(10) / 2.0).abs() < 1e-15);
+        // Min of N exponentials: E = 1/(N μ).
+        let e = order_stat_exp_mean(10, 1, 1.0);
+        assert!((e - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log_approx_domain_panics() {
+        harmonic_diff_log_approx(10.0, 10.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Real branches of the Lambert W function.
+//!
+//! The paper's optimal allocation (Theorem 2) is expressed through the lower
+//! branch `W_{-1}` evaluated at `z_j = -exp(-(α_j μ_j + 1)) ∈ [-1/e, 0)`.
+//! Two numerically delicate regimes matter for the reproduction:
+//!
+//! - `α μ → 0` pushes `z → -1/e` (the branch point, where both branches meet
+//!   at `W = -1` and the derivative blows up). We switch to the branch-point
+//!   series in `p = sqrt(2 (1 + e z))`.
+//! - `α μ` large (the paper evaluates up to `μ < 750`) underflows
+//!   `exp(-(αμ+1))` to `0.0` in f64. [`wm1_neg_exp`] therefore solves the
+//!   *log-form* equation `w + log(-w) = -t` for `w = W_{-1}(-e^{-t})`
+//!   directly, which never forms the underflowing argument.
+//!
+//! References for the constants/series: Corless et al., "On the Lambert W
+//! function", Adv. Comput. Math. 5 (1996).
+
+/// Machine-precision tolerance used for Halley iterations.
+const TOL: f64 = 1e-14;
+const MAX_ITER: usize = 64;
+
+/// Principal branch `W_0(x)` for `x >= -1/e`.
+///
+/// Returns `NaN` outside the domain.
+pub fn lambert_w0(x: f64) -> f64 {
+    let inv_e = (-1.0f64).exp();
+    if x < -inv_e - 1e-15 || x.is_nan() {
+        return f64::NAN;
+    }
+    if x.abs() < 1e-300 {
+        return 0.0;
+    }
+    // Initial guess.
+    let mut w = if x < -0.25 {
+        // Branch-point series: W0 = -1 + p - p^2/3 + 11 p^3/72 ...
+        let p = (2.0 * (1.0 + std::f64::consts::E * x)).max(0.0).sqrt();
+        -1.0 + p - p * p / 3.0 + 11.0 * p * p * p / 72.0
+    } else if x < std::f64::consts::E {
+        // ln(1+x) tracks W0 well on (-0.25, e) and Halley polishes it.
+        x.ln_1p()
+    } else {
+        // Asymptotic: log(x) - log(log(x)).
+        let l1 = x.ln();
+        let l2 = l1.ln();
+        l1 - l2 + l2 / l1
+    };
+    halley(x, &mut w);
+    w
+}
+
+/// Lower branch `W_{-1}(x)` for `x ∈ [-1/e, 0)`.
+///
+/// Returns `NaN` outside the domain. `W_{-1}(-1/e) = -1`,
+/// `W_{-1}(x) → -∞` as `x → 0⁻`.
+pub fn lambert_wm1(x: f64) -> f64 {
+    let inv_e = (-1.0f64).exp();
+    if x >= 0.0 || x < -inv_e - 1e-15 || x.is_nan() {
+        return f64::NAN;
+    }
+    // 1 + e*x ∈ [0, 1); p → 0 at the branch point.
+    let q = 1.0 + std::f64::consts::E * x;
+    if q <= 0.0 {
+        return -1.0;
+    }
+    let p = (2.0 * q).sqrt();
+    if p < 1e-5 {
+        // Branch-point series, lower sign: W_{-1} = -1 - p - p^2/3 - 11p^3/72.
+        return -1.0 - p - p * p / 3.0 - 11.0 * p * p * p / 72.0;
+    }
+    let mut w = if x < -0.1 {
+        // Moderate region: seed from the series and polish.
+        -1.0 - p - p * p / 3.0 - 11.0 * p * p * p / 72.0
+    } else {
+        // Near zero: asymptotic W_{-1}(x) ≈ log(-x) - log(-log(-x)).
+        let l1 = (-x).ln();
+        let l2 = (-l1).ln();
+        l1 - l2 + l2 / l1
+    };
+    halley(x, &mut w);
+    w
+}
+
+/// `W_{-1}(-e^{-t})` for `t >= 1`, computed entirely in log space.
+///
+/// This is the exact quantity the paper's allocation formulas need with
+/// `t = α_j μ_j + 1`; it stays finite and accurate even when `e^{-t}`
+/// underflows (`t ≳ 745`). Solves `w + log(-w) + t = 0` by Newton with a
+/// branch-point series fallback near `t = 1`.
+pub fn wm1_neg_exp(t: f64) -> f64 {
+    assert!(t >= 1.0 - 1e-12, "wm1_neg_exp requires t >= 1, got {t}");
+    if t <= 1.0 {
+        return -1.0;
+    }
+    // Near the branch point (t -> 1+): z = -e^{-t}, 1 + e z = 1 - e^{1-t}.
+    let q = -(1.0 - t).exp_m1(); // 1 - e^{1-t}, accurate for small t-1
+    let p = (2.0 * q).sqrt();
+    let mut w = if p < 1e-5 {
+        return -1.0 - p - p * p / 3.0 - 11.0 * p * p * p / 72.0;
+    } else if t < 2.0 {
+        -1.0 - p - p * p / 3.0 - 11.0 * p * p * p / 72.0
+    } else {
+        // Asymptotic: w ≈ -t - log(t).
+        -t - t.ln()
+    };
+    // Newton on f(w) = w + ln(-w) + t;  f'(w) = 1 + 1/w = (w+1)/w.
+    for _ in 0..MAX_ITER {
+        let f = w + (-w).ln() + t;
+        let fp = (w + 1.0) / w;
+        let step = f / fp;
+        let w_new = w - step;
+        // Keep the iterate in the branch domain (w < -1).
+        let w_new = if w_new >= -1.0 { (w - 1.0) / 2.0 - 0.5 } else { w_new };
+        if (w_new - w).abs() <= TOL * w.abs().max(1.0) {
+            return w_new;
+        }
+        w = w_new;
+    }
+    w
+}
+
+/// Halley's iteration for `w e^w = x`, refining `w` in place.
+fn halley(x: f64, w: &mut f64) {
+    for _ in 0..MAX_ITER {
+        let ew = w.exp();
+        let wew = *w * ew;
+        let f = wew - x;
+        if f == 0.0 {
+            return;
+        }
+        let denom = ew * (*w + 1.0) - (*w + 2.0) * f / (2.0 * *w + 2.0);
+        if denom == 0.0 || !denom.is_finite() {
+            return;
+        }
+        let step = f / denom;
+        let w_new = *w - step;
+        if (w_new - *w).abs() <= TOL * w.abs().max(1e-10) {
+            *w = w_new;
+            return;
+        }
+        *w = w_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!(
+            (a - b).abs() <= tol * b.abs().max(1.0),
+            "{a} vs {b} (tol {tol})"
+        );
+    }
+
+    #[test]
+    fn w0_reference_values() {
+        // Omega constant: W0(1).
+        assert_close(lambert_w0(1.0), 0.567_143_290_409_783_8, 1e-13);
+        assert_close(lambert_w0(0.0), 0.0, 1e-15);
+        assert_close(lambert_w0(std::f64::consts::E), 1.0, 1e-13);
+        assert_close(lambert_w0(10.0), 1.745_528_002_740_699, 1e-12);
+        // Branch point.
+        assert_close(lambert_w0(-(-1.0f64).exp()), -1.0, 1e-6);
+    }
+
+    #[test]
+    fn wm1_reference_values() {
+        // Values cross-checked with scipy.special.lambertw(x, -1).
+        assert_close(lambert_wm1(-0.1), -3.577_152_063_957_297, 1e-12);
+        assert_close(lambert_wm1(-0.2), -2.542_641_357_773_526, 1e-12);
+        assert_close(lambert_wm1(-0.3), -1.781_337_023_421_627, 1e-10);
+        // Near the branch point: verify through the defining equation
+        // (w e^w = x) rather than a literature constant.
+        let w = lambert_wm1(-0.35);
+        assert!(w < -1.0);
+        assert_close(w * w.exp(), -0.35, 1e-10);
+        assert_close(lambert_wm1(-(-1.0f64).exp()), -1.0, 1e-6);
+        assert!(lambert_wm1(-1e-8) < -20.0);
+    }
+
+    #[test]
+    fn wm1_domain() {
+        assert!(lambert_wm1(0.1).is_nan());
+        assert!(lambert_wm1(-0.4).is_nan()); // below -1/e ≈ -0.3679
+        assert!(lambert_w0(-0.4).is_nan());
+    }
+
+    #[test]
+    fn wm1_satisfies_defining_equation() {
+        // Property: W e^W = x across the domain.
+        for i in 1..=360 {
+            let x = -0.001 * i as f64 / std::f64::consts::E; // in (-1/e, 0)
+            let w = lambert_wm1(x);
+            let back = w * w.exp();
+            assert_close(back, x, 1e-9);
+        }
+    }
+
+    #[test]
+    fn w0_satisfies_defining_equation() {
+        for i in 0..200 {
+            let x = -0.3678 + 0.1 * i as f64;
+            let w = lambert_w0(x);
+            let back = w * w.exp();
+            assert!((back - x).abs() <= 1e-9 * x.abs().max(1.0), "x={x} w={w}");
+        }
+    }
+
+    #[test]
+    fn wm1_neg_exp_matches_direct_eval() {
+        // For moderate t both paths must agree.
+        for i in 0..100 {
+            let t = 1.0 + 0.25 * i as f64;
+            let direct = lambert_wm1(-(-t).exp());
+            let logform = wm1_neg_exp(t);
+            assert_close(logform, direct, 1e-10);
+        }
+    }
+
+    #[test]
+    fn wm1_neg_exp_no_underflow() {
+        // t = αμ + 1 with μ = 750 (paper's evaluation ceiling): e^{-751}
+        // underflows but the log-form stays accurate: w + ln(-w) = -t.
+        let t = 751.0;
+        let w = wm1_neg_exp(t);
+        assert!(w < -751.0);
+        let resid = w + (-w).ln() + t;
+        assert!(resid.abs() < 1e-9, "residual {resid}");
+    }
+
+    #[test]
+    fn wm1_neg_exp_branch_point() {
+        assert_close(wm1_neg_exp(1.0), -1.0, 1e-12);
+        // t = 1 + 1e-10: series regime, w ≈ -1 - sqrt(2e-10).
+        let w = wm1_neg_exp(1.0 + 1e-10);
+        assert!(w < -1.0 && w > -1.0001);
+    }
+
+    #[test]
+    fn wm1_monotone_decreasing_in_t() {
+        let mut prev = wm1_neg_exp(1.0);
+        for i in 1..500 {
+            let t = 1.0 + i as f64 * 0.5;
+            let w = wm1_neg_exp(t);
+            assert!(w < prev, "not monotone at t={t}");
+            prev = w;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Numerical substrate: Lambert W, harmonic numbers, RNG, statistics.
+//!
+//! Everything here is implemented from scratch (the build environment vendors
+//! no numerics crates) and unit-tested against published reference values.
+
+pub mod harmonic;
+pub mod lambertw;
+pub mod rng;
+pub mod special;
+pub mod stats;
+
+pub use harmonic::{harmonic, harmonic_diff_log_approx, order_stat_exp_mean};
+pub use lambertw::{lambert_w0, lambert_wm1, wm1_neg_exp};
+pub use rng::Rng;
+pub use special::{erf, erfc, normal_cdf};
+pub use stats::Summary;

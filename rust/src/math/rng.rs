@@ -1,0 +1,322 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The environment vendors no `rand` crate, so we implement
+//! **xoshiro256++** (Blackman & Vigna) seeded through **SplitMix64** —
+//! the standard, well-tested construction. All Monte-Carlo results in the
+//! repo are reproducible from a fixed seed.
+
+/// xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` (never exactly zero; safe for `ln`).
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Standard exponential variate (rate 1) by inversion (one `ln` per
+    /// draw). Kept as the reference implementation; the hot paths use the
+    /// ziggurat sampler [`Rng::exp1`].
+    #[inline]
+    pub fn exp1_inversion(&mut self) -> f64 {
+        -self.next_f64_open().ln()
+    }
+
+    /// Standard exponential variate via the Marsaglia–Tsang ziggurat
+    /// (§Perf iteration 2): ~98% of draws cost one u64 + one table compare,
+    /// no transcendental. Falls back to `ln` only in the wedge/tail.
+    #[inline]
+    pub fn exp1(&mut self) -> f64 {
+        let tables = zig_tables();
+        loop {
+            let bits = self.next_u64();
+            let i = (bits & 0xFF) as usize;
+            // 53-bit uniform in [0,1).
+            let u = (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let x = u * tables.x[i];
+            if x < tables.x[i + 1] {
+                return x; // inside the layer: fast path
+            }
+            if i == 0 {
+                // Tail beyond R: memoryless restart shifted by R.
+                return ZIG_R + self.exp1_inversion();
+            }
+            // Wedge: accept against the true density.
+            let f_hi = tables.f[i];
+            let f_lo = tables.f[i + 1];
+            if f_lo + (f_hi - f_lo) * self.next_f64() < (-x).exp() {
+                return x;
+            }
+        }
+    }
+
+    /// Exponential variate with rate `mu`.
+    #[inline]
+    pub fn exp(&mut self, mu: f64) -> f64 {
+        debug_assert!(mu > 0.0);
+        self.exp1() / mu
+    }
+
+    /// Standard normal via Box–Muller (used only in asymptotics tests).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64_open();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection-free-ish reduction).
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Widening multiply; bias is negligible for our bounds (< 2^32).
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split off an independent child generator (for per-thread streams).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Ziggurat cutoff for the 256-layer exponential tables.
+const ZIG_R: f64 = 7.697_117_470_131_487;
+/// Common layer area `V` for the 256-layer exponential ziggurat.
+const ZIG_V: f64 = 3.949_659_822_581_572e-3;
+
+struct ZigTables {
+    /// Layer x-coordinates, `x[0] = V·e^R` (virtual base), `x[256] = 0`.
+    x: [f64; 257],
+    /// `f[i] = exp(-x[i])`.
+    f: [f64; 257],
+}
+
+fn zig_tables() -> &'static ZigTables {
+    static TABLES: std::sync::OnceLock<ZigTables> = std::sync::OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut x = [0.0f64; 257];
+        x[0] = ZIG_V * ZIG_R.exp(); // V / f(R)
+        x[1] = ZIG_R;
+        for i in 2..256 {
+            // Next layer boundary: f(x_i) = f(x_{i-1}) + V / x_{i-1}.
+            x[i] = -(ZIG_V / x[i - 1] + (-x[i - 1]).exp()).ln();
+        }
+        x[256] = 0.0;
+        let mut f = [0.0f64; 257];
+        for i in 0..257 {
+            f[i] = (-x[i]).exp();
+        }
+        ZigTables { x, f }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Rng::new(11);
+        let n = 200_000;
+        let mu = 2.5;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.exp(mu);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 1.0 / mu).abs() < 0.01);
+        assert!((var - 1.0 / (mu * mu)).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(13);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        assert!((s / n as f64).abs() < 0.01);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn ziggurat_tables_are_consistent() {
+        let t = zig_tables();
+        // Monotone decreasing layer boundaries.
+        for i in 1..256 {
+            assert!(t.x[i] > t.x[i + 1], "x not decreasing at {i}");
+        }
+        // Every layer has (approximately) the common area V:
+        // x_i * (f(x_{i+1}) - f(x_i)) = V.
+        for i in 1..255 {
+            let area = t.x[i] * (t.f[i + 1] - t.f[i]);
+            assert!(
+                (area - ZIG_V).abs() < 1e-12,
+                "layer {i} area {area} != V"
+            );
+        }
+        // Base layer: x_1*f(x_1) + tail area = V.
+        let tail = (-ZIG_R as f64).exp(); // ∫_R^∞ e^-x dx = e^-R
+        let base = t.x[1] * t.f[1] + tail;
+        assert!((base - ZIG_V).abs() < 1e-12, "base area {base}");
+    }
+
+    #[test]
+    fn ziggurat_matches_inversion_distribution() {
+        // Compare empirical CDF of the ziggurat sampler against the exact
+        // exponential CDF at several quantiles, plus first two moments.
+        let mut rng = Rng::new(31);
+        let n = 400_000;
+        let mut xs: Vec<f64> = Vec::with_capacity(n);
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.exp1();
+            s += x;
+            s2 += x * x;
+            xs.push(x);
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            let emp = xs[(q * n as f64) as usize];
+            let exact = -(1.0f64 - q).ln();
+            assert!(
+                (emp - exact).abs() < 0.05 * exact.max(0.2),
+                "quantile {q}: {emp} vs {exact}"
+            );
+        }
+        // Tail beyond R must be populated (memoryless restart works).
+        assert!(*xs.last().unwrap() > ZIG_R * 0.9);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Rng::new(17);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::new(23);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

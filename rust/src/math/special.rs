@@ -1,0 +1,121 @@
+//! Special functions: error function and the standard normal CDF.
+//!
+//! Needed by the CLT-based analytic latency estimator
+//! ([`crate::model::analytic`]). Implemented from scratch (no numerics
+//! crates): Taylor series for small arguments, a Lentz continued fraction
+//! for the complementary tail.
+
+/// Error function `erf(x)`.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function `erfc(x)`; relative error ≲ 1e-13 over the
+/// range the estimator uses.
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x > 27.0 {
+        return 0.0; // underflows f64
+    }
+    if x < 0.5 {
+        // Taylor: erf(x) = 2/√π Σ (-1)^n x^{2n+1} / (n! (2n+1)).
+        let mut sum = x;
+        let mut pow = x;
+        let mut fact = 1.0;
+        for n in 1..60 {
+            pow *= x * x;
+            fact *= n as f64;
+            let c = pow / (fact * (2 * n + 1) as f64);
+            if n % 2 == 1 {
+                sum -= c;
+            } else {
+                sum += c;
+            }
+            if c.abs() < 1e-18 {
+                break;
+            }
+        }
+        return 1.0 - std::f64::consts::FRAC_2_SQRT_PI * sum;
+    }
+    // Classic continued fraction (DLMF 7.9.4), evaluated backward:
+    //   erfc(x) = e^{-x²}/√π · 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + 2/(x+…)))))
+    // with numerators n/2. Fixed depth is ample for x ≥ 0.5.
+    let depth = if x < 2.0 { 400 } else { 80 };
+    let mut t = x;
+    for n in (1..=depth).rev() {
+        t = x + (n as f64 / 2.0) / t;
+    }
+    (-x * x).exp() / (t * std::f64::consts::PI.sqrt())
+}
+
+/// Standard normal CDF `Φ(x)`.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // scipy.special.erf references.
+        let cases = [
+            (0.0, 0.0),
+            (0.1, 0.1124629160182849),
+            (0.5, 0.5204998778130465),
+            (1.0, 0.8427007929497149),
+            (2.0, 0.9953222650189527),
+            (3.0, 0.9999779095030014),
+        ];
+        for (x, want) in cases {
+            let got = erf(x);
+            assert!((got - want).abs() < 1e-10, "erf({x}) = {got} want {want}");
+            assert!((erf(-x) + want).abs() < 1e-10, "odd symmetry at {x}");
+        }
+    }
+
+    #[test]
+    fn erfc_tail() {
+        assert!((erfc(4.0) - 1.541725790028002e-8).abs() < 1e-16);
+        assert!((erfc(6.0) - 2.1519736712498913e-17).abs() < 1e-24);
+        assert_eq!(erfc(30.0), 0.0);
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.8413447460685429),
+            (-1.0, 0.15865525393145707),
+            (1.959963984540054, 0.975),
+            (-3.0, 0.0013498980316300933),
+        ];
+        for (x, want) in cases {
+            let got = normal_cdf(x);
+            assert!((got - want).abs() < 1e-9, "Phi({x}) = {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let mut prev = 0.0;
+        for i in -600..=600 {
+            let x = i as f64 / 100.0;
+            let p = normal_cdf(x);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p >= prev - 1e-15, "not monotone at {x}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn erf_erfc_complementarity() {
+        for i in 0..100 {
+            let x = -5.0 + 0.1 * i as f64;
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-13, "x={x}");
+        }
+    }
+}

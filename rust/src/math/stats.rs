@@ -1,0 +1,237 @@
+//! Summary statistics for Monte-Carlo estimates and benchmarks.
+
+/// Online (Welford) accumulator with percentile support on demand.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+    keep_samples: bool,
+}
+
+impl Summary {
+    /// New accumulator that keeps raw samples (enables percentiles).
+    pub fn keeping_samples() -> Self {
+        Summary {
+            keep_samples: true,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// New accumulator without sample retention (O(1) memory).
+    pub fn new() -> Self {
+        Summary {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Add one observation.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.keep_samples {
+            self.samples.push(x);
+        }
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.stddev() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// Minimum observation.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile in `[0, 100]` (nearest-rank on sorted retained samples).
+    ///
+    /// Panics if samples were not retained.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!(self.keep_samples, "Summary built without sample retention");
+        assert!(!self.samples.is_empty());
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (xs.len() as f64 - 1.0)).round() as usize;
+        xs[rank.min(xs.len() - 1)]
+    }
+
+    /// Median (p50).
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Merge another accumulator into this one (parallel Welford merge,
+    /// Chan et al.). Used to reduce per-thread Monte-Carlo summaries.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        if self.keep_samples {
+            self.samples.extend_from_slice(&other.samples);
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.6e} ± {:.2e} (min {:.3e}, max {:.3e})",
+            self.n,
+            self.mean(),
+            self.stderr(),
+            self.min,
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_exact() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Unbiased variance of this classic dataset is 32/7.
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::keeping_samples();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.median() - 50.0).abs() <= 1.0);
+        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn stderr_shrinks() {
+        let mut small = Summary::new();
+        let mut big = Summary::new();
+        let mut rng = crate::math::Rng::new(5);
+        for i in 0..10_000 {
+            let x = rng.next_f64();
+            if i < 100 {
+                small.add(x);
+            }
+            big.add(x);
+        }
+        assert!(big.stderr() < small.stderr());
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut rng = crate::math::Rng::new(21);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        let mut seq = Summary::new();
+        for &x in &xs {
+            seq.add(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for &x in &xs[..3_000] {
+            a.add(x);
+        }
+        for &x in &xs[3_000..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), seq.count());
+        assert!((a.mean() - seq.mean()).abs() < 1e-12);
+        assert!((a.variance() - seq.variance()).abs() < 1e-10);
+        assert_eq!(a.min(), seq.min());
+        assert_eq!(a.max(), seq.max());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        a.add(2.0);
+        let before = (a.count(), a.mean(), a.variance());
+        a.merge(&Summary::new());
+        assert_eq!(before, (a.count(), a.mean(), a.variance()));
+        let mut empty = Summary::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 2);
+        assert!((empty.mean() - 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_requires_retention() {
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.percentile(50.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! CLT-based analytic latency estimator — expected latency predictions for
+//! *any* load allocation without Monte Carlo.
+//!
+//! The collected coded-row count at time `t` is
+//! `L(t) = Σ_j l_(j) · Bin(N_j, F_j(t))`, a load-weighted sum of independent
+//! binomials. By the normal approximation (the same machinery as the paper's
+//! Proposition 1),
+//!
+//! ```text
+//! E[T_k] = ∫₀^∞ P(L(t) < k) dt ≈ ∫ Φ( (k − μ(t)) / σ(t) ) dt
+//! μ(t) = Σ_j N_j l_j F_j(t),   σ²(t) = Σ_j N_j l_j² F_j(t)(1 − F_j(t)).
+//! ```
+//!
+//! The integral is evaluated with adaptive Simpson over a bracketed window
+//! (below the smallest shift the integrand is exactly 1; above the
+//! `Φ→0` crossing it vanishes). This gives sub-second predictions the MC
+//! engine can only match with ~10⁵ samples, and is validated against MC in
+//! the tests and used by the integer-load optimizer.
+
+use crate::math::special::normal_cdf;
+use crate::model::{ClusterSpec, LatencyModel, RuntimeDist};
+use crate::{Error, Result};
+
+/// Analytic (CLT) estimate of the expected latency for per-group `loads`.
+pub fn clt_expected_latency(
+    spec: &ClusterSpec,
+    loads: &[f64],
+    model: LatencyModel,
+) -> Result<f64> {
+    if loads.len() != spec.num_groups() {
+        return Err(Error::InvalidSpec(format!(
+            "{} loads for {} groups",
+            loads.len(),
+            spec.num_groups()
+        )));
+    }
+    if loads.iter().any(|&l| !(l > 0.0)) {
+        return Err(Error::InvalidSpec("loads must be positive".into()));
+    }
+    let k = spec.k as f64;
+    let dists: Vec<(f64, RuntimeDist)> = spec
+        .groups
+        .iter()
+        .zip(loads)
+        .map(|(g, &l)| {
+            (
+                g.n as f64,
+                RuntimeDist::new(model, l, k, g.mu, g.alpha),
+            )
+        })
+        .collect();
+    let total: f64 = dists
+        .iter()
+        .zip(loads)
+        .map(|((n, _), &l)| n * l)
+        .sum();
+    if total + 1e-9 < k {
+        return Err(Error::InvalidSpec(format!(
+            "total coded rows {total:.3} < k = {k}; undecodable"
+        )));
+    }
+
+    // P(L(t) < k) under the normal approximation (continuity-corrected).
+    let tail = |t: f64| -> f64 {
+        let mut mu = 0.0;
+        let mut var = 0.0;
+        for ((n, dist), &l) in dists.iter().zip(loads) {
+            let p = dist.cdf(t);
+            mu += n * l * p;
+            var += n * l * l * p * (1.0 - p);
+        }
+        if var <= 0.0 {
+            return if mu < k { 1.0 } else { 0.0 };
+        }
+        normal_cdf((k - 0.5 - mu) / var.sqrt())
+    };
+
+    // Bracket the support of the integrand.
+    let t_lo = dists
+        .iter()
+        .map(|(_, d)| d.shift())
+        .fold(f64::INFINITY, f64::min);
+    // Upper end: grow until the tail probability is negligible.
+    let mut t_hi = dists
+        .iter()
+        .map(|(_, d)| d.shift() + 2.0 * d.scale())
+        .fold(0.0f64, f64::max)
+        .max(t_lo * 1.5 + 1e-12);
+    let mut guard = 0;
+    while tail(t_hi) > 1e-12 {
+        t_hi *= 1.5;
+        guard += 1;
+        if guard > 200 {
+            return Err(Error::Numerical("latency integrand does not decay".into()));
+        }
+    }
+    // E[T] = t_lo + ∫_{t_lo}^{t_hi} P(L(t) < k) dt.
+    Ok(t_lo + adaptive_simpson(&tail, t_lo, t_hi, 1e-10, 24))
+}
+
+/// Adaptive Simpson quadrature.
+fn adaptive_simpson(f: &dyn Fn(f64) -> f64, a: f64, b: f64, eps: f64, depth: u32) -> f64 {
+    let c = 0.5 * (a + b);
+    let (fa, fb, fc) = (f(a), f(b), f(c));
+    let whole = (b - a) / 6.0 * (fa + 4.0 * fc + fb);
+    simpson_rec(f, a, b, fa, fb, fc, whole, eps, depth)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simpson_rec(
+    f: &dyn Fn(f64) -> f64,
+    a: f64,
+    b: f64,
+    fa: f64,
+    fb: f64,
+    fc: f64,
+    whole: f64,
+    eps: f64,
+    depth: u32,
+) -> f64 {
+    let c = 0.5 * (a + b);
+    let d = 0.5 * (a + c);
+    let e = 0.5 * (c + b);
+    let (fd, fe) = (f(d), f(e));
+    let left = (c - a) / 6.0 * (fa + 4.0 * fd + fc);
+    let right = (b - c) / 6.0 * (fc + 4.0 * fe + fb);
+    if depth == 0 || (left + right - whole).abs() <= 15.0 * eps {
+        left + right + (left + right - whole) / 15.0
+    } else {
+        simpson_rec(f, a, c, fa, fc, fd, left, eps * 0.5, depth - 1)
+            + simpson_rec(f, c, b, fc, fb, fe, right, eps * 0.5, depth - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::proposed_allocation;
+    use crate::model::Group;
+    use crate::sim::{latency_any_k, SimConfig};
+
+    fn sim_cfg() -> SimConfig {
+        SimConfig { samples: 20_000, seed: 5, threads: 0 }
+    }
+
+    #[test]
+    fn matches_monte_carlo_proposed_allocation() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let analytic =
+            clt_expected_latency(&spec, &a.loads, LatencyModel::A).unwrap();
+        let mc = latency_any_k(&spec, &a.loads, LatencyModel::A, &sim_cfg()).unwrap();
+        let rel = (analytic - mc.mean()).abs() / mc.mean();
+        assert!(rel < 0.01, "analytic {analytic} vs MC {} ({rel})", mc.mean());
+    }
+
+    #[test]
+    fn matches_monte_carlo_uniform_allocation() {
+        let spec = ClusterSpec::paper_five_group(1000, 10_000);
+        let loads = vec![20.0; 5]; // rate 1/2 uniform
+        let analytic = clt_expected_latency(&spec, &loads, LatencyModel::A).unwrap();
+        let mc = latency_any_k(&spec, &loads, LatencyModel::A, &sim_cfg()).unwrap();
+        let rel = (analytic - mc.mean()).abs() / mc.mean();
+        assert!(rel < 0.015, "analytic {analytic} vs MC {} ({rel})", mc.mean());
+    }
+
+    #[test]
+    fn matches_monte_carlo_model_b() {
+        let spec = ClusterSpec::paper_three_group_b(1000, 100_000);
+        let a = proposed_allocation(LatencyModel::B, &spec).unwrap();
+        let analytic =
+            clt_expected_latency(&spec, &a.loads, LatencyModel::B).unwrap();
+        let mc = latency_any_k(&spec, &a.loads, LatencyModel::B, &sim_cfg()).unwrap();
+        let rel = (analytic - mc.mean()).abs() / mc.mean();
+        assert!(rel < 0.01, "analytic {analytic} vs MC {} ({rel})", mc.mean());
+    }
+
+    #[test]
+    fn respects_shift_lower_bound() {
+        // E[T] can never be below the smallest per-worker shift needed to
+        // cover k rows.
+        let spec = ClusterSpec::new(
+            vec![Group { n: 10, mu: 100.0, alpha: 1.0 }],
+            100,
+        )
+        .unwrap();
+        let loads = vec![20.0]; // each worker shift = 20/100 * 1 = 0.2
+        let t = clt_expected_latency(&spec, &loads, LatencyModel::A).unwrap();
+        assert!(t >= 0.2, "t = {t}");
+    }
+
+    #[test]
+    fn rejects_undecodable_and_bad_inputs() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        assert!(clt_expected_latency(&spec, &[1.0, 1.0], LatencyModel::A).is_err());
+        assert!(clt_expected_latency(&spec, &[10.0], LatencyModel::A).is_err());
+        assert!(
+            clt_expected_latency(&spec, &[-1.0, 50.0], LatencyModel::A).is_err()
+        );
+    }
+
+    #[test]
+    fn proposed_minimizes_among_perturbations() {
+        // Perturbing the optimal loads (keeping n fixed by rebalancing)
+        // should not reduce the analytic latency.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let base = clt_expected_latency(&spec, &a.loads, LatencyModel::A).unwrap();
+        let (n1, n2) = (spec.groups[0].n as f64, spec.groups[1].n as f64);
+        for delta in [-0.2, -0.1, 0.1, 0.2] {
+            // Shift delta·l1 rows/worker from group 1 to group 2 preserving n.
+            let l1 = a.loads[0] * (1.0 + delta);
+            let l2 = a.loads[1] - a.loads[0] * delta * n1 / n2;
+            if l2 <= 0.0 {
+                continue;
+            }
+            let t = clt_expected_latency(&spec, &[l1, l2], LatencyModel::A).unwrap();
+            assert!(
+                t >= base * 0.999,
+                "perturbation {delta} improved latency: {t} < {base}"
+            );
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Grouping fully-heterogeneous workers (paper footnote 1).
+//!
+//! The paper's analysis assumes *group* heterogeneity but notes that a fully
+//! heterogeneous fleet can be approximated by clustering workers on their
+//! `(μ_i, α_i)` parameters. This module implements a small k-means (Lloyd)
+//! over the 2-D parameter space with k-means++-style seeding from the
+//! deterministic in-repo RNG.
+
+use crate::math::Rng;
+use crate::model::Group;
+use crate::{Error, Result};
+
+/// Per-worker straggling parameters before grouping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerParams {
+    /// Straggling parameter `μ_i`.
+    pub mu: f64,
+    /// Shift parameter `α_i`.
+    pub alpha: f64,
+}
+
+/// Cluster `workers` into at most `g` groups; returns groups with the
+/// centroid `(μ, α)` and the member count, plus the assignment vector.
+///
+/// Workers are normalized per-dimension before distance computation so `μ`
+/// and `α` ranges do not dominate each other.
+pub fn cluster_workers(
+    workers: &[WorkerParams],
+    g: usize,
+    seed: u64,
+) -> Result<(Vec<Group>, Vec<usize>)> {
+    if workers.is_empty() {
+        return Err(Error::InvalidSpec("no workers to cluster".into()));
+    }
+    if g == 0 || g > workers.len() {
+        return Err(Error::InvalidSpec(format!(
+            "need 1 <= g <= {} workers, got g={g}",
+            workers.len()
+        )));
+    }
+    let mut rng = Rng::new(seed);
+
+    // Normalize each dimension to [0, 1].
+    let (mut mu_lo, mut mu_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut al_lo, mut al_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for w in workers {
+        mu_lo = mu_lo.min(w.mu);
+        mu_hi = mu_hi.max(w.mu);
+        al_lo = al_lo.min(w.alpha);
+        al_hi = al_hi.max(w.alpha);
+    }
+    let mu_span = (mu_hi - mu_lo).max(1e-12);
+    let al_span = (al_hi - al_lo).max(1e-12);
+    let pts: Vec<[f64; 2]> = workers
+        .iter()
+        .map(|w| [(w.mu - mu_lo) / mu_span, (w.alpha - al_lo) / al_span])
+        .collect();
+
+    // k-means++ seeding.
+    let mut centers: Vec<[f64; 2]> = Vec::with_capacity(g);
+    centers.push(pts[rng.gen_range(pts.len() as u64) as usize]);
+    while centers.len() < g {
+        let d2: Vec<f64> = pts
+            .iter()
+            .map(|p| {
+                centers
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // All points coincide with existing centers; duplicate one.
+            centers.push(centers[0]);
+            continue;
+        }
+        let mut target = rng.next_f64() * total;
+        let mut idx = 0;
+        for (i, &d) in d2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                idx = i;
+                break;
+            }
+        }
+        centers.push(pts[idx]);
+    }
+
+    // Lloyd iterations.
+    let mut assign = vec![0usize; pts.len()];
+    for _ in 0..100 {
+        let mut changed = false;
+        for (i, p) in pts.iter().enumerate() {
+            let best = (0..centers.len())
+                .min_by(|&a, &b| {
+                    dist2(p, &centers[a])
+                        .partial_cmp(&dist2(p, &centers[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![[0.0f64; 2]; centers.len()];
+        let mut counts = vec![0usize; centers.len()];
+        for (i, p) in pts.iter().enumerate() {
+            sums[assign[i]][0] += p[0];
+            sums[assign[i]][1] += p[1];
+            counts[assign[i]] += 1;
+        }
+        for (c, (s, &cnt)) in centers.iter_mut().zip(sums.iter().zip(&counts)) {
+            if cnt > 0 {
+                *c = [s[0] / cnt as f64, s[1] / cnt as f64];
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Build groups from *original-space* centroids of the members, dropping
+    // empty clusters and compacting the assignment indices.
+    let mut groups = Vec::new();
+    let mut remap = vec![usize::MAX; centers.len()];
+    for c in 0..centers.len() {
+        let members: Vec<usize> = (0..pts.len()).filter(|&i| assign[i] == c).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let mu = members.iter().map(|&i| workers[i].mu).sum::<f64>() / members.len() as f64;
+        let alpha =
+            members.iter().map(|&i| workers[i].alpha).sum::<f64>() / members.len() as f64;
+        remap[c] = groups.len();
+        groups.push(Group { n: members.len(), mu, alpha });
+    }
+    let assign: Vec<usize> = assign.into_iter().map(|c| remap[c]).collect();
+    Ok((groups, assign))
+}
+
+#[inline]
+fn dist2(a: &[f64; 2], b: &[f64; 2]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(groups: &[(usize, f64, f64)], jitter: f64, seed: u64) -> Vec<WorkerParams> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for &(n, mu, alpha) in groups {
+            for _ in 0..n {
+                out.push(WorkerParams {
+                    mu: mu * (1.0 + jitter * (rng.next_f64() - 0.5)),
+                    alpha: alpha * (1.0 + jitter * (rng.next_f64() - 0.5)),
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_well_separated_groups() {
+        let workers = fleet(&[(30, 1.0, 1.0), (40, 8.0, 1.0), (50, 16.0, 4.0)], 0.05, 1);
+        let (groups, assign) = cluster_workers(&workers, 3, 7).unwrap();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(assign.len(), 120);
+        let mut sizes: Vec<usize> = groups.iter().map(|g| g.n).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![30, 40, 50]);
+        // Centroid mus should approximate the true centers.
+        let mut mus: Vec<f64> = groups.iter().map(|g| g.mu).collect();
+        mus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((mus[0] - 1.0).abs() < 0.2);
+        assert!((mus[1] - 8.0).abs() < 0.8);
+        assert!((mus[2] - 16.0).abs() < 1.6);
+    }
+
+    #[test]
+    fn assignment_consistent_with_group_sizes() {
+        let workers = fleet(&[(20, 2.0, 1.0), (20, 10.0, 2.0)], 0.1, 3);
+        let (groups, assign) = cluster_workers(&workers, 2, 11).unwrap();
+        for (gi, g) in groups.iter().enumerate() {
+            let cnt = assign.iter().filter(|&&a| a == gi).count();
+            assert_eq!(cnt, g.n);
+        }
+    }
+
+    #[test]
+    fn g_equals_workers_is_identity_sized() {
+        let workers = fleet(&[(5, 1.0, 1.0)], 0.5, 5);
+        let (groups, _) = cluster_workers(&workers, 5, 13).unwrap();
+        // Each worker its own group (some may merge if identical).
+        assert!(groups.len() >= 1 && groups.len() <= 5);
+        assert_eq!(groups.iter().map(|g| g.n).sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(cluster_workers(&[], 1, 0).is_err());
+        let w = fleet(&[(3, 1.0, 1.0)], 0.0, 0);
+        assert!(cluster_workers(&w, 0, 0).is_err());
+        assert!(cluster_workers(&w, 4, 0).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Cluster model: heterogeneous worker groups and runtime distributions.
+//!
+//! Mirrors §II of the paper: `N` workers partitioned into `G` groups; group
+//! `j` has `N_j` workers, straggling parameter `μ_(j)` and shift parameter
+//! `α_(j)`; workers in a group receive the same number of coded rows
+//! `l_(j)`.
+
+pub mod analytic;
+pub mod clustering;
+pub mod order_stats;
+pub mod runtime_dist;
+
+pub use analytic::clt_expected_latency;
+pub use clustering::cluster_workers;
+pub use order_stats::{group_latency, group_latency_exact, xi, xi_star};
+pub use runtime_dist::{LatencyModel, RuntimeDist};
+
+use crate::{Error, Result};
+
+/// One homogeneous group of workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Group {
+    /// Number of workers `N_j`.
+    pub n: usize,
+    /// Straggling parameter `μ_(j)` (rate of the exponential tail).
+    pub mu: f64,
+    /// Shift parameter `α_(j)` (deterministic minimum time).
+    pub alpha: f64,
+}
+
+impl Group {
+    /// Construct a group, validating parameters.
+    pub fn new(n: usize, mu: f64, alpha: f64) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::InvalidSpec("group has zero workers".into()));
+        }
+        if !(mu > 0.0) || !mu.is_finite() {
+            return Err(Error::InvalidSpec(format!("mu must be positive, got {mu}")));
+        }
+        if !(alpha > 0.0) || !alpha.is_finite() {
+            return Err(Error::InvalidSpec(format!(
+                "alpha must be positive, got {alpha}"
+            )));
+        }
+        Ok(Group { n, mu, alpha })
+    }
+}
+
+/// A heterogeneous cluster: `G` groups plus the data-matrix row count `k`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// Worker groups (`G = groups.len()`).
+    pub groups: Vec<Group>,
+    /// Rows of the uncoded data matrix `A` (the MDS dimension `k`).
+    pub k: usize,
+}
+
+impl ClusterSpec {
+    /// Construct and validate a cluster spec.
+    pub fn new(groups: Vec<Group>, k: usize) -> Result<Self> {
+        if groups.is_empty() {
+            return Err(Error::InvalidSpec("cluster has no groups".into()));
+        }
+        if k == 0 {
+            return Err(Error::InvalidSpec("k must be positive".into()));
+        }
+        Ok(ClusterSpec { groups, k })
+    }
+
+    /// Total number of workers `N = Σ N_j`.
+    pub fn total_workers(&self) -> usize {
+        self.groups.iter().map(|g| g.n).sum()
+    }
+
+    /// Number of groups `G`.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Scale every `μ_(j)` by `q` (the paper's scale factor in Figs. 2, 5–7).
+    pub fn scaled_mu(&self, q: f64) -> ClusterSpec {
+        ClusterSpec {
+            groups: self
+                .groups
+                .iter()
+                .map(|g| Group {
+                    n: g.n,
+                    mu: g.mu * q,
+                    alpha: g.alpha,
+                })
+                .collect(),
+            k: self.k,
+        }
+    }
+
+    /// Scale the total worker count: each `N_j` is multiplied by `factor`
+    /// (used for the Fig. 4 sweep where `N_j ∝ N`).
+    pub fn scaled_workers(&self, factor: f64) -> ClusterSpec {
+        ClusterSpec {
+            groups: self
+                .groups
+                .iter()
+                .map(|g| Group {
+                    n: ((g.n as f64 * factor).round() as usize).max(1),
+                    mu: g.mu,
+                    alpha: g.alpha,
+                })
+                .collect(),
+            k: self.k,
+        }
+    }
+
+    /// The five-group cluster used throughout §IV (Figs. 4–7):
+    /// `N = (3,4,5,6,7)·N/25`, `μ = (16,12,8,4,1)`, `α = 1`.
+    pub fn paper_five_group(total_n: usize, k: usize) -> ClusterSpec {
+        let fracs = [3.0, 4.0, 5.0, 6.0, 7.0];
+        let mus = [16.0, 12.0, 8.0, 4.0, 1.0];
+        let groups = fracs
+            .iter()
+            .zip(mus.iter())
+            .map(|(&f, &mu)| Group {
+                n: ((f / 25.0) * total_n as f64).round() as usize,
+                mu,
+                alpha: 1.0,
+            })
+            .collect();
+        ClusterSpec { groups, k }
+    }
+
+    /// The two-group cluster of Fig. 8: `N=(300,600)`, `μ=(4,0.5)`, `α=1`.
+    pub fn paper_two_group(k: usize) -> ClusterSpec {
+        ClusterSpec {
+            groups: vec![
+                Group { n: 300, mu: 4.0, alpha: 1.0 },
+                Group { n: 600, mu: 0.5, alpha: 1.0 },
+            ],
+            k,
+        }
+    }
+
+    /// The three-group model-B cluster of Fig. 9:
+    /// `N=(3,3,4)·N/10`, `μ=(1,4,8)`, `α=(1,4,12)`.
+    pub fn paper_three_group_b(total_n: usize, k: usize) -> ClusterSpec {
+        let fracs = [3.0, 3.0, 4.0];
+        let mus = [1.0, 4.0, 8.0];
+        let alphas = [1.0, 4.0, 12.0];
+        let groups = (0..3)
+            .map(|j| Group {
+                n: ((fracs[j] / 10.0) * total_n as f64).round() as usize,
+                mu: mus[j],
+                alpha: alphas[j],
+            })
+            .collect();
+        ClusterSpec { groups, k }
+    }
+
+    /// The three-group cluster of Fig. 2: `N=(1000,2000,3000)`,
+    /// `μ=(2,1,0.5)`, `α=1`.
+    pub fn paper_fig2(k: usize) -> ClusterSpec {
+        ClusterSpec {
+            groups: vec![
+                Group { n: 1000, mu: 2.0, alpha: 1.0 },
+                Group { n: 2000, mu: 1.0, alpha: 1.0 },
+                Group { n: 3000, mu: 0.5, alpha: 1.0 },
+            ],
+            k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_validation() {
+        assert!(Group::new(0, 1.0, 1.0).is_err());
+        assert!(Group::new(1, -1.0, 1.0).is_err());
+        assert!(Group::new(1, 1.0, 0.0).is_err());
+        assert!(Group::new(1, f64::NAN, 1.0).is_err());
+        assert!(Group::new(10, 2.0, 1.0).is_ok());
+    }
+
+    #[test]
+    fn cluster_validation_and_totals() {
+        assert!(ClusterSpec::new(vec![], 10).is_err());
+        let c = ClusterSpec::paper_five_group(2500, 10_000);
+        assert_eq!(c.num_groups(), 5);
+        assert_eq!(c.total_workers(), 2500);
+        assert_eq!(c.groups[0].n, 300);
+        assert_eq!(c.groups[4].n, 700);
+    }
+
+    #[test]
+    fn mu_scaling() {
+        let c = ClusterSpec::paper_five_group(2500, 100);
+        let s = c.scaled_mu(0.5);
+        assert_eq!(s.groups[0].mu, 8.0);
+        assert_eq!(s.groups[4].mu, 0.5);
+        assert_eq!(s.groups[0].n, c.groups[0].n);
+    }
+
+    #[test]
+    fn worker_scaling_preserves_proportions() {
+        let c = ClusterSpec::paper_five_group(2500, 100);
+        let s = c.scaled_workers(2.0);
+        assert_eq!(s.total_workers(), 5000);
+        assert_eq!(s.groups[0].n, 600);
+    }
+
+    #[test]
+    fn paper_fig9_cluster() {
+        let c = ClusterSpec::paper_three_group_b(1000, 100_000);
+        assert_eq!(c.groups[0].n, 300);
+        assert_eq!(c.groups[2].n, 400);
+        assert_eq!(c.groups[2].alpha, 12.0);
+    }
+}

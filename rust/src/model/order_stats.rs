@@ -1,0 +1,161 @@
+//! Analytic order statistics for shifted exponentials (paper eq. (6), (9)).
+//!
+//! For group `j` with `N_j` workers, load `l_(j)` and parameters
+//! `(μ_(j), α_(j))`, the expected time until `r_j` of its workers finish is
+//!
+//! ```text
+//! λ^{l}_{r:N} = (l/k) · ( α + (H_N - H_{N-r}) / μ )            [model A]
+//!             =  l    · ( α + (H_N - H_{N-r}) / μ )            [model B]
+//! ```
+//!
+//! with the paper's approximation `H_N - H_{N-r} ≈ log(N/(N-r))` available
+//! as the default (`group_latency`) and the exact harmonic form as
+//! [`group_latency_exact`].
+
+use crate::math::{harmonic, wm1_neg_exp};
+use crate::model::{LatencyModel, RuntimeDist};
+
+/// The paper's `ξ(r, N, μ)` with shift `α` (eq. (9)):
+/// `ξ = α + (1/μ) log(N / (N - r))`. `r` is real-valued, `0 <= r < N`.
+pub fn xi(r: f64, n: f64, mu: f64, alpha: f64) -> f64 {
+    assert!(r >= 0.0 && r < n, "need 0 <= r < N (r={r}, N={n})");
+    alpha + (n / (n - r)).ln() / mu
+}
+
+/// `ξ` evaluated at the optimal `r*` (eq. (17)):
+/// `ξ* = α + (1/μ) log(-W_{-1}(-e^{-(αμ+1)}))`.
+///
+/// Computed through the log-space Lambert evaluation so it is stable for
+/// large `αμ`.
+pub fn xi_star(mu: f64, alpha: f64) -> f64 {
+    let w = wm1_neg_exp(alpha * mu + 1.0);
+    alpha + (-w).ln() / mu
+}
+
+/// Expected `r`-th order statistic of the group runtime (eq. (6)), using the
+/// paper's `log` approximation. `r` real-valued in `[0, N)`.
+pub fn group_latency(
+    model: LatencyModel,
+    load: f64,
+    k: f64,
+    n: f64,
+    r: f64,
+    mu: f64,
+    alpha: f64,
+) -> f64 {
+    let x = xi(r, n, mu, alpha);
+    match model {
+        LatencyModel::A => load / k * x,
+        LatencyModel::B => load * x,
+    }
+}
+
+/// Exact-harmonic version of [`group_latency`] for integer `r`.
+pub fn group_latency_exact(
+    model: LatencyModel,
+    load: f64,
+    k: f64,
+    n: u64,
+    r: u64,
+    mu: f64,
+    alpha: f64,
+) -> f64 {
+    assert!(r >= 1 && r <= n);
+    let x = alpha + (harmonic(n) - harmonic(n - r)) / mu;
+    match model {
+        LatencyModel::A => load / k * x,
+        LatencyModel::B => load * x,
+    }
+}
+
+/// CLT variance of the central order statistic (Proposition 1):
+/// `σ² = q(1-q) / (N f(η)²)` where `η = F⁻¹(q)`.
+///
+/// Used to verify the concentration argument behind Theorem 3.
+pub fn central_order_stat_variance(dist: &RuntimeDist, n: f64, q: f64) -> f64 {
+    assert!(q > 0.0 && q < 1.0);
+    let eta = dist.quantile(q);
+    // pdf of the shifted exponential at eta.
+    let f = (1.0 - dist.cdf(eta)) / dist.scale();
+    q * (1.0 - q) / (n * f * f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Rng;
+
+    #[test]
+    fn xi_matches_formula() {
+        let v = xi(50.0, 100.0, 2.0, 1.0);
+        assert!((v - (1.0 + 0.5 * (2.0f64).ln())).abs() < 1e-14);
+        // r = 0 gives just alpha.
+        assert_eq!(xi(0.0, 10.0, 1.0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn xi_star_identity_eq17() {
+        // The identity log(-W_{-1}(z)) + W_{-1}(z) = log(-z) gives
+        // xi* = alpha + (1/mu)(alpha*mu + 1 + w) where w = W_{-1}(-e^{-(αμ+1)}).
+        for (mu, alpha) in [(1.0, 1.0), (4.0, 2.0), (0.5, 1.0), (16.0, 1.0)] {
+            let w = wm1_neg_exp(alpha * mu + 1.0);
+            let lhs = xi_star(mu, alpha);
+            let rhs = alpha + (alpha * mu + 1.0 + w) * (-1.0) / mu * (-1.0);
+            // log(-w) = -(t + w) with t = alpha*mu+1, so
+            // xi* = alpha - (t + w)/mu... careful: ln(-w) = -t - w.
+            let direct = alpha + (-(alpha * mu + 1.0) - w) / mu;
+            assert!((lhs - direct).abs() < 1e-10, "{lhs} vs {direct}");
+            let _ = rhs;
+        }
+    }
+
+    #[test]
+    fn group_latency_log_vs_exact_converge() {
+        // For large N the log approximation matches the harmonic form.
+        let (n, r) = (100_000u64, 50_000u64);
+        let a = group_latency(LatencyModel::A, 10.0, 1000.0, n as f64, r as f64, 2.0, 1.0);
+        let e = group_latency_exact(LatencyModel::A, 10.0, 1000.0, n, r, 2.0, 1.0);
+        assert!((a - e).abs() / e < 1e-4, "{a} vs {e}");
+    }
+
+    #[test]
+    fn group_latency_monte_carlo_agreement() {
+        // Sample N runtimes, take the r-th order statistic, compare to eq (6).
+        let (n, r) = (200usize, 120usize);
+        let (load, k, mu, alpha) = (25.0, 1000.0, 3.0, 1.0);
+        let dist = RuntimeDist::new(LatencyModel::A, load, k, mu, alpha);
+        let mut rng = Rng::new(31);
+        let trials = 20_000;
+        let mut acc = 0.0;
+        let mut ts = vec![0.0f64; n];
+        for _ in 0..trials {
+            for t in ts.iter_mut() {
+                *t = dist.sample(&mut rng);
+            }
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            acc += ts[r - 1];
+        }
+        let mc = acc / trials as f64;
+        let analytic =
+            group_latency_exact(LatencyModel::A, load, k, n as u64, r as u64, mu, alpha);
+        assert!(
+            (mc - analytic).abs() / analytic < 0.01,
+            "MC {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn model_b_scales_with_absolute_load() {
+        let a1 = group_latency(LatencyModel::B, 10.0, 1.0, 100.0, 50.0, 2.0, 1.0);
+        let a2 = group_latency(LatencyModel::B, 20.0, 1.0, 100.0, 50.0, 2.0, 1.0);
+        assert!((a2 / a1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clt_variance_shrinks_with_n() {
+        let d = RuntimeDist::new(LatencyModel::A, 10.0, 100.0, 2.0, 1.0);
+        let v1 = central_order_stat_variance(&d, 100.0, 0.5);
+        let v2 = central_order_stat_variance(&d, 10_000.0, 0.5);
+        assert!(v2 < v1 / 50.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! The paper's two shifted-exponential runtime models.
+//!
+//! **Model A** (eq. (1), the paper's own model): a worker in group `j`
+//! assigned `l` coded rows (out of MDS dimension `k`) finishes at
+//!
+//! ```text
+//! T = (l/k) · α_j + (l/k) · X / μ_j,     X ~ Exp(1)
+//! ```
+//!
+//! i.e. the CDF `F(t) = 1 - exp(-(k μ_j / l)(t - α_j l / k))`. Both the shift
+//! and the scale are proportional to `l/k` — a worker doing half the rows is
+//! twice as fast in distribution.
+//!
+//! **Model B** (eq. (30), the model of Reisizadeh et al. [32]): time to
+//! compute `l` rows is
+//!
+//! ```text
+//! T = α_j · l + l · X / μ_j,             X ~ Exp(1)
+//! ```
+//!
+//! with CDF `F(t) = 1 - exp(-(μ_j / l)(t - α_j l))` — per-row scaling without
+//! the `1/k` normalization, so latency grows with the absolute row count.
+
+use crate::math::Rng;
+
+/// Which latency model a simulation uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LatencyModel {
+    /// Paper eq. (1): load normalized by `k`.
+    A,
+    /// Paper eq. (30) / [32]: per-row scaling.
+    B,
+}
+
+/// A concrete runtime distribution for one worker with load `l`.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeDist {
+    model: LatencyModel,
+    /// Assigned coded rows (real-valued; analysis relaxes integrality).
+    pub load: f64,
+    /// MDS dimension `k` (used by model A normalization only).
+    pub k: f64,
+    /// Straggling parameter `μ_(j)`.
+    pub mu: f64,
+    /// Shift parameter `α_(j)`.
+    pub alpha: f64,
+}
+
+impl RuntimeDist {
+    /// Build a distribution; panics on non-positive parameters.
+    pub fn new(model: LatencyModel, load: f64, k: f64, mu: f64, alpha: f64) -> Self {
+        assert!(load > 0.0 && k > 0.0 && mu > 0.0 && alpha > 0.0);
+        RuntimeDist { model, load, k, mu, alpha }
+    }
+
+    /// The deterministic shift (minimum possible completion time).
+    #[inline]
+    pub fn shift(&self) -> f64 {
+        match self.model {
+            LatencyModel::A => self.alpha * self.load / self.k,
+            LatencyModel::B => self.alpha * self.load,
+        }
+    }
+
+    /// The exponential scale (mean of the stochastic part).
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        match self.model {
+            LatencyModel::A => self.load / (self.k * self.mu),
+            LatencyModel::B => self.load / self.mu,
+        }
+    }
+
+    /// Sample one completion time.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.shift() + self.scale() * rng.exp1()
+    }
+
+    /// CDF `Pr(T <= t)`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t < self.shift() {
+            0.0
+        } else {
+            1.0 - (-(t - self.shift()) / self.scale()).exp()
+        }
+    }
+
+    /// Quantile function (inverse CDF) for `p ∈ [0, 1)`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..1.0).contains(&p));
+        self.shift() - self.scale() * (1.0 - p).ln()
+    }
+
+    /// Mean completion time `shift + scale`.
+    pub fn mean(&self) -> f64 {
+        self.shift() + self.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_a_shift_and_scale_match_eq1() {
+        // F(t) = 1 - exp(-(k mu / l)(t - alpha l / k)).
+        let d = RuntimeDist::new(LatencyModel::A, 50.0, 1000.0, 2.0, 1.5);
+        assert!((d.shift() - 1.5 * 50.0 / 1000.0).abs() < 1e-15);
+        assert!((d.scale() - 50.0 / (1000.0 * 2.0)).abs() < 1e-15);
+        // CDF at shift is 0; far right tends to 1.
+        assert_eq!(d.cdf(d.shift() - 1e-9), 0.0);
+        assert!((d.cdf(d.shift() + 20.0 * d.scale()) - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn model_b_shift_and_scale_match_eq30() {
+        // F(t) = 1 - exp(-(mu/l)(t - alpha l)).
+        let d = RuntimeDist::new(LatencyModel::B, 50.0, 1000.0, 2.0, 1.5);
+        assert!((d.shift() - 1.5 * 50.0).abs() < 1e-15);
+        assert!((d.scale() - 50.0 / 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let d = RuntimeDist::new(LatencyModel::A, 10.0, 100.0, 4.0, 1.0);
+        for p in [0.0, 0.1, 0.5, 0.9, 0.999] {
+            let t = d.quantile(p);
+            assert!((d.cdf(t) - p).abs() < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sample_mean_matches_analytic() {
+        let d = RuntimeDist::new(LatencyModel::A, 10.0, 100.0, 4.0, 1.0);
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += d.sample(&mut rng);
+        }
+        let mean = s / n as f64;
+        assert!(
+            (mean - d.mean()).abs() < 3e-3 * d.mean(),
+            "{mean} vs {}",
+            d.mean()
+        );
+    }
+
+    #[test]
+    fn samples_respect_shift() {
+        let d = RuntimeDist::new(LatencyModel::B, 5.0, 100.0, 1.0, 2.0);
+        let mut rng = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) >= d.shift());
+        }
+    }
+
+    #[test]
+    fn homogeneous_reduction_to_lee_et_al() {
+        // With G=1, alpha=1, l=k/N, model A reduces to the model of [4]:
+        // shift = 1/N, scale = 1/(N mu).
+        let n_workers = 10.0;
+        let k = 1000.0;
+        let d = RuntimeDist::new(LatencyModel::A, k / n_workers, k, 2.0, 1.0);
+        assert!((d.shift() - 1.0 / n_workers).abs() < 1e-15);
+        assert!((d.scale() - 1.0 / (n_workers * 2.0)).abs() < 1e-15);
+    }
+}

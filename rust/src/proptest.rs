@@ -1,0 +1,146 @@
+//! Tiny in-repo property-testing driver (the vendored crate set has no
+//! `proptest`).
+//!
+//! A property is a closure receiving a seeded [`Rng`]; the driver runs it for
+//! a configurable number of cases and, on failure, reports the exact case
+//! seed so the run can be replayed deterministically:
+//!
+//! ```
+//! use hetcoded::proptest::property;
+//! property("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.next_f64(), rng.next_f64());
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::math::Rng;
+
+/// Default number of cases used by the repo's property tests.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `cases` random cases of `prop`; panic with the replay seed on failure.
+pub fn property<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Fixed master seed => CI-stable; per-case seeds reported for replay.
+    let mut master = Rng::new(0xC0DE_D15C_0000_0000 ^ fxhash(name));
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay seed {case_seed:#018x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+/// FNV-1a hash for stable name-derived seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Helpers for drawing structured random inputs in property tests.
+pub mod gen {
+    use crate::math::Rng;
+    use crate::model::{ClusterSpec, Group};
+
+    /// Random group count in `[1, max_g]`, sizes in `[2, max_n]`,
+    /// `μ ∈ [0.1, 20]`, `α ∈ [0.5, 8]`.
+    pub fn cluster(rng: &mut Rng, max_g: usize, max_n: usize, k: usize) -> ClusterSpec {
+        let g = 1 + rng.gen_range(max_g as u64) as usize;
+        let groups = (0..g)
+            .map(|_| Group {
+                n: 2 + rng.gen_range((max_n - 1) as u64) as usize,
+                mu: rng.uniform(0.1, 20.0),
+                alpha: rng.uniform(0.5, 8.0),
+            })
+            .collect();
+        ClusterSpec::new(groups, k).expect("generated spec valid")
+    }
+
+    /// Random cluster with all shift parameters equal (group-code compatible).
+    pub fn cluster_equal_alpha(
+        rng: &mut Rng,
+        max_g: usize,
+        max_n: usize,
+        k: usize,
+    ) -> ClusterSpec {
+        let mut spec = cluster(rng, max_g, max_n, k);
+        let alpha = rng.uniform(0.5, 4.0);
+        for g in &mut spec.groups {
+            g.alpha = alpha;
+        }
+        spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("counts", 10, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        property("fails", 10, |rng| {
+            let v = rng.next_f64();
+            if v < 2.0 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        let _ = replay(42, |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        let _ = replay(42, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn generated_clusters_valid() {
+        property("gen cluster valid", 50, |rng| {
+            let spec = gen::cluster(rng, 6, 100, 1000);
+            if spec.total_workers() == 0 || spec.num_groups() == 0 {
+                return Err("empty".into());
+            }
+            Ok(())
+        });
+    }
+}

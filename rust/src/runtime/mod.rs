@@ -1,0 +1,386 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the L2 JAX
+//! model (which calls the L1 Pallas kernels) to **HLO text** — the
+//! interchange format this image's `xla_extension 0.5.1` accepts (serialized
+//! protos from jax ≥ 0.5 carry 64-bit instruction ids it rejects). This
+//! module loads `artifacts/manifest.txt`, compiles one executable per tile
+//! variant on the PJRT CPU client, and exposes typed entry points; Python is
+//! never on the request path.
+//!
+//! Worker subtasks have heterogeneous row counts `l_i`, while AOT artifacts
+//! have fixed shapes, so matvec executables come in **row-bucketed tiles**
+//! (e.g. 64/128/256/512 rows × fixed `d`); a chunk is padded with zero rows
+//! up to the smallest tile that fits, and the padding rows are discarded
+//! from the result.
+
+use crate::coding::Matrix;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// One artifact as listed in `manifest.txt`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactKind {
+    /// `matvec <rows> <cols> <file>`: computes `A_tile · x`.
+    Matvec { rows: usize, cols: usize },
+    /// `matvecb <rows> <cols> <batch> <file>`: computes `A_tile · Xs` for a
+    /// `(cols, batch)` request batch (MXU-shaped contraction).
+    MatvecBatched { rows: usize, cols: usize, batch: usize },
+    /// `encode <n> <k> <d> <file>`: computes `G · A`.
+    Encode { n: usize, k: usize, d: usize },
+}
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Kind + shape.
+    pub kind: ArtifactKind,
+    /// HLO text file (relative to the artifacts dir).
+    pub path: PathBuf,
+}
+
+/// Parse `manifest.txt` content.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let err = |msg: &str| {
+            Error::Runtime(format!("manifest line {}: {msg}", lineno + 1))
+        };
+        let parse_usize = |s: &str| {
+            s.parse::<usize>()
+                .map_err(|_| err(&format!("bad integer `{s}`")))
+        };
+        match parts.as_slice() {
+            ["matvec", rows, cols, file] => out.push(ManifestEntry {
+                kind: ArtifactKind::Matvec {
+                    rows: parse_usize(rows)?,
+                    cols: parse_usize(cols)?,
+                },
+                path: PathBuf::from(file),
+            }),
+            ["matvecb", rows, cols, batch, file] => out.push(ManifestEntry {
+                kind: ArtifactKind::MatvecBatched {
+                    rows: parse_usize(rows)?,
+                    cols: parse_usize(cols)?,
+                    batch: parse_usize(batch)?,
+                },
+                path: PathBuf::from(file),
+            }),
+            ["encode", n, k, d, file] => out.push(ManifestEntry {
+                kind: ArtifactKind::Encode {
+                    n: parse_usize(n)?,
+                    k: parse_usize(k)?,
+                    d: parse_usize(d)?,
+                },
+                path: PathBuf::from(file),
+            }),
+            _ => return Err(err(&format!("unrecognized entry `{line}`"))),
+        }
+    }
+    if out.is_empty() {
+        return Err(Error::Runtime("manifest is empty".into()));
+    }
+    Ok(out)
+}
+
+/// A loaded PJRT runtime with compiled executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// Matvec tiles sorted by row count ascending; all share `cols`.
+    matvec_tiles: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    /// Batched matvec tiles `(rows, batch, exe)`, sorted by rows.
+    matvecb_tiles: Vec<(usize, usize, xla::PjRtLoadedExecutable)>,
+    cols: usize,
+    /// Optional encode executable with its `(n, k, d)` shape.
+    encode: Option<(usize, usize, usize, xla::PjRtLoadedExecutable)>,
+}
+
+impl Runtime {
+    /// Load all artifacts from `dir` and compile them on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut matvec_tiles = Vec::new();
+        let mut matvecb_tiles = Vec::new();
+        let mut cols_seen: Option<usize> = None;
+        let mut encode = None;
+        for entry in entries {
+            let full = dir.join(&entry.path);
+            let proto = xla::HloModuleProto::from_text_file(&full)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            match entry.kind {
+                ArtifactKind::Matvec { rows, cols } => {
+                    if let Some(c) = cols_seen {
+                        if c != cols {
+                            return Err(Error::Runtime(format!(
+                                "matvec tiles disagree on cols: {c} vs {cols}"
+                            )));
+                        }
+                    }
+                    cols_seen = Some(cols);
+                    matvec_tiles.push((rows, exe));
+                }
+                ArtifactKind::MatvecBatched { rows, cols, batch } => {
+                    if let Some(c) = cols_seen {
+                        if c != cols {
+                            return Err(Error::Runtime(format!(
+                                "matvecb tiles disagree on cols: {c} vs {cols}"
+                            )));
+                        }
+                    }
+                    cols_seen = Some(cols);
+                    matvecb_tiles.push((rows, batch, exe));
+                }
+                ArtifactKind::Encode { n, k, d } => {
+                    encode = Some((n, k, d, exe));
+                }
+            }
+        }
+        if matvec_tiles.is_empty() {
+            return Err(Error::Runtime("no matvec tiles in manifest".into()));
+        }
+        matvec_tiles.sort_by_key(|(r, _)| *r);
+        matvecb_tiles.sort_by_key(|(r, _, _)| *r);
+        Ok(Runtime {
+            client,
+            matvec_tiles,
+            matvecb_tiles,
+            cols: cols_seen.unwrap(),
+            encode,
+        })
+    }
+
+    /// Load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(Path::new(DEFAULT_ARTIFACT_DIR))
+    }
+
+    /// Input width `d` all matvec tiles expect.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Available tile row counts (ascending).
+    pub fn tile_rows(&self) -> Vec<usize> {
+        self.matvec_tiles.iter().map(|(r, _)| *r).collect()
+    }
+
+    /// Largest tile (max rows a single call can handle).
+    pub fn max_tile_rows(&self) -> usize {
+        self.matvec_tiles.last().map(|(r, _)| *r).unwrap_or(0)
+    }
+
+    /// Compute `rows · x` through the AOT executable, bucketing the chunk to
+    /// the smallest tile that fits and discarding padded rows.
+    ///
+    /// Chunks larger than the largest tile are processed in tile-sized
+    /// pieces.
+    pub fn matvec(&self, rows: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+        if rows.cols() != self.cols {
+            return Err(Error::Runtime(format!(
+                "chunk has {} cols, artifacts compiled for {}",
+                rows.cols(),
+                self.cols
+            )));
+        }
+        if x.len() != self.cols {
+            return Err(Error::Runtime(format!(
+                "x has {} entries, expected {}",
+                x.len(),
+                self.cols
+            )));
+        }
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut out = Vec::with_capacity(rows.rows());
+        let max_tile = self.max_tile_rows();
+        let mut start = 0usize;
+        while start < rows.rows() {
+            let l = (rows.rows() - start).min(max_tile);
+            let (tile_rows, exe) = self.pick_tile(l);
+            // Pack the chunk (f32) with zero-row padding to the tile shape.
+            let mut buf = vec![0f32; tile_rows * self.cols];
+            for i in 0..l {
+                let src = rows.row(start + i);
+                for (j, &v) in src.iter().enumerate() {
+                    buf[i * self.cols + j] = v as f32;
+                }
+            }
+            let a_lit = xla::Literal::vec1(&buf)
+                .reshape(&[tile_rows as i64, self.cols as i64])?;
+            let x_lit = xla::Literal::vec1(&x32);
+            let result = exe.execute::<xla::Literal>(&[a_lit, x_lit])?[0][0]
+                .to_literal_sync()?;
+            let y = result.to_tuple1()?.to_vec::<f32>()?;
+            out.extend(y[..l].iter().map(|&v| v as f64));
+            start += l;
+        }
+        Ok(out)
+    }
+
+    fn pick_tile(&self, l: usize) -> (usize, &xla::PjRtLoadedExecutable) {
+        for (r, exe) in &self.matvec_tiles {
+            if *r >= l {
+                return (*r, exe);
+            }
+        }
+        let (r, exe) = self.matvec_tiles.last().unwrap();
+        (*r, exe)
+    }
+
+    /// Batch width of the batched matvec artifacts (None if absent).
+    pub fn batch_width(&self) -> Option<usize> {
+        self.matvecb_tiles.first().map(|(_, b, _)| *b)
+    }
+
+    /// Compute `rows · Xs` for a request batch `Xs` (column-major batch:
+    /// `xs[b]` is request `b`, each of length `cols`). Uses the batched
+    /// (MXU-shaped) artifacts; the batch is zero-padded up to the artifact
+    /// batch width and extra columns are discarded.
+    pub fn matvec_batched(&self, rows: &Matrix, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let bw = self.batch_width().ok_or_else(|| {
+            Error::Runtime("no batched matvec artifacts loaded".into())
+        })?;
+        if xs.is_empty() || xs.len() > bw {
+            return Err(Error::Runtime(format!(
+                "batch size {} outside 1..={bw}",
+                xs.len()
+            )));
+        }
+        if rows.cols() != self.cols {
+            return Err(Error::Runtime(format!(
+                "chunk has {} cols, artifacts compiled for {}",
+                rows.cols(),
+                self.cols
+            )));
+        }
+        for (b, x) in xs.iter().enumerate() {
+            if x.len() != self.cols {
+                return Err(Error::Runtime(format!(
+                    "request {b} has {} entries, expected {}",
+                    x.len(),
+                    self.cols
+                )));
+            }
+        }
+        // Pack Xs as (d, bw) with zero columns beyond the live batch.
+        let mut xbuf = vec![0f32; self.cols * bw];
+        for (b, x) in xs.iter().enumerate() {
+            for (j, &v) in x.iter().enumerate() {
+                xbuf[j * bw + b] = v as f32;
+            }
+        }
+        let mut out: Vec<Vec<f64>> = vec![Vec::with_capacity(rows.rows()); xs.len()];
+        let max_tile = self.matvecb_tiles.last().map(|(r, _, _)| *r).unwrap();
+        let mut start = 0usize;
+        while start < rows.rows() {
+            let l = (rows.rows() - start).min(max_tile);
+            let (tile_rows, exe) = self
+                .matvecb_tiles
+                .iter()
+                .find(|(r, _, _)| *r >= l)
+                .map(|(r, _, e)| (*r, e))
+                .unwrap_or_else(|| {
+                    let (r, _, e) = self.matvecb_tiles.last().unwrap();
+                    (*r, e)
+                });
+            let mut abuf = vec![0f32; tile_rows * self.cols];
+            for i in 0..l {
+                for (j, &v) in rows.row(start + i).iter().enumerate() {
+                    abuf[i * self.cols + j] = v as f32;
+                }
+            }
+            let a_lit = xla::Literal::vec1(&abuf)
+                .reshape(&[tile_rows as i64, self.cols as i64])?;
+            let x_lit =
+                xla::Literal::vec1(&xbuf).reshape(&[self.cols as i64, bw as i64])?;
+            let result = exe.execute::<xla::Literal>(&[a_lit, x_lit])?[0][0]
+                .to_literal_sync()?;
+            let y = result.to_tuple1()?.to_vec::<f32>()?; // (tile_rows, bw) row-major
+            for i in 0..l {
+                for (b, o) in out.iter_mut().enumerate() {
+                    o.push(y[i * bw + b] as f64);
+                }
+            }
+            start += l;
+        }
+        Ok(out)
+    }
+
+    /// Shape of the encode executable, if present: `(n, k, d)`.
+    pub fn encode_shape(&self) -> Option<(usize, usize, usize)> {
+        self.encode.as_ref().map(|(n, k, d, _)| (*n, *k, *d))
+    }
+
+    /// Run the AOT encode `G · A`. Shapes must match the artifact exactly
+    /// (encode is a setup-time operation; no bucketing).
+    pub fn encode(&self, g: &Matrix, a: &Matrix) -> Result<Matrix> {
+        let (n, k, d, exe) = self
+            .encode
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("no encode artifact loaded".into()))?;
+        if g.rows() != *n || g.cols() != *k || a.rows() != *k || a.cols() != *d {
+            return Err(Error::Runtime(format!(
+                "encode artifact is ({n},{k},{d}); got G {}x{}, A {}x{}",
+                g.rows(),
+                g.cols(),
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let g32: Vec<f32> = g.data().iter().map(|&v| v as f32).collect();
+        let a32: Vec<f32> = a.data().iter().map(|&v| v as f32).collect();
+        let g_lit = xla::Literal::vec1(&g32).reshape(&[*n as i64, *k as i64])?;
+        let a_lit = xla::Literal::vec1(&a32).reshape(&[*k as i64, *d as i64])?;
+        let result = exe.execute::<xla::Literal>(&[g_lit, a_lit])?[0][0]
+            .to_literal_sync()?;
+        let y = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(Matrix::from_vec(*n, *d, y.into_iter().map(|v| v as f64).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "\n# comment\nmatvec 64 256 matvec_r64.hlo.txt\n\
+                    matvec 128 256 matvec_r128.hlo.txt\n\
+                    encode 1024 256 256 encode.hlo.txt\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(
+            entries[0].kind,
+            ArtifactKind::Matvec { rows: 64, cols: 256 }
+        );
+        assert_eq!(
+            entries[2].kind,
+            ArtifactKind::Encode { n: 1024, k: 256, d: 256 }
+        );
+    }
+
+    #[test]
+    fn manifest_errors() {
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("bogus 1 2 f").is_err());
+        assert!(parse_manifest("matvec x 256 f").is_err());
+        assert!(parse_manifest("matvec 64 f").is_err());
+    }
+}

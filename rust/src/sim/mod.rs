@@ -1,0 +1,17 @@
+//! Monte-Carlo cluster simulator.
+//!
+//! Estimates the expected computation latency `E[T_{r:N}]` of §II-C: sample
+//! every worker's completion time from its shifted-exponential runtime
+//! distribution and record the instant the master has aggregated `k` coded
+//! rows. The engine is multi-threaded (deterministic per-thread RNG streams)
+//! because the paper's figures need `10^4` samples across dozens of sweep
+//! points.
+
+pub mod montecarlo;
+pub mod schemes;
+
+pub use montecarlo::{
+    latency_any_k, latency_any_k_detailed, latency_per_group, monte_carlo,
+    monte_carlo_scratch, SimConfig,
+};
+pub use schemes::{simulate_scheme, Scheme, SchemeResult};

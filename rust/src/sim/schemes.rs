@@ -1,0 +1,230 @@
+//! Wiring of allocation policies into the Monte-Carlo engine.
+
+use crate::allocation::{
+    group_code_allocation, proposed_allocation, reisizadeh_allocation,
+    uncoded_allocation, uniform_allocation,
+};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{latency_any_k, latency_per_group, SimConfig};
+use crate::Result;
+
+/// A named end-to-end scheme from the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scheme {
+    /// Proposed allocation (Theorem 2 / Corollary 2) with its `(n*, k)` code.
+    Proposed,
+    /// Rate-1 uniform allocation; every worker must finish.
+    Uncoded,
+    /// Uniform allocation using the optimal code length `n*` from Theorem 2.
+    UniformWithOptimalN,
+    /// Uniform allocation with an explicit rate `k/n`.
+    UniformRate(f64),
+    /// Fixed-`r` group code of [33] (simulated group-wise decode).
+    GroupCode(f64),
+    /// Load allocation of [32] (Appendix D).
+    Reisizadeh,
+}
+
+impl Scheme {
+    /// Stable display name used in figures and CSV output.
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Proposed => "proposed".into(),
+            Scheme::Uncoded => "uncoded".into(),
+            Scheme::UniformWithOptimalN => "uniform-n*".into(),
+            Scheme::UniformRate(r) => format!("uniform-rate-{r:.3}"),
+            Scheme::GroupCode(r) => format!("group-code-r{r:.0}"),
+            Scheme::Reisizadeh => "reisizadeh".into(),
+        }
+    }
+}
+
+/// Outcome of simulating one scheme on one cluster.
+#[derive(Clone, Debug)]
+pub struct SchemeResult {
+    /// Scheme display name.
+    pub scheme: String,
+    /// Monte-Carlo mean latency.
+    pub mean: f64,
+    /// Standard error of the mean.
+    pub stderr: f64,
+    /// Analytic bound, when the policy defines one (`T*`, `1/r`, …).
+    pub bound: Option<f64>,
+    /// Code rate `k/n` actually used.
+    pub rate: f64,
+    /// Real-valued code length.
+    pub n: f64,
+}
+
+/// Simulate `scheme` on `spec` under `model`.
+pub fn simulate_scheme(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+    cfg: &SimConfig,
+) -> Result<SchemeResult> {
+    let k = spec.k as f64;
+    match scheme {
+        Scheme::Proposed => {
+            let a = proposed_allocation(model, spec)?;
+            let s = latency_any_k(spec, &a.loads, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: a.latency_bound,
+                rate: k / a.n,
+                n: a.n,
+            })
+        }
+        Scheme::Uncoded => {
+            let a = uncoded_allocation(model, spec)?;
+            let s = latency_any_k(spec, &a.loads, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: None,
+                rate: 1.0,
+                n: a.n,
+            })
+        }
+        Scheme::UniformWithOptimalN => {
+            let opt = proposed_allocation(model, spec)?;
+            let a = uniform_allocation(model, spec, opt.n)?;
+            let s = latency_any_k(spec, &a.loads, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: None,
+                rate: k / a.n,
+                n: a.n,
+            })
+        }
+        Scheme::UniformRate(rate) => {
+            let a = uniform_allocation(model, spec, k / rate)?;
+            let s = latency_any_k(spec, &a.loads, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: None,
+                rate,
+                n: a.n,
+            })
+        }
+        Scheme::GroupCode(r) => {
+            let a = group_code_allocation(model, spec, r)?;
+            let s = latency_per_group(spec, &a.loads, &a.r, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: a.latency_bound,
+                rate: k / a.n,
+                n: a.n,
+            })
+        }
+        Scheme::Reisizadeh => {
+            let a = reisizadeh_allocation(model, spec)?;
+            let s = latency_any_k(spec, &a.loads, model, cfg)?;
+            Ok(SchemeResult {
+                scheme: scheme.name(),
+                mean: s.mean(),
+                stderr: s.stderr(),
+                bound: None,
+                rate: k / a.n,
+                n: a.n,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig { samples: 3_000, seed: 123, threads: 2 }
+    }
+
+    #[test]
+    fn proposed_achieves_its_bound_at_scale() {
+        // Theorem 3: λ_{r:N} → T* as N → ∞. At N=2500 the gap should be
+        // small (a few percent).
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let r = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg()).unwrap();
+        let bound = r.bound.unwrap();
+        assert!(r.mean >= bound * 0.999, "mean {} below bound {bound}", r.mean);
+        assert!(
+            (r.mean - bound) / bound < 0.10,
+            "gap too large: mean {} vs bound {bound}",
+            r.mean
+        );
+    }
+
+    #[test]
+    fn proposed_beats_uniform_and_uncoded() {
+        let spec = ClusterSpec::paper_five_group(2500, 10_000);
+        let p = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg()).unwrap();
+        let u = simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg())
+            .unwrap();
+        let unc = simulate_scheme(&spec, Scheme::Uncoded, LatencyModel::A, &cfg()).unwrap();
+        assert!(p.mean < u.mean, "proposed {} !< uniform {}", p.mean, u.mean);
+        assert!(p.mean < unc.mean);
+    }
+
+    #[test]
+    fn group_code_latency_floors_at_one_over_r() {
+        // As N grows with fixed r, the group-code latency converges to 1/r
+        // and stops improving — the phenomenon behind Fig. 4.
+        let r = 100.0;
+        let small = ClusterSpec::paper_five_group(500, 10_000);
+        let big = ClusterSpec::paper_five_group(8_000, 10_000);
+        let a = simulate_scheme(&small, Scheme::GroupCode(r), LatencyModel::A, &cfg()).unwrap();
+        let b = simulate_scheme(&big, Scheme::GroupCode(r), LatencyModel::A, &cfg()).unwrap();
+        assert!(b.mean >= 1.0 / r * 0.999, "mean {} below floor", b.mean);
+        assert!(b.mean < a.mean);
+        // Large-N latency is within 15% of the 1/r floor.
+        assert!((b.mean - 0.01) / 0.01 < 0.15, "mean {}", b.mean);
+    }
+
+    #[test]
+    fn proposed_vastly_beats_group_code_at_large_n() {
+        // Fig. 4 headline: ≥10x at large N.
+        let spec = ClusterSpec::paper_five_group(10_000, 10_000);
+        let p = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg()).unwrap();
+        let g = simulate_scheme(&spec, Scheme::GroupCode(100.0), LatencyModel::A, &cfg())
+            .unwrap();
+        assert!(
+            g.mean / p.mean > 5.0,
+            "expected large gain, got {}x",
+            g.mean / p.mean
+        );
+    }
+
+    #[test]
+    fn reisizadeh_matches_proposed_model_b() {
+        let spec = ClusterSpec::paper_three_group_b(1000, 100_000);
+        let p = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::B, &cfg()).unwrap();
+        let z = simulate_scheme(&spec, Scheme::Reisizadeh, LatencyModel::B, &cfg()).unwrap();
+        let tol = 4.0 * (p.stderr + z.stderr);
+        assert!((p.mean - z.mean).abs() < tol, "{} vs {}", p.mean, z.mean);
+    }
+
+    #[test]
+    fn uniform_rate_sweep_is_unimodal_ish() {
+        // Fig. 8: there is an interior optimal rate (near 0.52 for the paper's
+        // 2-group cluster) — check the ends are worse than the middle.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let lo = simulate_scheme(&spec, Scheme::UniformRate(0.35), LatencyModel::A, &cfg())
+            .unwrap();
+        let mid = simulate_scheme(&spec, Scheme::UniformRate(0.52), LatencyModel::A, &cfg())
+            .unwrap();
+        let hi = simulate_scheme(&spec, Scheme::UniformRate(0.9), LatencyModel::A, &cfg())
+            .unwrap();
+        assert!(mid.mean < lo.mean, "mid {} !< lo {}", mid.mean, lo.mean);
+        assert!(mid.mean < hi.mean, "mid {} !< hi {}", mid.mean, hi.mean);
+    }
+}

@@ -1,0 +1,189 @@
+//! Integration tests: the full coordinator over both compute backends,
+//! including failure injection and batched serving.
+
+use hetcoded::allocation::{proposed_allocation, uniform_allocation};
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{
+    run_job, serve_requests, JobConfig, NativeCompute, XlaService,
+};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use std::path::Path;
+use std::sync::Arc;
+
+fn spec(k: usize) -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 5, mu: 8.0, alpha: 1.0 },
+            Group { n: 7, mu: 4.0, alpha: 1.0 },
+            Group { n: 8, mu: 1.0, alpha: 1.0 },
+        ],
+        k,
+    )
+    .unwrap()
+}
+
+fn data(k: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+    let x = (0..d).map(|_| rng.normal()).collect();
+    (a, x)
+}
+
+fn fast_cfg() -> JobConfig {
+    JobConfig { time_scale: 0.002, ..Default::default() }
+}
+
+#[test]
+fn native_end_to_end_proposed() {
+    let spec = spec(128);
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let (a, x) = data(128, 32, 1);
+    let r = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &fast_cfg())
+        .unwrap();
+    assert!(r.max_error < 1e-8, "err {}", r.max_error);
+    assert!(r.rows_collected >= 128);
+}
+
+#[test]
+fn native_end_to_end_model_b() {
+    let spec = spec(128);
+    let alloc = proposed_allocation(LatencyModel::B, &spec).unwrap();
+    let (a, x) = data(128, 32, 2);
+    let mut cfg = fast_cfg();
+    cfg.model = LatencyModel::B;
+    cfg.time_scale = 2e-5; // model-B delays scale with absolute rows
+    let r = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg).unwrap();
+    assert!(r.max_error < 1e-8);
+}
+
+#[test]
+fn failure_injection_up_to_redundancy() {
+    let spec = spec(100);
+    // Rate-1/2 code: half the workers can die.
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 200.0).unwrap();
+    let (a, x) = data(100, 16, 3);
+    for dead in [vec![0], vec![0, 7, 13], vec![1, 2, 3, 4, 5]] {
+        let mut cfg = fast_cfg();
+        cfg.dead_workers = dead.clone();
+        let r = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg)
+            .unwrap_or_else(|e| panic!("dead={dead:?}: {e}"));
+        assert!(r.max_error < 1e-8, "dead={dead:?}");
+    }
+}
+
+#[test]
+fn overload_of_dead_workers_fails_cleanly() {
+    let spec = spec(100);
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 120.0).unwrap();
+    let (a, x) = data(100, 16, 4);
+    let mut cfg = fast_cfg();
+    cfg.dead_workers = (0..10).collect(); // kill half the cluster, rate 0.83
+    let res = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg);
+    assert!(res.is_err());
+}
+
+#[test]
+fn serving_loop_has_stable_percentiles() {
+    let spec = spec(96);
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let (a, _) = data(96, 16, 5);
+    let mut rng = Rng::new(6);
+    let reqs: Vec<Vec<f64>> =
+        (0..12).map(|_| (0..16).map(|_| rng.normal()).collect()).collect();
+    let report = serve_requests(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        Arc::new(NativeCompute),
+        &fast_cfg(),
+    )
+    .unwrap();
+    assert_eq!(report.recorder.count(), 12);
+    assert!(report.worst_error < 1e-8);
+    assert!(report.recorder.percentile(95.0) >= report.recorder.percentile(50.0));
+    assert!(report.recorder.rows_per_second() > 0.0);
+}
+
+#[test]
+fn xla_backend_end_to_end() {
+    // Requires artifacts; skip cleanly otherwise.
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = match XlaService::new("artifacts".into()) {
+        Ok(s) => Arc::new(s),
+        Err(e) => panic!("artifact load failed: {e}"),
+    };
+    let k = 256;
+    let d = svc.cols();
+    let spec = spec(k);
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let (a, x) = data(k, d, 7);
+    let r = run_job(&spec, &alloc, &a, &x, svc, &fast_cfg()).unwrap();
+    // f32 artifact numerics.
+    assert!(r.max_error < 1e-2, "err {}", r.max_error);
+    assert_eq!(r.decoded.len(), k);
+    assert_eq!(r.backend, "xla-pjrt");
+}
+
+#[test]
+fn xla_and_native_agree() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = Arc::new(XlaService::new("artifacts".into()).unwrap());
+    let k = 128;
+    let d = svc.cols();
+    let spec = spec(k);
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let (a, x) = data(k, d, 8);
+    let cfg = fast_cfg();
+    let rx = run_job(&spec, &alloc, &a, &x, svc, &cfg).unwrap();
+    let rn = run_job(&spec, &alloc, &a, &x, Arc::new(NativeCompute), &cfg).unwrap();
+    // Same seed => same straggle pattern => same decode support; results
+    // agree to f32 tolerance.
+    let err = rx
+        .decoded
+        .iter()
+        .zip(&rn.decoded)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(err < 1e-2, "backend disagreement {err}");
+}
+
+#[test]
+fn xla_batched_job_end_to_end() {
+    // Full batched path: one worker dispatch serves 4 requests through the
+    // AOT batched matvec artifact; every request decodes correctly.
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = Arc::new(XlaService::new("artifacts".into()).unwrap());
+    let k = 256;
+    let d = svc.cols();
+    let spec = spec(k);
+    let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+    let mut rng = Rng::new(12);
+    let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+    let requests: Vec<Vec<f64>> =
+        (0..4).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+    let reports = hetcoded::coordinator::run_job_batched(
+        &spec,
+        &alloc,
+        &a,
+        &requests,
+        svc,
+        &fast_cfg(),
+    )
+    .unwrap();
+    assert_eq!(reports.len(), 4);
+    for (i, r) in reports.iter().enumerate() {
+        assert!(r.max_error < 1e-2, "request {i}: err {}", r.max_error);
+        assert_eq!(r.backend, "xla-pjrt");
+    }
+}

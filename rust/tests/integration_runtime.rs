@@ -1,0 +1,172 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! loud message) when the artifacts directory is missing so `cargo test`
+//! stays usable in a fresh checkout.
+
+use hetcoded::coding::Matrix;
+use hetcoded::math::Rng;
+use hetcoded::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("load artifacts");
+    assert!(!rt.tile_rows().is_empty());
+    assert_eq!(rt.cols(), 256);
+    assert!(rt.max_tile_rows() >= 256);
+    assert!(rt.encode_shape().is_some());
+}
+
+#[test]
+fn matvec_exact_tile_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let d = rt.cols();
+    let mut rng = Rng::new(1);
+    for &rows in &rt.tile_rows() {
+        let a = Matrix::from_fn(rows, d, |_, _| rng.normal());
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let got = rt.matvec(&a, &x).unwrap();
+        let want = a.matvec(&x);
+        let err = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0f64, f64::max);
+        // f32 artifact path vs f64 native: tolerance scales with d.
+        assert!(err < 5e-3, "tile {rows}: err {err}");
+    }
+}
+
+#[test]
+fn matvec_pads_odd_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let d = rt.cols();
+    let mut rng = Rng::new(2);
+    for rows in [1usize, 7, 63, 65, 100, 129, 255, 300] {
+        let a = Matrix::from_fn(rows, d, |_, _| rng.normal());
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let got = rt.matvec(&a, &x).unwrap();
+        assert_eq!(got.len(), rows, "rows={rows}");
+        let want = a.matvec(&x);
+        let err = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 5e-3, "rows {rows}: err {err}");
+    }
+}
+
+#[test]
+fn matvec_chunks_beyond_largest_tile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let d = rt.cols();
+    let rows = rt.max_tile_rows() * 2 + 37;
+    let mut rng = Rng::new(3);
+    let a = Matrix::from_fn(rows, d, |_, _| rng.normal());
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let got = rt.matvec(&a, &x).unwrap();
+    assert_eq!(got.len(), rows);
+    let want = a.matvec(&x);
+    let err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f64, f64::max);
+    assert!(err < 5e-3, "err {err}");
+}
+
+#[test]
+fn matvec_rejects_wrong_width() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let a = Matrix::zeros(64, rt.cols() + 1);
+    let x = vec![0.0; rt.cols() + 1];
+    assert!(rt.matvec(&a, &x).is_err());
+    let a2 = Matrix::zeros(64, rt.cols());
+    let x2 = vec![0.0; rt.cols() - 1];
+    assert!(rt.matvec(&a2, &x2).is_err());
+}
+
+#[test]
+fn encode_matches_native_matmul() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (n, k, d) = rt.encode_shape().unwrap();
+    let mut rng = Rng::new(4);
+    let g = Matrix::from_fn(n, k, |_, _| rng.normal() / (k as f64).sqrt());
+    let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+    let got = rt.encode(&g, &a).unwrap();
+    let want = g.matmul(&a);
+    let mut err = 0.0f64;
+    for i in 0..n {
+        for j in 0..d {
+            err = err.max((got[(i, j)] - want[(i, j)]).abs());
+        }
+    }
+    assert!(err < 5e-3, "encode err {err}");
+}
+
+#[test]
+fn encode_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (n, k, d) = rt.encode_shape().unwrap();
+    let g = Matrix::zeros(n - 1, k);
+    let a = Matrix::zeros(k, d);
+    assert!(rt.encode(&g, &a).is_err());
+}
+
+#[test]
+fn batched_matvec_matches_per_vector_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let Some(bw) = rt.batch_width() else {
+        panic!("batched artifacts missing from manifest");
+    };
+    let d = rt.cols();
+    let mut rng = Rng::new(9);
+    let rows = 100; // forces padding
+    let a = Matrix::from_fn(rows, d, |_, _| rng.normal());
+    let xs: Vec<Vec<f64>> = (0..bw.min(5))
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    let batched = rt.matvec_batched(&a, &xs).unwrap();
+    assert_eq!(batched.len(), xs.len());
+    for (b, x) in xs.iter().enumerate() {
+        let single = rt.matvec(&a, x).unwrap();
+        assert_eq!(batched[b].len(), rows);
+        let err = batched[b]
+            .iter()
+            .zip(&single)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-4, "request {b}: batched vs single err {err}");
+    }
+}
+
+#[test]
+fn batched_matvec_rejects_oversized_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let bw = rt.batch_width().unwrap();
+    let a = Matrix::zeros(64, rt.cols());
+    let xs: Vec<Vec<f64>> = (0..bw + 1).map(|_| vec![0.0; rt.cols()]).collect();
+    assert!(rt.matvec_batched(&a, &xs).is_err());
+    assert!(rt.matvec_batched(&a, &[]).is_err());
+}

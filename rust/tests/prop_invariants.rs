@@ -1,0 +1,187 @@
+//! Property-based tests over the paper's invariants, driven by the in-repo
+//! property harness (`hetcoded::proptest`) on randomly generated clusters.
+
+use hetcoded::allocation::{
+    group_code_allocation, proposed_allocation, reisizadeh_allocation,
+    uniform_allocation,
+};
+use hetcoded::coding::{decoder::roundtrip_check, Generator, GeneratorKind, Matrix};
+use hetcoded::model::{order_stats, LatencyModel};
+use hetcoded::proptest::{gen, property, DEFAULT_CASES};
+
+#[test]
+fn prop_mds_recovery_constraint_eq5() {
+    // Σ_j r*_j l*_j = k for every random cluster.
+    property("eq5", DEFAULT_CASES, |rng| {
+        let spec = gen::cluster(rng, 6, 500, 10_000);
+        let a = proposed_allocation(LatencyModel::A, &spec)
+            .map_err(|e| format!("{e}"))?;
+        let sum: f64 = a.r.iter().zip(&a.loads).map(|(r, l)| r * l).sum();
+        let k = spec.k as f64;
+        if (sum - k).abs() > 1e-6 * k {
+            return Err(format!("sum r*l = {sum}, k = {k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_latencies_equalized_theorem_1() {
+    property("theorem1", DEFAULT_CASES, |rng| {
+        let spec = gen::cluster(rng, 5, 300, 5_000);
+        let a = proposed_allocation(LatencyModel::A, &spec)
+            .map_err(|e| format!("{e}"))?;
+        let t = a.latency_bound.unwrap();
+        for (j, g) in spec.groups.iter().enumerate() {
+            let lam = order_stats::group_latency(
+                LatencyModel::A,
+                a.loads[j],
+                spec.k as f64,
+                g.n as f64,
+                a.r[j],
+                g.mu,
+                g.alpha,
+            );
+            if (lam - t).abs() > 1e-8 * t {
+                return Err(format!("group {j}: λ = {lam} vs T* = {t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r_star_strictly_interior() {
+    property("r interior", DEFAULT_CASES, |rng| {
+        let spec = gen::cluster(rng, 6, 400, 2_000);
+        let a = proposed_allocation(LatencyModel::A, &spec)
+            .map_err(|e| format!("{e}"))?;
+        for (r, g) in a.r.iter().zip(&spec.groups) {
+            if !(*r > 0.0 && *r < g.n as f64) {
+                return Err(format!("r = {r} outside (0, {})", g.n));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_proposed_bound_below_uniform_bounds() {
+    // T* is a lower bound: no uniform allocation can have an analytic
+    // per-group latency below it at the same operating point. We check the
+    // weaker (but simulation-free) statement that the proposed n* produces
+    // positive finite loads and a positive bound.
+    property("bound sane", DEFAULT_CASES, |rng| {
+        let spec = gen::cluster(rng, 4, 300, 5_000);
+        let a = proposed_allocation(LatencyModel::A, &spec)
+            .map_err(|e| format!("{e}"))?;
+        let t = a.latency_bound.unwrap();
+        if !(t > 0.0 && t.is_finite()) {
+            return Err(format!("bad bound {t}"));
+        }
+        if a.n < spec.k as f64 {
+            return Err(format!("n = {} < k", a.n));
+        }
+        a.validate(&spec).map_err(|e| format!("{e}"))
+    });
+}
+
+#[test]
+fn prop_reisizadeh_equals_proposed() {
+    // Structural identity (Appendix D vs Theorem 2) on random clusters.
+    property("rz == proposed", DEFAULT_CASES, |rng| {
+        let spec = gen::cluster(rng, 5, 300, 50_000);
+        let a = proposed_allocation(LatencyModel::B, &spec)
+            .map_err(|e| format!("{e}"))?;
+        let z = reisizadeh_allocation(LatencyModel::B, &spec)
+            .map_err(|e| format!("{e}"))?;
+        for (x, y) in a.loads.iter().zip(&z.loads) {
+            if (x - y).abs() > 1e-8 * x.max(1e-300) {
+                return Err(format!("loads differ: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_code_consistent_when_alpha_equal() {
+    property("group code eq29", 64, |rng| {
+        let spec = gen::cluster_equal_alpha(rng, 4, 200, 5_000);
+        let total = spec.total_workers() as f64;
+        let r = 1.0 + rng.next_f64() * (total * 0.8 - 1.0);
+        match group_code_allocation(LatencyModel::A, &spec, r) {
+            Ok(a) => {
+                let sum: f64 = a.r.iter().sum();
+                if (sum - r).abs() > 1e-3 * r {
+                    return Err(format!("Σ r_j = {sum} vs r = {r}"));
+                }
+                // Equalization (28) across all group pairs.
+                let c0 = (spec.groups[0].n as f64
+                    / (spec.groups[0].n as f64 - a.r[0]))
+                    .ln()
+                    / spec.groups[0].mu;
+                for (j, g) in spec.groups.iter().enumerate().skip(1) {
+                    let c = (g.n as f64 / (g.n as f64 - a.r[j])).ln() / g.mu;
+                    if (c - c0).abs() > 1e-6 * c0.max(1e-12) {
+                        return Err(format!("equalization broken at group {j}"));
+                    }
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()), // infeasible r is acceptable
+        }
+    });
+}
+
+#[test]
+fn prop_uniform_rejects_infeasible_rate() {
+    property("uniform domain", 64, |rng| {
+        let spec = gen::cluster(rng, 3, 100, 1_000);
+        // n < k must be rejected.
+        let n_bad = spec.k as f64 * (0.2 + 0.7 * rng.next_f64());
+        if uniform_allocation(LatencyModel::A, &spec, n_bad).is_ok() {
+            return Err(format!("accepted n = {n_bad} < k"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_roundtrip_random_erasures() {
+    // MDS decode recovers A·x from ANY k received rows (random construction).
+    property("decode roundtrip", 48, |rng| {
+        let k = 4 + rng.gen_range(12) as usize;
+        let n = k + 1 + rng.gen_range(16) as usize;
+        let d = 2 + rng.gen_range(6) as usize;
+        let gen_mat = Generator::new(GeneratorKind::SystematicRandom, n, k, rng.next_u64())
+            .map_err(|e| format!("{e}"))?;
+        let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut rows: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut rows);
+        let take = k + rng.gen_range((n - k) as u64 + 1) as usize;
+        let err = roundtrip_check(&gen_mat, &a, &x, &rows[..take])
+            .map_err(|e| format!("{e}"))?;
+        if err > 1e-6 {
+            return Err(format!("decode error {err} (k={k} n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scaling_identity_t_star() {
+    // T*(c·N) = T*(N)/c for integer-preserving scalings.
+    property("t* scaling", 64, |rng| {
+        let spec = gen::cluster(rng, 4, 200, 2_000);
+        let t1 = hetcoded::allocation::optimal_latency_bound(LatencyModel::A, &spec);
+        let c = 1 + rng.gen_range(4) as usize; // integer factor keeps N_j exact
+        let spec2 = spec.scaled_workers(c as f64);
+        let t2 = hetcoded::allocation::optimal_latency_bound(LatencyModel::A, &spec2);
+        if ((t1 / t2) / c as f64 - 1.0).abs() > 1e-9 {
+            return Err(format!("T* ratio {} != {c}", t1 / t2));
+        }
+        Ok(())
+    });
+}
