@@ -1,0 +1,29 @@
+# Convenience targets. `cargo build --release && cargo test -q` is the
+# tier-1 verification; everything XLA/PJRT additionally needs `make
+# artifacts` (Python + JAX) and a build with `--features xla`.
+
+.PHONY: build test artifacts figures bench lint doc
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Lower the L1 Pallas kernels / L2 JAX model to HLO-text AOT artifacts
+# consumed by the PJRT runtime (writes artifacts/manifest.txt).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+figures:
+	cargo run --release -- figures --all --out results
+
+bench:
+	cargo bench
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+
+doc:
+	RUSTDOCFLAGS="-D rustdoc::broken_intra_doc_links" cargo doc --no-deps

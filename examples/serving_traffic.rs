@@ -1,0 +1,120 @@
+//! Serving traffic: how allocation policy shapes throughput under load.
+//!
+//! The paper's Theorem 2 minimizes a *single* job's expected latency. This
+//! example shows what that buys a serving system: sweep the arrival rate
+//! on the paper's two-group cluster (Fig. 8) and watch each policy's
+//! sojourn-time tail — the better allocation sustains a higher rate before
+//! its queue blows up, because the single-job latency `E[S]` is the
+//! service-side bottleneck `1/E[S]` on throughput.
+//!
+//! Ends with a small *live* run: a Poisson trace replayed against real
+//! worker threads with batched dispatch ([`serve_arrivals`]).
+//!
+//! ```sh
+//! cargo run --release --example serving_traffic
+//! ```
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{serve_arrivals, JobConfig, NativeCompute};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::sim::Scheme;
+use hetcoded::workload::{
+    mean_service, run_workload, service_sampler, ArrivalProcess, WorkloadConfig,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> hetcoded::Result<()> {
+    let spec = ClusterSpec::paper_two_group(10_000);
+    let model = LatencyModel::A;
+    println!(
+        "cluster: {} workers in {} groups, k = {}\n",
+        spec.total_workers(),
+        spec.num_groups(),
+        spec.k
+    );
+
+    // Calibrate the rate axis on the *proposed* policy's saturation point
+    // 1/E[S*], then offer the same absolute rates to every policy.
+    let (_, mut cal) = service_sampler(&spec, Scheme::Proposed, model)?;
+    let es_star = mean_service(&mut cal, 4_000, 1);
+    println!("proposed E[S] = {es_star:.4e}  (saturation at {:.3} jobs/unit time)", 1.0 / es_star);
+
+    let policies = [
+        ("proposed", Scheme::Proposed),
+        ("uniform-n*", Scheme::UniformWithOptimalN),
+        ("group-code r=100", Scheme::GroupCode(100.0)),
+    ];
+    println!(
+        "\n{:<18} {:>8} {:>9} {:>6} {:>10} {:>10} {:>7}",
+        "policy", "rate", "thruput", "util", "p50", "p99", "maxQ"
+    );
+    for frac in [0.2, 0.5, 0.8, 0.95] {
+        let rate = frac / es_star;
+        for (name, scheme) in policies {
+            let cfg = WorkloadConfig {
+                arrivals: ArrivalProcess::Poisson { rate },
+                jobs: 3_000,
+                servers: 1,
+                seed: 2019,
+            };
+            match run_workload(&spec, scheme, model, &cfg) {
+                Ok(r) => println!(
+                    "{:<18} {:>8.3} {:>9.3} {:>6.3} {:>10.4e} {:>10.4e} {:>7}",
+                    name,
+                    rate,
+                    r.throughput,
+                    r.utilization,
+                    r.sojourn_percentile(50.0),
+                    r.sojourn_percentile(99.0),
+                    r.max_in_system,
+                ),
+                Err(e) => println!("{name:<18} {rate:>8.3}  error: {e}"),
+            }
+        }
+        println!();
+    }
+
+    // Live replay: 12 requests, Poisson arrivals, batched dispatch over
+    // real worker threads (native backend; build with `--features xla` and
+    // run `make artifacts` for the PJRT path).
+    println!("live batched serving (native backend, 10 workers, k = 64):");
+    let live_spec = ClusterSpec::new(
+        vec![
+            hetcoded::model::Group { n: 4, mu: 8.0, alpha: 1.0 },
+            hetcoded::model::Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )?;
+    let alloc = uniform_allocation(model, &live_spec, 128.0)?;
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_fn(64, 16, |_, _| rng.normal());
+    let requests: Vec<Vec<f64>> =
+        (0..12).map(|_| (0..16).map(|_| rng.normal()).collect()).collect();
+    let mut arrival_rng = Rng::new(43);
+    let offsets: Vec<Duration> = ArrivalProcess::Poisson { rate: 100.0 }
+        .times(12, &mut arrival_rng)?
+        .into_iter()
+        .map(Duration::from_secs_f64)
+        .collect();
+    let cfg = JobConfig { time_scale: 0.005, ..Default::default() };
+    let report = serve_arrivals(
+        &live_spec,
+        &alloc,
+        &a,
+        &requests,
+        &offsets,
+        4,
+        Arc::new(NativeCompute),
+        &cfg,
+    )?;
+    println!("{}", report.recorder.report());
+    println!(
+        "makespan {:.1} ms, worst decode error {:.2e}",
+        report.makespan.unwrap().as_secs_f64() * 1e3,
+        report.worst_error
+    );
+    Ok(())
+}

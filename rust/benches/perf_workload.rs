@@ -1,0 +1,83 @@
+//! Benchmarks over the workload layer's hot paths:
+//!
+//! - arrival-trace generation (Poisson and bursty ON/OFF);
+//! - single-job service sampling (the Rényi any-`k` merge, per draw);
+//! - a full throughput-under-load run (arrivals → FIFO queue → metrics)
+//!   at serving scale for the two headline policies.
+
+use hetcoded::bench::{black_box, run, run_quick, section};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::sim::Scheme;
+use hetcoded::workload::{
+    run_workload, service_sampler, ArrivalProcess, WorkloadConfig,
+};
+
+fn main() {
+    section("arrival generation (10k jobs per call)");
+    run("poisson", || {
+        let mut rng = Rng::new(7);
+        let ts = ArrivalProcess::Poisson { rate: 5.0 }
+            .times(10_000, &mut rng)
+            .unwrap();
+        black_box(ts.len());
+    });
+    run("onoff (bursty)", || {
+        let mut rng = Rng::new(7);
+        let ts = ArrivalProcess::OnOff {
+            rate_on: 10.0,
+            mean_on: 2.0,
+            mean_off: 2.0,
+        }
+        .times(10_000, &mut rng)
+        .unwrap();
+        black_box(ts.len());
+    });
+
+    let spec = ClusterSpec::paper_two_group(10_000);
+
+    section("service sampling (1k draws per call, 2-group N=900 cluster)");
+    for (name, scheme) in [
+        ("proposed", Scheme::Proposed),
+        ("uniform-n*", Scheme::UniformWithOptimalN),
+        ("group-code r=100", Scheme::GroupCode(100.0)),
+    ] {
+        let sampler = match service_sampler(&spec, scheme, LatencyModel::A) {
+            Ok((_, s)) => s,
+            Err(e) => {
+                println!("  {name}: skipped ({e})");
+                continue;
+            }
+        };
+        run(name, || {
+            let mut s = sampler.clone();
+            let mut rng = Rng::new(13);
+            let mut acc = 0.0;
+            for _ in 0..1_000 {
+                acc += s.sample(&mut rng);
+            }
+            black_box(acc);
+        });
+    }
+
+    section("full workload run (2k jobs, rho ~ 0.8)");
+    for (name, scheme) in [
+        ("proposed", Scheme::Proposed),
+        ("uniform-n*", Scheme::UniformWithOptimalN),
+    ] {
+        let (_, mut sampler) =
+            service_sampler(&spec, scheme, LatencyModel::A).unwrap();
+        let es = hetcoded::workload::mean_service(&mut sampler, 1_000, 3);
+        let cfg = WorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate: 0.8 / es },
+            jobs: 2_000,
+            servers: 1,
+            seed: 2019,
+        };
+        run_quick(&format!("workload {name}"), || {
+            let rep =
+                run_workload(&spec, scheme, LatencyModel::A, &cfg).unwrap();
+            black_box(rep.throughput);
+        });
+    }
+}

@@ -2,7 +2,7 @@
 //! `criterion`).
 //!
 //! Benches live in `rust/benches/*.rs` with `harness = false` and call
-//! [`run`] / [`run_with_args`]; `cargo bench` drives them. The harness
+//! [`run`] / [`run_with_target`]; `cargo bench` drives them. The harness
 //! auto-calibrates the iteration count to a target measurement window and
 //! reports min / median / p95 wall time plus derived throughput.
 

@@ -84,6 +84,30 @@ impl Args {
     pub fn switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
+
+    /// Comma-separated typed list flag with default, e.g.
+    /// `--rho 0.3,0.6,0.9` or `--policies proposed,uniform-nstar`.
+    /// Empty segments are skipped, so trailing commas are harmless.
+    pub fn get_list<T>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: std::str::FromStr + Clone,
+    {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>().map_err(|_| {
+                        Error::InvalidSpec(format!(
+                            "flag --{key}: cannot parse `{s}`"
+                        ))
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +147,20 @@ mod tests {
         let a = Args::parse(toks("x --n abc")).unwrap();
         assert!(a.get::<u32>("n", 0).is_err());
         assert!(Args::parse(toks("x --")).is_err());
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = Args::parse(toks("w --rho 0.3,0.6,0.9 --policies proposed,uniform-nstar,")).unwrap();
+        assert_eq!(a.get_list::<f64>("rho", &[]).unwrap(), vec![0.3, 0.6, 0.9]);
+        assert_eq!(
+            a.get_list::<String>("policies", &[]).unwrap(),
+            vec!["proposed".to_string(), "uniform-nstar".to_string()]
+        );
+        // Default when absent; parse error surfaces.
+        assert_eq!(a.get_list::<u32>("missing", &[7, 8]).unwrap(), vec![7, 8]);
+        let b = Args::parse(toks("w --rho 0.3,x")).unwrap();
+        assert!(b.get_list::<f64>("rho", &[]).is_err());
     }
 
     #[test]

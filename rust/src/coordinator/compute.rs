@@ -2,14 +2,17 @@
 //!
 //! Workers either compute natively (pure-Rust matvec — useful for tests and
 //! for clusters larger than the PJRT service can serve efficiently) or
-//! through [`XlaService`], a dedicated thread owning the PJRT [`Runtime`]
-//! that serves matvec requests over a channel. PJRT wrapper handles are not
-//! `Sync`, so the service thread is the ownership boundary; worker threads
-//! hold only a cloneable submission handle.
+//! through `XlaService` (requires the `xla` cargo feature), a dedicated
+//! thread owning the PJRT `Runtime` that serves matvec requests over a
+//! channel. PJRT wrapper handles are not `Sync`, so the service thread is
+//! the ownership boundary; worker threads hold only a cloneable submission
+//! handle.
 
 use crate::coding::Matrix;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 use crate::{Error, Result};
+#[cfg(feature = "xla")]
 use std::sync::mpsc;
 
 /// A compute backend workers call to evaluate `rows · x`.
@@ -49,6 +52,7 @@ impl Compute for NativeCompute {
     }
 }
 
+#[cfg(feature = "xla")]
 enum Request {
     Matvec {
         rows: Matrix,
@@ -76,12 +80,14 @@ enum Request {
 /// with realistic straggle injection the queueing delay is negligible
 /// relative to the injected delays, and the numerics are exactly the AOT
 /// artifact's.
+#[cfg(feature = "xla")]
 pub struct XlaService {
     tx: mpsc::Sender<Request>,
     handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
     cols: usize,
 }
 
+#[cfg(feature = "xla")]
 impl XlaService {
     /// Spawn the service thread, loading artifacts from `dir` in-thread.
     /// Fails fast if the artifacts cannot be loaded/compiled.
@@ -157,6 +163,7 @@ impl XlaService {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Compute for XlaService {
     fn matvec(&self, rows: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -191,6 +198,7 @@ impl Compute for XlaService {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Drop for XlaService {
     fn drop(&mut self) {
         let _ = self.tx.send(Request::Shutdown);

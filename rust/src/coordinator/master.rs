@@ -189,7 +189,8 @@ pub struct ServeReport {
     pub worst_error: f64,
     /// Per-request reports.
     pub jobs: Vec<JobReport>,
-    /// Wall time for the whole batch (pipelined serving only).
+    /// Wall time for the whole batch (set by the pipelined and
+    /// arrival-replay serving modes; `None` for the sequential loop).
     pub makespan: Option<Duration>,
 }
 
@@ -359,6 +360,103 @@ pub fn serve_requests_pipelined(
     let mut out = ServeReport { recorder, worst_error: worst, jobs, makespan: None };
     out.makespan = Some(start.elapsed());
     Ok(out)
+}
+
+/// Serve a *stream* of requests arriving at `arrival_offsets` (wall-clock
+/// offsets from the serving start, ascending) through the batched live
+/// path: the master sleeps until the head-of-line request has arrived,
+/// drains everything queued behind it up to `max_batch` requests, and
+/// dispatches the whole batch as **one** coded job via [`run_job_batched`]
+/// — each worker evaluates its chunk against all queued vectors in a
+/// single backend call (the MXU-shaped `MatvecBatched` artifacts on the
+/// XLA backend, a loop on the native backend).
+///
+/// This is the live counterpart of the workload layer's queueing
+/// simulation ([`crate::workload`]): under light traffic batches have size
+/// 1 and the system behaves like [`serve_requests`]; as the arrival rate
+/// climbs, queued requests amortize the straggle penalty and per-request
+/// throughput rises. The recorder tracks each request's *sojourn* (arrival
+/// → decoded), not just its batch's service time.
+///
+/// Like [`serve_requests`], each batch derives a fresh seed, so the code
+/// and encoded chunks are rebuilt per batch — fine at demo sizes
+/// (`k` ≲ 10³); hoist the encode out of [`run_job_batched`] before
+/// serving large matrices at high rates.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_arrivals(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    arrival_offsets: &[Duration],
+    max_batch: usize,
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<ServeReport> {
+    if requests.len() != arrival_offsets.len() {
+        return Err(Error::InvalidSpec(format!(
+            "{} requests but {} arrival offsets",
+            requests.len(),
+            arrival_offsets.len()
+        )));
+    }
+    if max_batch == 0 {
+        return Err(Error::InvalidSpec("max_batch must be positive".into()));
+    }
+    if arrival_offsets.windows(2).any(|w| w[1] < w[0]) {
+        return Err(Error::InvalidSpec(
+            "arrival offsets must be ascending".into(),
+        ));
+    }
+    let start = Instant::now();
+    let mut recorder = LatencyRecorder::new();
+    let mut jobs = Vec::with_capacity(requests.len());
+    let mut worst = 0.0f64;
+    let mut next = 0usize;
+    let mut batch_idx = 0u64;
+    while next < requests.len() {
+        // Block until the head-of-line request has arrived.
+        let now = start.elapsed();
+        if arrival_offsets[next] > now {
+            std::thread::sleep(arrival_offsets[next] - now);
+        }
+        // Drain everything already queued, bounded by the batch width.
+        let now = start.elapsed();
+        let mut end = next + 1;
+        while end < requests.len()
+            && end - next < max_batch
+            && arrival_offsets[end] <= now
+        {
+            end += 1;
+        }
+        let mut jcfg = cfg.clone();
+        jcfg.seed = cfg
+            .seed
+            .wrapping_add(0x9E37_79B9u64.wrapping_mul(batch_idx + 1));
+        let reports = run_job_batched(
+            spec,
+            alloc,
+            a,
+            &requests[next..end],
+            Arc::clone(&compute),
+            &jcfg,
+        )?;
+        let done = start.elapsed();
+        for (i, report) in reports.into_iter().enumerate() {
+            let sojourn = done.saturating_sub(arrival_offsets[next + i]);
+            recorder.record(sojourn, report.decoded.len());
+            worst = worst.max(report.max_error);
+            jobs.push(report);
+        }
+        next = end;
+        batch_idx += 1;
+    }
+    Ok(ServeReport {
+        recorder,
+        worst_error: worst,
+        jobs,
+        makespan: Some(start.elapsed()),
+    })
 }
 
 /// Serve `requests` input vectors sequentially over the same cluster and
@@ -557,6 +655,88 @@ mod tests {
             "pipelined {makespan:?} !< sequential {seq_makespan:?} / 2"
         );
         let _ = seq;
+    }
+
+    #[test]
+    fn serve_arrivals_batches_queued_requests() {
+        let spec = small_spec();
+        // Redundant rate-1/2 code so batching has room to decode.
+        let alloc =
+            crate::allocation::uniform_allocation(LatencyModel::A, &spec, 128.0)
+                .unwrap();
+        let (a, _) = data(64, 8, 52);
+        let mut rng = Rng::new(53);
+        let requests: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        // Two back-to-back bursts: requests 0-2 arrive immediately, 3-5
+        // shortly after; each burst should drain as at most two batches of
+        // the configured width.
+        let offsets: Vec<Duration> = [0u64, 0, 0, 30, 30, 30]
+            .iter()
+            .map(|&ms| Duration::from_millis(ms))
+            .collect();
+        let report = serve_arrivals(
+            &spec,
+            &alloc,
+            &a,
+            &requests,
+            &offsets,
+            4,
+            Arc::new(NativeCompute),
+            &fast_cfg(),
+        )
+        .unwrap();
+        assert_eq!(report.recorder.count(), 6);
+        assert_eq!(report.jobs.len(), 6);
+        assert!(report.worst_error < 1e-8, "err {}", report.worst_error);
+        assert!(report.makespan.is_some());
+        // Sojourn percentiles are well-formed.
+        assert!(
+            report.recorder.percentile(95.0) >= report.recorder.percentile(50.0)
+        );
+    }
+
+    #[test]
+    fn serve_arrivals_validates_inputs() {
+        let spec = small_spec();
+        let alloc = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        let (a, x) = data(64, 8, 54);
+        let reqs = vec![x.clone(), x];
+        let ok = vec![Duration::ZERO, Duration::from_millis(1)];
+        assert!(serve_arrivals(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &ok[..1],
+            4,
+            Arc::new(NativeCompute),
+            &fast_cfg()
+        )
+        .is_err());
+        assert!(serve_arrivals(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &ok,
+            0,
+            Arc::new(NativeCompute),
+            &fast_cfg()
+        )
+        .is_err());
+        let unsorted = vec![Duration::from_millis(5), Duration::ZERO];
+        assert!(serve_arrivals(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &unsorted,
+            4,
+            Arc::new(NativeCompute),
+            &fast_cfg()
+        )
+        .is_err());
     }
 
     #[test]

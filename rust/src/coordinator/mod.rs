@@ -18,10 +18,12 @@ pub mod master;
 pub mod metrics;
 pub mod straggler;
 
-pub use compute::{Compute, NativeCompute, XlaService};
+pub use compute::{Compute, NativeCompute};
+#[cfg(feature = "xla")]
+pub use compute::XlaService;
 pub use master::{
-    run_job, run_job_batched, serve_requests, serve_requests_pipelined,
-    JobConfig, JobReport, ServeReport,
+    run_job, run_job_batched, serve_arrivals, serve_requests,
+    serve_requests_pipelined, JobConfig, JobReport, ServeReport,
 };
 pub use metrics::LatencyRecorder;
 pub use straggler::StragglerInjector;

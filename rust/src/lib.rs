@@ -16,11 +16,19 @@
 //! - a real-valued systematic **MDS coding layer** (Vandermonde generator,
 //!   encoder, any-k decoder) with its own dense linear algebra ([`coding`]);
 //! - a **Monte-Carlo cluster simulator** reproducing Figs. 4–9 ([`sim`]);
+//! - a **workload layer** modelling sustained job traffic — arrival
+//!   processes, FIFO queueing, and throughput/utilization/sojourn metrics
+//!   on top of the single-job latency law ([`workload`]);
 //! - a **live master/worker coordinator** that executes AOT-compiled XLA
 //!   artifacts via PJRT with injected straggle delays ([`coordinator`],
 //!   [`runtime`]);
 //! - the **figure harness** regenerating every plot in the paper
 //!   ([`figures`]).
+//!
+//! The PJRT/XLA execution path is gated behind the `xla` cargo feature
+//! (off by default) so the analytical and simulation layers build and test
+//! without the native `xla_extension` library; the `NativeCompute` backend
+//! always works.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -37,6 +45,7 @@ pub mod model;
 pub mod proptest;
 pub mod runtime;
 pub mod sim;
+pub mod workload;
 
 /// Crate-wide error type.
 #[derive(Debug, thiserror::Error)]
@@ -67,6 +76,7 @@ pub enum Error {
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))

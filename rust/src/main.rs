@@ -4,6 +4,7 @@
 //!
 //! - `allocate` — print the allocation every policy produces for a cluster;
 //! - `simulate` — Monte-Carlo latency of one scheme on a cluster;
+//! - `workload` — throughput/utilization/sojourn under sustained traffic;
 //! - `figures`  — regenerate paper figures (CSV + ASCII);
 //! - `run`      — live coded matvec over the coordinator (native or PJRT);
 //! - `help`     — this text.
@@ -14,14 +15,15 @@ use hetcoded::allocation::{
 };
 use hetcoded::cli::Args;
 use hetcoded::coding::Matrix;
-use hetcoded::coordinator::{
-    serve_requests, JobConfig, NativeCompute, XlaService,
-};
+use hetcoded::coordinator::{serve_requests, Compute, JobConfig, NativeCompute};
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, LatencyModel};
 
 use hetcoded::sim::{simulate_scheme, Scheme, SimConfig};
+use hetcoded::workload::{
+    mean_service, run_workload, service_sampler, ArrivalProcess, WorkloadConfig,
+};
 use hetcoded::{Error, Result};
 use std::sync::Arc;
 
@@ -47,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("allocate") => cmd_allocate(args),
         Some("simulate") => cmd_simulate(args),
+        Some("workload") => cmd_workload(args),
         Some("figures") => cmd_figures(args),
         Some("run") => cmd_run(args),
         Some("help") | None => {
@@ -73,6 +76,17 @@ SUBCOMMANDS
             Monte-Carlo expected latency of one scheme.
             Schemes: proposed, uncoded, uniform-nstar, uniform-rate,
                      group-code, reisizadeh.
+  workload  [--config <toml> | --paper <...>] [--policies p1,p2,...]
+            [--rho 0.3,0.6,0.9 | --rates L1,L2,...] [--arrivals poisson|
+            deterministic|onoff] [--jobs J] [--servers C] [--seed S]
+            [--model a|b] [--burst-on T --burst-off T] [--k K] [--q Q]
+            [--calib-samples N]
+            Event-driven queueing simulation: throughput, utilization and
+            sojourn percentiles per policy at each arrival rate. Default
+            cluster: the paper's 2-group Fig. 8 cluster. --rho gives
+            offered load as a fraction of each policy's saturation rate
+            1/E[S] (estimated from --calib-samples draws, default 2000);
+            --rates gives absolute arrival rates.
   figures   [--fig N | --all] [--samples S] [--points P] [--seed S]
             [--out DIR] [--quick]
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
@@ -174,8 +188,10 @@ fn cmd_allocate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_scheme(args: &Args) -> Result<Scheme> {
-    match args.flag("scheme").unwrap_or("proposed") {
+/// Resolve a scheme by name; `--rate` / `--group-r` flags parameterize the
+/// uniform-rate and group-code schemes.
+fn parse_scheme_named(name: &str, args: &Args) -> Result<Scheme> {
+    match name {
         "proposed" => Ok(Scheme::Proposed),
         "uncoded" => Ok(Scheme::Uncoded),
         "uniform-nstar" => Ok(Scheme::UniformWithOptimalN),
@@ -184,6 +200,10 @@ fn parse_scheme(args: &Args) -> Result<Scheme> {
         "reisizadeh" => Ok(Scheme::Reisizadeh),
         other => Err(Error::InvalidSpec(format!("unknown scheme `{other}`"))),
     }
+}
+
+fn parse_scheme(args: &Args) -> Result<Scheme> {
+    parse_scheme_named(args.flag("scheme").unwrap_or("proposed"), args)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -212,6 +232,112 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             b,
             100.0 * (r.mean - b) / b
         );
+    }
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    // Default cluster: the paper's two-group Fig. 8 cluster — the smallest
+    // genuinely heterogeneous benchmark in the evaluation.
+    let spec = if args.flag("config").is_none() && args.flag("paper").is_none() {
+        let k = args.get::<usize>("k", 10_000)?;
+        let q = args.get::<f64>("q", 1.0)?;
+        ClusterSpec::paper_two_group(k).scaled_mu(q)
+    } else {
+        load_spec(args)?
+    };
+    let jobs = args.get::<usize>("jobs", 2_000)?;
+    let servers = args.get::<usize>("servers", 1)?;
+    let seed = args.get::<u64>("seed", 2019)?;
+    let calib = args.get::<usize>("calib-samples", 2_000)?;
+    let policies = args.get_list::<String>(
+        "policies",
+        &["proposed".to_string(), "uniform-nstar".to_string()],
+    )?;
+    if policies.is_empty() {
+        return Err(Error::InvalidSpec("--policies list is empty".into()));
+    }
+    let rhos = args.get_list::<f64>("rho", &[0.3, 0.6, 0.9])?;
+    let abs_rates = match args.flag("rates") {
+        Some(_) => Some(args.get_list::<f64>("rates", &[])?),
+        None => None,
+    };
+    if abs_rates.as_ref().map_or(rhos.is_empty(), Vec::is_empty) {
+        return Err(Error::InvalidSpec("--rho/--rates list is empty".into()));
+    }
+    let arrival_kind = args.flag("arrivals").unwrap_or("poisson").to_string();
+
+    // Calibrate each policy's mean service time once; E[S] converts
+    // offered-load fractions into absolute rates and sizes burst windows.
+    let mut calibrated: Vec<(Scheme, f64)> = Vec::with_capacity(policies.len());
+    for pname in &policies {
+        let scheme = parse_scheme_named(pname, args)?;
+        let (_, mut sampler) = service_sampler(&spec, scheme, model)?;
+        calibrated.push((scheme, mean_service(&mut sampler, calib, seed ^ 0xCA11B)));
+    }
+    // ON/OFF burst windows must be identical across policies for the table
+    // to be a fair same-traffic comparison, so the default (~20 service
+    // times) derives from the first policy only.
+    let (burst_on, burst_off) = {
+        let es_ref = calibrated[0].1;
+        (
+            args.get::<f64>("burst-on", 20.0 * es_ref)?,
+            args.get::<f64>("burst-off", 20.0 * es_ref)?,
+        )
+    };
+
+    println!(
+        "cluster: G={} N={} k={}  model {model:?}  arrivals {arrival_kind}  \
+         jobs {jobs}  servers {servers}  seed {seed}",
+        spec.num_groups(),
+        spec.total_workers(),
+        spec.k,
+    );
+    println!(
+        "{:<22} {:>9} {:>6}  {:>9} {:>6} {:>10} {:>10} {:>10} {:>10} {:>7}",
+        "policy", "rate", "rho", "thruput", "util", "E[S]", "p50", "p95",
+        "p99", "maxQ"
+    );
+    for &(scheme, es) in &calibrated {
+        let rates: Vec<f64> = match &abs_rates {
+            Some(rs) => rs.clone(),
+            None => rhos.iter().map(|r| r / es).collect(),
+        };
+        for &rate in &rates {
+            let arrivals = match arrival_kind.as_str() {
+                "deterministic" => ArrivalProcess::Deterministic { rate },
+                "poisson" => ArrivalProcess::Poisson { rate },
+                "onoff" => ArrivalProcess::OnOff {
+                    // The ON rate is boosted so the long-run mean rate
+                    // stays `rate`.
+                    rate_on: rate * (burst_on + burst_off) / burst_on,
+                    mean_on: burst_on,
+                    mean_off: burst_off,
+                },
+                other => {
+                    return Err(Error::InvalidSpec(format!(
+                        "unknown arrival process `{other}`"
+                    )))
+                }
+            };
+            let wcfg = WorkloadConfig { arrivals, jobs, servers, seed };
+            let rep = run_workload(&spec, scheme, model, &wcfg)?;
+            println!(
+                "{:<22} {:>9.4} {:>6.2}  {:>9.4} {:>6.3} {:>10.4e} {:>10.4e} \
+                 {:>10.4e} {:>10.4e} {:>7}",
+                rep.policy,
+                rate,
+                rate * es,
+                rep.throughput,
+                rep.utilization,
+                rep.mean_service,
+                rep.sojourn_percentile(50.0),
+                rep.sojourn_percentile(95.0),
+                rep.sojourn_percentile(99.0),
+                rep.max_in_system,
+            );
+        }
     }
     Ok(())
 }
@@ -246,6 +372,31 @@ fn cmd_figures(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Bring up the PJRT service for the live `run` path.
+#[cfg(feature = "xla")]
+fn xla_compute(d: usize) -> Result<Arc<dyn Compute>> {
+    let svc = hetcoded::coordinator::XlaService::new(std::path::PathBuf::from(
+        hetcoded::runtime::DEFAULT_ARTIFACT_DIR,
+    ))?;
+    if svc.cols() != d {
+        return Err(Error::Runtime(format!(
+            "artifacts compiled for d={}, got --d {d}",
+            svc.cols()
+        )));
+    }
+    Ok(Arc::new(svc))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_compute(_d: usize) -> Result<Arc<dyn Compute>> {
+    Err(Error::Runtime(
+        "this binary was built without the `xla` feature; rebuild with \
+         `cargo build --features xla` (needs the native xla_extension \
+         library)"
+            .into(),
+    ))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -291,20 +442,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         .collect();
 
     let backend_name = args.flag("backend").unwrap_or("native");
-    let compute: Arc<dyn hetcoded::coordinator::Compute> = match backend_name {
+    let compute: Arc<dyn Compute> = match backend_name {
         "native" => Arc::new(NativeCompute),
-        "xla" => {
-            let svc = XlaService::new(std::path::PathBuf::from(
-                hetcoded::runtime::DEFAULT_ARTIFACT_DIR,
-            ))?;
-            if svc.cols() != d {
-                return Err(Error::Runtime(format!(
-                    "artifacts compiled for d={}, got --d {d}",
-                    svc.cols()
-                )));
-            }
-            Arc::new(svc)
-        }
+        "xla" => xla_compute(d)?,
         other => return Err(Error::InvalidSpec(format!("unknown backend `{other}`"))),
     };
 

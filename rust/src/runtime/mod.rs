@@ -14,9 +14,16 @@
 //! up to the smallest tile that fits, and the padding rows are discarded
 //! from the result.
 
+//! Manifest parsing is always available; the PJRT `Runtime` itself (and
+//! everything touching the `xla` crate) is gated behind the `xla` cargo
+//! feature, since it needs the native `xla_extension` library at link time.
+
+#[cfg(feature = "xla")]
 use crate::coding::Matrix;
 use crate::{Error, Result};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+use std::path::Path;
+use std::path::PathBuf;
 
 /// Default artifacts directory relative to the repo root.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
@@ -92,6 +99,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
 }
 
 /// A loaded PJRT runtime with compiled executables.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -104,6 +112,7 @@ pub struct Runtime {
     encode: Option<(usize, usize, usize, xla::PjRtLoadedExecutable)>,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Load all artifacts from `dir` and compile them on the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {

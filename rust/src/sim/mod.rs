@@ -12,6 +12,6 @@ pub mod schemes;
 
 pub use montecarlo::{
     latency_any_k, latency_any_k_detailed, latency_per_group, monte_carlo,
-    monte_carlo_scratch, SimConfig,
+    monte_carlo_scratch, AnyKSampler, GroupMaxSampler, SimConfig,
 };
-pub use schemes::{simulate_scheme, Scheme, SchemeResult};
+pub use schemes::{scheme_allocation, simulate_scheme, Scheme, SchemeResult};

@@ -105,6 +105,7 @@ where
 }
 
 /// Per-group sampling parameters precomputed out of the hot loop.
+#[derive(Clone, Copy, Debug)]
 struct GroupSampler {
     n: usize,
     shift: f64,
@@ -164,6 +165,169 @@ pub fn latency_any_k_detailed(
     latency_any_k_inner(spec, loads, model, cfg, true)
 }
 
+/// One group's lazy order-statistic stream state. Per-group parameters are
+/// inlined so the merge loop touches one cache line per group
+/// (micro-iteration 4).
+#[derive(Clone, Copy, Debug, Default)]
+struct GroupCursor {
+    /// Current order-statistic time (head of this group's stream).
+    time: f64,
+    /// Exponential accumulator `E_(i)`.
+    e: f64,
+    shift: f64,
+    scale: f64,
+    load: f64,
+    /// Workers not yet emitted (excluding the head).
+    remaining: usize,
+}
+
+/// Reusable single-draw sampler of the **any-`k`** completion time: the
+/// instant the master has aggregated `k` coded rows from an `(n, k)` MDS
+/// code over the whole matrix (§II-C).
+///
+/// §Perf (iteration 3): no sampling-then-sorting at all. The Rényi
+/// representation generates each group's exponential order statistics
+/// *already sorted* in O(1) per step:
+///
+/// ```text
+/// E_(1) = Exp/n,   E_(i+1) = E_(i) + Exp/(n - i)
+/// ```
+///
+/// so each group becomes a lazy ascending stream of completion times
+/// (shift + scale·E is monotone). A G-way merge (linear min over G ≤ a
+/// handful of groups) accumulates loads until k — only the m* workers
+/// that actually matter are ever materialized, and nothing is sorted.
+/// History (per 1k samples at N=2500): naive full-sort 96 ms →
+/// selection+partial sort 55 ms → ziggurat 46 ms → this merge with
+/// inlined cursors 43.7 ms (EXPERIMENTS.md §Perf).
+///
+/// [`latency_any_k`] wraps this in the multi-threaded Monte-Carlo engine;
+/// the workload layer draws one sample per *job* instead (service times of
+/// a queueing simulation), which is why the sampler is exposed on its own.
+#[derive(Clone, Debug)]
+pub struct AnyKSampler {
+    samplers: Vec<GroupSampler>,
+    cursors: Vec<GroupCursor>,
+    k: f64,
+}
+
+impl AnyKSampler {
+    /// Validate the allocation and precompute per-group parameters.
+    pub fn new(
+        spec: &ClusterSpec,
+        loads: &[f64],
+        model: LatencyModel,
+    ) -> Result<AnyKSampler> {
+        let samplers = group_samplers(spec, loads, model)?;
+        let total_load: f64 = samplers.iter().map(|s| s.load * s.n as f64).sum();
+        let k = spec.k as f64;
+        if total_load + 1e-9 < k {
+            return Err(Error::InvalidSpec(format!(
+                "total coded rows {total_load:.3} < k = {k}; undecodable"
+            )));
+        }
+        let cursors = vec![GroupCursor::default(); samplers.len()];
+        Ok(AnyKSampler { samplers, cursors, k })
+    }
+
+    /// Draw one completion-time sample (one coded job).
+    pub fn sample(&mut self, rng: &mut Rng) -> f64 {
+        for (c, gs) in self.cursors.iter_mut().zip(&self.samplers) {
+            let e = rng.exp1() / gs.n as f64;
+            *c = GroupCursor {
+                time: gs.shift + gs.scale * e,
+                e,
+                shift: gs.shift,
+                scale: gs.scale,
+                load: gs.load,
+                remaining: gs.n - 1,
+            };
+        }
+        let mut cum = 0.0;
+        let mut last = 0.0;
+        loop {
+            // Linear min over G groups (G is tiny; beats a heap).
+            let mut g = 0usize;
+            let mut best = self.cursors[0].time;
+            for (j, c) in self.cursors.iter().enumerate().skip(1) {
+                if c.time < best {
+                    best = c.time;
+                    g = j;
+                }
+            }
+            if !best.is_finite() {
+                // Every worker has been consumed. `new()` guaranteed
+                // total load ≥ k, so this is the float-drift corner of a
+                // critically-loaded (rate-1) allocation where the
+                // element-wise `cum` lands a few ulps short of `k`: the
+                // job completes when the final worker did.
+                return last;
+            }
+            last = best;
+            let c = &mut self.cursors[g];
+            cum += c.load;
+            if cum >= self.k - 1e-9 {
+                return best;
+            }
+            if c.remaining == 0 {
+                c.time = f64::INFINITY;
+            } else {
+                c.e += rng.exp1() / c.remaining as f64;
+                c.remaining -= 1;
+                c.time = c.shift + c.scale * c.e;
+            }
+        }
+    }
+}
+
+/// Reusable single-draw sampler of the **group-code** completion time of
+/// [33]: the master must receive `ceil(r_j)` results from *each* group `j`
+/// (group-wise decode), so one draw is `max_j` of the `r_j`-th order
+/// statistic. §Perf: the order statistic is generated directly via the
+/// Rényi recursion in O(r_j) — no buffer, no selection.
+#[derive(Clone, Debug)]
+pub struct GroupMaxSampler {
+    samplers: Vec<GroupSampler>,
+    r_int: Vec<usize>,
+}
+
+impl GroupMaxSampler {
+    /// Validate the allocation and clamp each `r_j` into `[1, N_j]`.
+    pub fn new(
+        spec: &ClusterSpec,
+        loads: &[f64],
+        r_per_group: &[f64],
+        model: LatencyModel,
+    ) -> Result<GroupMaxSampler> {
+        let samplers = group_samplers(spec, loads, model)?;
+        if r_per_group.len() != samplers.len() {
+            return Err(Error::InvalidSpec("r vector length mismatch".into()));
+        }
+        let r_int: Vec<usize> = r_per_group
+            .iter()
+            .zip(&samplers)
+            .map(|(&r, gs)| {
+                let ri = r.ceil() as usize;
+                ri.clamp(1, gs.n)
+            })
+            .collect();
+        Ok(GroupMaxSampler { samplers, r_int })
+    }
+
+    /// Draw one completion-time sample (one coded job).
+    pub fn sample(&mut self, rng: &mut Rng) -> f64 {
+        let mut worst = f64::NEG_INFINITY;
+        for (gs, &rj) in self.samplers.iter().zip(&self.r_int) {
+            let mut e = 0.0;
+            for i in 0..rj {
+                e += rng.exp1() / (gs.n - i) as f64;
+            }
+            worst = worst.max(gs.shift + gs.scale * e);
+        }
+        worst
+    }
+}
+
 fn latency_any_k_inner(
     spec: &ClusterSpec,
     loads: &[f64],
@@ -171,82 +335,12 @@ fn latency_any_k_inner(
     cfg: &SimConfig,
     keep_samples: bool,
 ) -> Result<Summary> {
-    let samplers = group_samplers(spec, loads, model)?;
-    let total_load: f64 = samplers.iter().map(|s| s.load * s.n as f64).sum();
-    let k = spec.k as f64;
-    if total_load + 1e-9 < k {
-        return Err(Error::InvalidSpec(format!(
-            "total coded rows {total_load:.3} < k = {k}; undecodable"
-        )));
-    }
-    // §Perf (iteration 3): no sampling-then-sorting at all. The Rényi
-    // representation generates each group's exponential order statistics
-    // *already sorted* in O(1) per step:
-    //
-    //   E_(1) = Exp/n,   E_(i+1) = E_(i) + Exp/(n - i)
-    //
-    // so each group becomes a lazy ascending stream of completion times
-    // (shift + scale·E is monotone). A G-way merge (linear min over G ≤ a
-    // handful of groups) accumulates loads until k — only the m* workers
-    // that actually matter are ever materialized, and nothing is sorted.
-    // History (per 1k samples at N=2500): naive full-sort 96 ms →
-    // selection+partial sort 55 ms → ziggurat 46 ms → this merge with
-    // inlined cursors 43.7 ms (EXPERIMENTS.md §Perf).
-    #[derive(Clone, Copy, Default)]
-    struct GroupCursor {
-        /// Current order-statistic time (head of this group's stream).
-        time: f64,
-        /// Exponential accumulator `E_(i)`.
-        e: f64,
-        /// Per-group parameters inlined to keep the merge loop on one
-        /// cache line per group (micro-iteration 4).
-        shift: f64,
-        scale: f64,
-        load: f64,
-        /// Workers not yet emitted (excluding the head).
-        remaining: usize,
-    }
+    let base = AnyKSampler::new(spec, loads, model)?;
     Ok(monte_carlo_scratch_inner(
         cfg,
         keep_samples,
-        || vec![GroupCursor::default(); samplers.len()],
-        |rng, cursors| {
-            for (c, gs) in cursors.iter_mut().zip(&samplers) {
-                let e = rng.exp1() / gs.n as f64;
-                *c = GroupCursor {
-                    time: gs.shift + gs.scale * e,
-                    e,
-                    shift: gs.shift,
-                    scale: gs.scale,
-                    load: gs.load,
-                    remaining: gs.n - 1,
-                };
-            }
-            let mut cum = 0.0;
-            loop {
-                // Linear min over G groups (G is tiny; beats a heap).
-                let mut g = 0usize;
-                let mut best = cursors[0].time;
-                for (j, c) in cursors.iter().enumerate().skip(1) {
-                    if c.time < best {
-                        best = c.time;
-                        g = j;
-                    }
-                }
-                let c = &mut cursors[g];
-                cum += c.load;
-                if cum >= k - 1e-9 {
-                    return best;
-                }
-                if c.remaining == 0 {
-                    c.time = f64::INFINITY;
-                } else {
-                    c.e += rng.exp1() / c.remaining as f64;
-                    c.remaining -= 1;
-                    c.time = c.shift + c.scale * c.e;
-                }
-            }
-        },
+        || base.clone(),
+        |rng, sampler: &mut AnyKSampler| sampler.sample(rng),
     ))
 }
 
@@ -260,31 +354,12 @@ pub fn latency_per_group(
     model: LatencyModel,
     cfg: &SimConfig,
 ) -> Result<Summary> {
-    let samplers = group_samplers(spec, loads, model)?;
-    if r_per_group.len() != samplers.len() {
-        return Err(Error::InvalidSpec("r vector length mismatch".into()));
-    }
-    let r_int: Vec<usize> = r_per_group
-        .iter()
-        .zip(&samplers)
-        .map(|(&r, gs)| {
-            let ri = r.ceil() as usize;
-            ri.clamp(1, gs.n)
-        })
-        .collect();
-    // §Perf: the r_j-th order statistic is generated directly via the Rényi
-    // recursion in O(r_j) — no buffer, no selection.
-    Ok(monte_carlo(cfg, |rng| {
-        let mut worst = f64::NEG_INFINITY;
-        for (gs, &rj) in samplers.iter().zip(&r_int) {
-            let mut e = 0.0;
-            for i in 0..rj {
-                e += rng.exp1() / (gs.n - i) as f64;
-            }
-            worst = worst.max(gs.shift + gs.scale * e);
-        }
-        worst
-    }))
+    let base = GroupMaxSampler::new(spec, loads, r_per_group, model)?;
+    Ok(monte_carlo_scratch(
+        cfg,
+        || base.clone(),
+        |rng, sampler: &mut GroupMaxSampler| sampler.sample(rng),
+    ))
 }
 
 #[cfg(test)]
@@ -343,6 +418,54 @@ mod tests {
             "MC {} vs analytic {analytic}",
             s.mean()
         );
+    }
+
+    #[test]
+    fn any_k_sampler_matches_engine_stream() {
+        // The exposed sampler must replicate the engine's draw order exactly:
+        // a single-threaded engine run and a hand-rolled loop over
+        // `AnyKSampler::sample` with the same seed are bit-identical.
+        let spec = ClusterSpec::paper_two_group(1000);
+        let loads = vec![2.0, 2.0];
+        let cfg = SimConfig { samples: 500, seed: 11, threads: 1 };
+        let engine = latency_any_k(&spec, &loads, LatencyModel::A, &cfg).unwrap();
+        let mut sampler =
+            AnyKSampler::new(&spec, &loads, LatencyModel::A).unwrap();
+        let mut rng = Rng::new(11);
+        let mut by_hand = Summary::new();
+        for _ in 0..500 {
+            by_hand.add(sampler.sample(&mut rng));
+        }
+        assert_eq!(engine.mean(), by_hand.mean());
+        assert_eq!(engine.max(), by_hand.max());
+    }
+
+    #[test]
+    fn critically_loaded_allocation_never_returns_infinity() {
+        // Uncoded (rate-1) allocation whose per-worker load k/N is inexact:
+        // the element-wise load accumulation in the merge can land a few
+        // ulps short of k after ~900 adds, which used to return +inf once
+        // every cursor was exhausted.
+        let spec = ClusterSpec::paper_two_group(10_000); // N = 900
+        let loads = vec![10_000.0 / 900.0; 2];
+        let mut s = AnyKSampler::new(&spec, &loads, LatencyModel::A).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..5_000 {
+            let t = s.sample(&mut rng);
+            assert!(t.is_finite() && t > 0.0, "sample {t}");
+        }
+    }
+
+    #[test]
+    fn group_max_sampler_rejects_mismatched_r() {
+        let spec = ClusterSpec::paper_two_group(1000);
+        assert!(GroupMaxSampler::new(
+            &spec,
+            &[2.0, 2.0],
+            &[10.0],
+            LatencyModel::A
+        )
+        .is_err());
     }
 
     #[test]

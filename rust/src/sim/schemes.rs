@@ -2,7 +2,7 @@
 
 use crate::allocation::{
     group_code_allocation, proposed_allocation, reisizadeh_allocation,
-    uncoded_allocation, uniform_allocation,
+    uncoded_allocation, uniform_allocation, Allocation,
 };
 use crate::model::{ClusterSpec, LatencyModel};
 use crate::sim::{latency_any_k, latency_per_group, SimConfig};
@@ -56,6 +56,28 @@ pub struct SchemeResult {
     pub n: f64,
 }
 
+/// The [`Allocation`] a scheme induces on `spec` — the policy half of
+/// [`simulate_scheme`], reused by the workload layer to build per-job
+/// service-time samplers.
+pub fn scheme_allocation(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+) -> Result<Allocation> {
+    let k = spec.k as f64;
+    match scheme {
+        Scheme::Proposed => proposed_allocation(model, spec),
+        Scheme::Uncoded => uncoded_allocation(model, spec),
+        Scheme::UniformWithOptimalN => {
+            let opt = proposed_allocation(model, spec)?;
+            uniform_allocation(model, spec, opt.n)
+        }
+        Scheme::UniformRate(rate) => uniform_allocation(model, spec, k / rate),
+        Scheme::GroupCode(r) => group_code_allocation(model, spec, r),
+        Scheme::Reisizadeh => reisizadeh_allocation(model, spec),
+    }
+}
+
 /// Simulate `scheme` on `spec` under `model`.
 pub fn simulate_scheme(
     spec: &ClusterSpec,
@@ -64,81 +86,28 @@ pub fn simulate_scheme(
     cfg: &SimConfig,
 ) -> Result<SchemeResult> {
     let k = spec.k as f64;
-    match scheme {
-        Scheme::Proposed => {
-            let a = proposed_allocation(model, spec)?;
-            let s = latency_any_k(spec, &a.loads, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: a.latency_bound,
-                rate: k / a.n,
-                n: a.n,
-            })
+    let a = scheme_allocation(spec, scheme, model)?;
+    let s = match scheme {
+        Scheme::GroupCode(_) => {
+            latency_per_group(spec, &a.loads, &a.r, model, cfg)?
         }
-        Scheme::Uncoded => {
-            let a = uncoded_allocation(model, spec)?;
-            let s = latency_any_k(spec, &a.loads, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: None,
-                rate: 1.0,
-                n: a.n,
-            })
-        }
-        Scheme::UniformWithOptimalN => {
-            let opt = proposed_allocation(model, spec)?;
-            let a = uniform_allocation(model, spec, opt.n)?;
-            let s = latency_any_k(spec, &a.loads, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: None,
-                rate: k / a.n,
-                n: a.n,
-            })
-        }
-        Scheme::UniformRate(rate) => {
-            let a = uniform_allocation(model, spec, k / rate)?;
-            let s = latency_any_k(spec, &a.loads, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: None,
-                rate,
-                n: a.n,
-            })
-        }
-        Scheme::GroupCode(r) => {
-            let a = group_code_allocation(model, spec, r)?;
-            let s = latency_per_group(spec, &a.loads, &a.r, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: a.latency_bound,
-                rate: k / a.n,
-                n: a.n,
-            })
-        }
-        Scheme::Reisizadeh => {
-            let a = reisizadeh_allocation(model, spec)?;
-            let s = latency_any_k(spec, &a.loads, model, cfg)?;
-            Ok(SchemeResult {
-                scheme: scheme.name(),
-                mean: s.mean(),
-                stderr: s.stderr(),
-                bound: None,
-                rate: k / a.n,
-                n: a.n,
-            })
-        }
-    }
+        _ => latency_any_k(spec, &a.loads, model, cfg)?,
+    };
+    // Only the policies for which the paper derives a latency expression
+    // report a bound (`T*` for the proposed optimum, `1/r` for the group
+    // code); the rest are simulation-only baselines.
+    let bound = match scheme {
+        Scheme::Proposed | Scheme::GroupCode(_) => a.latency_bound,
+        _ => None,
+    };
+    Ok(SchemeResult {
+        scheme: scheme.name(),
+        mean: s.mean(),
+        stderr: s.stderr(),
+        bound,
+        rate: k / a.n,
+        n: a.n,
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,218 @@
+//! Job arrival processes.
+//!
+//! A traffic model is a point process on the model-time axis; each point is
+//! one matvec job submitted to the master. Three families cover the usual
+//! serving regimes:
+//!
+//! - [`ArrivalProcess::Deterministic`] — a fixed-rate clock (closed-loop
+//!   load generators, batch pipelines);
+//! - [`ArrivalProcess::Poisson`] — memoryless open-loop traffic, the
+//!   M/·/· baseline of queueing theory;
+//! - [`ArrivalProcess::OnOff`] — an interrupted Poisson process
+//!   (exponential ON bursts separated by exponential OFF silences), the
+//!   standard bursty-traffic model.
+//!
+//! All draws go through the repo's deterministic [`Rng`], so a fixed seed
+//! reproduces the exact arrival trace.
+
+use crate::math::Rng;
+use crate::{Error, Result};
+
+/// A job arrival process (jobs per unit of model time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Evenly spaced arrivals: job `i` arrives at `i / rate`.
+    Deterministic {
+        /// Arrival rate `λ` (jobs per unit model time).
+        rate: f64,
+    },
+    /// Poisson process: i.i.d. exponential interarrivals with mean `1/rate`.
+    Poisson {
+        /// Arrival rate `λ` (jobs per unit model time).
+        rate: f64,
+    },
+    /// Bursty ON/OFF (interrupted Poisson) process: during an ON period
+    /// (exponential, mean `mean_on`) arrivals are Poisson at `rate_on`;
+    /// OFF periods (exponential, mean `mean_off`) are silent. The long-run
+    /// mean rate is `rate_on · mean_on / (mean_on + mean_off)`.
+    OnOff {
+        /// Arrival rate during ON periods.
+        rate_on: f64,
+        /// Mean ON-period duration.
+        mean_on: f64,
+        /// Mean OFF-period duration.
+        mean_off: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Short display name for tables and CSV columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Deterministic { .. } => "deterministic",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::OnOff { .. } => "onoff",
+        }
+    }
+
+    /// Long-run mean arrival rate `λ`.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Deterministic { rate }
+            | ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::OnOff { rate_on, mean_on, mean_off } => {
+                rate_on * mean_on / (mean_on + mean_off)
+            }
+        }
+    }
+
+    /// Check all parameters are positive and finite.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |name: &str, v: f64| {
+            Err(Error::InvalidSpec(format!(
+                "arrival process: {name} must be positive and finite, got {v}"
+            )))
+        };
+        match *self {
+            ArrivalProcess::Deterministic { rate }
+            | ArrivalProcess::Poisson { rate } => {
+                if !(rate > 0.0) || !rate.is_finite() {
+                    return bad("rate", rate);
+                }
+            }
+            ArrivalProcess::OnOff { rate_on, mean_on, mean_off } => {
+                if !(rate_on > 0.0) || !rate_on.is_finite() {
+                    return bad("rate_on", rate_on);
+                }
+                if !(mean_on > 0.0) || !mean_on.is_finite() {
+                    return bad("mean_on", mean_on);
+                }
+                if !(mean_off > 0.0) || !mean_off.is_finite() {
+                    return bad("mean_off", mean_off);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate the first `n` arrival times (ascending, deterministic given
+    /// the `rng` state).
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+        self.validate()?;
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Deterministic { rate } => {
+                for i in 1..=n {
+                    out.push(i as f64 / rate);
+                }
+            }
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exp1() / rate;
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::OnOff { rate_on, mean_on, mean_off } => {
+                // Alternate ON/OFF windows; Poisson arrivals that would land
+                // beyond the current ON window are discarded (the process
+                // restarts afresh in the next window — memorylessness makes
+                // this exact).
+                let mut t = 0.0;
+                while out.len() < n {
+                    let on_end = t + rng.exp1() * mean_on;
+                    let mut a = t;
+                    loop {
+                        a += rng.exp1() / rate_on;
+                        if a > on_end || out.len() >= n {
+                            break;
+                        }
+                        out.push(a);
+                    }
+                    t = on_end + rng.exp1() * mean_off;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_is_evenly_spaced() {
+        let mut rng = Rng::new(1);
+        let ts = ArrivalProcess::Deterministic { rate: 4.0 }
+            .times(8, &mut rng)
+            .unwrap();
+        assert_eq!(ts.len(), 8);
+        for (i, &t) in ts.iter().enumerate() {
+            assert!((t - (i as f64 + 1.0) / 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_matches_rate() {
+        let mut rng = Rng::new(2);
+        let rate = 3.0;
+        let n = 50_000;
+        let ts = ArrivalProcess::Poisson { rate }.times(n, &mut rng).unwrap();
+        assert_eq!(ts.len(), n);
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]), "not sorted");
+        let mean_gap = ts.last().unwrap() / n as f64;
+        assert!(
+            (mean_gap - 1.0 / rate).abs() < 0.01,
+            "mean gap {mean_gap} vs {}",
+            1.0 / rate
+        );
+    }
+
+    #[test]
+    fn onoff_long_run_rate_matches_formula() {
+        let p = ArrivalProcess::OnOff {
+            rate_on: 10.0,
+            mean_on: 2.0,
+            mean_off: 3.0,
+        };
+        assert!((p.mean_rate() - 4.0).abs() < 1e-12);
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let ts = p.times(n, &mut rng).unwrap();
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]), "not sorted");
+        let emp_rate = n as f64 / ts.last().unwrap();
+        assert!(
+            (emp_rate - p.mean_rate()).abs() / p.mean_rate() < 0.05,
+            "empirical {emp_rate} vs {}",
+            p.mean_rate()
+        );
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 2.0 },
+            ArrivalProcess::OnOff { rate_on: 8.0, mean_on: 1.0, mean_off: 1.0 },
+        ] {
+            let a = p.times(1000, &mut Rng::new(42)).unwrap();
+            let b = p.times(1000, &mut Rng::new(42)).unwrap();
+            assert_eq!(a, b, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn invalid_parameters_rejected() {
+        let mut rng = Rng::new(4);
+        for p in [
+            ArrivalProcess::Poisson { rate: 0.0 },
+            ArrivalProcess::Deterministic { rate: -1.0 },
+            ArrivalProcess::Poisson { rate: f64::NAN },
+            ArrivalProcess::OnOff { rate_on: 1.0, mean_on: 0.0, mean_off: 1.0 },
+            ArrivalProcess::OnOff { rate_on: 1.0, mean_on: 1.0, mean_off: -2.0 },
+        ] {
+            assert!(p.validate().is_err());
+            assert!(p.times(10, &mut rng).is_err());
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Workload layer: job arrivals, queueing, and throughput under load.
+//!
+//! The paper optimizes the latency of a **single** coded matvec job on a
+//! heterogeneous cluster. A serving system, by contrast, faces a *stream*
+//! of jobs; what matters is throughput, utilization, and the sojourn-time
+//! tail. This module turns the one-shot simulator into that traffic model
+//! in three stages:
+//!
+//! 1. **Arrivals** ([`ArrivalProcess`]) — deterministic-rate, Poisson, or
+//!    bursty ON/OFF job streams, drawn from the repo's deterministic RNG;
+//! 2. **Queue + dispatch** ([`simulate_queue`] / [`run_workload`]) — an
+//!    unbounded FIFO queue in front of the cluster, which runs at most
+//!    `servers` coded jobs at a time; each job in service draws its
+//!    duration from the chosen policy's single-job completion-time law;
+//! 3. **Metrics** ([`WorkloadReport`]) — throughput, utilization,
+//!    queue-depth statistics, and sojourn-time percentiles (p50/p95/p99)
+//!    alongside the existing expected-latency summaries.
+//!
+//! # How this maps onto the paper's single-job model
+//!
+//! The queueing model treats one coded job's fan-out → straggle → decode
+//! cycle as an indivisible *service* whose duration is exactly the paper's
+//! `T_{r:N}` (§II-C): the [`ServiceSampler`] draws it with the same Rényi
+//! order-statistics merge the Monte-Carlo engine uses
+//! ([`crate::sim::AnyKSampler`]). With Poisson arrivals and `servers = 1`
+//! the system is an M/G/1 queue whose service distribution is the paper's
+//! latency law — so the paper's headline quantity `E[T]` becomes the
+//! service-side bottleneck `1/E[T]` on throughput, and allocation policies
+//! that shave expected latency (Theorem 2) translate directly into extra
+//! sustainable arrival rate before the queue blows up.
+//!
+//! The live counterpart is [`crate::coordinator::serve_arrivals`], which
+//! replays an arrival trace against the thread coordinator with batched
+//! dispatch (the `MatvecBatched` artifacts on the XLA backend).
+//!
+//! # Example
+//!
+//! ```no_run
+//! use hetcoded::model::{ClusterSpec, LatencyModel};
+//! use hetcoded::sim::Scheme;
+//! use hetcoded::workload::{run_workload, ArrivalProcess, WorkloadConfig};
+//!
+//! let spec = ClusterSpec::paper_two_group(10_000);
+//! let cfg = WorkloadConfig {
+//!     arrivals: ArrivalProcess::Poisson { rate: 5.0 },
+//!     jobs: 2_000,
+//!     servers: 1,
+//!     seed: 2019,
+//! };
+//! let report = run_workload(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?;
+//! println!(
+//!     "throughput {:.3}/s  util {:.2}  p99 sojourn {:.4}",
+//!     report.throughput,
+//!     report.utilization,
+//!     report.sojourn_percentile(99.0),
+//! );
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+
+pub mod arrivals;
+pub mod queue;
+pub mod service;
+
+pub use arrivals::ArrivalProcess;
+pub use queue::{
+    run_workload, simulate_queue, QueueTrace, WorkloadConfig, WorkloadReport,
+};
+pub use service::{mean_service, service_sampler, ServiceSampler};

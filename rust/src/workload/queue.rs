@@ -1,0 +1,399 @@
+//! Event-driven FIFO queueing simulation of a coded cluster under load.
+//!
+//! The model: jobs arrive at the master (an [`ArrivalProcess`]) and wait in
+//! an unbounded FIFO queue. The cluster runs at most `servers` coded jobs
+//! concurrently (the paper's setting is `servers = 1`: one matvec fans out
+//! to *all* workers); each job in service occupies one slot for an i.i.d.
+//! service time drawn from the policy's single-job completion-time
+//! distribution ([`ServiceSampler`]). With Poisson arrivals and one slot
+//! this is an M/G/1 queue whose service law is the paper's `T_{r:N}`.
+//!
+//! Because arrivals are generated up front and service times are i.i.d.,
+//! the simulation is a single O(n · servers) pass — no event heap — and is
+//! bit-reproducible from a seed.
+
+use crate::math::{Rng, Summary};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::Scheme;
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::service::{service_sampler, ServiceSampler};
+use crate::{Error, Result};
+
+/// Configuration of one throughput-under-load run.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    /// Traffic model.
+    pub arrivals: ArrivalProcess,
+    /// Number of jobs to simulate.
+    pub jobs: usize,
+    /// Concurrent coded jobs the cluster sustains (1 = the paper's
+    /// whole-cluster fan-out).
+    pub servers: usize,
+    /// Base seed; arrivals and service draws use split substreams.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            jobs: 2_000,
+            servers: 1,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Raw per-job trace of a queue simulation (all times in model units).
+#[derive(Clone, Debug)]
+pub struct QueueTrace {
+    /// Arrival time of job `i` (ascending).
+    pub arrivals: Vec<f64>,
+    /// Instant job `i` entered service (ascending — FIFO).
+    pub starts: Vec<f64>,
+    /// Instant job `i` completed.
+    pub finishes: Vec<f64>,
+    /// Server slot that ran job `i`.
+    pub server_of: Vec<usize>,
+}
+
+/// Simulate a FIFO queue with `servers` slots over explicit arrival times.
+///
+/// Jobs enter service in arrival order on the earliest-free slot; since the
+/// earliest-free time is non-decreasing as jobs are assigned, start times
+/// are monotone — proper FIFO. Returns the full trace so callers (and the
+/// invariant tests) can inspect every job.
+pub fn simulate_queue(
+    arrival_times: &[f64],
+    service: &mut ServiceSampler,
+    servers: usize,
+    rng: &mut Rng,
+) -> Result<QueueTrace> {
+    if servers == 0 {
+        return Err(Error::InvalidSpec("servers must be positive".into()));
+    }
+    if arrival_times.iter().any(|&t| !t.is_finite() || t < 0.0)
+        || arrival_times.windows(2).any(|w| w[1] < w[0])
+    {
+        return Err(Error::InvalidSpec(
+            "arrival times must be finite, nonnegative and ascending".into(),
+        ));
+    }
+    let n = arrival_times.len();
+    let mut free = vec![0.0f64; servers];
+    let mut starts = Vec::with_capacity(n);
+    let mut finishes = Vec::with_capacity(n);
+    let mut server_of = Vec::with_capacity(n);
+    for &t in arrival_times {
+        // Earliest-free slot (linear scan; `servers` is small).
+        let mut idx = 0usize;
+        let mut ft = free[0];
+        for (i, &x) in free.iter().enumerate().skip(1) {
+            if x < ft {
+                ft = x;
+                idx = i;
+            }
+        }
+        let start = t.max(ft);
+        let finish = start + service.sample(rng);
+        free[idx] = finish;
+        starts.push(start);
+        finishes.push(finish);
+        server_of.push(idx);
+    }
+    Ok(QueueTrace { arrivals: arrival_times.to_vec(), starts, finishes, server_of })
+}
+
+/// Aggregate metrics of one throughput-under-load run.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    /// Policy display name.
+    pub policy: String,
+    /// Arrival-process display name.
+    pub arrival_process: String,
+    /// Long-run offered arrival rate `λ`.
+    pub offered_rate: f64,
+    /// Jobs simulated (== jobs completed; the queue is lossless).
+    pub jobs: usize,
+    /// Concurrent service slots.
+    pub servers: usize,
+    /// Time from 0 to the last completion.
+    pub makespan: f64,
+    /// Completed jobs per unit model time.
+    pub throughput: f64,
+    /// Busy time / (makespan · servers), in `[0, 1]`.
+    pub utilization: f64,
+    /// Empirical mean service time `E[S]`.
+    pub mean_service: f64,
+    /// Sojourn times (arrival → completion); retains samples, so
+    /// percentiles are available.
+    pub sojourn: Summary,
+    /// Waiting times (arrival → service start); retains samples.
+    pub wait: Summary,
+    /// Time-average number of jobs in the system.
+    pub mean_in_system: f64,
+    /// Peak number of jobs in the system.
+    pub max_in_system: usize,
+}
+
+impl WorkloadReport {
+    /// Sojourn-time percentile (`p` in `[0, 100]`).
+    pub fn sojourn_percentile(&self, p: f64) -> f64 {
+        self.sojourn.percentile(p)
+    }
+
+    /// Build the report from a raw trace.
+    pub fn from_trace(
+        policy: String,
+        arrivals: &ArrivalProcess,
+        servers: usize,
+        trace: &QueueTrace,
+    ) -> WorkloadReport {
+        let n = trace.arrivals.len();
+        let makespan = trace
+            .finishes
+            .iter()
+            .fold(0.0f64, |acc, &f| acc.max(f));
+        let mut sojourn = Summary::keeping_samples();
+        let mut wait = Summary::keeping_samples();
+        let mut busy = 0.0;
+        for i in 0..n {
+            sojourn.add(trace.finishes[i] - trace.arrivals[i]);
+            wait.add(trace.starts[i] - trace.arrivals[i]);
+            busy += trace.finishes[i] - trace.starts[i];
+        }
+        // Number-in-system sweep: +1 at arrival, −1 at completion;
+        // departures sort before arrivals at equal times.
+        let mut events: Vec<(f64, i64)> = Vec::with_capacity(2 * n);
+        for &t in &trace.arrivals {
+            events.push((t, 1));
+        }
+        for &t in &trace.finishes {
+            events.push((t, -1));
+        }
+        events.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let mut depth = 0i64;
+        let mut max_depth = 0i64;
+        let mut last_t = 0.0;
+        let mut area = 0.0;
+        for (t, d) in events {
+            area += depth as f64 * (t - last_t);
+            last_t = t;
+            depth += d;
+            max_depth = max_depth.max(depth);
+        }
+        let jobs_f = n.max(1) as f64;
+        WorkloadReport {
+            policy,
+            arrival_process: arrivals.name().to_string(),
+            offered_rate: arrivals.mean_rate(),
+            jobs: n,
+            servers,
+            makespan,
+            throughput: if makespan > 0.0 { n as f64 / makespan } else { 0.0 },
+            utilization: if makespan > 0.0 {
+                busy / (makespan * servers as f64)
+            } else {
+                0.0
+            },
+            mean_service: busy / jobs_f,
+            sojourn,
+            wait,
+            mean_in_system: if makespan > 0.0 { area / makespan } else { 0.0 },
+            max_in_system: max_depth as usize,
+        }
+    }
+}
+
+/// Run one complete throughput-under-load experiment: generate arrivals,
+/// build `scheme`'s service sampler on `spec`, run the queue, and
+/// summarize. Bit-reproducible from `cfg.seed`.
+pub fn run_workload(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+    cfg: &WorkloadConfig,
+) -> Result<WorkloadReport> {
+    if cfg.jobs == 0 {
+        return Err(Error::InvalidSpec("workload needs at least one job".into()));
+    }
+    let (_, mut sampler) = service_sampler(spec, scheme, model)?;
+    let mut root = Rng::new(cfg.seed);
+    let mut arrival_rng = root.split();
+    let mut service_rng = root.split();
+    let arrivals = cfg.arrivals.times(cfg.jobs, &mut arrival_rng)?;
+    let trace =
+        simulate_queue(&arrivals, &mut sampler, cfg.servers, &mut service_rng)?;
+    Ok(WorkloadReport::from_trace(
+        scheme.name(),
+        &cfg.arrivals,
+        cfg.servers,
+        &trace,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{order_stats, Group};
+
+    fn cfg(rate: f64, jobs: usize) -> WorkloadConfig {
+        WorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate },
+            jobs,
+            servers: 1,
+            seed: 2019,
+        }
+    }
+
+    #[test]
+    fn fifo_invariants_hold() {
+        // No job lost; FIFO start order; per-slot completion times monotone;
+        // sojourn ≥ wait ≥ 0.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let mut rng = Rng::new(5);
+        let arrivals = ArrivalProcess::Poisson { rate: 20.0 }
+            .times(500, &mut rng)
+            .unwrap();
+        for servers in [1usize, 3] {
+            let t = simulate_queue(&arrivals, &mut sampler, servers, &mut rng)
+                .unwrap();
+            assert_eq!(t.arrivals.len(), 500);
+            assert_eq!(t.starts.len(), 500);
+            assert_eq!(t.finishes.len(), 500);
+            assert!(t.starts.windows(2).all(|w| w[1] >= w[0]), "FIFO starts");
+            let mut last_finish = vec![0.0f64; servers];
+            for i in 0..500 {
+                assert!(t.starts[i] >= t.arrivals[i]);
+                assert!(t.finishes[i] > t.starts[i]);
+                let s = t.server_of[i];
+                assert!(s < servers);
+                assert!(
+                    t.finishes[i] >= last_finish[s],
+                    "slot {s} completions must be monotone"
+                );
+                last_finish[s] = t.finishes[i];
+            }
+        }
+    }
+
+    #[test]
+    fn run_workload_is_deterministic() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let a = run_workload(&spec, Scheme::Proposed, LatencyModel::A, &cfg(5.0, 300))
+            .unwrap();
+        let b = run_workload(&spec, Scheme::Proposed, LatencyModel::A, &cfg(5.0, 300))
+            .unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.sojourn.mean(), b.sojourn.mean());
+        assert_eq!(a.max_in_system, b.max_in_system);
+        assert_eq!(a.jobs, 300);
+    }
+
+    #[test]
+    fn utilization_matches_offered_load_single_group() {
+        // M/G/1 sanity on a single-group cluster with the uncoded policy:
+        // service is the N-th order statistic with closed-form mean E[S]
+        // (eq. (6)), so for ρ = λ·E[S] < 1 the long-run busy fraction must
+        // approach ρ.
+        let (n, k) = (40usize, 1000usize);
+        let spec =
+            ClusterSpec::new(vec![Group { n, mu: 2.0, alpha: 1.0 }], k).unwrap();
+        let es = order_stats::group_latency_exact(
+            LatencyModel::A,
+            k as f64 / n as f64,
+            k as f64,
+            n as u64,
+            n as u64,
+            2.0,
+            1.0,
+        );
+        let rho = 0.6;
+        let wcfg = WorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate: rho / es },
+            jobs: 4_000,
+            servers: 1,
+            seed: 99,
+        };
+        let rep =
+            run_workload(&spec, Scheme::Uncoded, LatencyModel::A, &wcfg).unwrap();
+        assert!(
+            (rep.utilization - rho).abs() / rho < 0.05,
+            "utilization {} vs ρ {rho}",
+            rep.utilization
+        );
+        // Empirical mean service must also track the closed form.
+        assert!(
+            (rep.mean_service - es).abs() / es < 0.05,
+            "E[S] {} vs exact {es}",
+            rep.mean_service
+        );
+    }
+
+    #[test]
+    fn heavier_load_lengthens_sojourn() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es = crate::workload::service::mean_service(&mut sampler, 2_000, 1);
+        let light =
+            run_workload(&spec, Scheme::Proposed, LatencyModel::A, &cfg(0.2 / es, 800))
+                .unwrap();
+        let heavy =
+            run_workload(&spec, Scheme::Proposed, LatencyModel::A, &cfg(0.9 / es, 800))
+                .unwrap();
+        assert!(heavy.sojourn.mean() > light.sojourn.mean());
+        assert!(heavy.sojourn_percentile(95.0) > light.sojourn_percentile(95.0));
+        assert!(heavy.utilization > light.utilization);
+        assert!(light.utilization <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn extra_servers_raise_saturated_throughput() {
+        // Offered load ≈ 2 service rates: one slot saturates at ~1/E[S],
+        // two slots at ~2/E[S].
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es = crate::workload::service::mean_service(&mut sampler, 2_000, 1);
+        let mk = |servers| WorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate: 2.5 / es },
+            jobs: 1_500,
+            servers,
+            seed: 7,
+        };
+        let one =
+            run_workload(&spec, Scheme::Proposed, LatencyModel::A, &mk(1)).unwrap();
+        let two =
+            run_workload(&spec, Scheme::Proposed, LatencyModel::A, &mk(2)).unwrap();
+        assert!(
+            two.throughput > 1.5 * one.throughput,
+            "1 slot {} vs 2 slots {}",
+            one.throughput,
+            two.throughput
+        );
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let mut bad = cfg(1.0, 100);
+        bad.servers = 0;
+        assert!(run_workload(&spec, Scheme::Proposed, LatencyModel::A, &bad).is_err());
+        let mut none = cfg(1.0, 0);
+        none.jobs = 0;
+        assert!(run_workload(&spec, Scheme::Proposed, LatencyModel::A, &none).is_err());
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let mut rng = Rng::new(1);
+        assert!(simulate_queue(&[2.0, 1.0], &mut sampler, 1, &mut rng).is_err());
+        assert!(simulate_queue(&[-1.0, 1.0], &mut sampler, 1, &mut rng).is_err());
+        assert!(
+            simulate_queue(&[f64::NAN, 1.0], &mut sampler, 1, &mut rng).is_err()
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-job service-time samplers.
+//!
+//! In the queueing view of the system, "service" of one job is the whole
+//! coded fan-out/fan-in: encode dispatch, straggling workers, and the
+//! decode barrier at `k` aggregated rows. Its duration is therefore exactly
+//! the single-job completion time the paper analyzes (§II-C), so the
+//! samplers here are the simulator's [`AnyKSampler`] / [`GroupMaxSampler`]
+//! wrapped per policy: one draw = one job's service time.
+
+use crate::allocation::Allocation;
+use crate::math::Rng;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::sim::{scheme_allocation, AnyKSampler, GroupMaxSampler, Scheme};
+use crate::Result;
+
+/// A policy-specific sampler of i.i.d. single-job service times.
+#[derive(Clone, Debug)]
+pub enum ServiceSampler {
+    /// Any-`k` MDS decode over the whole matrix (proposed, uniform,
+    /// uncoded, and the scheme of [32]).
+    AnyK(AnyKSampler),
+    /// Group-wise decode of the fixed-`r` group code of [33]: the job
+    /// completes when *every* group has returned its `r_j` results.
+    GroupMax(GroupMaxSampler),
+}
+
+impl ServiceSampler {
+    /// Draw one job's service time.
+    pub fn sample(&mut self, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceSampler::AnyK(s) => s.sample(rng),
+            ServiceSampler::GroupMax(s) => s.sample(rng),
+        }
+    }
+}
+
+/// Build `scheme`'s allocation on `spec` together with its service-time
+/// sampler.
+pub fn service_sampler(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+) -> Result<(Allocation, ServiceSampler)> {
+    let alloc = scheme_allocation(spec, scheme, model)?;
+    let sampler = match scheme {
+        Scheme::GroupCode(_) => ServiceSampler::GroupMax(GroupMaxSampler::new(
+            spec,
+            &alloc.loads,
+            &alloc.r,
+            model,
+        )?),
+        _ => ServiceSampler::AnyK(AnyKSampler::new(spec, &alloc.loads, model)?),
+    };
+    Ok((alloc, sampler))
+}
+
+/// Estimate the mean service time `E[S]` with `samples` deterministic
+/// draws. Used to convert offered-load fractions `ρ` into absolute arrival
+/// rates `λ = ρ / E[S]` before a sweep.
+pub fn mean_service(sampler: &mut ServiceSampler, samples: usize, seed: u64) -> f64 {
+    let samples = samples.max(1);
+    let mut rng = Rng::new(seed);
+    let mut sum = 0.0;
+    for _ in 0..samples {
+        sum += sampler.sample(&mut rng);
+    }
+    sum / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::order_stats;
+
+    #[test]
+    fn every_scheme_yields_a_sampler() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        for scheme in [
+            Scheme::Proposed,
+            Scheme::Uncoded,
+            Scheme::UniformWithOptimalN,
+            Scheme::UniformRate(0.5),
+            Scheme::GroupCode(100.0),
+            Scheme::Reisizadeh,
+        ] {
+            let (alloc, mut sampler) =
+                service_sampler(&spec, scheme, LatencyModel::A)
+                    .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
+            alloc.validate(&spec).unwrap();
+            let mut rng = Rng::new(9);
+            let s = sampler.sample(&mut rng);
+            assert!(s.is_finite() && s > 0.0, "{}: sample {s}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn mean_service_matches_closed_form_single_group() {
+        // Uncoded on a single group: every one of the N workers must finish
+        // its l = k/N rows, so E[S] is the N-th order statistic's mean,
+        // (l/k)(α + (H_N − H_0)/μ) — closed form via `group_latency_exact`.
+        let (n, k) = (40usize, 1000usize);
+        let spec = crate::model::ClusterSpec::new(
+            vec![crate::model::Group { n, mu: 2.0, alpha: 1.0 }],
+            k,
+        )
+        .unwrap();
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Uncoded, LatencyModel::A).unwrap();
+        let est = mean_service(&mut sampler, 20_000, 7);
+        let exact = order_stats::group_latency_exact(
+            LatencyModel::A,
+            k as f64 / n as f64,
+            k as f64,
+            n as u64,
+            n as u64,
+            2.0,
+            1.0,
+        );
+        assert!(
+            (est - exact).abs() / exact < 0.02,
+            "MC {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn mean_service_is_deterministic() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut s1) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let (_, mut s2) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        assert_eq!(mean_service(&mut s1, 500, 3), mean_service(&mut s2, 500, 3));
+    }
+}

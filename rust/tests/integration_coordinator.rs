@@ -3,11 +3,12 @@
 
 use hetcoded::allocation::{proposed_allocation, uniform_allocation};
 use hetcoded::coding::Matrix;
-use hetcoded::coordinator::{
-    run_job, serve_requests, JobConfig, NativeCompute, XlaService,
-};
+use hetcoded::coordinator::{run_job, serve_requests, JobConfig, NativeCompute};
+#[cfg(feature = "xla")]
+use hetcoded::coordinator::XlaService;
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+#[cfg(feature = "xla")]
 use std::path::Path;
 use std::sync::Arc;
 
@@ -106,6 +107,7 @@ fn serving_loop_has_stable_percentiles() {
     assert!(report.recorder.rows_per_second() > 0.0);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_backend_end_to_end() {
     // Requires artifacts; skip cleanly otherwise.
@@ -129,6 +131,7 @@ fn xla_backend_end_to_end() {
     assert_eq!(r.backend, "xla-pjrt");
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_and_native_agree() {
     if !Path::new("artifacts/manifest.txt").exists() {
@@ -155,6 +158,7 @@ fn xla_and_native_agree() {
     assert!(err < 1e-2, "backend disagreement {err}");
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_batched_job_end_to_end() {
     // Full batched path: one worker dispatch serves 4 requests through the
