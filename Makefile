@@ -2,7 +2,7 @@
 # tier-1 verification; everything XLA/PJRT additionally needs `make
 # artifacts` (Python + JAX) and a build with `--features xla`.
 
-.PHONY: build test artifacts figures bench lint doc
+.PHONY: build test artifacts figures bench bench-json lint doc
 
 build:
 	cargo build --release
@@ -20,6 +20,22 @@ figures:
 
 bench:
 	cargo bench
+
+# Machine-readable bench snapshot: run the perf benches with JSON capture
+# (the in-repo harness appends `"name": ns_per_op,` fragments when
+# BENCH_JSON_DIR is set) and merge them into BENCH_PR2.json so the bench
+# trajectory is diffable across PRs. Bench names must be unique across the
+# two binaries (they are today); a collision would emit duplicate JSON keys.
+bench-json:
+	rm -rf target/bench-json && mkdir -p target/bench-json
+	BENCH_JSON_DIR=$(CURDIR)/target/bench-json cargo bench --bench perf_hotpaths
+	BENCH_JSON_DIR=$(CURDIR)/target/bench-json cargo bench --bench perf_workload
+	@ls target/bench-json/*.lines >/dev/null 2>&1 || \
+	  { echo "error: benches emitted no JSON fragments (BENCH_JSON_DIR plumbing broken?)"; exit 1; }
+	{ echo '{'; \
+	  echo '  "_meta": "flat map: benchmark name -> median ns/op from the in-repo bench harness; regenerate with make bench-json",'; \
+	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR2.json
+	@echo "wrote BENCH_PR2.json"
 
 lint:
 	cargo fmt --all --check

@@ -4,13 +4,21 @@
 //! - proposed allocation end-to-end;
 //! - Monte-Carlo latency sampling (`latency_any_k` / `latency_per_group`);
 //! - LU factorization + decode at serving sizes;
-//! - MDS encode (setup path);
-//! - end-to-end `run_job` through the thread coordinator (native backend).
+//! - factorization-cached vs uncached decode on a repeated straggler
+//!   pattern, and batched multi-RHS vs per-request decode;
+//! - MDS encode (setup path), blocked single- vs multi-threaded;
+//! - end-to-end `run_job` through the thread coordinator (native backend);
+//! - prepared-job vs cold batched serving (the encode-hoisting fast path).
+//!
+//! Set `BENCH_JSON_DIR` (or run `make bench-json`) to capture `name →
+//! ns/op` into `BENCH_PR2.json`.
 
 use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
-use hetcoded::coding::{Generator, GeneratorKind, Matrix};
-use hetcoded::coordinator::{run_job, JobConfig, NativeCompute};
+use hetcoded::coding::{Decoder, Generator, GeneratorKind, Matrix};
+use hetcoded::coordinator::{
+    run_job, run_job_batched, JobConfig, NativeCompute, PreparedJob,
+};
 use hetcoded::math::{wm1_neg_exp, Rng};
 use hetcoded::model::{ClusterSpec, LatencyModel};
 use hetcoded::sim::{latency_any_k, latency_per_group, SimConfig};
@@ -67,6 +75,55 @@ fn main() {
         });
     }
 
+    section("decode at serving sizes: cached vs uncached, batched vs per-request");
+    for k in [256usize, 1024] {
+        let n = k * 3 / 2;
+        let gen = Generator::new(GeneratorKind::SystematicRandom, n, k, 1).unwrap();
+        // Repeated straggler pattern: the all-parity support (worst case
+        // for conditioning, and the kind of fixed pattern group-boundary
+        // straggling produces batch after batch).
+        let received: Vec<(usize, f64)> =
+            (n - k..n).map(|i| (i, rng.normal())).collect();
+        let mut cold = Decoder::with_cache_capacity(gen.clone(), 0);
+        run_quick(&format!("decode k={k} uncached (refactor per call)"), || {
+            black_box(cold.decode(&received).unwrap());
+        });
+        let mut warm = Decoder::new(gen.clone());
+        warm.decode(&received).unwrap(); // populate the factorization cache
+        run_quick(&format!("decode k={k} cached (repeated pattern)"), || {
+            black_box(warm.decode(&received).unwrap());
+        });
+        let rows: Vec<usize> = (n - k..n).collect();
+        let cols: Vec<Vec<f64>> =
+            (0..32).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+        let mut dec = Decoder::new(gen.clone());
+        dec.decode_batch(&rows, &cols).unwrap(); // warm cache for both
+        run_quick(&format!("decode k={k} B=32 multi-RHS (one pass)"), || {
+            black_box(dec.decode_batch(&rows, &cols).unwrap());
+        });
+        run_quick(&format!("decode k={k} B=32 per-request loop"), || {
+            for col in &cols {
+                let pairs: Vec<(usize, f64)> =
+                    rows.iter().copied().zip(col.iter().copied()).collect();
+                black_box(dec.decode(&pairs).unwrap());
+            }
+        });
+    }
+
+    section("blocked matmul (encode kernel at serving sizes)");
+    {
+        let (k, n, d) = (1024usize, 1536usize, 256usize);
+        let gen =
+            Generator::new(GeneratorKind::SystematicRandom, n, k, 1).unwrap();
+        let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), 1 thread"), || {
+            black_box(gen.matrix().matmul_blocked(&a, 1));
+        });
+        run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), auto threads"), || {
+            black_box(gen.matrix().matmul_blocked(&a, 0));
+        });
+    }
+
     section("coordinator end-to-end (native backend)");
     let live_spec = ClusterSpec::new(
         vec![
@@ -84,6 +141,46 @@ fn main() {
     run_quick("run_job: N=24 workers, k=256, d=256", || {
         black_box(
             run_job(&live_spec, &live_alloc, &a, &x, Arc::new(NativeCompute), &jcfg)
+                .unwrap(),
+        );
+    });
+
+    section("prepared vs cold batched serving (k=256, d=256, B=8)");
+    let requests: Vec<Vec<f64>> =
+        (0..8).map(|_| (0..256).map(|_| rng.normal()).collect()).collect();
+    run_quick("serve batch cold (re-encode per batch)", || {
+        black_box(
+            run_job_batched(
+                &live_spec,
+                &live_alloc,
+                &a,
+                &requests,
+                Arc::new(NativeCompute),
+                &jcfg,
+            )
+            .unwrap(),
+        );
+    });
+    let mut prepared =
+        PreparedJob::new(&live_spec, &live_alloc, &a, &jcfg).unwrap();
+    let mut batch_seed = 0u64;
+    run_quick("serve batch prepared (steady state)", || {
+        batch_seed += 1;
+        black_box(
+            prepared
+                .run_batch(&requests, Arc::new(NativeCompute), batch_seed)
+                .unwrap(),
+        );
+    });
+    // Production shape: skip the O(k·d)-per-request ground-truth matvec.
+    let noverify = JobConfig { verify_decode: false, ..jcfg.clone() };
+    let mut prepared_nv =
+        PreparedJob::new(&live_spec, &live_alloc, &a, &noverify).unwrap();
+    run_quick("serve batch prepared (no verify)", || {
+        batch_seed += 1;
+        black_box(
+            prepared_nv
+                .run_batch(&requests, Arc::new(NativeCompute), batch_seed)
                 .unwrap(),
         );
     });

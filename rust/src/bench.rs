@@ -53,6 +53,33 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
+/// When the `BENCH_JSON_DIR` environment variable is set, every measured
+/// benchmark appends a `"name": ns_per_op,` line to
+/// `$BENCH_JSON_DIR/<bench-binary>.lines`; `make bench-json` merges the
+/// per-binary fragments into `BENCH_PR2.json` (flat name → ns/op map) so
+/// the repo's bench trajectory is machine-diffable across PRs.
+fn json_append(name: &str, median_secs: f64) {
+    let Ok(dir) = std::env::var("BENCH_JSON_DIR") else {
+        return;
+    };
+    let stem = std::env::args()
+        .next()
+        .and_then(|p| {
+            std::path::Path::new(&p)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+        })
+        .unwrap_or_else(|| "bench".into());
+    let path = std::path::Path::new(&dir).join(format!("{stem}.lines"));
+    let line = format!("  \"{}\": {:.0},\n", name.replace('"', "'"), median_secs * 1e9);
+    use std::io::Write;
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(&path)
+    {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
 /// Benchmark `f`, auto-calibrating iterations to ~`target` of measurement.
 pub fn run_with_target<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
     // Warm-up & calibration: time one call, derive iteration count.
@@ -75,6 +102,7 @@ pub fn run_with_target<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Be
         mean: s.mean(),
     };
     println!("{}", r.report());
+    json_append(&r.name, r.median);
     r
 }
 

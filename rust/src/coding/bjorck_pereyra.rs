@@ -15,40 +15,105 @@
 use crate::{Error, Result};
 
 /// Solve `V a = f` for `V[i][j] = nodes[i]^j` (square, distinct nodes).
+///
+/// One-shot convenience over [`VandermondeFactor`]; callers solving many
+/// RHS on the same node set should build the factor once instead.
 pub fn solve_vandermonde(nodes: &[f64], f: &[f64]) -> Result<Vec<f64>> {
-    let n = nodes.len();
-    if f.len() != n {
-        return Err(Error::Numerical("rhs length mismatch".into()));
-    }
-    if n == 0 {
-        return Ok(vec![]);
-    }
-    // Distinctness guard (the MDS property requires it).
-    for i in 0..n {
-        for j in (i + 1)..n {
-            if (nodes[i] - nodes[j]).abs() < 1e-14 {
-                return Err(Error::Numerical(format!(
-                    "nodes {i} and {j} coincide ({})",
-                    nodes[i]
-                )));
+    VandermondeFactor::new(nodes)?.solve(f)
+}
+
+/// Precomputed Björck–Pereyra "factorization" of a Vandermonde system on a
+/// fixed node set.
+///
+/// Stage 1 of BP divides each divided difference by a node difference
+/// `x_i − x_{i−level}` that depends only on the nodes, not the RHS. This
+/// type inverts all `n(n−1)/2` of them once, so every subsequent solve is
+/// pure multiply-adds — the per-RHS critical path of a decode on a repeated
+/// straggler pattern. This is what the decoder's factorization cache stores
+/// for Vandermonde generators.
+#[derive(Clone, Debug)]
+pub struct VandermondeFactor {
+    nodes: Vec<f64>,
+    /// `1 / (x_i − x_{i−level})`, flattened over `level = 1..n`, `i = level..n`.
+    inv: Vec<f64>,
+}
+
+impl VandermondeFactor {
+    /// Validate node distinctness and precompute the reciprocals.
+    pub fn new(nodes: &[f64]) -> Result<Self> {
+        let n = nodes.len();
+        // Distinctness guard (the MDS property requires it).
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (nodes[i] - nodes[j]).abs() < 1e-14 {
+                    return Err(Error::Numerical(format!(
+                        "nodes {i} and {j} coincide ({})",
+                        nodes[i]
+                    )));
+                }
             }
         }
-    }
-    let mut a = f.to_vec();
-    // Stage 1: divided differences (Newton coefficients).
-    for level in 1..n {
-        for i in (level..n).rev() {
-            a[i] = (a[i] - a[i - 1]) / (nodes[i] - nodes[i - level]);
+        let mut inv = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+        for level in 1..n {
+            for i in level..n {
+                inv.push(1.0 / (nodes[i] - nodes[i - level]));
+            }
         }
+        Ok(VandermondeFactor { nodes: nodes.to_vec(), inv })
     }
-    // Stage 2: expand Newton form into monomial coefficients.
-    for level in (0..n - 1).rev() {
-        for i in level..n - 1 {
-            let t = a[i + 1] * nodes[level];
-            a[i] -= t;
+
+    /// System size `n`.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True for the degenerate 0×0 system.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Solve in place: `a` enters as the RHS `f`, leaves as the monomial
+    /// coefficients.
+    pub fn solve_into(&self, a: &mut [f64]) -> Result<()> {
+        let n = self.nodes.len();
+        if a.len() != n {
+            return Err(Error::Numerical("rhs length mismatch".into()));
         }
+        if n == 0 {
+            return Ok(());
+        }
+        // Stage 1: divided differences (Newton coefficients).
+        let mut off = 0usize;
+        for level in 1..n {
+            let lvl_inv = &self.inv[off..off + (n - level)];
+            for i in (level..n).rev() {
+                a[i] = (a[i] - a[i - 1]) * lvl_inv[i - level];
+            }
+            off += n - level;
+        }
+        // Stage 2: expand Newton form into monomial coefficients.
+        for level in (0..n - 1).rev() {
+            for i in level..n - 1 {
+                let t = a[i + 1] * self.nodes[level];
+                a[i] -= t;
+            }
+        }
+        Ok(())
     }
-    Ok(a)
+
+    /// Solve a single RHS.
+    pub fn solve(&self, f: &[f64]) -> Result<Vec<f64>> {
+        let mut a = f.to_vec();
+        self.solve_into(&mut a)?;
+        Ok(a)
+    }
+
+    /// Solve a batch of RHS vectors on the same node set (multi-RHS
+    /// decode). Each output equals [`VandermondeFactor::solve`] of the
+    /// corresponding input.
+    pub fn solve_multi(&self, fs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        fs.iter().map(|f| self.solve(f)).collect()
+    }
 }
 
 /// Evaluate `p(x) = Σ a_j x^j` (Horner) — used by tests to verify residuals.
@@ -128,6 +193,24 @@ mod tests {
         // catastrophic; BP must still be at least as accurate, and tiny.
         assert!(bp_err <= lu_err * 1.5, "BP err {bp_err} vs LU err {lu_err}");
         assert!(bp_err < 1e-7, "BP err {bp_err}");
+    }
+
+    #[test]
+    fn factor_reuse_is_bit_identical_and_multi_matches_single() {
+        let nodes = chebyshev_nodes(20);
+        let mut rng = Rng::new(11);
+        let fs: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..20).map(|_| rng.normal()).collect()).collect();
+        let factor = VandermondeFactor::new(&nodes).unwrap();
+        assert_eq!(factor.len(), 20);
+        assert!(!factor.is_empty());
+        let multi = factor.solve_multi(&fs).unwrap();
+        for (f, m) in fs.iter().zip(&multi) {
+            // The one-shot helper builds the same factor, so results are
+            // bit-identical across single / multi / repeated solves.
+            assert_eq!(m, &solve_vandermonde(&nodes, f).unwrap());
+            assert_eq!(m, &factor.solve(f).unwrap());
+        }
     }
 
     #[test]

@@ -3,74 +3,338 @@
 //! The master receives pairs `(global_row_index, ⟨Ã_row, x⟩)`. Since
 //! `⟨Ã_i, x⟩ = G_i · (A x)`, collecting a row set `B` with `|B| = k` yields
 //! the linear system `G_B · z = y_B` whose solution is `z = A·x`.
+//!
+//! # Serving fast path
+//!
+//! A serving system decodes thousands of times against the same generator,
+//! and — because straggling is dominated by the group structure — the same
+//! few received-row patterns recur constantly. The decoder therefore keeps:
+//!
+//! - **reusable scratch** (a duplicate-check bitset and staging buffers),
+//!   so the hot path performs no per-call allocation of `O(n)` temporaries;
+//! - an **LRU factorization cache** keyed by the sorted first-`k` received
+//!   row set: a repeated pattern — in any arrival order — skips the `O(k³)`
+//!   LU factorization (or the `O(k²)` Björck–Pereyra reciprocal setup) and
+//!   pays only the `O(k²)` solve;
+//! - a **batched multi-RHS path** ([`Decoder::decode_batch`]) that decodes
+//!   a whole request batch sharing one row support through a single
+//!   factorization (the LU arm additionally sweeps all columns per
+//!   substitution pass).
 
+use crate::coding::bjorck_pereyra::VandermondeFactor;
+use crate::coding::linalg::Lu;
 use crate::coding::{Generator, Matrix};
 use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Default number of cached decode factorizations. Under group
+/// heterogeneity only ~`G` distinct group-boundary straggle patterns
+/// dominate, so a small cache captures the steady state.
+pub const DEFAULT_FACTOR_CACHE: usize = 32;
+
+/// One decode-system factorization: LU for general generators,
+/// Björck–Pereyra reciprocals for Vandermonde generators.
+enum Factor {
+    Lu(Lu),
+    Vandermonde(VandermondeFactor),
+}
+
+impl Factor {
+    /// Solve for a single RHS.
+    fn solve_one(&self, ys: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            Factor::Lu(lu) => lu.solve(ys),
+            Factor::Vandermonde(v) => v
+                .solve(ys)
+                .map_err(|e| Error::Decode(format!("BP solve failed: {e}"))),
+        }
+    }
+
+    /// Solve for a batch of RHS columns (each of length `k`) sharing this
+    /// factorization: the LU arm sweeps all columns per substitution pass
+    /// ([`Lu::solve_matrix`]); the Vandermonde arm solves per column but
+    /// shares the precomputed reciprocals. Column `b` of the result equals
+    /// [`Factor::solve_one`] of input `b`.
+    fn solve_many(&self, k: usize, columns: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        match self {
+            Factor::Lu(lu) => {
+                let b = Matrix::from_fn(k, columns.len(), |r, c| columns[c][r]);
+                let x = lu.solve_matrix(&b)?;
+                Ok((0..columns.len())
+                    .map(|c| (0..k).map(|r| x[(r, c)]).collect())
+                    .collect())
+            }
+            Factor::Vandermonde(v) => v
+                .solve_multi(columns)
+                .map_err(|e| Error::Decode(format!("BP solve failed: {e}"))),
+        }
+    }
+}
+
+/// Build the factorization for an ordered row subset of the generator.
+fn factor_rows(generator: &Generator, rows: &[usize]) -> Result<Factor> {
+    if let Some(nodes) = generator.nodes() {
+        // Vandermonde decode IS polynomial interpolation on the received
+        // rows' nodes — O(k²) and far more accurate than LU on the same
+        // exponentially ill-conditioned monomial system.
+        let xs: Vec<f64> = rows.iter().map(|&i| nodes[i]).collect();
+        return Ok(Factor::Vandermonde(VandermondeFactor::new(&xs)?));
+    }
+    Ok(Factor::Lu(generator.submatrix(rows).lu()?))
+}
+
+struct CacheEntry {
+    last_used: u64,
+    factor: Factor,
+}
+
+/// LRU cache of decode factorizations keyed by the **sorted** first-`k`
+/// received row subset. The decode system's solution does not depend on
+/// equation order, so the decoder always solves the row-sorted system:
+/// two batches whose first `k` rows are the same *set* — the common case
+/// under group heterogeneity, where thread scheduling jitters the arrival
+/// order within a straggle pattern — share one cache entry and produce
+/// bit-identical results.
+struct FactorCache {
+    cap: usize,
+    stamp: u64,
+    map: HashMap<Vec<usize>, CacheEntry>,
+    /// Holding slot when caching is disabled (`cap == 0`).
+    uncached: Option<Factor>,
+    hits: u64,
+    misses: u64,
+}
+
+impl FactorCache {
+    fn new(cap: usize) -> Self {
+        FactorCache {
+            cap,
+            stamp: 0,
+            map: HashMap::new(),
+            uncached: None,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fetch the factorization for `rows`, building it on a miss. At
+    /// capacity the least-recently-used entry is evicted (O(cap) scan —
+    /// the cache is small by design). Build failures are not cached.
+    ///
+    /// The hit path hashes the key twice (`get_mut` + the final `get`):
+    /// returning the reference out of the `get_mut` borrow would extend
+    /// that borrow over the insert arm, which NLL rejects. Hashing an
+    /// O(k) key is noise next to the O(k²) solve that follows.
+    fn get_or_build<F>(&mut self, rows: &[usize], build: F) -> Result<&Factor>
+    where
+        F: FnOnce() -> Result<Factor>,
+    {
+        self.stamp += 1;
+        if self.cap == 0 {
+            self.misses += 1;
+            self.uncached = Some(build()?);
+            return Ok(self.uncached.as_ref().expect("just stored"));
+        }
+        if let Some(e) = self.map.get_mut(rows) {
+            self.hits += 1;
+            e.last_used = self.stamp;
+        } else {
+            self.misses += 1;
+            let factor = build()?;
+            if self.map.len() >= self.cap {
+                if let Some(victim) = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(key, _)| key.clone())
+                {
+                    self.map.remove(&victim);
+                }
+            }
+            self.map.insert(
+                rows.to_vec(),
+                CacheEntry { last_used: self.stamp, factor },
+            );
+        }
+        Ok(&self.map.get(rows).expect("present or just inserted").factor)
+    }
+
+    /// Drop the `cap == 0` holding slot so a disabled cache does not keep
+    /// the last O(k²) factorization alive between decodes.
+    fn release_uncached(&mut self) {
+        self.uncached = None;
+    }
+}
+
+/// Reusable per-decoder scratch so the decode hot path allocates nothing
+/// proportional to `n` per call.
+#[derive(Default)]
+struct DecodeScratch {
+    /// Duplicate/range bitset over coded-row indices, one bit per row.
+    seen: Vec<u64>,
+    /// Staged first-`k` row indices in arrival order (mutated by the
+    /// singular fallback).
+    rows: Vec<usize>,
+    /// Staged first-`k` values in arrival order.
+    ys: Vec<f64>,
+    /// Argsort of `rows` (the arrival → sorted permutation).
+    order: Vec<usize>,
+    /// `rows` in sorted order — the cache key and solve row order.
+    sorted_rows: Vec<usize>,
+    /// `ys` permuted to match `sorted_rows`.
+    sorted_ys: Vec<f64>,
+}
+
+impl DecodeScratch {
+    /// Rebuild `order` (argsort) and `sorted_rows` from the staged rows.
+    fn sort_staged_rows(&mut self) {
+        let k = self.rows.len();
+        self.order.clear();
+        self.order.extend(0..k);
+        let rows = &self.rows;
+        self.order.sort_unstable_by_key(|&i| rows[i]);
+        self.sorted_rows.clear();
+        for &i in &self.order {
+            self.sorted_rows.push(self.rows[i]);
+        }
+    }
+
+    /// Permute the staged values to match `sorted_rows` (single-RHS path;
+    /// the batch path permutes each request column directly via `order`).
+    fn permute_ys(&mut self) {
+        self.sorted_ys.clear();
+        for &i in &self.order {
+            self.sorted_ys.push(self.ys[i]);
+        }
+    }
+}
 
 /// Decoder bound to a generator.
-#[derive(Clone, Debug)]
 pub struct Decoder {
     generator: Generator,
+    scratch: DecodeScratch,
+    cache: FactorCache,
+}
+
+impl Clone for Decoder {
+    /// Clones the generator binding; scratch and cache start empty.
+    fn clone(&self) -> Self {
+        Decoder::with_cache_capacity(self.generator.clone(), self.cache.cap)
+    }
+}
+
+impl std::fmt::Debug for Decoder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Decoder")
+            .field("generator", &self.generator)
+            .field("cache_entries", &self.cache.map.len())
+            .field("cache_hits", &self.cache.hits)
+            .field("cache_misses", &self.cache.misses)
+            .finish()
+    }
 }
 
 impl Decoder {
-    /// Wrap a generator.
+    /// Wrap a generator (factorization cache at the default capacity).
+    ///
+    /// Memory note: the cache is capped by *entry count*, and each cached
+    /// LU factorization holds `k²` doubles (a `VandermondeFactor` holds
+    /// `~k²/2`) — at `k = 1024` that is 8 MiB per entry, up to ~256 MiB at
+    /// the default capacity of 32. Size it explicitly via
+    /// [`Decoder::with_cache_capacity`] when `k` is large or straggle
+    /// patterns are diverse.
     pub fn new(generator: Generator) -> Self {
-        Decoder { generator }
+        Decoder::with_cache_capacity(generator, DEFAULT_FACTOR_CACHE)
+    }
+
+    /// Wrap a generator with an explicit factorization-cache capacity
+    /// (`0` disables caching — every decode refactorizes). Each entry
+    /// costs `O(k²)` doubles; see [`Decoder::new`].
+    pub fn with_cache_capacity(generator: Generator, capacity: usize) -> Self {
+        Decoder {
+            generator,
+            scratch: DecodeScratch::default(),
+            cache: FactorCache::new(capacity),
+        }
+    }
+
+    /// Factorization-cache hit/miss counters (since construction).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Number of factorizations currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.map.len()
+    }
+
+    /// Reject duplicate / out-of-range indices using the reusable bitset.
+    fn check_indices<'a>(
+        seen: &mut Vec<u64>,
+        n: usize,
+        indices: impl Iterator<Item = &'a usize>,
+    ) -> Result<()> {
+        seen.resize(n.div_ceil(64), 0);
+        seen.fill(0);
+        for &idx in indices {
+            if idx >= n {
+                return Err(Error::Decode(format!("row index {idx} out of range")));
+            }
+            let (word, bit) = (idx / 64, idx % 64);
+            if (seen[word] >> bit) & 1 == 1 {
+                return Err(Error::Decode(format!("duplicate row index {idx}")));
+            }
+            seen[word] |= 1 << bit;
+        }
+        Ok(())
     }
 
     /// Decode `A·x` from received `(row_index, value)` pairs.
     ///
     /// Uses the first `k` received rows; if that submatrix is singular
     /// (probability-zero for the random construction, impossible for
-    /// Vandermonde), later rows are substituted in one at a time.
-    pub fn decode(&self, received: &[(usize, f64)]) -> Result<Vec<f64>> {
-        let k = self.generator.k();
+    /// Vandermonde), later rows are substituted in one at a time. The
+    /// system is solved in row-sorted order — the solution is
+    /// order-independent, and sorting makes the factorization cache hit on
+    /// any arrival permutation of a repeated straggler *set*, skipping
+    /// straight to the `O(k²)` solve.
+    pub fn decode(&mut self, received: &[(usize, f64)]) -> Result<Vec<f64>> {
+        let Decoder { generator, scratch, cache } = self;
+        let k = generator.k();
         if received.len() < k {
             return Err(Error::Decode(format!(
                 "need {k} rows, got {}",
                 received.len()
             )));
         }
-        // Reject duplicate / out-of-range indices up front.
-        let mut seen = vec![false; self.generator.n()];
-        for &(idx, _) in received {
-            if idx >= self.generator.n() {
-                return Err(Error::Decode(format!("row index {idx} out of range")));
-            }
-            if seen[idx] {
-                return Err(Error::Decode(format!("duplicate row index {idx}")));
-            }
-            seen[idx] = true;
+        Self::check_indices(
+            &mut scratch.seen,
+            generator.n(),
+            received.iter().map(|(idx, _)| idx),
+        )?;
+        scratch.rows.clear();
+        scratch.ys.clear();
+        for &(idx, v) in &received[..k] {
+            scratch.rows.push(idx);
+            scratch.ys.push(v);
         }
-
-        let active: Vec<(usize, f64)> = received[..k].to_vec();
-
-        // Vandermonde generators decode via Björck–Pereyra (O(k²), far more
-        // accurate than LU on the same ill-conditioned system): the decode
-        // IS polynomial interpolation on the received rows' nodes.
-        if let Some(nodes) = self.generator.nodes() {
-            let xs: Vec<f64> = active.iter().map(|&(i, _)| nodes[i]).collect();
-            let ys: Vec<f64> = active.iter().map(|&(_, v)| v).collect();
-            return crate::coding::bjorck_pereyra::solve_vandermonde(&xs, &ys)
-                .map_err(|e| Error::Decode(format!("BP solve failed: {e}")));
-        }
-
-        let mut active = active;
         let mut spare = k; // next candidate in `received` to swap in
         loop {
-            let rows: Vec<usize> = active.iter().map(|&(i, _)| i).collect();
-            let sub = self.generator.submatrix(&rows);
-            match sub.lu() {
-                Ok(lu) => {
-                    let y: Vec<f64> = active.iter().map(|&(_, v)| v).collect();
-                    return lu.solve(&y);
+            scratch.sort_staged_rows();
+            let rows = &scratch.sorted_rows[..];
+            match cache.get_or_build(rows, || factor_rows(generator, rows)) {
+                Ok(factor) => {
+                    scratch.permute_ys();
+                    let out = factor.solve_one(&scratch.sorted_ys);
+                    cache.release_uncached();
+                    return out;
                 }
                 Err(_) if spare < received.len() => {
                     // Replace the row most likely to be the dependent one:
                     // rotate through positions deterministically.
-                    let pos = spare - k;
-                    active[pos % k] = received[spare];
+                    let pos = (spare - k) % k;
+                    scratch.rows[pos] = received[spare].0;
+                    scratch.ys[pos] = received[spare].1;
                     spare += 1;
                 }
                 Err(e) => {
@@ -82,9 +346,77 @@ impl Decoder {
         }
     }
 
+    /// Decode a whole request batch sharing one received row support.
+    ///
+    /// `rows` lists the received coded-row indices in arrival order
+    /// (`rows.len() >= k`); `columns[b]` holds request `b`'s received
+    /// values aligned with `rows`. One factorization (cached or fresh) of
+    /// the sorted first-`k` subset serves every request; each output is
+    /// bit-identical to what [`Decoder::decode`] returns for the
+    /// corresponding `(row, value)` pairs.
+    pub fn decode_batch(
+        &mut self,
+        rows: &[usize],
+        columns: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>> {
+        let k = self.generator.k();
+        if rows.len() < k {
+            return Err(Error::Decode(format!(
+                "need {k} rows, got {}",
+                rows.len()
+            )));
+        }
+        for (b, col) in columns.iter().enumerate() {
+            if col.len() != rows.len() {
+                return Err(Error::Decode(format!(
+                    "request {b} has {} values for {} rows",
+                    col.len(),
+                    rows.len()
+                )));
+            }
+        }
+        {
+            let Decoder { generator, scratch, cache } = &mut *self;
+            Self::check_indices(&mut scratch.seen, generator.n(), rows.iter())?;
+            // Sort the shared first-`k` support once; permute each
+            // request's values to match.
+            scratch.rows.clear();
+            scratch.rows.extend_from_slice(&rows[..k]);
+            scratch.sort_staged_rows();
+            let key = &scratch.sorted_rows[..];
+            if let Ok(factor) =
+                cache.get_or_build(key, || factor_rows(generator, key))
+            {
+                let order = &scratch.order;
+                let sorted_cols: Vec<Vec<f64>> = columns
+                    .iter()
+                    .map(|col| order.iter().map(|&i| col[i]).collect())
+                    .collect();
+                let out = factor.solve_many(k, &sorted_cols);
+                cache.release_uncached();
+                return out;
+            }
+        }
+        // Probability-zero path: the shared first-`k` submatrix is
+        // singular. Fall back to per-request decode, which substitutes
+        // spare rows until an invertible subset is found.
+        columns
+            .iter()
+            .map(|col| {
+                let pairs: Vec<(usize, f64)> =
+                    rows.iter().copied().zip(col.iter().copied()).collect();
+                self.decode(&pairs)
+            })
+            .collect()
+    }
+
     /// Convenience for tests: decode and compare against ground truth,
     /// returning the max absolute error.
-    pub fn decode_error(&self, received: &[(usize, f64)], truth: &[f64]) -> Result<f64> {
+    pub fn decode_error(
+        &mut self,
+        received: &[(usize, f64)],
+        truth: &[f64],
+    ) -> Result<f64> {
         let z = self.decode(received)?;
         if z.len() != truth.len() {
             return Err(Error::Decode("length mismatch vs truth".into()));
@@ -198,18 +530,23 @@ mod tests {
     #[test]
     fn decode_needs_k_rows() {
         let gen = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
-        let dec = Decoder::new(gen);
+        let mut dec = Decoder::new(gen);
         assert!(dec.decode(&[(0, 1.0), (1, 2.0), (2, 3.0)]).is_err());
     }
 
     #[test]
     fn decode_rejects_duplicates_and_out_of_range() {
         let gen = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
-        let dec = Decoder::new(gen);
+        let mut dec = Decoder::new(gen);
         let dup = [(0, 1.0), (0, 1.0), (1, 2.0), (2, 3.0)];
         assert!(dec.decode(&dup).is_err());
         let oor = [(0, 1.0), (1, 2.0), (2, 3.0), (99, 4.0)];
         assert!(dec.decode(&oor).is_err());
+        // Batch path enforces the same invariants plus column alignment.
+        assert!(dec.decode_batch(&[0, 0, 1, 2], &[vec![0.0; 4]]).is_err());
+        assert!(dec.decode_batch(&[0, 1, 2, 99], &[vec![0.0; 4]]).is_err());
+        assert!(dec.decode_batch(&[0, 1, 2], &[vec![0.0; 3]]).is_err());
+        assert!(dec.decode_batch(&[0, 1, 2, 3], &[vec![0.0; 3]]).is_err());
     }
 
     #[test]
@@ -233,5 +570,92 @@ mod tests {
         let rows: Vec<usize> = (n - k..n).collect();
         let err = roundtrip_check(&gen, &a, &x, &rows).unwrap();
         assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn repeated_pattern_hits_cache_and_stays_bit_identical() {
+        for kind in [GeneratorKind::SystematicRandom, GeneratorKind::Vandermonde] {
+            let gen = Generator::new(kind, 24, 12, 3).unwrap();
+            let mut rng = Rng::new(44);
+            let received: Vec<(usize, f64)> =
+                (4..16).map(|i| (i, rng.normal())).collect();
+            let mut cached = Decoder::new(gen.clone());
+            let mut cold = Decoder::with_cache_capacity(gen, 0);
+            let first = cached.decode(&received).unwrap();
+            let again = cached.decode(&received).unwrap();
+            let uncached = cold.decode(&received).unwrap();
+            assert_eq!(first, again, "{kind:?}: cache hit changed the result");
+            assert_eq!(first, uncached, "{kind:?}: caching changed the result");
+            let (hits, misses) = cached.cache_stats();
+            assert_eq!((hits, misses), (1, 1), "{kind:?}");
+            assert_eq!(cached.cache_len(), 1);
+            let (h0, m0) = cold.cache_stats();
+            assert_eq!((h0, m0), (0, 2), "{kind:?}: disabled cache must miss");
+            assert_eq!(cold.cache_len(), 0);
+        }
+    }
+
+    #[test]
+    fn arrival_order_permutations_share_one_factorization() {
+        // The cache keys on the sorted row *set*; any arrival order of the
+        // same straggle pattern hits it and decodes to identical values.
+        let gen =
+            Generator::new(GeneratorKind::SystematicRandom, 16, 6, 13).unwrap();
+        let pairs: Vec<(usize, f64)> = vec![
+            (2, 0.7),
+            (11, -1.3),
+            (5, 2.2),
+            (14, 0.1),
+            (8, -0.4),
+            (0, 1.9),
+        ];
+        let mut dec = Decoder::new(gen);
+        let baseline = dec.decode(&pairs).unwrap();
+        let mut rng = Rng::new(66);
+        for _ in 0..5 {
+            let mut shuffled = pairs.clone();
+            rng.shuffle(&mut shuffled);
+            assert_eq!(dec.decode(&shuffled).unwrap(), baseline);
+        }
+        let (hits, misses) = dec.cache_stats();
+        assert_eq!((hits, misses), (5, 1));
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let gen = Generator::new(GeneratorKind::SystematicRandom, 12, 4, 5).unwrap();
+        let mut dec = Decoder::with_cache_capacity(gen, 2);
+        let pat = |s: usize| -> Vec<(usize, f64)> {
+            (s..s + 4).map(|i| (i, i as f64 + 0.5)).collect()
+        };
+        dec.decode(&pat(0)).unwrap(); // miss → {0}
+        dec.decode(&pat(1)).unwrap(); // miss → {0,1}
+        dec.decode(&pat(0)).unwrap(); // hit, refreshes 0
+        dec.decode(&pat(2)).unwrap(); // miss → evicts 1 → {0,2}
+        dec.decode(&pat(1)).unwrap(); // miss again (was evicted)
+        let (hits, misses) = dec.cache_stats();
+        assert_eq!((hits, misses), (1, 4));
+        assert_eq!(dec.cache_len(), 2);
+    }
+
+    #[test]
+    fn decode_batch_matches_single_decodes_bitwise() {
+        for kind in [GeneratorKind::SystematicRandom, GeneratorKind::Vandermonde] {
+            let gen = Generator::new(kind, 20, 10, 6).unwrap();
+            let mut rng = Rng::new(55);
+            let rows: Vec<usize> = vec![3, 17, 5, 11, 0, 19, 8, 2, 14, 9, 6, 12];
+            let columns: Vec<Vec<f64>> = (0..5)
+                .map(|_| (0..rows.len()).map(|_| rng.normal()).collect())
+                .collect();
+            let mut dec = Decoder::new(gen);
+            let batch = dec.decode_batch(&rows, &columns).unwrap();
+            assert_eq!(batch.len(), 5);
+            for (col, got) in columns.iter().zip(&batch) {
+                let pairs: Vec<(usize, f64)> =
+                    rows.iter().copied().zip(col.iter().copied()).collect();
+                let single = dec.decode(&pairs).unwrap();
+                assert_eq!(got, &single, "{kind:?}");
+            }
+        }
     }
 }

@@ -2,12 +2,25 @@
 
 use crate::coding::{Generator, Matrix};
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Encodes a data matrix and slices the coded rows into per-worker chunks
 /// according to a load allocation.
-#[derive(Clone, Debug)]
+///
+/// The encoder counts its own `encode` invocations
+/// ([`Encoder::encode_calls`]) so serving paths can *measure* — not merely
+/// declare — that steady-state batches perform no encode work.
+#[derive(Debug)]
 pub struct Encoder {
     generator: Generator,
+    encodes: AtomicU64,
+}
+
+impl Clone for Encoder {
+    /// Clones the generator binding; the clone's call counter starts at 0.
+    fn clone(&self) -> Self {
+        Encoder::new(self.generator.clone())
+    }
 }
 
 /// One worker's coded chunk: the coded rows it must multiply with `x`,
@@ -25,7 +38,7 @@ pub struct WorkerChunk {
 impl Encoder {
     /// Wrap a generator.
     pub fn new(generator: Generator) -> Self {
-        Encoder { generator }
+        Encoder { generator, encodes: AtomicU64::new(0) }
     }
 
     /// The underlying generator.
@@ -33,8 +46,22 @@ impl Encoder {
         &self.generator
     }
 
+    /// Number of `encode`/`encode_with_threads` calls made through this
+    /// encoder instance.
+    pub fn encode_calls(&self) -> u64 {
+        self.encodes.load(Ordering::Relaxed)
+    }
+
     /// Encode: `Ã = G·A`, where `A ∈ R^{k×d}`.
     pub fn encode(&self, a: &Matrix) -> Result<Matrix> {
+        self.encode_with_threads(a, 1)
+    }
+
+    /// Encode through the blocked multi-threaded matmul kernel (`threads ==
+    /// 0` uses available parallelism). The encode is the setup-path
+    /// bottleneck at serving sizes — O(n·k·d) — and parallelizes over coded
+    /// rows with bit-identical results for any thread count.
+    pub fn encode_with_threads(&self, a: &Matrix, threads: usize) -> Result<Matrix> {
         if a.rows() != self.generator.k() {
             return Err(Error::InvalidSpec(format!(
                 "data matrix has {} rows, code dimension k={}",
@@ -42,7 +69,8 @@ impl Encoder {
                 self.generator.k()
             )));
         }
-        Ok(self.generator.matrix().matmul(a))
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        Ok(self.generator.matrix().matmul_blocked(a, threads))
     }
 
     /// Split coded rows into per-worker chunks by an integer load vector
@@ -97,11 +125,18 @@ mod tests {
         let g = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
         let enc = Encoder::new(g);
         let a = random_matrix(4, 6, 2);
+        assert_eq!(enc.encode_calls(), 0);
         let coded = enc.encode(&a).unwrap();
         assert_eq!(coded.rows(), 10);
         for i in 0..4 {
             assert_eq!(coded.row(i), a.row(i), "systematic row {i}");
         }
+        // The call counter measures actual encode invocations (thread
+        // count is irrelevant, and results are bit-identical).
+        let threaded = enc.encode_with_threads(&a, 0).unwrap();
+        assert_eq!(threaded, coded);
+        assert_eq!(enc.encode_calls(), 2);
+        assert_eq!(enc.clone().encode_calls(), 0);
     }
 
     #[test]

@@ -91,24 +91,52 @@ impl Matrix {
         y
     }
 
-    /// Matrix product `self · other`.
+    /// Matrix product `self · other` (single-threaded blocked kernel).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        self.matmul_blocked(other, 1)
+    }
+
+    /// Cache-blocked matrix product with a `threads` knob (`0` = available
+    /// parallelism, matching [`crate::sim::SimConfig::threads`]).
+    ///
+    /// The kernel tiles the i-k-j loop so a `MM_KC × MM_JC` block of
+    /// `other` stays resident in cache across a sweep of `self`'s rows, and
+    /// partitions output *rows* across threads. Per output element the
+    /// `k`-summation order is unchanged, so the result is bit-identical to
+    /// the naive kernel for every tile shape and thread count.
+    pub fn matmul_blocked(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.rows, "dimension mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        // i-k-j loop order: streams `other` rows, cache-friendly row-major.
-        for i in 0..self.rows {
-            for kk in 0..self.cols {
-                let a = self.data[i * self.cols + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.data[kk * other.cols..(kk + 1) * other.cols];
-                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
-                    *o += a * b;
-                }
-            }
+        if self.rows == 0 || other.cols == 0 {
+            return out;
         }
+        let hw = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        // Below ~1 MFLOP, thread spawn overhead dominates any speedup.
+        let flops = self.rows * self.cols * other.cols;
+        let threads = if flops < (1 << 20) { 1 } else { hw.min(self.rows).max(1) };
+        if threads <= 1 {
+            matmul_block(
+                self.rows, self.cols, other.cols, &self.data, &other.data,
+                &mut out.data,
+            );
+            return out;
+        }
+        let rows_per = self.rows.div_ceil(threads);
+        let (kdim, n) = (self.cols, other.cols);
+        std::thread::scope(|scope| {
+            for (t, out_rows) in out.data.chunks_mut(rows_per * n).enumerate() {
+                let m = out_rows.len() / n;
+                let a_rows = &self.data[t * rows_per * kdim..][..m * kdim];
+                let b = &other.data;
+                scope.spawn(move || {
+                    matmul_block(m, kdim, n, a_rows, b, out_rows);
+                });
+            }
+        });
         out
     }
 
@@ -137,6 +165,40 @@ impl Matrix {
     /// Solve `self · x = b` for square `self`.
     pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
         self.lu()?.solve(b)
+    }
+}
+
+/// `k`-dimension tile: one tile of `other` rows (`MM_KC × MM_JC` doubles =
+/// 256 KiB at the defaults) stays resident in L2 across a sweep of `self`'s
+/// rows, while the active `other` row and output row segment (4 KiB each)
+/// stream through L1.
+const MM_KC: usize = 64;
+/// `j`-dimension tile width.
+const MM_JC: usize = 512;
+
+/// Tiled i-k-j kernel over raw row-major slices: `out (m×n) += a (m×kdim) ·
+/// b (kdim×n)`. `out` must come in zeroed. For each output element the
+/// contributions are accumulated in ascending `k` order (tiles ascend, and
+/// `kk` ascends within a tile), so results match the naive loop bit for bit.
+fn matmul_block(m: usize, kdim: usize, n: usize, a: &[f64], b: &[f64], out: &mut [f64]) {
+    for jc in (0..n).step_by(MM_JC) {
+        let jhi = (jc + MM_JC).min(n);
+        for kc in (0..kdim).step_by(MM_KC) {
+            let khi = (kc + MM_KC).min(kdim);
+            for i in 0..m {
+                let arow = &a[i * kdim..(i + 1) * kdim];
+                let orow = &mut out[i * n + jc..i * n + jhi];
+                for (kk, &av) in arow.iter().enumerate().take(khi).skip(kc) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + jc..kk * n + jhi];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -248,6 +310,63 @@ impl Lu {
         Ok(x)
     }
 
+    /// Solve `A·X = B` for a whole matrix of RHS columns in one pass.
+    ///
+    /// The permutation and both substitution sweeps run row-wise across all
+    /// columns at once (row-major friendly), reusing this factorization —
+    /// the multi-RHS decode fast path. Per column the operation sequence is
+    /// exactly [`Lu::solve`]'s (no terms are skipped, so even NaN/inf inputs
+    /// propagate identically), making each result column bit-identical to a
+    /// single solve of that column.
+    pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
+        if b.rows() != self.n {
+            return Err(Error::Numerical(format!(
+                "rhs has {} rows, factorization is {}×{}",
+                b.rows(),
+                self.n,
+                self.n
+            )));
+        }
+        let n = self.n;
+        let m = b.cols();
+        let mut x = Matrix::zeros(n, m);
+        // Apply the row permutation.
+        for i in 0..n {
+            x.data[i * m..(i + 1) * m].copy_from_slice(b.row(self.perm[i]));
+        }
+        // Forward substitution (unit lower), all columns per row sweep.
+        // No zero-multiplier skip: [`Lu::solve`] has none, and skipping
+        // would diverge on non-finite inputs (0·NaN ≠ nothing).
+        for i in 1..n {
+            let (above, below) = x.data.split_at_mut(i * m);
+            let row_i = &mut below[..m];
+            for j in 0..i {
+                let f = self.lu[i * n + j];
+                let row_j = &above[j * m..(j + 1) * m];
+                for (xi, &xj) in row_i.iter_mut().zip(row_j.iter()) {
+                    *xi -= f * xj;
+                }
+            }
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let (above, below) = x.data.split_at_mut((i + 1) * m);
+            let row_i = &mut above[i * m..(i + 1) * m];
+            for j in (i + 1)..n {
+                let f = self.lu[i * n + j];
+                let row_j = &below[(j - i - 1) * m..(j - i) * m];
+                for (xi, &xj) in row_i.iter_mut().zip(row_j.iter()) {
+                    *xi -= f * xj;
+                }
+            }
+            let d = self.lu[i * n + i];
+            for xi in row_i.iter_mut() {
+                *xi /= d;
+            }
+        }
+        Ok(x)
+    }
+
     /// Determinant from the factorization.
     pub fn det(&self) -> f64 {
         let mut d = self.sign;
@@ -315,6 +434,60 @@ mod tests {
                 assert!((xs - xt).abs() < 1e-8, "n={n}");
             }
         }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_all_shapes() {
+        // Reference kernel: the pre-blocking naive i-k-j loop.
+        fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+            let mut out = Matrix::zeros(a.rows(), b.cols());
+            for i in 0..a.rows() {
+                for kk in 0..a.cols() {
+                    let av = a[(i, kk)];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in 0..b.cols() {
+                        out[(i, j)] += av * b[(kk, j)];
+                    }
+                }
+            }
+            out
+        }
+        let mut rng = Rng::new(9);
+        // Shapes straddling the tile sizes (64/512) and the thread cutoff.
+        for (m, k, n) in [(1, 1, 1), (3, 70, 5), (65, 64, 513), (130, 200, 96)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.normal());
+            let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+            let want = naive(&a, &b);
+            for threads in [1usize, 0, 3] {
+                let got = a.matmul_blocked(&b, threads);
+                assert_eq!(got, want, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matrix_matches_column_solves() {
+        let mut rng = Rng::new(12);
+        for n in [1usize, 4, 17, 64] {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let b = Matrix::from_fn(n, 5, |_, _| rng.normal());
+            let lu = a.lu().unwrap();
+            let x = lu.solve_matrix(&b).unwrap();
+            assert_eq!(x.rows(), n);
+            assert_eq!(x.cols(), 5);
+            for c in 0..5 {
+                let col: Vec<f64> = (0..n).map(|r| b[(r, c)]).collect();
+                let want = lu.solve(&col).unwrap();
+                for r in 0..n {
+                    assert_eq!(x[(r, c)], want[r], "n={n} col={c} row={r}");
+                }
+            }
+        }
+        // Shape mismatch rejected.
+        let a = Matrix::identity(3);
+        assert!(a.lu().unwrap().solve_matrix(&Matrix::zeros(4, 2)).is_err());
     }
 
     #[test]

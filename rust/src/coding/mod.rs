@@ -23,7 +23,8 @@ pub mod encoder;
 pub mod generator;
 pub mod linalg;
 
-pub use decoder::Decoder;
+pub use bjorck_pereyra::VandermondeFactor;
+pub use decoder::{Decoder, DEFAULT_FACTOR_CACHE};
 pub use encoder::Encoder;
 pub use generator::{Generator, GeneratorKind};
-pub use linalg::Matrix;
+pub use linalg::{Lu, Matrix};

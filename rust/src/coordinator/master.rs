@@ -22,6 +22,20 @@ pub struct JobConfig {
     pub dead_workers: Vec<usize>,
     /// MDS generator construction.
     pub generator: GeneratorKind,
+    /// Threads for the setup-path encode matmul (`0` = available
+    /// parallelism; results are bit-identical for any thread count).
+    pub encode_threads: usize,
+    /// Capacity of the decode factorization cache on the prepared serving
+    /// path (`0` disables caching). Each entry holds `O(k²)` doubles —
+    /// ~8 MiB at `k = 1024` — so size this down for large `k` or diverse
+    /// straggle patterns (see [`crate::coding::Decoder::new`]).
+    pub decode_cache: usize,
+    /// Recompute the uncoded `A·x` on the master to fill
+    /// [`JobReport::max_error`] (default). This is O(k·d) *verification*
+    /// work per request — disable it on the prepared serving path to
+    /// measure the true straggle + collect + solve critical path
+    /// (`max_error` is then NaN).
+    pub verify_decode: bool,
 }
 
 impl Default for JobConfig {
@@ -32,6 +46,9 @@ impl Default for JobConfig {
             seed: 0xAB5,
             dead_workers: vec![],
             generator: GeneratorKind::SystematicRandom,
+            encode_threads: 0,
+            decode_cache: crate::coding::DEFAULT_FACTOR_CACHE,
+            verify_decode: true,
         }
     }
 }
@@ -45,7 +62,8 @@ pub struct JobReport {
     pub model_latency: Option<f64>,
     /// Decoded `A·x`.
     pub decoded: Vec<f64>,
-    /// Max abs error vs the directly computed `A·x`.
+    /// Max abs error vs the directly computed `A·x` (NaN when
+    /// [`JobConfig::verify_decode`] is off).
     pub max_error: f64,
     /// Worker responses consumed before decoding.
     pub workers_used: usize,
@@ -91,9 +109,9 @@ pub fn run_job(
     let n: usize = per_worker.iter().sum();
 
     // Encode & chunk.
-    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ 0x6E6)?;
+    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
     let encoder = Encoder::new(gen.clone());
-    let coded = encoder.encode(a)?;
+    let coded = encoder.encode_with_threads(a, cfg.encode_threads)?;
     let chunks = encoder.chunk(&coded, &per_worker)?;
 
     // Straggle injection.
@@ -154,15 +172,22 @@ pub fn run_job(
         }
     }
     let rows_collected = received.len();
-    let decoded = Decoder::new(gen).decode(&received)?;
+    // One-shot path: the decoder is dropped right here, so skip the
+    // factorization cache (no key clone / map insert for a single solve).
+    // Serving loops go through `PreparedJob`, which keeps a caching one.
+    let decoded = Decoder::with_cache_capacity(gen, 0).decode(&received)?;
     let wall_latency = start.elapsed();
 
-    let truth = a.matvec(x);
-    let max_error = decoded
-        .iter()
-        .zip(&truth)
-        .map(|(d, t)| (d - t).abs())
-        .fold(0.0f64, f64::max);
+    let max_error = if cfg.verify_decode {
+        let truth = a.matvec(x);
+        decoded
+            .iter()
+            .zip(&truth)
+            .map(|(d, t)| (d - t).abs())
+            .fold(0.0f64, f64::max)
+    } else {
+        f64::NAN
+    };
 
     Ok(JobReport {
         wall_latency,
@@ -178,20 +203,48 @@ pub fn run_job(
 
 /// Domain-separation tag so straggle delays and generator entries never share
 /// an RNG stream even though both derive from `JobConfig::seed`.
-const STRAGGLE_SEED_TAG: u64 = 0x57A6_61E5_57A6_61E5;
+pub(crate) const STRAGGLE_SEED_TAG: u64 = 0x57A6_61E5_57A6_61E5;
+
+/// Domain-separation tag for the generator-matrix RNG stream.
+pub(crate) const GENERATOR_SEED_TAG: u64 = 0x6E6;
+
+/// Per-batch seed derivation shared by every serving loop (and by tests
+/// replaying a serving stream batch by batch): batch `i` (0-based) gets
+/// `seed + GOLDEN·(i+1)`.
+pub fn derive_stream_seed(base: u64, index: u64) -> u64 {
+    base.wrapping_add(0x9E37_79B9u64.wrapping_mul(index + 1))
+}
+
+/// Fold a per-job `max_error` into a running worst. NaN (verification
+/// disabled) is sticky — `f64::max` would silently drop it and report a
+/// perfect 0.0 for a stream where nothing was verified.
+fn fold_worst_error(worst: f64, max_error: f64) -> f64 {
+    if worst.is_nan() || max_error.is_nan() {
+        f64::NAN
+    } else {
+        worst.max(max_error)
+    }
+}
 
 /// Result of serving a batch of requests.
 #[derive(Debug)]
 pub struct ServeReport {
     /// Per-request latency metrics.
     pub recorder: LatencyRecorder,
-    /// Max decode error across requests.
+    /// Max decode error across requests (NaN — not 0 — when
+    /// [`JobConfig::verify_decode`] is off: nothing was verified).
     pub worst_error: f64,
     /// Per-request reports.
     pub jobs: Vec<JobReport>,
     /// Wall time for the whole batch (set by the pipelined and
     /// arrival-replay serving modes; `None` for the sequential loop).
     pub makespan: Option<Duration>,
+    /// Encode passes performed while serving. On the prepared
+    /// [`serve_arrivals`] path this is a live measurement (the encoder's
+    /// own call counter) and stays `1` regardless of batch count; on the
+    /// one-shot loops it is `jobs.len()` by construction — each `run_job`
+    /// builds and invokes its encoder exactly once.
+    pub encodes: u64,
 }
 
 /// Run one **batched** coded matvec job: each worker receives its chunk
@@ -204,6 +257,12 @@ pub struct ServeReport {
 /// Compared to [`serve_requests`], a batch pays the straggle penalty once
 /// for all `B` requests — per-request latency equals the batch latency, but
 /// throughput rises by ~`B`.
+///
+/// This is the *one-shot* convenience wrapper: it builds a
+/// [`crate::coordinator::PreparedJob`] (generator, encode, chunk) and runs
+/// a single batch through it, so it re-encodes on every call. Serving
+/// loops should construct the `PreparedJob` themselves (as
+/// [`serve_arrivals`] does) and reuse it across batches.
 pub fn run_job_batched(
     spec: &ClusterSpec,
     alloc: &Allocation,
@@ -215,106 +274,10 @@ pub fn run_job_batched(
     if requests.is_empty() {
         return Err(Error::InvalidSpec("empty request batch".into()));
     }
-    if a.rows() != spec.k {
-        return Err(Error::InvalidSpec(format!(
-            "data matrix has {} rows, spec.k = {}",
-            a.rows(),
-            spec.k
-        )));
-    }
-    alloc.validate(spec)?;
-    let per_worker = alloc.per_worker_loads(spec);
-    let n: usize = per_worker.iter().sum();
-    let b = requests.len();
-
-    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ 0x6E6)?;
-    let encoder = Encoder::new(gen.clone());
-    let coded = encoder.encode(a)?;
-    let chunks = encoder.chunk(&coded, &per_worker)?;
-
-    let injector = StragglerInjector::sample(
-        spec,
-        cfg.model,
-        &per_worker,
-        cfg.time_scale,
-        cfg.seed ^ STRAGGLE_SEED_TAG,
-    )?
-    .with_dead(cfg.dead_workers.iter().copied());
-    let model_latency = injector.analytic_completion(&per_worker, spec.k);
-
-    struct BatchReply {
-        range: std::ops::Range<usize>,
-        /// One result column per request.
-        ys: Vec<Vec<f64>>,
-    }
-    let xs_arc: Arc<Vec<Vec<f64>>> = Arc::new(requests.to_vec());
-    let (tx, rx) = mpsc::channel::<BatchReply>();
-    let start = Instant::now();
-    for chunk in chunks {
-        let w = chunk.worker;
-        if injector.is_dead(w) {
-            continue;
-        }
-        let delay = injector.wall_delay(w);
-        let xs = Arc::clone(&xs_arc);
-        let cmp = Arc::clone(&compute);
-        let sender = tx.clone();
-        std::thread::Builder::new()
-            .name(format!("worker-{w}"))
-            .spawn(move || {
-                std::thread::sleep(delay);
-                if let Ok(ys) = cmp.matvec_batch(&chunk.rows, &xs) {
-                    let _ = sender.send(BatchReply { range: chunk.row_range.clone(), ys });
-                }
-            })
-            .map_err(|e| Error::Runtime(format!("spawn worker {w}: {e}")))?;
-    }
-    drop(tx);
-
-    // Collect per-request row/value pairs until k rows (shared support).
-    let mut received: Vec<Vec<(usize, f64)>> = vec![Vec::with_capacity(spec.k + 64); b];
-    let mut workers_used = 0usize;
-    while received[0].len() < spec.k {
-        match rx.recv() {
-            Ok(reply) => {
-                workers_used += 1;
-                for (bi, y) in reply.ys.iter().enumerate() {
-                    received[bi].extend(reply.range.clone().zip(y.iter().copied()));
-                }
-            }
-            Err(_) => {
-                return Err(Error::Decode(format!(
-                    "only {} of {} rows arrived (too many dead workers?)",
-                    received[0].len(),
-                    spec.k
-                )))
-            }
-        }
-    }
-    let rows_collected = received[0].len();
-    let decoder = Decoder::new(gen);
-    let wall_latency = start.elapsed();
-    let mut reports = Vec::with_capacity(b);
-    for (bi, pairs) in received.iter().enumerate() {
-        let decoded = decoder.decode(pairs)?;
-        let truth = a.matvec(&requests[bi]);
-        let max_error = decoded
-            .iter()
-            .zip(&truth)
-            .map(|(d, t)| (d - t).abs())
-            .fold(0.0f64, f64::max);
-        reports.push(JobReport {
-            wall_latency,
-            model_latency,
-            decoded,
-            max_error,
-            workers_used,
-            rows_collected,
-            n,
-            backend: compute.name(),
-        });
-    }
-    Ok(reports)
+    // One-shot: the PreparedJob's setup clones (spec/cfg/matrix) are noise
+    // next to the O(n·k·d) encode this path pays anyway.
+    let mut prepared = crate::coordinator::PreparedJob::new(spec, alloc, a, cfg)?;
+    prepared.run_batch(requests, compute, cfg.seed)
 }
 
 /// Serve `requests` concurrently (pipelined): every request's workers are
@@ -333,7 +296,7 @@ pub fn serve_requests_pipelined(
     let mut handles = Vec::with_capacity(requests.len());
     for (i, x) in requests.iter().enumerate() {
         let mut jcfg = cfg.clone();
-        jcfg.seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(i as u64 + 1));
+        jcfg.seed = derive_stream_seed(cfg.seed, i as u64);
         let spec = spec.clone();
         let alloc = alloc.clone();
         let a = a.clone();
@@ -354,10 +317,12 @@ pub fn serve_requests_pipelined(
             Error::Runtime("request thread panicked".into())
         })??;
         recorder.record(report.wall_latency, report.decoded.len());
-        worst = worst.max(report.max_error);
+        worst = fold_worst_error(worst, report.max_error);
         jobs.push(report);
     }
-    let mut out = ServeReport { recorder, worst_error: worst, jobs, makespan: None };
+    let encodes = jobs.len() as u64; // one run_job (and encode) per request
+    let mut out =
+        ServeReport { recorder, worst_error: worst, jobs, makespan: None, encodes };
     out.makespan = Some(start.elapsed());
     Ok(out)
 }
@@ -366,10 +331,11 @@ pub fn serve_requests_pipelined(
 /// offsets from the serving start, ascending) through the batched live
 /// path: the master sleeps until the head-of-line request has arrived,
 /// drains everything queued behind it up to `max_batch` requests, and
-/// dispatches the whole batch as **one** coded job via [`run_job_batched`]
-/// — each worker evaluates its chunk against all queued vectors in a
-/// single backend call (the MXU-shaped `MatvecBatched` artifacts on the
-/// XLA backend, a loop on the native backend).
+/// dispatches the whole batch as **one** coded job via
+/// [`crate::coordinator::PreparedJob::run_batch`] — each worker evaluates
+/// its chunk against all queued vectors in a single backend call (the
+/// MXU-shaped `MatvecBatched` artifacts on the XLA backend, a loop on the
+/// native backend).
 ///
 /// This is the live counterpart of the workload layer's queueing
 /// simulation ([`crate::workload`]): under light traffic batches have size
@@ -378,10 +344,14 @@ pub fn serve_requests_pipelined(
 /// throughput rises. The recorder tracks each request's *sojourn* (arrival
 /// → decoded), not just its batch's service time.
 ///
-/// Like [`serve_requests`], each batch derives a fresh seed, so the code
-/// and encoded chunks are rebuilt per batch — fine at demo sizes
-/// (`k` ≲ 10³); hoist the encode out of [`run_job_batched`] before
-/// serving large matrices at high rates.
+/// The encode is hoisted: one [`crate::coordinator::PreparedJob`]
+/// (generator, `Ã = G·A`, per-worker chunks, factorization-cached decoder)
+/// is built up front and reused for every batch, so steady-state serving
+/// performs zero encode/chunk work after the first batch
+/// ([`ServeReport::encodes`] stays 1). Each batch still draws a fresh
+/// straggle realization from a derived seed ([`derive_stream_seed`]); the
+/// generator itself is fixed for the stream, which only pins *which* MDS
+/// code serves the traffic, not the stochastic process being measured.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_arrivals(
     spec: &ClusterSpec,
@@ -408,6 +378,8 @@ pub fn serve_arrivals(
             "arrival offsets must be ascending".into(),
         ));
     }
+    // Setup once: encode, chunk, and decoder state live across batches.
+    let mut prepared = crate::coordinator::PreparedJob::new(spec, alloc, a, cfg)?;
     let start = Instant::now();
     let mut recorder = LatencyRecorder::new();
     let mut jobs = Vec::with_capacity(requests.len());
@@ -429,23 +401,16 @@ pub fn serve_arrivals(
         {
             end += 1;
         }
-        let mut jcfg = cfg.clone();
-        jcfg.seed = cfg
-            .seed
-            .wrapping_add(0x9E37_79B9u64.wrapping_mul(batch_idx + 1));
-        let reports = run_job_batched(
-            spec,
-            alloc,
-            a,
+        let reports = prepared.run_batch(
             &requests[next..end],
             Arc::clone(&compute),
-            &jcfg,
+            derive_stream_seed(cfg.seed, batch_idx),
         )?;
         let done = start.elapsed();
         for (i, report) in reports.into_iter().enumerate() {
             let sojourn = done.saturating_sub(arrival_offsets[next + i]);
             recorder.record(sojourn, report.decoded.len());
-            worst = worst.max(report.max_error);
+            worst = fold_worst_error(worst, report.max_error);
             jobs.push(report);
         }
         next = end;
@@ -456,6 +421,7 @@ pub fn serve_arrivals(
         worst_error: worst,
         jobs,
         makespan: Some(start.elapsed()),
+        encodes: prepared.encode_count(),
     })
 }
 
@@ -475,13 +441,14 @@ pub fn serve_requests(
     let mut worst = 0.0f64;
     for (i, x) in requests.iter().enumerate() {
         let mut jcfg = cfg.clone();
-        jcfg.seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(i as u64 + 1));
+        jcfg.seed = derive_stream_seed(cfg.seed, i as u64);
         let report = run_job(spec, alloc, a, x, Arc::clone(&compute), &jcfg)?;
         recorder.record(report.wall_latency, report.decoded.len());
-        worst = worst.max(report.max_error);
+        worst = fold_worst_error(worst, report.max_error);
         jobs.push(report);
     }
-    Ok(ServeReport { recorder, worst_error: worst, jobs, makespan: None })
+    let encodes = jobs.len() as u64;
+    Ok(ServeReport { recorder, worst_error: worst, jobs, makespan: None, encodes })
 }
 
 #[cfg(test)]
@@ -690,6 +657,8 @@ mod tests {
         assert_eq!(report.jobs.len(), 6);
         assert!(report.worst_error < 1e-8, "err {}", report.worst_error);
         assert!(report.makespan.is_some());
+        // The prepared path encodes once for the whole stream.
+        assert_eq!(report.encodes, 1);
         // Sojourn percentiles are well-formed.
         assert!(
             report.recorder.percentile(95.0) >= report.recorder.percentile(50.0)

@@ -12,18 +12,25 @@
 //! [`JobConfig::time_scale`]. Dead workers (permanent failures) are
 //! supported; the MDS code tolerates them as long as the surviving load
 //! covers `k`.
+//!
+//! Serving loops go through the [`prepared`] fast path: a [`PreparedJob`]
+//! owns the generator, encoded chunks, and factorization-cached decoder,
+//! so steady-state batches pay only straggle + collect + solve.
 
 pub mod compute;
 pub mod master;
 pub mod metrics;
+pub mod prepared;
 pub mod straggler;
 
 pub use compute::{Compute, NativeCompute};
 #[cfg(feature = "xla")]
 pub use compute::XlaService;
 pub use master::{
-    run_job, run_job_batched, serve_arrivals, serve_requests,
-    serve_requests_pipelined, JobConfig, JobReport, ServeReport,
+    derive_stream_seed, run_job, run_job_batched, serve_arrivals,
+    serve_requests, serve_requests_pipelined, JobConfig, JobReport,
+    ServeReport,
 };
 pub use metrics::LatencyRecorder;
+pub use prepared::PreparedJob;
 pub use straggler::StragglerInjector;

@@ -15,7 +15,10 @@ use hetcoded::allocation::{
 };
 use hetcoded::cli::Args;
 use hetcoded::coding::Matrix;
-use hetcoded::coordinator::{serve_requests, Compute, JobConfig, NativeCompute};
+use hetcoded::coordinator::{
+    serve_arrivals, serve_requests, serve_requests_pipelined, Compute,
+    JobConfig, NativeCompute, ServeReport,
+};
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, LatencyModel};
@@ -92,7 +95,15 @@ SUBCOMMANDS
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
   run       [--backend native|xla] [--config <toml>] [--k K] [--d D]
             [--requests R] [--time-scale T] [--seed S] [--dead i,j,...]
-            Live coded matvec jobs over the thread coordinator.
+            [--mode seq|pipelined|arrivals] [--rate R] [--max-batch B]
+            [--encode-threads T] [--decode-cache C]
+            Live coded matvec jobs over the thread coordinator. `--mode
+            arrivals` replays a Poisson trace (`--rate` arrivals/s) through
+            the prepared-job fast path: the matrix is encoded once and
+            queued requests are served in batches of <= --max-batch.
+            --decode-cache only applies to arrivals mode (seq/pipelined
+            draw a fresh generator per request, so factorizations cannot
+            recur across requests).
   help      This text.
 ";
 
@@ -423,6 +434,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         model,
         time_scale: args.get::<f64>("time-scale", 0.02)?,
         seed,
+        encode_threads: args.get::<usize>("encode-threads", 0)?,
+        decode_cache: args
+            .get::<usize>("decode-cache", hetcoded::coding::DEFAULT_FACTOR_CACHE)?,
         ..Default::default()
     };
     if let Some(dead) = args.flag("dead") {
@@ -448,17 +462,50 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => return Err(Error::InvalidSpec(format!("unknown backend `{other}`"))),
     };
 
+    let mode = args.flag("mode").unwrap_or("seq").to_string();
     println!(
         "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
-         n={} (rate {:.3})",
+         mode={mode} n={} (rate {:.3})",
         spec.total_workers(),
         spec.num_groups(),
         alloc.integer_n(&spec),
         spec.k as f64 / alloc.integer_n(&spec) as f64,
     );
-    let report = serve_requests(&spec, &alloc, &a, &reqs, compute, &cfg)?;
+    let report: ServeReport = match mode.as_str() {
+        "seq" => serve_requests(&spec, &alloc, &a, &reqs, compute, &cfg)?,
+        "pipelined" => {
+            serve_requests_pipelined(&spec, &alloc, &a, &reqs, compute, &cfg)?
+        }
+        "arrivals" => {
+            // Poisson trace replayed through the prepared-job fast path:
+            // encode once, then batch-serve whatever has queued up.
+            let rate = args.get::<f64>("rate", 50.0)?;
+            let max_batch = args.get::<usize>("max-batch", 8)?;
+            let mut arrival_rng = Rng::new(seed ^ 0xA221);
+            let offsets: Vec<std::time::Duration> =
+                ArrivalProcess::Poisson { rate }
+                    .times(requests, &mut arrival_rng)?
+                    .into_iter()
+                    .map(std::time::Duration::from_secs_f64)
+                    .collect();
+            serve_arrivals(
+                &spec, &alloc, &a, &reqs, &offsets, max_batch, compute, &cfg,
+            )?
+        }
+        other => {
+            return Err(Error::InvalidSpec(format!("unknown --mode `{other}`")))
+        }
+    };
     println!("{}", report.recorder.report());
     println!("worst decode error vs direct A·x: {:.3e}", report.worst_error);
+    match report.makespan {
+        Some(makespan) => println!(
+            "makespan {:.1} ms, encode passes {}",
+            makespan.as_secs_f64() * 1e3,
+            report.encodes
+        ),
+        None => println!("encode passes {}", report.encodes),
+    }
     for (i, j) in report.jobs.iter().enumerate() {
         println!(
             "  req {i}: wall {:.1}ms model {:.4} workers {} rows {}",

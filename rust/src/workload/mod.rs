@@ -65,4 +65,6 @@ pub use arrivals::ArrivalProcess;
 pub use queue::{
     run_workload, simulate_queue, QueueTrace, WorkloadConfig, WorkloadReport,
 };
-pub use service::{mean_service, service_sampler, ServiceSampler};
+pub use service::{
+    mean_service, saturation_rate, service_sampler, ServiceSampler,
+};

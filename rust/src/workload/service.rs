@@ -67,6 +67,14 @@ pub fn mean_service(sampler: &mut ServiceSampler, samples: usize, seed: u64) -> 
     sum / samples as f64
 }
 
+/// A policy's saturation arrival rate `1/E[S]` — the M/G/1 stability
+/// boundary, and the serving-side meaning of the paper's Theorem 2: a
+/// policy that shaves expected single-job latency sustains proportionally
+/// more traffic. Estimated from `samples` deterministic draws.
+pub fn saturation_rate(sampler: &mut ServiceSampler, samples: usize, seed: u64) -> f64 {
+    1.0 / mean_service(sampler, samples, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +128,18 @@ mod tests {
             (est - exact).abs() / exact < 0.02,
             "MC {est} vs exact {exact}"
         );
+    }
+
+    #[test]
+    fn saturation_rate_inverts_mean_service() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut s1) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let (_, mut s2) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es = mean_service(&mut s1, 500, 3);
+        let sat = saturation_rate(&mut s2, 500, 3);
+        assert!((sat * es - 1.0).abs() < 1e-12, "sat {sat} es {es}");
     }
 
     #[test]
