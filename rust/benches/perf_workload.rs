@@ -7,10 +7,12 @@
 
 use hetcoded::bench::{black_box, run, run_quick, section};
 use hetcoded::math::Rng;
-use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::model::{ClusterSpec, EstimatorConfig, Group, LatencyModel};
 use hetcoded::sim::Scheme;
 use hetcoded::workload::{
-    run_workload, service_sampler, ArrivalProcess, WorkloadConfig,
+    run_workload, run_workload_drift, service_sampler, AdaptPolicy,
+    ArrivalProcess, DriftEvent, DriftKind, DriftSchedule,
+    DriftWorkloadConfig, WorkloadConfig,
 };
 
 fn main() {
@@ -78,6 +80,51 @@ fn main() {
             let rep =
                 run_workload(&spec, scheme, LatencyModel::A, &cfg).unwrap();
             black_box(rep.throughput);
+        });
+    }
+
+    section("drift experiment (3-group N=24, 3k jobs, mid-stream 2x slowdown)");
+    {
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 6, mu: 8.0, alpha: 1.0 },
+                Group { n: 8, mu: 4.0, alpha: 1.0 },
+                Group { n: 10, mu: 1.0, alpha: 1.0 },
+            ],
+            1_000,
+        )
+        .unwrap();
+        let schedule = DriftSchedule::new(vec![DriftEvent {
+            at: 3_000.0 / (2.0 * 8.2),
+            kind: DriftKind::SlowGroup { group: 0, factor: 2.0 },
+        }])
+        .unwrap();
+        let cfg = DriftWorkloadConfig {
+            arrivals: ArrivalProcess::Poisson { rate: 8.2 },
+            jobs: 3_000,
+            seed: 2019,
+        };
+        run_quick("workload drift static", || {
+            let rep = run_workload_drift(
+                &spec,
+                LatencyModel::A,
+                &cfg,
+                &schedule,
+                &AdaptPolicy::Static,
+            )
+            .unwrap();
+            black_box(rep.sojourn.mean());
+        });
+        run_quick("workload drift adaptive (estimator + re-solve)", || {
+            let rep = run_workload_drift(
+                &spec,
+                LatencyModel::A,
+                &cfg,
+                &schedule,
+                &AdaptPolicy::Adaptive(EstimatorConfig::default()),
+            )
+            .unwrap();
+            black_box(rep.sojourn.mean());
         });
     }
 }

@@ -17,32 +17,54 @@ use crate::model::{clt_expected_latency, ClusterSpec};
 use crate::{Error, Result};
 
 /// Hamilton (largest-remainder) rounding of per-group loads: floor each
-/// `l_j`, then hand out one extra row per group in order of descending
-/// fractional part until the integer total `Σ N_j l_j` first reaches the
-/// real-valued `n` (so the code never loses decodability).
+/// `l_j`, then hand out **at most one** extra row per group, in order of
+/// descending fractional part, until the integer total `Σ N_j l_j` first
+/// reaches the real-valued `n` (so the code never loses decodability).
+///
+/// One pass suffices: bumping every group with a nonzero remainder yields
+/// the plain-ceil total, which already covers the real-valued target, so
+/// no group is ever bumped twice and no group with a nonzero remainder is
+/// skipped in favour of a second helping elsewhere.
+///
+/// Non-finite or negative loads are rejected with
+/// [`Error::InvalidSpec`] instead of panicking inside the sort.
 pub fn largest_remainder_loads(spec: &ClusterSpec, loads: &[f64]) -> Result<Vec<usize>> {
     if loads.len() != spec.num_groups() {
         return Err(Error::InvalidSpec("load vector length mismatch".into()));
     }
-    let mut ints: Vec<usize> = loads.iter().map(|&l| l.floor().max(0.0) as usize).collect();
+    if loads.iter().any(|&l| !l.is_finite() || l < 0.0) {
+        return Err(Error::InvalidSpec(format!(
+            "loads must be finite and nonnegative, got {loads:?}"
+        )));
+    }
+    let mut ints: Vec<usize> = loads.iter().map(|&l| l.floor() as usize).collect();
     let target: f64 = loads
         .iter()
         .zip(&spec.groups)
         .map(|(&l, g)| l * g.n as f64)
         .sum();
+    // Descending fractional part; ties broken by group index for
+    // determinism. total_cmp cannot panic (and the inputs are finite).
+    let frac = |j: usize| loads[j] - loads[j].floor();
     let mut order: Vec<usize> = (0..loads.len()).collect();
-    order.sort_by(|&a, &b| {
-        let fa = loads[a] - loads[a].floor();
-        let fb = loads[b] - loads[b].floor();
-        fb.partial_cmp(&fa).unwrap()
-    });
-    let total = |ints: &[usize]| -> usize {
-        ints.iter().zip(&spec.groups).map(|(&l, g)| l * g.n).sum()
-    };
-    let mut oi = 0;
-    while (total(&ints) as f64) < target && oi < order.len() * 4 {
-        ints[order[oi % order.len()]] += 1;
-        oi += 1;
+    order.sort_by(|&a, &b| frac(b).total_cmp(&frac(a)).then(a.cmp(&b)));
+    let mut total: usize =
+        ints.iter().zip(&spec.groups).map(|(&l, g)| l * g.n).sum();
+    for j in order {
+        // The 1e-9 slack absorbs float drift when every load is integral
+        // but the accumulated real-valued target rounds a hair above the
+        // exact integer total.
+        if (total as f64) + 1e-9 >= target {
+            break;
+        }
+        if frac(j) <= 0.0 {
+            // Only fractional remainders earn a bump; with all of them
+            // exhausted the totals agree exactly, so this is unreachable
+            // in exact arithmetic and merely defends against drift.
+            break;
+        }
+        ints[j] += 1;
+        total += spec.groups[j].n;
     }
     // Guarantee every group gets at least one row.
     for v in ints.iter_mut() {
@@ -170,5 +192,54 @@ mod tests {
     fn rejects_mismatched_lengths() {
         let s = spec();
         assert!(largest_remainder_loads(&s, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_nan_and_negative_loads() {
+        // Regression: NaN used to panic inside the remainder sort's
+        // `partial_cmp().unwrap()`; now it is a structured error.
+        let s = spec();
+        assert!(largest_remainder_loads(&s, &[f64::NAN, 1.0]).is_err());
+        assert!(largest_remainder_loads(&s, &[f64::INFINITY, 1.0]).is_err());
+        assert!(largest_remainder_loads(&s, &[-0.5, 1.0]).is_err());
+    }
+
+    #[test]
+    fn at_most_one_bump_per_group_and_none_without_remainder() {
+        // Regression: the old hand-out loop could revisit groups up to four
+        // times. True Hamilton gives each group at most floor+1, and a
+        // group with an integral load is never bumped.
+        let s = ClusterSpec::new(
+            vec![
+                Group { n: 3, mu: 4.0, alpha: 1.0 },
+                Group { n: 5, mu: 2.0, alpha: 1.0 },
+                Group { n: 7, mu: 1.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap();
+        let loads = [10.9, 6.0, 4.7];
+        let ints = largest_remainder_loads(&s, &loads).unwrap();
+        for (j, (&i, &l)) in ints.iter().zip(&loads).enumerate() {
+            assert!(
+                i == l.floor() as usize || i == l.floor() as usize + 1,
+                "group {j}: {i} not in {{floor, floor+1}} of {l}"
+            );
+        }
+        // 6.0 is integral: no bump.
+        assert_eq!(ints[1], 6);
+        // Highest remainder (group 0) is served first; target needs only
+        // one bump of group 0 (3 rows cover the 0.9·3 + 0.7·7 = 7.6-row
+        // fractional shortfall? no — 3 < 7.6, so group 2's bump lands too).
+        let total: usize = ints.iter().zip(&s.groups).map(|(&l, g)| l * g.n).sum();
+        let target = 10.9 * 3.0 + 6.0 * 5.0 + 4.7 * 7.0;
+        assert!(total as f64 >= target - 1e-9);
+    }
+
+    #[test]
+    fn integral_loads_round_trip_exactly() {
+        let s = spec();
+        let ints = largest_remainder_loads(&s, &[4.0, 7.0]).unwrap();
+        assert_eq!(ints, vec![4, 7]);
     }
 }

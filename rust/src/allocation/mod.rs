@@ -21,7 +21,9 @@ pub mod uniform;
 
 pub use group_code::{group_code_allocation, integer_group_r, solve_group_r};
 pub use integerize::{largest_remainder_loads, optimize_integer_loads};
-pub use proposed::{optimal_latency_bound, proposed_allocation};
+pub use proposed::{
+    optimal_latency_bound, proposed_allocation, proposed_allocation_capped,
+};
 pub use reisizadeh::reisizadeh_allocation;
 pub use uniform::{uncoded_allocation, uniform_allocation};
 

@@ -59,6 +59,53 @@ pub fn proposed_allocation(model: LatencyModel, spec: &ClusterSpec) -> Result<Al
     })
 }
 
+/// [`proposed_allocation`] under a coded-row budget: re-solving on a
+/// drifted/shrunken cluster mid-stream must not mint new coded rows (the
+/// matrix was encoded once, `n_cap` rows exist), so when the unconstrained
+/// optimum wants `n > n_cap` every load is scaled down proportionally to
+/// fit. The scaled point stays decodable as long as `n_cap ≥ k`, and the
+/// equal-ξ structure of Theorem 1 is preserved (scaling `l` uniformly
+/// scales each group's completion-time axis identically), so it is the
+/// natural projection of the optimum onto the budget.
+///
+/// Errors when the spec is degenerate (e.g. no surviving workers) or the
+/// budget cannot cover `k`.
+pub fn proposed_allocation_capped(
+    model: LatencyModel,
+    spec: &ClusterSpec,
+    n_cap: f64,
+) -> Result<Allocation> {
+    if !(n_cap >= spec.k as f64) {
+        return Err(crate::Error::InvalidSpec(format!(
+            "coded-row budget {n_cap} cannot cover k = {}",
+            spec.k
+        )));
+    }
+    let mut a = proposed_allocation(model, spec)?;
+    if !a.n.is_finite()
+        || a.loads.iter().any(|l| !l.is_finite() || !(*l > 0.0))
+    {
+        return Err(crate::Error::InvalidSpec(
+            "degenerate cluster: proposed allocation is non-finite \
+             (no surviving capacity?)"
+                .into(),
+        ));
+    }
+    if a.n > n_cap {
+        let c = n_cap / a.n;
+        for l in &mut a.loads {
+            *l *= c;
+        }
+        a.n = n_cap;
+        // The per-group waiting quantiles r*_j and the latency bound refer
+        // to the unconstrained optimum; they do not survive the scaling.
+        a.r.clear();
+        a.latency_bound = None;
+        a.policy = "proposed-capped".into();
+    }
+    Ok(a)
+}
+
 /// The analytic minimum expected latency: `T*` (eq. 18) for model A,
 /// `T*_b = k·T*` (eq. 33) for model B.
 pub fn optimal_latency_bound(model: LatencyModel, spec: &ClusterSpec) -> f64 {
@@ -194,6 +241,30 @@ mod tests {
         let a = proposed_allocation(LatencyModel::A, &spec).unwrap();
         a.validate(&spec).unwrap();
         assert!(a.rate(10_000.0) > 0.0 && a.rate(10_000.0) < 1.0);
+    }
+
+    #[test]
+    fn capped_allocation_respects_budget_and_decodability() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let free = proposed_allocation(LatencyModel::A, &spec).unwrap();
+        // Loose cap: identical to the unconstrained solution.
+        let loose =
+            proposed_allocation_capped(LatencyModel::A, &spec, free.n * 2.0).unwrap();
+        assert_eq!(loose.loads, free.loads);
+        assert!(loose.latency_bound.is_some());
+        // Tight cap: scaled onto the budget, still decodable.
+        let cap = free.n * 0.8;
+        assert!(cap >= 10_000.0, "test needs cap >= k");
+        let tight = proposed_allocation_capped(LatencyModel::A, &spec, cap).unwrap();
+        assert!((tight.n - cap).abs() < 1e-6 * cap);
+        tight.validate(&spec).unwrap();
+        for (t, f) in tight.loads.iter().zip(&free.loads) {
+            assert!((t / f - cap / free.n).abs() < 1e-12);
+        }
+        // Budget below k is refused.
+        assert!(
+            proposed_allocation_capped(LatencyModel::A, &spec, 9_000.0).is_err()
+        );
     }
 
     #[test]

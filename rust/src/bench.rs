@@ -56,8 +56,9 @@ pub fn fmt_time(s: f64) -> String {
 /// When the `BENCH_JSON_DIR` environment variable is set, every measured
 /// benchmark appends a `"name": ns_per_op,` line to
 /// `$BENCH_JSON_DIR/<bench-binary>.lines`; `make bench-json` merges the
-/// per-binary fragments into `BENCH_PR2.json` (flat name → ns/op map) so
-/// the repo's bench trajectory is machine-diffable across PRs.
+/// per-binary fragments into the current `BENCH_PR<N>.json` snapshot
+/// (flat name → ns/op map, `BENCH_PR3.json` as of this PR) so the repo's
+/// bench trajectory is machine-diffable across PRs.
 fn json_append(name: &str, median_secs: f64) {
     let Ok(dir) = std::env::var("BENCH_JSON_DIR") else {
         return;

@@ -83,6 +83,41 @@ impl Encoder {
                 self.generator.n()
             )));
         }
+        if loads.iter().any(|&l| l == 0) {
+            return Err(Error::InvalidSpec("worker assigned zero rows".into()));
+        }
+        self.slice(coded, loads)
+    }
+
+    /// Re-slice an **already-encoded** matrix into a new per-worker split —
+    /// the re-allocation primitive. Unlike [`Encoder::chunk`] it accepts a
+    /// partial cover (`k ≤ Σ l_i ≤ n`: re-allocation cannot mint coded
+    /// rows beyond the `n` that exist without re-encoding, and any `≥ k`
+    /// subset of an MDS code decodes) and zero loads (dead or drained
+    /// workers simply receive no chunk). Performs no encode work — the
+    /// encode-call counter is untouched, which is what lets serving paths
+    /// *measure* that adaptation never re-encodes.
+    pub fn rechunk(&self, coded: &Matrix, loads: &[usize]) -> Result<Vec<WorkerChunk>> {
+        let total: usize = loads.iter().sum();
+        if total > self.generator.n() {
+            return Err(Error::InvalidSpec(format!(
+                "rechunk loads sum to {total} but only n={} coded rows exist \
+                 (re-encoding is the only way to mint more)",
+                self.generator.n()
+            )));
+        }
+        if total < self.generator.k() {
+            return Err(Error::InvalidSpec(format!(
+                "rechunk loads sum to {total} < k={}; undecodable",
+                self.generator.k()
+            )));
+        }
+        self.slice(coded, loads)
+    }
+
+    /// Shared slicer: contiguous coded-row ranges in worker order, skipping
+    /// zero loads.
+    fn slice(&self, coded: &Matrix, loads: &[usize]) -> Result<Vec<WorkerChunk>> {
         if coded.rows() != self.generator.n() {
             return Err(Error::InvalidSpec(format!(
                 "coded matrix has {} rows, expected n={}",
@@ -94,7 +129,7 @@ impl Encoder {
         let mut start = 0usize;
         for (w, &l) in loads.iter().enumerate() {
             if l == 0 {
-                return Err(Error::InvalidSpec(format!("worker {w} assigned zero rows")));
+                continue;
             }
             let range = start..start + l;
             let idx: Vec<usize> = range.clone().collect();
@@ -175,6 +210,46 @@ mod tests {
         let coded = enc.encode(&a).unwrap();
         assert!(enc.chunk(&coded, &[3, 3, 3]).is_err()); // sums to 9 != 12
         assert!(enc.chunk(&coded, &[12, 0]).is_err()); // zero load
+    }
+
+    #[test]
+    fn rechunk_reslices_without_reencoding() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 12, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 3, 3);
+        let coded = enc.encode(&a).unwrap();
+        assert_eq!(enc.encode_calls(), 1);
+        // Partial cover with a zero-load (dead) worker: rows 0..9 go to
+        // workers 0, 2, 3; rows 9..12 are left unassigned.
+        let chunks = enc.rechunk(&coded, &[4, 0, 3, 2]).unwrap();
+        assert_eq!(enc.encode_calls(), 1, "rechunk must not re-encode");
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].worker, 0);
+        assert_eq!(chunks[1].worker, 2);
+        assert_eq!(chunks[2].worker, 3);
+        assert_eq!(chunks[0].row_range, 0..4);
+        assert_eq!(chunks[1].row_range, 4..7);
+        assert_eq!(chunks[2].row_range, 7..9);
+        for ch in &chunks {
+            for (local, global) in ch.row_range.clone().enumerate() {
+                assert_eq!(ch.rows.row(local), coded.row(global));
+            }
+        }
+    }
+
+    #[test]
+    fn rechunk_validates_cover_bounds() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 12, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 3, 3);
+        let coded = enc.encode(&a).unwrap();
+        assert!(enc.rechunk(&coded, &[13]).is_err(), "beyond n");
+        assert!(enc.rechunk(&coded, &[3, 0]).is_err(), "below k");
+        assert!(enc.rechunk(&coded, &[4, 4, 4]).is_ok(), "full cover ok");
+        assert!(enc.rechunk(&coded, &[4]).is_ok(), "k-exact cover ok");
+        // Wrong coded matrix shape still rejected.
+        let wrong = random_matrix(11, 3, 4);
+        assert!(enc.rechunk(&wrong, &[4, 4]).is_err());
     }
 
     #[test]

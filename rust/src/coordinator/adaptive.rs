@@ -1,0 +1,606 @@
+//! Failure- and drift-aware serving: the adaptive re-allocation loop.
+//!
+//! [`serve_arrivals_adaptive`] is [`crate::coordinator::serve_arrivals`]
+//! plus three production concerns layered on the same prepared fast path:
+//!
+//! 1. **Scenario injection** — each batch's straggle realization is drawn
+//!    from the *effective* cluster a [`FailureScenario`] has produced so
+//!    far (deaths, machine slowdowns, group drift), not the spec the job
+//!    was prepared for.
+//! 2. **Online estimation** — the consumed worker replies of every batch
+//!    (a type-II censored sample) feed a [`SpeedEstimator`]; workers that
+//!    keep missing batches are suspected dead after
+//!    [`AdaptiveServeConfig::death_after`] consecutive misses.
+//! 3. **Re-allocation without re-encoding** — when the estimator detects
+//!    drift (or deaths are suspected), the paper's allocation is re-solved
+//!    on the estimated surviving cluster
+//!    ([`crate::allocation::proposed_allocation_capped`], budgeted to the
+//!    `n` coded rows that already exist) and the encoded rows are
+//!    re-sliced via [`PreparedJob::rechunk`]. The steady-state invariant
+//!    survives adaptation: [`AdaptiveServeReport::post_setup_encodes`]
+//!    stays **0** no matter how many times the stream re-allocates.
+//!
+//! The model-time mirror of this loop for the queueing layer is
+//! [`crate::workload::drift::run_workload_drift`].
+
+use crate::allocation::{proposed_allocation_capped, Allocation};
+use crate::coding::Matrix;
+use crate::coordinator::failures::{FailureScenario, ScenarioState};
+use crate::coordinator::master::{derive_stream_seed, STRAGGLE_SEED_TAG};
+use crate::coordinator::{
+    Compute, JobConfig, LatencyRecorder, PreparedJob, ServeReport,
+    WorkerObservation,
+};
+use crate::model::{ClusterSpec, EstimatorConfig, SpeedEstimator};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs of the live adaptive loop.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveServeConfig {
+    /// Estimator window / trust / drift-threshold / cadence knobs
+    /// (`check_every` counts *batches* here).
+    pub est: EstimatorConfig,
+    /// Suspect a worker dead after this many consecutive batches in which
+    /// it was dispatched to but never consumed. The master cannot tell a
+    /// corpse from an extreme straggler, and a drained suspect never gets
+    /// another chance to reply, so a false suspicion permanently shifts
+    /// that worker's load elsewhere (the only rollback is a re-solve that
+    /// fails, which un-suspects its triggers). Under a redundant code
+    /// where ~half the workers go unconsumed per batch, a healthy worker
+    /// hits a `d`-batch miss streak with probability ~`0.5^d` per window —
+    /// the default of 16 makes that ~1.5e-5, negligible over realistic
+    /// streams, at the cost of detecting true deaths a few batches later.
+    /// Deployments with a real liveness signal (heartbeats) should feed it
+    /// through [`crate::coordinator::FailureScenario`]/
+    /// [`crate::coordinator::JobConfig::dead_workers`] instead and set
+    /// this high.
+    pub death_after: usize,
+}
+
+impl Default for AdaptiveServeConfig {
+    fn default() -> Self {
+        AdaptiveServeConfig {
+            est: EstimatorConfig { min_obs: 40, check_every: 4, ..Default::default() },
+            death_after: 16,
+        }
+    }
+}
+
+/// [`ServeReport`] plus the adaptation trace.
+#[derive(Debug)]
+pub struct AdaptiveServeReport {
+    /// The underlying serving metrics (sojourns, errors, makespan, and the
+    /// measured `encodes` counter).
+    pub serve: ServeReport,
+    /// Re-allocations performed (estimator-triggered re-solves).
+    pub reallocations: u64,
+    /// Re-chunk passes (== reallocations; separate counter so tests can
+    /// pin the invariant from the [`PreparedJob`] side).
+    pub rechunks: u64,
+    /// Workers suspected dead by the end of the stream (sorted).
+    pub suspected_dead: Vec<usize>,
+    /// Encode passes performed *after* construction — the re-allocation
+    /// invariant: always 0, adaptation re-slices cached coded rows.
+    pub post_setup_encodes: u64,
+    /// The cluster parameters the loop believed at the end (assumed spec
+    /// updated by each re-allocation from the estimator).
+    pub assumed_spec: ClusterSpec,
+}
+
+/// Serve an arrival stream under a failure/drift scenario, optionally
+/// adapting the allocation online. With an empty scenario and `adapt:
+/// None` this is exactly [`crate::coordinator::serve_arrivals`] (which
+/// delegates here), bit-identical straggle realizations included.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_arrivals_adaptive(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    arrival_offsets: &[Duration],
+    max_batch: usize,
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+    scenario: &FailureScenario,
+    adapt: Option<&AdaptiveServeConfig>,
+) -> Result<AdaptiveServeReport> {
+    if requests.len() != arrival_offsets.len() {
+        return Err(Error::InvalidSpec(format!(
+            "{} requests but {} arrival offsets",
+            requests.len(),
+            arrival_offsets.len()
+        )));
+    }
+    if max_batch == 0 {
+        return Err(Error::InvalidSpec("max_batch must be positive".into()));
+    }
+    if arrival_offsets.windows(2).any(|w| w[1] < w[0]) {
+        return Err(Error::InvalidSpec(
+            "arrival offsets must be ascending".into(),
+        ));
+    }
+    if let Some(ad) = adapt {
+        ad.est.validate()?;
+        if ad.death_after == 0 {
+            return Err(Error::InvalidSpec("death_after must be positive".into()));
+        }
+    }
+
+    // Setup once: encode, chunk, decoder state live across batches and
+    // across re-allocations.
+    let mut prepared = PreparedJob::new(spec, alloc, a, cfg)?;
+    let mut state = ScenarioState::new(spec, &cfg.dead_workers);
+    let window = adapt.map_or(1, |ad| ad.est.window);
+    let mut estimator =
+        SpeedEstimator::new(spec.num_groups(), cfg.model, spec.k, window)?;
+    // What the master currently believes about the cluster; re-solves
+    // replace it with the estimator's view.
+    let mut assumed = spec.clone();
+    let total_workers = spec.total_workers();
+    let mut consecutive_miss = vec![0usize; total_workers];
+    let mut suspected: Vec<bool> = vec![false; total_workers];
+    let mut reallocations = 0u64;
+
+    let start = Instant::now();
+    let mut recorder = LatencyRecorder::new();
+    let mut jobs = Vec::with_capacity(requests.len());
+    let mut worst = 0.0f64;
+    let mut next = 0usize;
+    let mut batch_idx = 0u64;
+    while next < requests.len() {
+        // Block until the head-of-line request has arrived.
+        let now = start.elapsed();
+        if arrival_offsets[next] > now {
+            std::thread::sleep(arrival_offsets[next] - now);
+        }
+        // Drain everything already queued, bounded by the batch width.
+        let now = start.elapsed();
+        let mut end = next + 1;
+        while end < requests.len()
+            && end - next < max_batch
+            && arrival_offsets[end] <= now
+        {
+            end += 1;
+        }
+        state.advance(scenario, batch_idx)?;
+        let injector = state.injector(
+            cfg.model,
+            prepared.per_worker(),
+            cfg.time_scale,
+            derive_stream_seed(cfg.seed, batch_idx) ^ STRAGGLE_SEED_TAG,
+        )?;
+        let (reports, observed) = prepared.run_batch_injected(
+            &requests[next..end],
+            Arc::clone(&compute),
+            &injector,
+        )?;
+        let done = start.elapsed();
+        for (i, report) in reports.into_iter().enumerate() {
+            let sojourn = done.saturating_sub(arrival_offsets[next + i]);
+            recorder.record(sojourn, report.decoded.len());
+            worst = crate::coordinator::master::fold_worst_error(
+                worst,
+                report.max_error,
+            );
+            jobs.push(report);
+        }
+        next = end;
+        batch_idx += 1;
+
+        if let Some(ad) = adapt {
+            digest_batch(
+                &state,
+                prepared.per_worker(),
+                &observed,
+                &mut estimator,
+                &mut consecutive_miss,
+            );
+            if batch_idx % ad.est.check_every as u64 == 0 {
+                let mut new_suspects = Vec::new();
+                for (w, miss) in consecutive_miss.iter().enumerate() {
+                    if !suspected[w]
+                        && prepared.per_worker()[w] > 0
+                        && *miss >= ad.death_after
+                    {
+                        suspected[w] = true;
+                        new_suspects.push(w);
+                    }
+                }
+                let drifted = estimator.deviates_from(
+                    &assumed,
+                    ad.est.threshold,
+                    ad.est.min_obs,
+                );
+                if !new_suspects.is_empty() || drifted {
+                    let attempt = (|| -> Result<(ClusterSpec, Vec<usize>)> {
+                        let alive_counts = alive_per_group(&state, &suspected);
+                        let est_spec = estimator.estimated_spec(
+                            &assumed,
+                            &alive_counts,
+                            ad.est.min_obs,
+                        )?;
+                        let realloc = proposed_allocation_capped(
+                            cfg.model,
+                            &est_spec,
+                            prepared.n() as f64,
+                        )?;
+                        let per_worker = integer_per_worker_capped(
+                            &state,
+                            &suspected,
+                            &realloc.loads,
+                            prepared.n(),
+                            spec.k,
+                        )?;
+                        Ok((est_spec, per_worker))
+                    })();
+                    match attempt {
+                        Ok((est_spec, per_worker)) => {
+                            prepared.rechunk(&per_worker)?;
+                            assumed = est_spec;
+                            estimator.flush();
+                            consecutive_miss.fill(0);
+                            reallocations += 1;
+                        }
+                        Err(_) => {
+                            // A re-solve that cannot cover `k` within the
+                            // coded-row budget (e.g. over-eager suspicion
+                            // of slow-but-alive workers) must not abort a
+                            // stream that is still serving: keep the
+                            // current working chunking and give the new
+                            // suspects another chance to reply.
+                            for &w in &new_suspects {
+                                suspected[w] = false;
+                                consecutive_miss[w] = 0;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let serve = ServeReport {
+        recorder,
+        worst_error: worst,
+        jobs,
+        makespan: Some(start.elapsed()),
+        encodes: prepared.encode_count(),
+    };
+    Ok(AdaptiveServeReport {
+        serve,
+        reallocations,
+        rechunks: prepared.rechunk_count(),
+        suspected_dead: suspected
+            .iter()
+            .enumerate()
+            .filter_map(|(w, &s)| s.then_some(w))
+            .collect(),
+        post_setup_encodes: prepared.encode_count().saturating_sub(1),
+        assumed_spec: assumed,
+    })
+}
+
+/// Feed one batch's consumed replies into the estimator (bucketed into
+/// per-`(group, load)` censored samples — the tight-budget integerization
+/// can split a group across two adjacent loads, and workers racing under
+/// different loads have different distributions) and bump the miss
+/// counters of dispatched workers that stayed silent.
+fn digest_batch(
+    state: &ScenarioState,
+    per_worker: &[usize],
+    observed: &[WorkerObservation],
+    estimator: &mut SpeedEstimator,
+    consecutive_miss: &mut [usize],
+) {
+    // The master's observation horizon: the batch completed (and it
+    // stopped listening) at the last consumed reply's model time; every
+    // silent worker is known to still be computing then.
+    let mut horizon = 0.0f64;
+    let mut seen = vec![false; per_worker.len()];
+    // (group, load) -> consumed times; at most two loads per group.
+    let mut buckets: BTreeMap<(usize, usize), Vec<f64>> = BTreeMap::new();
+    for obs in observed {
+        let g = state.group_of(obs.worker);
+        buckets.entry((g, obs.load)).or_default().push(obs.model_time);
+        seen[obs.worker] = true;
+        horizon = horizon.max(obs.model_time);
+    }
+    let mut dispatched: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (w, &l) in per_worker.iter().enumerate() {
+        if l > 0 {
+            *dispatched.entry((state.group_of(w), l)).or_default() += 1;
+            if seen[w] {
+                consecutive_miss[w] = 0;
+            } else {
+                consecutive_miss[w] += 1;
+            }
+        }
+    }
+    for ((g, load), times) in &buckets {
+        let n = dispatched.get(&(*g, *load)).copied().unwrap_or(times.len());
+        estimator.observe(*g, *load as f64, n, times, horizon);
+    }
+}
+
+/// Surviving workers per group: everything not suspected dead. (Workers
+/// drained by an earlier re-chunk are still alive — they can be re-loaded.)
+fn alive_per_group(state: &ScenarioState, suspected: &[bool]) -> Vec<usize> {
+    let mut alive = vec![0usize; state.spec.num_groups()];
+    for (w, &s) in suspected.iter().enumerate() {
+        if !s {
+            alive[state.group_of(w)] += 1;
+        }
+    }
+    alive
+}
+
+/// Integerize per-group real loads into a per-worker split under the
+/// coded-row budget: floor every alive worker's load, Hamilton-bump whole
+/// groups by descending fractional part while the budget allows, and if
+/// flooring still left the total below `k` (the tight-budget corner where
+/// a whole-group bump would overshoot the cap), top up **single workers**
+/// round-robin — within-group loads then differ by at most one row, which
+/// is why the estimator feed buckets observations by `(group, load)`.
+/// Suspected-dead workers get 0. Feasible whenever `cap ≥ k` and anyone
+/// survives: per-worker bumps reach `k` exactly.
+///
+/// Sibling of [`crate::allocation::largest_remainder_loads`], which
+/// solves the unconstrained variant (hit the real-valued target exactly,
+/// full membership); this one answers to a hard row cap, a `k` floor, and
+/// per-group survivor counts. Keep their bump rules (descending
+/// fractional order, at most one bump per group, `1e-9` float slack) in
+/// sync when touching either.
+fn integer_per_worker_capped(
+    state: &ScenarioState,
+    suspected: &[bool],
+    group_loads: &[f64],
+    cap: usize,
+    k: usize,
+) -> Result<Vec<usize>> {
+    let num_groups = state.spec.num_groups();
+    if group_loads.len() != num_groups {
+        return Err(Error::InvalidSpec("group load arity mismatch".into()));
+    }
+    if group_loads.iter().any(|l| !l.is_finite() || *l < 0.0) {
+        return Err(Error::InvalidSpec(format!(
+            "group loads must be finite and nonnegative, got {group_loads:?}"
+        )));
+    }
+    if cap < k {
+        return Err(Error::InvalidSpec(format!(
+            "coded-row budget {cap} cannot cover k = {k}"
+        )));
+    }
+    let alive = alive_per_group(state, suspected);
+    if alive.iter().all(|&n| n == 0) {
+        return Err(Error::InvalidSpec(
+            "no surviving workers to re-allocate onto".into(),
+        ));
+    }
+    let mut ints: Vec<usize> =
+        group_loads.iter().map(|&l| l.floor() as usize).collect();
+    let mut total: usize =
+        ints.iter().zip(&alive).map(|(&l, &n)| l * n).sum();
+    let target: f64 = group_loads
+        .iter()
+        .zip(&alive)
+        .map(|(&l, &n)| l * n as f64)
+        .sum();
+    let frac = |j: usize| group_loads[j] - group_loads[j].floor();
+    let mut order: Vec<usize> = (0..num_groups).collect();
+    order.sort_by(|&a, &b| frac(b).total_cmp(&frac(a)).then(a.cmp(&b)));
+    for &j in &order {
+        if (total as f64) + 1e-9 >= target {
+            break;
+        }
+        if alive[j] == 0 || frac(j) <= 0.0 || total + alive[j] > cap {
+            continue;
+        }
+        ints[j] += 1;
+        total += alive[j];
+    }
+    let mut per_worker: Vec<usize> = suspected
+        .iter()
+        .enumerate()
+        .map(|(w, &s)| if s { 0 } else { ints[state.group_of(w)] })
+        .collect();
+    // Tight-budget top-up: hand out single rows to alive workers
+    // round-robin until the split covers k (cap ≥ k makes this feasible).
+    while total < k {
+        for (w, &s) in suspected.iter().enumerate() {
+            if total >= k {
+                break;
+            }
+            if !s {
+                per_worker[w] += 1;
+                total += 1;
+            }
+        }
+    }
+    Ok(per_worker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::uniform_allocation;
+    use crate::coordinator::failures::{FailureEvent, FailureKind};
+    use crate::coordinator::NativeCompute;
+    use crate::math::Rng;
+    use crate::model::{Group, LatencyModel};
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap()
+    }
+
+    fn stream(
+        jobs: usize,
+        gap_ms: u64,
+        seed: u64,
+    ) -> (Matrix, Vec<Vec<f64>>, Vec<Duration>) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let reqs: Vec<Vec<f64>> = (0..jobs)
+            .map(|_| (0..8).map(|_| rng.normal()).collect())
+            .collect();
+        let offsets = (0..jobs)
+            .map(|i| Duration::from_millis(gap_ms * i as u64))
+            .collect();
+        (a, reqs, offsets)
+    }
+
+    #[test]
+    fn matches_plain_serve_arrivals_without_scenario() {
+        // Empty scenario + no adaptation must reproduce serve_arrivals
+        // exactly (it delegates here): same decode results, one encode.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let (a, reqs, offsets) = stream(6, 5, 81);
+        let cfg = JobConfig { time_scale: 0.002, ..Default::default() };
+        let rep = serve_arrivals_adaptive(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &offsets,
+            4,
+            Arc::new(NativeCompute),
+            &cfg,
+            &FailureScenario::none(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.serve.recorder.count(), 6);
+        assert!(rep.serve.worst_error < 1e-8);
+        assert_eq!(rep.serve.encodes, 1);
+        assert_eq!(rep.reallocations, 0);
+        assert_eq!(rep.post_setup_encodes, 0);
+        assert!(rep.suspected_dead.is_empty());
+    }
+
+    #[test]
+    fn suspects_scenario_killed_workers_and_reallocates_without_encoding() {
+        let spec = small_spec();
+        // Rate-1/2 code: plenty of redundancy to lose two workers.
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let (a, reqs, offsets) = stream(14, 4, 82);
+        let cfg = JobConfig { time_scale: 0.002, ..Default::default() };
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 2,
+            kind: FailureKind::KillWorkers(vec![0, 5]),
+        }])
+        .unwrap();
+        let adapt = AdaptiveServeConfig {
+            est: EstimatorConfig {
+                // Huge min_obs: isolates the death path from drift noise.
+                min_obs: 1_000_000,
+                check_every: 1,
+                ..Default::default()
+            },
+            death_after: 3,
+        };
+        let rep = serve_arrivals_adaptive(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &offsets,
+            1,
+            Arc::new(NativeCompute),
+            &cfg,
+            &scenario,
+            Some(&adapt),
+        )
+        .unwrap();
+        assert_eq!(rep.serve.recorder.count(), 14);
+        assert!(rep.serve.worst_error < 1e-8, "err {}", rep.serve.worst_error);
+        assert!(rep.reallocations >= 1);
+        assert_eq!(rep.rechunks, rep.reallocations);
+        // Both scripted deaths suspected (they miss every batch).
+        for w in [0usize, 5] {
+            assert!(rep.suspected_dead.contains(&w), "worker {w} not suspected");
+        }
+        // The invariant under adaptation: zero post-setup encodes.
+        assert_eq!(rep.post_setup_encodes, 0);
+        assert_eq!(rep.serve.encodes, 1);
+    }
+
+    #[test]
+    fn integerization_respects_budget_and_k() {
+        let spec = small_spec();
+        let state = ScenarioState::new(&spec, &[]);
+        let suspected = vec![false; 10];
+        // Real loads ~ rate-1/2: 12.8 per worker, budget 130.
+        let pw = integer_per_worker_capped(
+            &state,
+            &suspected,
+            &[12.8, 12.8],
+            130,
+            64,
+        )
+        .unwrap();
+        let total: usize = pw.iter().sum();
+        assert!(total >= 64 && total <= 130, "total {total}");
+        // Group-uniform loads.
+        assert!(pw[..4].iter().all(|&l| l == pw[0]));
+        assert!(pw[4..].iter().all(|&l| l == pw[4]));
+        // Dead workers drained; budget that cannot cover k is refused.
+        let mut dead = vec![false; 10];
+        for w in 0..8 {
+            dead[w] = true;
+        }
+        let pw = integer_per_worker_capped(
+            &state,
+            &dead,
+            &[16.0, 40.0],
+            130,
+            64,
+        )
+        .unwrap();
+        assert!(pw[..8].iter().all(|&l| l == 0));
+        assert!(pw[8] * 2 >= 64);
+        assert!(integer_per_worker_capped(&state, &dead, &[16.0, 20.0], 50, 64)
+            .is_err());
+        let all_dead = vec![true; 10];
+        assert!(integer_per_worker_capped(&state, &all_dead, &[8.0, 8.0], 130, 64)
+            .is_err());
+    }
+
+    #[test]
+    fn tight_budget_splits_within_a_group() {
+        // The corner where a whole-group bump overshoots the cap: only
+        // group 0 (4 workers) survives, floors cover 60 < k = 62, and
+        // bumping the whole group (+4 = 64) would blow the 63-row budget.
+        // Per-worker top-up hands two workers one extra row each instead
+        // of refusing.
+        let spec = small_spec();
+        let state = ScenarioState::new(&spec, &[]);
+        let mut suspected = vec![false; 10];
+        for w in 4..10 {
+            suspected[w] = true;
+        }
+        let pw = integer_per_worker_capped(
+            &state,
+            &suspected,
+            &[15.9, 0.0],
+            63,
+            62,
+        )
+        .unwrap();
+        assert!(pw[4..].iter().all(|&l| l == 0));
+        let total: usize = pw.iter().sum();
+        assert_eq!(total, 62);
+        let max = *pw[..4].iter().max().unwrap();
+        let min = *pw[..4].iter().min().unwrap();
+        assert!(max - min <= 1, "within-group split must stay adjacent");
+    }
+}

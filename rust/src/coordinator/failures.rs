@@ -1,0 +1,428 @@
+//! Failure and drift scenarios for the live serving path.
+//!
+//! The paper's analysis fixes `(N_j, μ_j, α_j)` for the whole job. A
+//! serving stream is longer-lived than that assumption: workers die
+//! mid-stream, individual machines slow down, and whole groups drift. A
+//! [`FailureScenario`] scripts those events against *batch indices* of a
+//! serving stream, and [`ScenarioState`] replays them into the concrete
+//! knobs the coordinator already has — the effective [`ClusterSpec`] the
+//! straggle sampler draws from, the dead-worker set, and per-worker
+//! slowdown multipliers ([`StragglerInjector::with_slowdowns`]).
+//!
+//! The model-time counterpart for the Monte-Carlo/queueing layer (events
+//! scripted against the *simulation clock*) is
+//! [`crate::workload::drift::DriftSchedule`]; both speak the same kinds of
+//! events so an experiment can be mirrored across the two stacks.
+//!
+//! A "2× slowdown" is time dilation — the machine does everything at half
+//! speed — so [`FailureKind::SlowGroup`] scales the shift *and* the tail
+//! (`α ← f·α`, `μ ← μ/f`). [`FailureKind::ScaleGroupMu`] is the tail-only
+//! drift (μ-drift) for experiments that keep the deterministic part fixed.
+
+use crate::coordinator::StragglerInjector;
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+
+/// One scripted change to the cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FailureKind {
+    /// Permanent deaths: these workers never respond again.
+    KillWorkers(Vec<usize>),
+    /// Machine-level slowdown: every listed worker's completion times are
+    /// dilated by `factor` from this batch on.
+    SlowWorkers {
+        /// Global worker ids (group-major order).
+        workers: Vec<usize>,
+        /// Time-dilation factor (`> 1` = slower).
+        factor: f64,
+    },
+    /// Group-level slowdown (time dilation): `α ← f·α`, `μ ← μ/f`.
+    SlowGroup {
+        /// Group index.
+        group: usize,
+        /// Time-dilation factor (`> 1` = slower).
+        factor: f64,
+    },
+    /// Tail-only drift of a group's straggling parameter: `μ ← f·μ`.
+    ScaleGroupMu {
+        /// Group index.
+        group: usize,
+        /// Multiplicative μ factor (`< 1` = heavier straggling).
+        factor: f64,
+    },
+}
+
+/// A [`FailureKind`] that fires before serving batch `at_batch` (0-based).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// Batch index the event takes effect at.
+    pub at_batch: u64,
+    /// What happens.
+    pub kind: FailureKind,
+}
+
+/// An ordered script of failure/drift events for one serving stream.
+#[derive(Clone, Debug, Default)]
+pub struct FailureScenario {
+    events: Vec<FailureEvent>,
+}
+
+impl FailureScenario {
+    /// Build a scenario, validating factors and sorting events by batch
+    /// (stable, so same-batch events apply in authoring order).
+    pub fn new(mut events: Vec<FailureEvent>) -> Result<FailureScenario> {
+        for e in &events {
+            match &e.kind {
+                FailureKind::KillWorkers(ws) => {
+                    if ws.is_empty() {
+                        return Err(Error::InvalidSpec(
+                            "KillWorkers with no workers".into(),
+                        ));
+                    }
+                }
+                FailureKind::SlowWorkers { workers, factor } => {
+                    if workers.is_empty() {
+                        return Err(Error::InvalidSpec(
+                            "SlowWorkers with no workers".into(),
+                        ));
+                    }
+                    validate_factor(*factor)?;
+                }
+                FailureKind::SlowGroup { factor, .. }
+                | FailureKind::ScaleGroupMu { factor, .. } => {
+                    validate_factor(*factor)?;
+                }
+            }
+        }
+        events.sort_by_key(|e| e.at_batch);
+        Ok(FailureScenario { events })
+    }
+
+    /// The empty scenario (a plain static stream).
+    pub fn none() -> FailureScenario {
+        FailureScenario::default()
+    }
+
+    /// No events scripted?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Scripted events, ordered by batch.
+    pub fn events(&self) -> &[FailureEvent] {
+        &self.events
+    }
+
+    /// Parse the CLI mini-syntax:
+    ///
+    /// - `failures`: `BATCH:w1,w2[;BATCH:w3...]` — kill workers at a batch;
+    /// - `drift`: `BATCH:GROUP:FACTOR[;...]` — dilate a group `FACTOR`×
+    ///   (i.e. [`FailureKind::SlowGroup`]) at a batch.
+    pub fn parse(failures: Option<&str>, drift: Option<&str>) -> Result<FailureScenario> {
+        let mut events = Vec::new();
+        if let Some(spec) = failures {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let (batch, list) = part.split_once(':').ok_or_else(|| {
+                    Error::InvalidSpec(format!(
+                        "--failures entry `{part}` is not BATCH:w1,w2"
+                    ))
+                })?;
+                let at_batch = parse_num::<u64>("failures batch", batch)?;
+                let workers = list
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_num::<usize>("failures worker", s))
+                    .collect::<Result<Vec<_>>>()?;
+                events.push(FailureEvent {
+                    at_batch,
+                    kind: FailureKind::KillWorkers(workers),
+                });
+            }
+        }
+        if let Some(spec) = drift {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let fields: Vec<&str> = part.split(':').collect();
+                if fields.len() != 3 {
+                    return Err(Error::InvalidSpec(format!(
+                        "--drift entry `{part}` is not BATCH:GROUP:FACTOR"
+                    )));
+                }
+                events.push(FailureEvent {
+                    at_batch: parse_num::<u64>("drift batch", fields[0])?,
+                    kind: FailureKind::SlowGroup {
+                        group: parse_num::<usize>("drift group", fields[1])?,
+                        factor: parse_num::<f64>("drift factor", fields[2])?,
+                    },
+                });
+            }
+        }
+        FailureScenario::new(events)
+    }
+}
+
+fn validate_factor(f: f64) -> Result<()> {
+    if !(f > 0.0) || !f.is_finite() {
+        return Err(Error::InvalidSpec(format!(
+            "scenario factor must be positive and finite, got {f}"
+        )));
+    }
+    Ok(())
+}
+
+/// Parse one numeric field of the scenario mini-syntax with a labelled
+/// error. Shared with [`crate::workload::drift::DriftSchedule::parse`],
+/// the time-indexed dialect of the same syntax.
+pub(crate) fn parse_num<T: std::str::FromStr>(what: &str, s: &str) -> Result<T> {
+    s.trim()
+        .parse::<T>()
+        .map_err(|_| Error::InvalidSpec(format!("cannot parse {what} `{s}`")))
+}
+
+/// The live truth a scenario has produced so far: effective spec, dead
+/// set, and per-worker slowdown multipliers. Advanced batch by batch.
+#[derive(Clone, Debug)]
+pub struct ScenarioState {
+    /// Effective cluster parameters (group-level drift applied).
+    pub spec: ClusterSpec,
+    /// Workers that have died so far.
+    pub dead: BTreeSet<usize>,
+    /// Per-worker delay multipliers (machine-level slowdowns).
+    pub slow: Vec<f64>,
+    applied: usize,
+}
+
+impl ScenarioState {
+    /// Fresh state before any event; `initial_dead` seeds the dead set
+    /// (e.g. [`crate::coordinator::JobConfig::dead_workers`]).
+    pub fn new(spec: &ClusterSpec, initial_dead: &[usize]) -> ScenarioState {
+        ScenarioState {
+            spec: spec.clone(),
+            dead: initial_dead.iter().copied().collect(),
+            slow: vec![1.0; spec.total_workers()],
+            applied: 0,
+        }
+    }
+
+    /// Apply every not-yet-applied event with `at_batch <= batch`. Returns
+    /// `true` when anything changed. Out-of-range worker/group ids are
+    /// reported as errors (the scenario was authored against a different
+    /// cluster).
+    pub fn advance(&mut self, scenario: &FailureScenario, batch: u64) -> Result<bool> {
+        let mut changed = false;
+        while let Some(e) = scenario.events.get(self.applied) {
+            if e.at_batch > batch {
+                break;
+            }
+            self.apply(&e.kind)?;
+            self.applied += 1;
+            changed = true;
+        }
+        Ok(changed)
+    }
+
+    fn apply(&mut self, kind: &FailureKind) -> Result<()> {
+        let nw = self.spec.total_workers();
+        let ng = self.spec.num_groups();
+        match kind {
+            FailureKind::KillWorkers(ws) => {
+                for &w in ws {
+                    if w >= nw {
+                        return Err(Error::InvalidSpec(format!(
+                            "scenario kills worker {w}, cluster has {nw}"
+                        )));
+                    }
+                    self.dead.insert(w);
+                }
+            }
+            FailureKind::SlowWorkers { workers, factor } => {
+                for &w in workers {
+                    if w >= nw {
+                        return Err(Error::InvalidSpec(format!(
+                            "scenario slows worker {w}, cluster has {nw}"
+                        )));
+                    }
+                    self.slow[w] *= factor;
+                }
+            }
+            FailureKind::SlowGroup { group, factor } => {
+                if *group >= ng {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario slows group {group}, cluster has {ng}"
+                    )));
+                }
+                let g = &mut self.spec.groups[*group];
+                g.alpha *= factor;
+                g.mu /= factor;
+            }
+            FailureKind::ScaleGroupMu { group, factor } => {
+                if *group >= ng {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario drifts group {group}, cluster has {ng}"
+                    )));
+                }
+                self.spec.groups[*group].mu *= factor;
+            }
+        }
+        Ok(())
+    }
+
+    /// Group index of a (group-major) worker id.
+    pub fn group_of(&self, worker: usize) -> usize {
+        let mut w = worker;
+        for (j, g) in self.spec.groups.iter().enumerate() {
+            if w < g.n {
+                return j;
+            }
+            w -= g.n;
+        }
+        self.spec.num_groups() - 1
+    }
+
+    /// Sample a straggle realization from the *effective* cluster: group
+    /// drift via the effective spec, machine slowdowns via delay
+    /// multipliers, deaths via the dead set.
+    pub fn injector(
+        &self,
+        model: LatencyModel,
+        per_worker_loads: &[usize],
+        time_scale: f64,
+        seed: u64,
+    ) -> Result<StragglerInjector> {
+        Ok(StragglerInjector::sample(
+            &self.spec,
+            model,
+            per_worker_loads,
+            time_scale,
+            seed,
+        )?
+        .with_slowdowns(&self.slow)?
+        .with_dead(self.dead.iter().copied()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn events_apply_in_batch_order() {
+        let scenario = FailureScenario::new(vec![
+            FailureEvent {
+                at_batch: 5,
+                kind: FailureKind::SlowGroup { group: 0, factor: 2.0 },
+            },
+            FailureEvent { at_batch: 2, kind: FailureKind::KillWorkers(vec![7]) },
+        ])
+        .unwrap();
+        let mut st = ScenarioState::new(&spec(), &[]);
+        assert!(!st.advance(&scenario, 1).unwrap());
+        assert!(st.advance(&scenario, 2).unwrap());
+        assert!(st.dead.contains(&7));
+        assert_eq!(st.spec.groups[0].mu, 8.0);
+        assert!(st.advance(&scenario, 10).unwrap());
+        assert_eq!(st.spec.groups[0].mu, 4.0);
+        assert_eq!(st.spec.groups[0].alpha, 2.0);
+        // Events never re-apply.
+        assert!(!st.advance(&scenario, 20).unwrap());
+        assert_eq!(st.spec.groups[0].mu, 4.0);
+    }
+
+    #[test]
+    fn worker_slowdowns_compose_and_mu_drift_is_tail_only() {
+        let scenario = FailureScenario::new(vec![
+            FailureEvent {
+                at_batch: 0,
+                kind: FailureKind::SlowWorkers { workers: vec![1], factor: 2.0 },
+            },
+            FailureEvent {
+                at_batch: 1,
+                kind: FailureKind::SlowWorkers { workers: vec![1, 2], factor: 3.0 },
+            },
+            FailureEvent {
+                at_batch: 1,
+                kind: FailureKind::ScaleGroupMu { group: 1, factor: 0.5 },
+            },
+        ])
+        .unwrap();
+        let mut st = ScenarioState::new(&spec(), &[0]);
+        st.advance(&scenario, 3).unwrap();
+        assert_eq!(st.slow[1], 6.0);
+        assert_eq!(st.slow[2], 3.0);
+        assert_eq!(st.slow[3], 1.0);
+        assert_eq!(st.spec.groups[1].mu, 1.0);
+        assert_eq!(st.spec.groups[1].alpha, 1.0, "mu drift keeps the shift");
+        assert!(st.dead.contains(&0), "initial dead seeded");
+        let inj = st.injector(LatencyModel::A, &[16; 10], 1.0, 5).unwrap();
+        assert!(inj.is_dead(0));
+    }
+
+    #[test]
+    fn group_of_maps_group_major_ids() {
+        let st = ScenarioState::new(&spec(), &[]);
+        assert_eq!(st.group_of(0), 0);
+        assert_eq!(st.group_of(3), 0);
+        assert_eq!(st.group_of(4), 1);
+        assert_eq!(st.group_of(9), 1);
+    }
+
+    #[test]
+    fn out_of_range_ids_and_bad_factors_rejected() {
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::SlowGroup { group: 0, factor: 0.0 },
+        }])
+        .is_err());
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::KillWorkers(vec![]),
+        }])
+        .is_err());
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::KillWorkers(vec![99]),
+        }])
+        .unwrap();
+        let mut st = ScenarioState::new(&spec(), &[]);
+        assert!(st.advance(&scenario, 0).is_err());
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::SlowGroup { group: 9, factor: 2.0 },
+        }])
+        .unwrap();
+        let mut st = ScenarioState::new(&spec(), &[]);
+        assert!(st.advance(&scenario, 0).is_err());
+    }
+
+    #[test]
+    fn parses_cli_mini_syntax() {
+        let s =
+            FailureScenario::parse(Some("3:0,5;7:2"), Some("5:1:2.0")).unwrap();
+        assert_eq!(s.events().len(), 3);
+        assert_eq!(
+            s.events()[0].kind,
+            FailureKind::KillWorkers(vec![0, 5])
+        );
+        assert_eq!(s.events()[0].at_batch, 3);
+        assert_eq!(
+            s.events()[1].kind,
+            FailureKind::SlowGroup { group: 1, factor: 2.0 }
+        );
+        assert_eq!(s.events()[2].at_batch, 7);
+        assert!(FailureScenario::parse(Some("nope"), None).is_err());
+        assert!(FailureScenario::parse(None, Some("1:2")).is_err());
+        assert!(FailureScenario::parse(None, None).unwrap().is_empty());
+    }
+}

@@ -218,7 +218,7 @@ pub fn derive_stream_seed(base: u64, index: u64) -> u64 {
 /// Fold a per-job `max_error` into a running worst. NaN (verification
 /// disabled) is sticky — `f64::max` would silently drop it and report a
 /// perfect 0.0 for a stream where nothing was verified.
-fn fold_worst_error(worst: f64, max_error: f64) -> f64 {
+pub(crate) fn fold_worst_error(worst: f64, max_error: f64) -> f64 {
     if worst.is_nan() || max_error.is_nan() {
         f64::NAN
     } else {
@@ -352,6 +352,11 @@ pub fn serve_requests_pipelined(
 /// straggle realization from a derived seed ([`derive_stream_seed`]); the
 /// generator itself is fixed for the stream, which only pins *which* MDS
 /// code serves the traffic, not the stochastic process being measured.
+///
+/// This is the static-cluster view: the failure/drift-aware loop with the
+/// same batching semantics (and bit-identical behaviour under an empty
+/// scenario — this function delegates to it) is
+/// [`crate::coordinator::serve_arrivals_adaptive`].
 #[allow(clippy::too_many_arguments)]
 pub fn serve_arrivals(
     spec: &ClusterSpec,
@@ -363,66 +368,19 @@ pub fn serve_arrivals(
     compute: Arc<dyn Compute>,
     cfg: &JobConfig,
 ) -> Result<ServeReport> {
-    if requests.len() != arrival_offsets.len() {
-        return Err(Error::InvalidSpec(format!(
-            "{} requests but {} arrival offsets",
-            requests.len(),
-            arrival_offsets.len()
-        )));
-    }
-    if max_batch == 0 {
-        return Err(Error::InvalidSpec("max_batch must be positive".into()));
-    }
-    if arrival_offsets.windows(2).any(|w| w[1] < w[0]) {
-        return Err(Error::InvalidSpec(
-            "arrival offsets must be ascending".into(),
-        ));
-    }
-    // Setup once: encode, chunk, and decoder state live across batches.
-    let mut prepared = crate::coordinator::PreparedJob::new(spec, alloc, a, cfg)?;
-    let start = Instant::now();
-    let mut recorder = LatencyRecorder::new();
-    let mut jobs = Vec::with_capacity(requests.len());
-    let mut worst = 0.0f64;
-    let mut next = 0usize;
-    let mut batch_idx = 0u64;
-    while next < requests.len() {
-        // Block until the head-of-line request has arrived.
-        let now = start.elapsed();
-        if arrival_offsets[next] > now {
-            std::thread::sleep(arrival_offsets[next] - now);
-        }
-        // Drain everything already queued, bounded by the batch width.
-        let now = start.elapsed();
-        let mut end = next + 1;
-        while end < requests.len()
-            && end - next < max_batch
-            && arrival_offsets[end] <= now
-        {
-            end += 1;
-        }
-        let reports = prepared.run_batch(
-            &requests[next..end],
-            Arc::clone(&compute),
-            derive_stream_seed(cfg.seed, batch_idx),
-        )?;
-        let done = start.elapsed();
-        for (i, report) in reports.into_iter().enumerate() {
-            let sojourn = done.saturating_sub(arrival_offsets[next + i]);
-            recorder.record(sojourn, report.decoded.len());
-            worst = fold_worst_error(worst, report.max_error);
-            jobs.push(report);
-        }
-        next = end;
-        batch_idx += 1;
-    }
-    Ok(ServeReport {
-        recorder,
-        worst_error: worst,
-        jobs,
-        makespan: Some(start.elapsed()),
-        encodes: prepared.encode_count(),
-    })
+    crate::coordinator::serve_arrivals_adaptive(
+        spec,
+        alloc,
+        a,
+        requests,
+        arrival_offsets,
+        max_batch,
+        compute,
+        cfg,
+        &crate::coordinator::FailureScenario::none(),
+        None,
+    )
+    .map(|r| r.serve)
 }
 
 /// Serve `requests` input vectors sequentially over the same cluster and

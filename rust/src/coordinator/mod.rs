@@ -16,21 +16,34 @@
 //! Serving loops go through the [`prepared`] fast path: a [`PreparedJob`]
 //! owns the generator, encoded chunks, and factorization-cached decoder,
 //! so steady-state batches pay only straggle + collect + solve.
+//!
+//! Long-lived streams face failures and drift; the [`failures`] module
+//! scripts them (deaths, machine slowdowns, group drift) and
+//! [`adaptive`] layers the estimator-driven re-allocation loop on top —
+//! re-solving the paper's allocation on the estimated surviving cluster
+//! and re-slicing the already-encoded rows ([`PreparedJob::rechunk`])
+//! with zero additional encode work.
 
+pub mod adaptive;
 pub mod compute;
+pub mod failures;
 pub mod master;
 pub mod metrics;
 pub mod prepared;
 pub mod straggler;
 
+pub use adaptive::{
+    serve_arrivals_adaptive, AdaptiveServeConfig, AdaptiveServeReport,
+};
 pub use compute::{Compute, NativeCompute};
 #[cfg(feature = "xla")]
 pub use compute::XlaService;
+pub use failures::{FailureEvent, FailureKind, FailureScenario, ScenarioState};
 pub use master::{
     derive_stream_seed, run_job, run_job_batched, serve_arrivals,
     serve_requests, serve_requests_pipelined, JobConfig, JobReport,
     ServeReport,
 };
 pub use metrics::LatencyRecorder;
-pub use prepared::PreparedJob;
+pub use prepared::{PreparedJob, WorkerObservation};
 pub use straggler::StragglerInjector;

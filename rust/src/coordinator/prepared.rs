@@ -40,9 +40,25 @@ use std::time::Instant;
 
 /// One worker's reply for a whole request batch.
 struct BatchReply {
+    worker: usize,
     range: std::ops::Range<usize>,
     /// One result vector per request.
     ys: Vec<Vec<f64>>,
+}
+
+/// One consumed worker reply, as the estimator sees it: which worker, how
+/// many rows it carried, and its (model-time) completion. Only replies the
+/// master actually consumed before reaching `k` rows appear — together
+/// with the dispatch count this is a type-II censored sample
+/// ([`crate::model::SpeedEstimator`]).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerObservation {
+    /// Global worker id (group-major).
+    pub worker: usize,
+    /// Coded rows the worker carried this batch.
+    pub load: usize,
+    /// Model-time completion (the injected straggle delay).
+    pub model_time: f64,
 }
 
 /// A coded job prepared for repeated serving: generator, encoded chunks,
@@ -61,8 +77,17 @@ pub struct PreparedJob {
     /// measurement behind [`PreparedJob::encode_count`] — any future code
     /// path that re-encodes through this job shows up there.
     encoder: Encoder,
+    /// The encoded matrix `Ã = G·A`, kept so adaptation can re-slice it
+    /// ([`PreparedJob::rechunk`]) without a fresh encode pass. This is a
+    /// deliberate memory-for-adaptability trade: the chunks hold copies of
+    /// the same rows, so a prepared job carries ~2× the encoded data
+    /// (O(n·d) each). Sharing one `Arc<Matrix>` with range-view chunks
+    /// would halve it but needs a view type in the `Matrix` layer.
+    coded: Matrix,
     /// Encoded per-worker chunks; `Arc` so batch dispatch clones pointers.
     chunks: Vec<Arc<WorkerChunk>>,
+    /// Re-chunk (re-allocation) passes performed since construction.
+    rechunks: u64,
     decoder: Decoder,
     /// Reusable collection buffers (row support + per-request columns).
     rows_buf: Vec<usize>,
@@ -106,7 +131,9 @@ impl PreparedJob {
             n,
             a: cfg.verify_decode.then(|| a.clone()),
             encoder,
+            coded,
             chunks,
+            rechunks: 0,
             decoder: Decoder::with_cache_capacity(gen, cfg.decode_cache),
             rows_buf: Vec::new(),
             cols_buf: Vec::new(),
@@ -116,6 +143,39 @@ impl PreparedJob {
     /// Code length `n` actually used.
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Current integer per-worker loads (group-major; `0` = drained or
+    /// dead worker holding no chunk).
+    pub fn per_worker(&self) -> &[usize] {
+        &self.per_worker
+    }
+
+    /// Re-allocations performed through [`PreparedJob::rechunk`].
+    pub fn rechunk_count(&self) -> u64 {
+        self.rechunks
+    }
+
+    /// Re-allocate: re-slice the **already-encoded** rows into a new
+    /// per-worker split (one entry per worker; `0` drains a worker, e.g. a
+    /// dead one). The split may cover only `k ≤ Σ l_i ≤ n` rows — the rows
+    /// were minted once at construction, and any `≥ k` subset of the MDS
+    /// code decodes. Performs zero encode work, observable through
+    /// [`PreparedJob::encode_count`]; the decoder (and its factorization
+    /// cache) carries over because the generator is unchanged.
+    pub fn rechunk(&mut self, per_worker: &[usize]) -> Result<()> {
+        if per_worker.len() != self.spec.total_workers() {
+            return Err(Error::InvalidSpec(format!(
+                "{} loads for {} workers",
+                per_worker.len(),
+                self.spec.total_workers()
+            )));
+        }
+        let chunks = self.encoder.rechunk(&self.coded, per_worker)?;
+        self.per_worker = per_worker.to_vec();
+        self.chunks = chunks.into_iter().map(Arc::new).collect();
+        self.rechunks += 1;
+        Ok(())
     }
 
     /// Encode passes performed through this job's encoder since
@@ -141,11 +201,6 @@ impl PreparedJob {
         compute: Arc<dyn Compute>,
         batch_seed: u64,
     ) -> Result<Vec<JobReport>> {
-        if requests.is_empty() {
-            return Err(Error::InvalidSpec("empty request batch".into()));
-        }
-        let b = requests.len();
-        let k = self.spec.k;
         let injector = StragglerInjector::sample(
             &self.spec,
             self.cfg.model,
@@ -154,6 +209,34 @@ impl PreparedJob {
             batch_seed ^ STRAGGLE_SEED_TAG,
         )?
         .with_dead(self.cfg.dead_workers.iter().copied());
+        self.run_batch_injected(requests, compute, &injector)
+            .map(|(reports, _)| reports)
+    }
+
+    /// [`PreparedJob::run_batch`] with an explicit straggle realization —
+    /// the hook the failure/drift scenario layer uses to sample from the
+    /// *effective* cluster ([`crate::coordinator::ScenarioState`]) rather
+    /// than the spec the job was prepared for. Also returns the consumed
+    /// worker replies as [`WorkerObservation`]s so an online estimator can
+    /// watch the stream.
+    pub fn run_batch_injected(
+        &mut self,
+        requests: &[Vec<f64>],
+        compute: Arc<dyn Compute>,
+        injector: &StragglerInjector,
+    ) -> Result<(Vec<JobReport>, Vec<WorkerObservation>)> {
+        if requests.is_empty() {
+            return Err(Error::InvalidSpec("empty request batch".into()));
+        }
+        if injector.len() != self.spec.total_workers() {
+            return Err(Error::InvalidSpec(format!(
+                "injector covers {} workers, cluster has {}",
+                injector.len(),
+                self.spec.total_workers()
+            )));
+        }
+        let b = requests.len();
+        let k = self.spec.k;
         let model_latency = injector.analytic_completion(&self.per_worker, k);
 
         let xs_arc: Arc<Vec<Vec<f64>>> = Arc::new(requests.to_vec());
@@ -174,8 +257,11 @@ impl PreparedJob {
                 .spawn(move || {
                     std::thread::sleep(delay);
                     if let Ok(ys) = cmp.matvec_batch(&chunk.rows, &xs) {
-                        let _ = sender
-                            .send(BatchReply { range: chunk.row_range.clone(), ys });
+                        let _ = sender.send(BatchReply {
+                            worker: w,
+                            range: chunk.row_range.clone(),
+                            ys,
+                        });
                     }
                 })
                 .map_err(|e| Error::Runtime(format!("spawn worker {w}: {e}")))?;
@@ -189,10 +275,16 @@ impl PreparedJob {
             col.clear();
         }
         let mut workers_used = 0usize;
+        let mut observed = Vec::new();
         while self.rows_buf.len() < k {
             match rx.recv() {
                 Ok(reply) => {
                     workers_used += 1;
+                    observed.push(WorkerObservation {
+                        worker: reply.worker,
+                        load: reply.range.len(),
+                        model_time: injector.model_delay(reply.worker),
+                    });
                     self.rows_buf.extend(reply.range.clone());
                     for (col, y) in self.cols_buf.iter_mut().zip(&reply.ys) {
                         col.extend_from_slice(y);
@@ -237,7 +329,7 @@ impl PreparedJob {
                 backend: compute.name(),
             });
         }
-        Ok(reports)
+        Ok((reports, observed))
     }
 }
 
@@ -324,6 +416,57 @@ mod tests {
         // Decode still happens; only the O(k·d) verification is skipped.
         assert!(reports.iter().all(|r| r.max_error.is_nan()));
         assert!(reports.iter().all(|r| r.decoded.len() == 64));
+    }
+
+    #[test]
+    fn rechunk_reallocates_without_reencoding() {
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(75);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut prepared =
+            PreparedJob::new(&spec, &alloc, &a, &fast_cfg()).unwrap();
+        assert_eq!(prepared.encode_count(), 1);
+        let n = prepared.n();
+        let reqs: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        prepared.run_batch(&reqs, Arc::new(NativeCompute), 1).unwrap();
+
+        // Drain worker 0 and redistribute its rows to workers 1 and 2.
+        let mut pw = prepared.per_worker().to_vec();
+        let drained = pw[0];
+        pw[1] += drained - drained / 2;
+        pw[2] += drained / 2;
+        pw[0] = 0;
+        prepared.rechunk(&pw).unwrap();
+        assert_eq!(prepared.rechunk_count(), 1);
+        assert_eq!(prepared.per_worker()[0], 0);
+        assert_eq!(prepared.per_worker().iter().sum::<usize>(), n);
+
+        let reports =
+            prepared.run_batch(&reqs, Arc::new(NativeCompute), 2).unwrap();
+        for r in &reports {
+            assert!(r.max_error < 1e-8, "post-rechunk err {}", r.max_error);
+            assert_eq!(r.decoded.len(), 64);
+        }
+        // The whole point: re-allocation re-sliced cached rows, no encode.
+        assert_eq!(prepared.encode_count(), 1);
+
+        // Partial cover (k <= rows < n) also serves fine.
+        let mut partial = prepared.per_worker().to_vec();
+        let spare = n - 64; // redundancy beyond k
+        let take = spare.min(partial[9]);
+        partial[9] -= take;
+        prepared.rechunk(&partial).unwrap();
+        let reports =
+            prepared.run_batch(&reqs, Arc::new(NativeCompute), 3).unwrap();
+        assert!(reports.iter().all(|r| r.max_error < 1e-8));
+        assert_eq!(prepared.encode_count(), 1);
+
+        // Invalid splits rejected: wrong arity, beyond-n, sub-k.
+        assert!(prepared.rechunk(&[1, 2, 3]).is_err());
+        assert!(prepared.rechunk(&[n; 10]).is_err());
+        assert!(prepared.rechunk(&[1; 10]).is_err());
     }
 
     #[test]

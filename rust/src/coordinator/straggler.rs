@@ -47,14 +47,21 @@ impl StragglerInjector {
         let mut w = 0usize;
         for g in &spec.groups {
             for _ in 0..g.n {
-                let dist = RuntimeDist::new(
-                    model,
-                    per_worker_loads[w] as f64,
-                    spec.k as f64,
-                    g.mu,
-                    g.alpha,
-                );
-                delays.push(dist.sample(&mut rng));
+                if per_worker_loads[w] == 0 {
+                    // Drained worker (e.g. after an adaptive re-chunk):
+                    // nothing dispatched, so it never completes. Dispatch
+                    // loops skip it; `analytic_completion` ignores it.
+                    delays.push(f64::INFINITY);
+                } else {
+                    let dist = RuntimeDist::new(
+                        model,
+                        per_worker_loads[w] as f64,
+                        spec.k as f64,
+                        g.mu,
+                        g.alpha,
+                    );
+                    delays.push(dist.sample(&mut rng));
+                }
                 w += 1;
             }
         }
@@ -69,6 +76,28 @@ impl StragglerInjector {
     pub fn with_dead(mut self, dead: impl IntoIterator<Item = usize>) -> Self {
         self.dead = dead.into_iter().collect();
         self
+    }
+
+    /// Multiply each worker's sampled delay by a per-worker slowdown
+    /// factor (`1.0` = unchanged) — the scenario layer's hook for
+    /// machine-level slowdowns on top of the group-level distribution.
+    pub fn with_slowdowns(mut self, factors: &[f64]) -> Result<Self> {
+        if factors.len() != self.delays.len() {
+            return Err(Error::InvalidSpec(format!(
+                "{} slowdown factors for {} workers",
+                factors.len(),
+                self.delays.len()
+            )));
+        }
+        if factors.iter().any(|f| !(*f > 0.0) || !f.is_finite()) {
+            return Err(Error::InvalidSpec(
+                "slowdown factors must be positive and finite".into(),
+            ));
+        }
+        for (d, f) in self.delays.iter_mut().zip(factors) {
+            *d *= f;
+        }
+        Ok(self)
     }
 
     /// Number of workers.
@@ -98,12 +127,12 @@ impl StragglerInjector {
 
     /// The model-time the paper's analysis would record for this sample:
     /// the instant cumulative collected load first reaches `k`, given the
-    /// per-worker loads (dead workers excluded).
+    /// per-worker loads (dead and zero-load workers excluded).
     pub fn analytic_completion(&self, per_worker_loads: &[usize], k: usize) -> Option<f64> {
         let mut order: Vec<usize> = (0..self.delays.len())
-            .filter(|w| !self.is_dead(*w))
+            .filter(|&w| !self.is_dead(w) && per_worker_loads[w] > 0)
             .collect();
-        order.sort_by(|&a, &b| self.delays[a].partial_cmp(&self.delays[b]).unwrap());
+        order.sort_by(|&a, &b| self.delays[a].total_cmp(&self.delays[b]));
         let mut cum = 0usize;
         for w in order {
             cum += per_worker_loads[w];
@@ -193,6 +222,46 @@ mod tests {
             .unwrap()
             .with_dead(0..8); // only 2 alive → 60 rows < k
         assert!(inj.analytic_completion(&loads, 100).is_none());
+    }
+
+    #[test]
+    fn zero_load_workers_never_complete() {
+        let mut loads = vec![20usize; 10];
+        loads[3] = 0;
+        loads[7] = 0;
+        let inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 5).unwrap();
+        assert!(inj.model_delay(3).is_infinite());
+        assert!(inj.model_delay(7).is_infinite());
+        assert!(inj.model_delay(0).is_finite());
+        // Completion still well-defined over the loaded workers
+        // (8 x 20 = 160 >= k = 100).
+        let t = inj.analytic_completion(&loads, 100).unwrap();
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn slowdowns_scale_delays() {
+        let loads = vec![20usize; 10];
+        let base =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 6).unwrap();
+        let mut factors = vec![1.0; 10];
+        factors[2] = 2.0;
+        let slowed =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 6)
+                .unwrap()
+                .with_slowdowns(&factors)
+                .unwrap();
+        for w in 0..10 {
+            let expect = base.model_delay(w) * factors[w];
+            assert!((slowed.model_delay(w) - expect).abs() < 1e-15, "worker {w}");
+        }
+        // Invalid factor vectors rejected.
+        assert!(base.clone().with_slowdowns(&[1.0; 9]).is_err());
+        assert!(base.clone().with_slowdowns(&[0.0; 10]).is_err());
+        let mut nan = vec![1.0; 10];
+        nan[0] = f64::NAN;
+        assert!(base.clone().with_slowdowns(&nan).is_err());
     }
 
     #[test]

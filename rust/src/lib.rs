@@ -18,10 +18,15 @@
 //! - a **Monte-Carlo cluster simulator** reproducing Figs. 4–9 ([`sim`]);
 //! - a **workload layer** modelling sustained job traffic — arrival
 //!   processes, FIFO queueing, and throughput/utilization/sojourn metrics
-//!   on top of the single-job latency law ([`workload`]);
+//!   on top of the single-job latency law ([`workload`]), plus
+//!   failure/drift schedules and the static-vs-adaptive allocation
+//!   experiment ([`workload::drift`]);
 //! - a **live master/worker coordinator** that executes AOT-compiled XLA
 //!   artifacts via PJRT with injected straggle delays ([`coordinator`],
-//!   [`runtime`]);
+//!   [`runtime`]), scripted failure/drift scenarios
+//!   ([`coordinator::failures`]), and an online-estimating adaptive
+//!   re-allocation loop that re-slices encoded rows without re-encoding
+//!   ([`coordinator::adaptive`], [`model::estimator`]);
 //! - the **figure harness** regenerating every plot in the paper
 //!   ([`figures`]).
 //!

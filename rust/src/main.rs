@@ -16,16 +16,19 @@ use hetcoded::allocation::{
 use hetcoded::cli::Args;
 use hetcoded::coding::Matrix;
 use hetcoded::coordinator::{
-    serve_arrivals, serve_requests, serve_requests_pipelined, Compute,
-    JobConfig, NativeCompute, ServeReport,
+    serve_arrivals_adaptive, serve_requests, serve_requests_pipelined,
+    AdaptiveServeConfig, Compute, FailureScenario, JobConfig, NativeCompute,
+    ServeReport,
 };
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
-use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::model::{ClusterSpec, EstimatorConfig, LatencyModel};
 
 use hetcoded::sim::{simulate_scheme, Scheme, SimConfig};
 use hetcoded::workload::{
-    mean_service, run_workload, service_sampler, ArrivalProcess, WorkloadConfig,
+    mean_service, run_workload, run_workload_drift, service_sampler,
+    AdaptPolicy, ArrivalProcess, DriftSchedule, DriftWorkloadConfig,
+    WorkloadConfig,
 };
 use hetcoded::{Error, Result};
 use std::sync::Arc;
@@ -83,13 +86,22 @@ SUBCOMMANDS
             [--rho 0.3,0.6,0.9 | --rates L1,L2,...] [--arrivals poisson|
             deterministic|onoff] [--jobs J] [--servers C] [--seed S]
             [--model a|b] [--burst-on T --burst-off T] [--k K] [--q Q]
-            [--calib-samples N]
+            [--calib-samples N] [--drift T:G:F[;...]] [--drift-window W]
+            [--drift-min-obs R] [--drift-threshold X] [--drift-check-every C]
             Event-driven queueing simulation: throughput, utilization and
             sojourn percentiles per policy at each arrival rate. Default
             cluster: the paper's 2-group Fig. 8 cluster. --rho gives
             offered load as a fraction of each policy's saturation rate
             1/E[S] (estimated from --calib-samples draws, default 2000);
-            --rates gives absolute arrival rates.
+            --rates gives absolute arrival rates. With --drift (dilate
+            group G by factor F at model time T), the run becomes the
+            failure/drift experiment instead: the *proposed* allocation
+            (--policies is ignored) is served static vs. adaptive (online
+            (mu,alpha) estimation + re-solve under the initial coded-row
+            budget) through the same drifting cluster at the first
+            --rho/--rates entry, and post-drift sojourn tails are
+            compared; the --drift-* flags are the estimator knobs
+            (defaults 50/100/0.30/10).
   figures   [--fig N | --all] [--samples S] [--points P] [--seed S]
             [--out DIR] [--quick]
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
@@ -97,13 +109,18 @@ SUBCOMMANDS
             [--requests R] [--time-scale T] [--seed S] [--dead i,j,...]
             [--mode seq|pipelined|arrivals] [--rate R] [--max-batch B]
             [--encode-threads T] [--decode-cache C]
+            [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
             Live coded matvec jobs over the thread coordinator. `--mode
             arrivals` replays a Poisson trace (`--rate` arrivals/s) through
             the prepared-job fast path: the matrix is encoded once and
             queued requests are served in batches of <= --max-batch.
             --decode-cache only applies to arrivals mode (seq/pipelined
             draw a fresh generator per request, so factorizations cannot
-            recur across requests).
+            recur across requests). --failures kills workers at a batch
+            index, --drift dilates group G by factor F at a batch index,
+            and --adaptive turns on the online estimator + re-allocation
+            loop (all three need --mode arrivals); re-allocation re-slices
+            the encoded rows, so `encode passes` stays 1 regardless.
   help      This text.
 ";
 
@@ -262,6 +279,9 @@ fn cmd_workload(args: &Args) -> Result<()> {
     let servers = args.get::<usize>("servers", 1)?;
     let seed = args.get::<u64>("seed", 2019)?;
     let calib = args.get::<usize>("calib-samples", 2_000)?;
+    if let Some(drift) = args.flag("drift") {
+        return cmd_workload_drift(args, &spec, model, drift, jobs, seed, calib);
+    }
     let policies = args.get_list::<String>(
         "policies",
         &["proposed".to_string(), "uniform-nstar".to_string()],
@@ -348,6 +368,135 @@ fn cmd_workload(args: &Args) -> Result<()> {
                 rep.sojourn_percentile(99.0),
                 rep.max_in_system,
             );
+        }
+    }
+    Ok(())
+}
+
+/// The failure/drift experiment: the proposed allocation served static
+/// vs. adaptive through a drifting cluster, post-drift tails compared.
+fn cmd_workload_drift(
+    args: &Args,
+    spec: &ClusterSpec,
+    model: LatencyModel,
+    drift: &str,
+    jobs: usize,
+    seed: u64,
+    calib: usize,
+) -> Result<()> {
+    let schedule = DriftSchedule::parse(drift)?;
+    if schedule.is_empty() {
+        return Err(Error::InvalidSpec("--drift parsed to no events".into()));
+    }
+    if args.flag("policies").is_some() {
+        eprintln!(
+            "note: --policies is ignored with --drift (the experiment \
+             compares static vs adaptive serving of the proposed \
+             allocation)"
+        );
+    }
+    if args.get::<usize>("servers", 1)? != 1 {
+        eprintln!(
+            "note: --servers is ignored with --drift (the drift experiment \
+             models the paper's single-slot cluster)"
+        );
+    }
+    // Calibrate the proposed policy's pre-drift E[S] once: it converts a
+    // --rho fraction into a rate and sizes default ON/OFF burst windows.
+    let es_pre = {
+        let (_, mut sampler) = service_sampler(spec, Scheme::Proposed, model)?;
+        mean_service(&mut sampler, calib, seed ^ 0xCA11B)
+    };
+    // One rate: --rates first entry, else --rho first entry (default 0.7)
+    // times the pre-drift saturation rate.
+    let rate = if let Some(rs) = args.flag("rates") {
+        args.get_list::<f64>("rates", &[])?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::InvalidSpec(format!("empty --rates `{rs}`")))?
+    } else {
+        let rho = args.get_list::<f64>("rho", &[0.7])?;
+        rho.first().copied().unwrap_or(0.7) / es_pre
+    };
+    let arrivals = match args.flag("arrivals").unwrap_or("poisson") {
+        "deterministic" => ArrivalProcess::Deterministic { rate },
+        "poisson" => ArrivalProcess::Poisson { rate },
+        "onoff" => {
+            let burst_on = args.get::<f64>("burst-on", 20.0 * es_pre)?;
+            let burst_off = args.get::<f64>("burst-off", 20.0 * es_pre)?;
+            ArrivalProcess::OnOff {
+                // Boost the ON rate so the long-run mean rate stays `rate`.
+                rate_on: rate * (burst_on + burst_off) / burst_on,
+                mean_on: burst_on,
+                mean_off: burst_off,
+            }
+        }
+        other => {
+            return Err(Error::InvalidSpec(format!(
+                "unknown arrival process `{other}`"
+            )))
+        }
+    };
+    let est = EstimatorConfig {
+        window: args.get::<usize>("drift-window", 50)?,
+        min_obs: args.get::<usize>("drift-min-obs", 100)?,
+        threshold: args.get::<f64>("drift-threshold", 0.30)?,
+        check_every: args.get::<usize>("drift-check-every", 10)?,
+    };
+    let cfg = DriftWorkloadConfig { arrivals, jobs, seed };
+    let last_event = schedule.events().last().map(|e| e.at).unwrap_or(0.0);
+    println!(
+        "drift experiment: G={} N={} k={}  model {model:?}  arrivals {}  \
+         rate {rate:.4}  jobs {jobs}  seed {seed}  events {}",
+        spec.num_groups(),
+        spec.total_workers(),
+        spec.k,
+        cfg.arrivals.name(),
+        schedule.events().len(),
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} | {:>12} {:>12} {:>9}",
+        "policy", "p50", "p95", "p99", "post p99", "post mean", "reallocs"
+    );
+    for policy in [
+        AdaptPolicy::Static,
+        AdaptPolicy::Adaptive(est),
+    ] {
+        match run_workload_drift(spec, model, &cfg, &schedule, &policy) {
+            Ok(rep) => {
+                // "post" = jobs arriving a settle margin past the last
+                // scripted event.
+                let t0 = last_event * 1.2;
+                let post = rep.sojourn_after(t0);
+                println!(
+                    "{:<10} {:>10.4e} {:>10.4e} {:>10.4e} | {:>12.4e} {:>12.4e} {:>9}",
+                    rep.policy,
+                    rep.sojourn.percentile(50.0),
+                    rep.sojourn.percentile(95.0),
+                    rep.sojourn.percentile(99.0),
+                    if post.count() > 0 { post.percentile(99.0) } else { f64::NAN },
+                    if post.count() > 0 { post.mean() } else { f64::NAN },
+                    rep.reallocations.len(),
+                );
+                for r in &rep.reallocations {
+                    let mus: Vec<String> = r
+                        .assumed
+                        .groups
+                        .iter()
+                        .map(|g| format!("{:.2}", g.mu))
+                        .collect();
+                    println!(
+                        "    realloc @ t={:.2} (job {}): mu_hat=[{}]",
+                        r.at,
+                        r.job,
+                        mus.join(", ")
+                    );
+                }
+            }
+            Err(e) => println!(
+                "{:<10} failed: {e}",
+                policy.name()
+            ),
         }
     }
     Ok(())
@@ -463,6 +612,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     let mode = args.flag("mode").unwrap_or("seq").to_string();
+    let scenario =
+        FailureScenario::parse(args.flag("failures"), args.flag("drift"))?;
+    let adaptive = args.switch("adaptive");
+    if (!scenario.is_empty() || adaptive) && mode != "arrivals" {
+        return Err(Error::InvalidSpec(
+            "--failures/--drift/--adaptive need --mode arrivals (the \
+             prepared serving stream)"
+                .into(),
+        ));
+    }
     println!(
         "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
          mode={mode} n={} (rate {:.3})",
@@ -488,9 +647,30 @@ fn cmd_run(args: &Args) -> Result<()> {
                     .into_iter()
                     .map(std::time::Duration::from_secs_f64)
                     .collect();
-            serve_arrivals(
-                &spec, &alloc, &a, &reqs, &offsets, max_batch, compute, &cfg,
-            )?
+            let adapt_cfg = adaptive.then(AdaptiveServeConfig::default);
+            let rep = serve_arrivals_adaptive(
+                &spec,
+                &alloc,
+                &a,
+                &reqs,
+                &offsets,
+                max_batch,
+                compute,
+                &cfg,
+                &scenario,
+                adapt_cfg.as_ref(),
+            )?;
+            if adaptive || !scenario.is_empty() {
+                println!(
+                    "scenario events {}  reallocations {}  \
+                     post-setup encodes {}  suspected dead {:?}",
+                    scenario.events().len(),
+                    rep.reallocations,
+                    rep.post_setup_encodes,
+                    rep.suspected_dead,
+                );
+            }
+            rep.serve
         }
         other => {
             return Err(Error::InvalidSpec(format!("unknown --mode `{other}`")))

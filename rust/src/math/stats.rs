@@ -1,6 +1,12 @@
 //! Summary statistics for Monte-Carlo estimates and benchmarks.
 
+use std::sync::OnceLock;
+
 /// Online (Welford) accumulator with percentile support on demand.
+///
+/// Percentiles require sample retention ([`Summary::keeping_samples`]).
+/// The sorted view is computed once and cached; `add`/`merge` invalidate
+/// it, so a p50/p95/p99 report triple reads one sort, not three.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     n: u64,
@@ -10,6 +16,8 @@ pub struct Summary {
     max: f64,
     samples: Vec<f64>,
     keep_samples: bool,
+    /// Lazily sorted copy of `samples`; rebuilt after any mutation.
+    sorted: OnceLock<Vec<f64>>,
 }
 
 impl Summary {
@@ -42,7 +50,15 @@ impl Summary {
         self.max = self.max.max(x);
         if self.keep_samples {
             self.samples.push(x);
+            self.sorted = OnceLock::new();
         }
+    }
+
+    /// Are percentiles available — i.e. do the retained samples cover every
+    /// observation? `false` after merging in a summary that did not retain
+    /// its samples (percentiles over a subset would silently lie).
+    pub fn keeps_samples(&self) -> bool {
+        self.keep_samples
     }
 
     /// Number of observations.
@@ -90,12 +106,25 @@ impl Summary {
 
     /// Percentile in `[0, 100]` (nearest-rank on sorted retained samples).
     ///
-    /// Panics if samples were not retained.
+    /// The sorted vector is built on first use and cached until the next
+    /// `add`/`merge`, so repeated percentile reads cost one sort total
+    /// (bit-identical to sorting per call: same multiset, same rank rule).
+    ///
+    /// Panics if samples were not retained (see [`Summary::keeps_samples`]).
     pub fn percentile(&self, p: f64) -> f64 {
-        assert!(self.keep_samples, "Summary built without sample retention");
+        assert!(
+            self.keep_samples,
+            "Summary percentiles need sample retention \
+             (built without, or merged with a non-retaining summary)"
+        );
         assert!(!self.samples.is_empty());
-        let mut xs = self.samples.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let xs = self.sorted.get_or_init(|| {
+            let mut xs = self.samples.clone();
+            // total_cmp: same order as partial_cmp on non-NaN data, and
+            // cannot panic if a NaN ever slips in.
+            xs.sort_by(f64::total_cmp);
+            xs
+        });
         let rank = ((p / 100.0) * (xs.len() as f64 - 1.0)).round() as usize;
         xs[rank.min(xs.len() - 1)]
     }
@@ -107,12 +136,28 @@ impl Summary {
 
     /// Merge another accumulator into this one (parallel Welford merge,
     /// Chan et al.). Used to reduce per-thread Monte-Carlo summaries.
+    ///
+    /// Retention propagates by *coverage*: the merged summary keeps samples
+    /// iff every observation in the merged set has a retained sample —
+    /// i.e. each non-empty side retained its own. Otherwise the samples are
+    /// dropped and `keeps_samples()` turns false (percentiles over a subset
+    /// would be silently wrong, and a stale retention flag after absorbing
+    /// a non-retaining summary used to panic only much later).
     pub fn merge(&mut self, other: &Summary) {
         if other.n == 0 {
             return;
         }
+        // `other` is non-empty from here on.
+        let covered = (self.n == 0 || self.keep_samples) && other.keep_samples;
         if self.n == 0 {
+            // Copy the moment state; retention follows coverage rather than
+            // blindly inheriting `other`'s flag.
             *self = other.clone();
+            self.keep_samples = covered;
+            if !covered {
+                self.samples = Vec::new();
+            }
+            self.sorted = OnceLock::new();
             return;
         }
         let n1 = self.n as f64;
@@ -124,9 +169,13 @@ impl Summary {
         self.n += other.n;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
-        if self.keep_samples {
+        if covered {
             self.samples.extend_from_slice(&other.samples);
+        } else {
+            self.keep_samples = false;
+            self.samples = Vec::new();
         }
+        self.sorted = OnceLock::new();
     }
 }
 
@@ -233,5 +282,103 @@ mod tests {
         let mut s = Summary::new();
         s.add(1.0);
         s.percentile(50.0);
+    }
+
+    #[test]
+    fn merge_keeps_full_sample_set_when_both_retain() {
+        // Regression: percentiles after a merge must see *every* sample,
+        // not just one side's.
+        let mut a = Summary::keeping_samples();
+        let mut b = Summary::keeping_samples();
+        for i in 1..=50 {
+            a.add(i as f64);
+        }
+        for i in 51..=100 {
+            b.add(i as f64);
+        }
+        a.merge(&b);
+        assert!(a.keeps_samples());
+        assert_eq!(a.percentile(100.0), 100.0);
+        assert_eq!(a.percentile(0.0), 1.0);
+        assert!((a.median() - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn merge_with_non_retaining_side_drops_retention_explicitly() {
+        // Regression: merging a non-retaining summary used to leave the
+        // retention flag true with a silent subset of samples.
+        let mut keep = Summary::keeping_samples();
+        keep.add(1.0);
+        keep.add(2.0);
+        let mut plain = Summary::new();
+        plain.add(10.0);
+        keep.merge(&plain);
+        assert!(!keep.keeps_samples(), "subset percentiles must be refused");
+        assert_eq!(keep.count(), 3);
+        assert!((keep.mean() - 13.0 / 3.0).abs() < 1e-12);
+        assert_eq!(keep.max(), 10.0);
+    }
+
+    #[test]
+    fn merge_into_empty_propagates_retention_by_coverage() {
+        // Regression: the `self.n == 0` branch cloned `other` wholesale,
+        // clobbering the retention state. An empty accumulator absorbing a
+        // retaining one covers all observations, so percentiles work; an
+        // empty *retaining* accumulator absorbing a non-retaining one
+        // cannot, so `keeps_samples` must turn false.
+        let mut full = Summary::keeping_samples();
+        for i in 1..=10 {
+            full.add(i as f64);
+        }
+        let mut empty = Summary::new();
+        empty.merge(&full);
+        assert!(empty.keeps_samples());
+        assert_eq!(empty.percentile(100.0), 10.0);
+
+        let mut plain = Summary::new();
+        plain.add(5.0);
+        let mut empty_keeping = Summary::keeping_samples();
+        empty_keeping.merge(&plain);
+        assert!(!empty_keeping.keeps_samples());
+        assert_eq!(empty_keeping.count(), 1);
+    }
+
+    #[test]
+    fn percentile_cache_invalidated_by_add_and_merge() {
+        let mut s = Summary::keeping_samples();
+        for i in 1..=9 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(100.0), 9.0); // builds the cache
+        s.add(100.0);
+        assert_eq!(s.percentile(100.0), 100.0); // add invalidated it
+        let mut t = Summary::keeping_samples();
+        t.add(200.0);
+        s.merge(&t);
+        assert_eq!(s.percentile(100.0), 200.0); // merge invalidated it
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn cached_percentiles_match_fresh_sort() {
+        // Bit-identical: repeated reads through the cache equal a freshly
+        // built summary's first read, across a spread of percentiles.
+        let mut rng = crate::math::Rng::new(17);
+        let xs: Vec<f64> = (0..1_000).map(|_| rng.normal()).collect();
+        let mut a = Summary::keeping_samples();
+        for &x in &xs {
+            a.add(x);
+        }
+        let probes = [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0];
+        let first: Vec<f64> = probes.iter().map(|&p| a.percentile(p)).collect();
+        let again: Vec<f64> = probes.iter().map(|&p| a.percentile(p)).collect();
+        assert_eq!(first, again);
+        let mut b = Summary::keeping_samples();
+        for &x in &xs {
+            b.add(x);
+        }
+        for (&p, &v) in probes.iter().zip(&first) {
+            assert_eq!(b.percentile(p), v, "p{p}");
+        }
     }
 }

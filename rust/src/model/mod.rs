@@ -7,11 +7,15 @@
 
 pub mod analytic;
 pub mod clustering;
+pub mod estimator;
 pub mod order_stats;
 pub mod runtime_dist;
 
 pub use analytic::clt_expected_latency;
 pub use clustering::cluster_workers;
+pub use estimator::{
+    CensoredSample, EstimatorConfig, GroupEstimate, SpeedEstimator,
+};
 pub use order_stats::{group_latency, group_latency_exact, xi, xi_star};
 pub use runtime_dist::{LatencyModel, RuntimeDist};
 

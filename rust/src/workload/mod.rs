@@ -33,6 +33,12 @@
 //! replays an arrival trace against the thread coordinator with batched
 //! dispatch (the `MatvecBatched` artifacts on the XLA backend).
 //!
+//! When the cluster itself is the moving part — workers dying, machines
+//! slowing, group parameters drifting — the [`drift`] module scripts the
+//! truth over model time and [`run_workload_drift`] compares the paper's
+//! static allocation against the estimator-driven adaptive policy (the
+//! live mirror is [`crate::coordinator::serve_arrivals_adaptive`]).
+//!
 //! # Example
 //!
 //! ```no_run
@@ -58,10 +64,15 @@
 //! ```
 
 pub mod arrivals;
+pub mod drift;
 pub mod queue;
 pub mod service;
 
 pub use arrivals::ArrivalProcess;
+pub use drift::{
+    run_workload_drift, AdaptPolicy, DriftEvent, DriftKind, DriftReport,
+    DriftSchedule, DriftWorkloadConfig, Realloc,
+};
 pub use queue::{
     run_workload, simulate_queue, QueueTrace, WorkloadConfig, WorkloadReport,
 };

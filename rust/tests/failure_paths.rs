@@ -1,0 +1,216 @@
+//! Failure-path integration tests: dead workers on the prepared serving
+//! path, clean sub-`k` failures (no hangs), and the live adaptive loop
+//! re-allocating under scripted scenarios without ever re-encoding.
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{
+    serve_arrivals_adaptive, AdaptiveServeConfig, FailureEvent, FailureKind,
+    FailureScenario, JobConfig, NativeCompute, PreparedJob,
+};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, EstimatorConfig, Group, LatencyModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_spec() -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap()
+}
+
+fn data(seed: u64, requests: usize) -> (Matrix, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+    let reqs = (0..requests)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    (a, reqs)
+}
+
+fn fast_cfg() -> JobConfig {
+    JobConfig { time_scale: 0.002, ..Default::default() }
+}
+
+#[test]
+fn dead_workers_decode_bit_identically_and_correctly() {
+    // Rate-1/2 code: surviving rows still cover k after two deaths. The
+    // decode must (a) match ground truth and (b) be bit-identical across
+    // repeat runs with the same seed — dead workers change *which* rows
+    // arrive, never the decoded values' determinism.
+    let spec = small_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let (a, reqs) = data(90, 3);
+    let mut cfg = fast_cfg();
+    cfg.dead_workers = vec![0, 5];
+    let run = |cfg: &JobConfig| {
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, cfg).unwrap();
+        prepared.run_batch(&reqs, Arc::new(NativeCompute), 77).unwrap()
+    };
+    let first = run(&cfg);
+    let second = run(&cfg);
+    assert_eq!(first.len(), 3);
+    for (r1, r2) in first.iter().zip(&second) {
+        assert!(r1.max_error < 1e-8, "err {}", r1.max_error);
+        assert_eq!(r1.decoded, r2.decoded, "decode must be deterministic");
+        assert!(r1.rows_collected >= 64);
+    }
+    // The dead workers' rows never arrive: with per-worker loads of ~13
+    // rows, 8 alive workers bound the collectible support.
+    let alive_rows: usize = {
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        prepared
+            .per_worker()
+            .iter()
+            .enumerate()
+            .filter(|(w, _)| !cfg.dead_workers.contains(w))
+            .map(|(_, &l)| l)
+            .sum()
+    };
+    assert!(first.iter().all(|r| r.rows_collected <= alive_rows));
+
+    // And the alive-only decode agrees with the no-deaths decode on the
+    // same requests (both equal A·x to numerical precision).
+    let baseline = run(&fast_cfg());
+    for (r_dead, r_alive) in first.iter().zip(&baseline) {
+        for (x, y) in r_dead.decoded.iter().zip(&r_alive.decoded) {
+            assert!((x - y).abs() < 1e-7, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn sub_k_survivors_error_instead_of_hanging() {
+    // Kill so many workers that k rows can never arrive: run_batch must
+    // return a decode error promptly (the reply channel closes once every
+    // live worker has reported), not block forever.
+    let spec = small_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let (a, reqs) = data(91, 2);
+    let mut cfg = fast_cfg();
+    cfg.dead_workers = (0..9).collect(); // one survivor: ~13 rows < 64
+    let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+    let started = std::time::Instant::now();
+    let res = prepared.run_batch(&reqs, Arc::new(NativeCompute), 5);
+    assert!(res.is_err(), "sub-k survivors must fail");
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "failure path took {:?} — looks like a hang",
+        started.elapsed()
+    );
+    let msg = format!("{}", res.unwrap_err());
+    assert!(msg.contains("rows arrived"), "unexpected error: {msg}");
+}
+
+#[test]
+fn live_adaptive_loop_detects_group_slowdown_and_never_reencodes() {
+    // A 2x dilation of the fast group mid-stream on the *live* threaded
+    // path: the estimator sees the consumed replies drift, re-solves, and
+    // re-chunks — with the measured encode counter pinned at the single
+    // setup encode (ServeReport.encodes == 1, post_setup_encodes == 0).
+    //
+    // The code is deliberately tight (n = 80 over k = 64, 8 of 10 workers
+    // needed) so the slowed group keeps being consumed post-drift — a
+    // high-redundancy code could serve entirely from the healthy group and
+    // starve the estimator of the very observations that show the drift.
+    let spec = small_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 80.0).unwrap();
+    let (a, reqs) = data(92, 56);
+    let offsets: Vec<Duration> =
+        (0..56).map(|i| Duration::from_millis(3 * i as u64)).collect();
+    let cfg = fast_cfg();
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 3,
+        kind: FailureKind::SlowGroup { group: 0, factor: 2.0 },
+    }])
+    .unwrap();
+    let adapt = AdaptiveServeConfig {
+        est: EstimatorConfig {
+            // A short window so the pre-drift records age out within a
+            // fraction of the stream: once the window is all post-drift,
+            // the α̂ trigger (the dilated shift doubles the observed
+            // minimum) fires deterministically, independent of μ̂ noise
+            // and its significance floor.
+            window: 16,
+            // 16 pooled observations gate estimates past the ~3 pre-drift
+            // batches (too few samples to trust), so detection fires on
+            // post-drift data rather than warm-up noise.
+            min_obs: 16,
+            threshold: 0.25,
+            check_every: 1,
+        },
+        death_after: 1_000, // drift-only: keep the death detector out
+    };
+    let rep = serve_arrivals_adaptive(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        &offsets,
+        2,
+        Arc::new(NativeCompute),
+        &cfg,
+        &scenario,
+        Some(&adapt),
+    )
+    .unwrap();
+    assert_eq!(rep.serve.recorder.count(), 56);
+    assert!(rep.serve.worst_error < 1e-8, "err {}", rep.serve.worst_error);
+    assert!(
+        rep.reallocations >= 1,
+        "live estimator never detected the slowdown"
+    );
+    assert!(rep.suspected_dead.is_empty());
+    // Acceptance: re-allocation re-slices cached coded rows — zero encode
+    // passes after setup, measured (the encoder's own counter), for the
+    // whole adaptive stream.
+    assert_eq!(rep.post_setup_encodes, 0);
+    assert_eq!(rep.serve.encodes, 1);
+    assert_eq!(rep.rechunks, rep.reallocations);
+    // The believed spec moved toward the dilated truth (μ₀ fell).
+    assert!(
+        rep.assumed_spec.groups[0].mu < spec.groups[0].mu,
+        "assumed μ₀ {} did not move below {}",
+        rep.assumed_spec.groups[0].mu,
+        spec.groups[0].mu
+    );
+}
+
+#[test]
+fn live_scenario_deaths_within_redundancy_keep_serving_without_adaptation() {
+    // Even with adaptation off, scripted deaths inside the code's
+    // redundancy budget must not break the stream (the MDS code absorbs
+    // them); only the straggle realizations change.
+    let spec = small_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let (a, reqs) = data(93, 8);
+    let offsets: Vec<Duration> =
+        (0..8).map(|i| Duration::from_millis(4 * i as u64)).collect();
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 2,
+        kind: FailureKind::KillWorkers(vec![1, 6]),
+    }])
+    .unwrap();
+    let rep = serve_arrivals_adaptive(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        &offsets,
+        4,
+        Arc::new(NativeCompute),
+        &fast_cfg(),
+        &scenario,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.serve.recorder.count(), 8);
+    assert!(rep.serve.worst_error < 1e-8);
+    assert_eq!(rep.reallocations, 0);
+    assert_eq!(rep.serve.encodes, 1);
+}
