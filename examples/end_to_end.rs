@@ -22,7 +22,7 @@
 
 use hetcoded::allocation::{proposed_allocation, uniform_allocation};
 use hetcoded::coding::{Generator, GeneratorKind, Matrix};
-use hetcoded::coordinator::{serve_requests, JobConfig, XlaService};
+use hetcoded::coordinator::{JobConfig, Mode, Session, XlaService};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, Group, LatencyModel};
 use hetcoded::runtime::DEFAULT_ARTIFACT_DIR;
@@ -98,8 +98,15 @@ fn main() -> hetcoded::Result<()> {
 
     for (name, alloc) in [("proposed", &proposed), ("uniform(n*)", &uniform)] {
         let n_int = alloc.integer_n(&spec);
-        let report =
-            serve_requests(&spec, alloc, &a, &requests, svc.clone() as _, &cfg)?;
+        let report = Session::builder(&spec)
+            .allocation((*alloc).clone())
+            .data(a.clone())
+            .requests(requests.clone())
+            .config(cfg.clone())
+            .compute(svc.clone() as _)
+            .mode(Mode::Sequential)
+            .build()?
+            .serve()?;
         println!("\n[{name}] n={} rate={:.3}", n_int, K as f64 / n_int as f64);
         println!("  {}", report.recorder.report());
         println!("  worst decode error: {:.2e}", report.worst_error);
@@ -128,11 +135,25 @@ fn main() -> hetcoded::Result<()> {
     let native: Arc<dyn hetcoded::coordinator::Compute> =
         Arc::new(hetcoded::coordinator::NativeCompute);
     let t_seq = std::time::Instant::now();
-    let seq = serve_requests(&spec, &proposed, &a, &requests, native.clone(), &cfg)?;
+    let seq = Session::builder(&spec)
+        .allocation(proposed.clone())
+        .data(a.clone())
+        .requests(requests.clone())
+        .config(cfg.clone())
+        .compute(native.clone())
+        .mode(Mode::Sequential)
+        .build()?
+        .serve()?;
     let seq_makespan = t_seq.elapsed();
-    let pip = hetcoded::coordinator::serve_requests_pipelined(
-        &spec, &proposed, &a, &requests, native, &cfg,
-    )?;
+    let pip = Session::builder(&spec)
+        .allocation(proposed.clone())
+        .data(a.clone())
+        .requests(requests.clone())
+        .config(cfg.clone())
+        .compute(native)
+        .mode(Mode::Pipelined)
+        .build()?
+        .serve()?;
     let makespan = pip.makespan.unwrap();
     println!(
         "\n[pipelined, native backend] {} requests: makespan {:.1} ms \
@@ -150,9 +171,16 @@ fn main() -> hetcoded::Result<()> {
     // contraction is the MXU-shaped (l_i × d)·(d × 8) batched artifact.
     let batch: Vec<Vec<f64>> = requests[..8].to_vec();
     let t0 = std::time::Instant::now();
-    let reports = hetcoded::coordinator::run_job_batched(
-        &spec, &proposed, &a, &batch, svc.clone() as _, &cfg,
-    )?;
+    let reports = Session::builder(&spec)
+        .allocation(proposed.clone())
+        .data(a.clone())
+        .requests(batch)
+        .config(cfg.clone())
+        .compute(svc.clone() as _)
+        .mode(Mode::Batched)
+        .build()?
+        .serve()?
+        .jobs;
     let batch_wall = t0.elapsed();
     let worst = reports.iter().map(|r| r.max_error).fold(0.0f64, f64::max);
     println!(

@@ -7,10 +7,9 @@
 
 use hetcoded::allocation::proposed_allocation;
 use hetcoded::coding::Matrix;
-use hetcoded::coordinator::{run_job, JobConfig, NativeCompute};
+use hetcoded::coordinator::{JobConfig, Mode, Session};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, Group, LatencyModel};
-use std::sync::Arc;
 
 fn main() -> hetcoded::Result<()> {
     // A cluster with two machine generations: 8 fast workers (mu = 8) and
@@ -39,20 +38,22 @@ fn main() -> hetcoded::Result<()> {
         alloc.latency_bound.unwrap()
     );
 
-    // Live run: encode a random A, dispatch to 20 worker threads with
-    // injected shifted-exponential straggle, decode from the first k rows.
+    // Live run through the Session facade: encode a random A, dispatch to
+    // 20 worker threads with injected shifted-exponential straggle, decode
+    // from the first k rows.
     let d = 64;
     let mut rng = Rng::new(1);
     let a = Matrix::from_fn(spec.k, d, |_, _| rng.normal());
     let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-    let report = run_job(
-        &spec,
-        &alloc,
-        &a,
-        &x,
-        Arc::new(NativeCompute),
-        &JobConfig { time_scale: 0.05, ..Default::default() },
-    )?;
+    let outcome = Session::builder(&spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(vec![x])
+        .config(JobConfig { time_scale: 0.05, ..Default::default() })
+        .mode(Mode::Single)
+        .build()?
+        .serve()?;
+    let report = &outcome.jobs[0];
     println!(
         "\nlive job: decoded {} entries in {:.1} ms wall ({} workers used, \
          {} rows), max |err| = {:.2e}",

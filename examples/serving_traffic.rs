@@ -8,23 +8,22 @@
 //! service-side bottleneck `1/E[S]` on throughput.
 //!
 //! Ends with a small *live* run: a Poisson trace replayed against real
-//! worker threads with batched dispatch ([`serve_arrivals`]).
+//! worker threads with batched dispatch (an arrivals-mode
+//! [`hetcoded::coordinator::Session`]).
 //!
 //! ```sh
 //! cargo run --release --example serving_traffic
 //! ```
 
-use hetcoded::allocation::uniform_allocation;
+use hetcoded::allocation::{policy, uniform_allocation};
 use hetcoded::coding::Matrix;
-use hetcoded::coordinator::{serve_arrivals, JobConfig, NativeCompute};
+use hetcoded::coordinator::{JobConfig, Mode, Session};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, LatencyModel};
-use hetcoded::sim::Scheme;
 use hetcoded::workload::{
-    run_workload, saturation_rate, service_sampler, ArrivalProcess,
-    WorkloadConfig,
+    run_workload_policy, saturation_rate, service_sampler_for,
+    ArrivalProcess, WorkloadConfig,
 };
-use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> hetcoded::Result<()> {
@@ -38,16 +37,18 @@ fn main() -> hetcoded::Result<()> {
     );
 
     // Calibrate the rate axis on the *proposed* policy's saturation point
-    // 1/E[S*], then offer the same absolute rates to every policy.
-    let (_, mut cal) = service_sampler(&spec, Scheme::Proposed, model)?;
+    // 1/E[S*], then offer the same absolute rates to every policy. All
+    // policies come from the central registry by name.
+    let proposed = policy::resolve("proposed")?;
+    let (_, mut cal) = service_sampler_for(&spec, &*proposed, model)?;
     let sat = saturation_rate(&mut cal, 4_000, 1);
     let es_star = 1.0 / sat;
     println!("proposed E[S] = {es_star:.4e}  (saturation at {sat:.3} jobs/unit time)");
 
     let policies = [
-        ("proposed", Scheme::Proposed),
-        ("uniform-n*", Scheme::UniformWithOptimalN),
-        ("group-code r=100", Scheme::GroupCode(100.0)),
+        ("proposed", policy::resolve("proposed")?),
+        ("uniform-n*", policy::resolve("uniform-nstar")?),
+        ("group-code r=100", policy::resolve("group-code=100")?),
     ];
     println!(
         "\n{:<18} {:>8} {:>9} {:>6} {:>10} {:>10} {:>7}",
@@ -55,14 +56,14 @@ fn main() -> hetcoded::Result<()> {
     );
     for frac in [0.2, 0.5, 0.8, 0.95] {
         let rate = frac / es_star;
-        for (name, scheme) in policies {
+        for (name, p) in &policies {
             let cfg = WorkloadConfig {
                 arrivals: ArrivalProcess::Poisson { rate },
                 jobs: 3_000,
                 servers: 1,
                 seed: 2019,
             };
-            match run_workload(&spec, scheme, model, &cfg) {
+            match run_workload_policy(&spec, &**p, model, &cfg) {
                 Ok(r) => println!(
                     "{:<18} {:>8.3} {:>9.3} {:>6.3} {:>10.4e} {:>10.4e} {:>7}",
                     name,
@@ -102,23 +103,21 @@ fn main() -> hetcoded::Result<()> {
         .map(Duration::from_secs_f64)
         .collect();
     let cfg = JobConfig { time_scale: 0.005, ..Default::default() };
-    let report = serve_arrivals(
-        &live_spec,
-        &alloc,
-        &a,
-        &requests,
-        &offsets,
-        4,
-        Arc::new(NativeCompute),
-        &cfg,
-    )?;
-    println!("{}", report.recorder.report());
+    let outcome = Session::builder(&live_spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(requests)
+        .config(cfg)
+        .mode(Mode::Arrivals { offsets, max_batch: 4 })
+        .build()?
+        .serve()?;
+    println!("{}", outcome.recorder.report());
     println!(
         "makespan {:.1} ms, worst decode error {:.2e}, encode passes {} \
          (prepared fast path: the matrix was encoded once for the stream)",
-        report.makespan.unwrap().as_secs_f64() * 1e3,
-        report.worst_error,
-        report.encodes
+        outcome.makespan.unwrap().as_secs_f64() * 1e3,
+        outcome.worst_error,
+        outcome.encodes
     );
     Ok(())
 }

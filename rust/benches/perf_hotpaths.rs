@@ -17,7 +17,7 @@ use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
 use hetcoded::coding::{Decoder, Generator, GeneratorKind, Matrix};
 use hetcoded::coordinator::{
-    run_job, run_job_batched, JobConfig, NativeCompute, PreparedJob,
+    JobConfig, Mode, NativeCompute, PreparedJob, Session,
 };
 use hetcoded::math::{wm1_neg_exp, Rng};
 use hetcoded::model::{ClusterSpec, LatencyModel};
@@ -138,28 +138,35 @@ fn main() {
     let a = Matrix::from_fn(256, 256, |_, _| rng.normal());
     let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
     let jcfg = JobConfig { time_scale: 0.001, ..Default::default() };
+    // Benched through a pre-built Session so the measured loop is the cold
+    // engine itself (the deprecated shims clone the matrix/requests per
+    // call, which would skew ns/op vs earlier snapshots; the bench names
+    // stay unchanged for cross-PR comparability).
+    let single_session = Session::builder(&live_spec)
+        .allocation(live_alloc.clone())
+        .data(a.clone())
+        .requests(vec![x.clone()])
+        .config(jcfg.clone())
+        .mode(Mode::Single)
+        .build()
+        .unwrap();
     run_quick("run_job: N=24 workers, k=256, d=256", || {
-        black_box(
-            run_job(&live_spec, &live_alloc, &a, &x, Arc::new(NativeCompute), &jcfg)
-                .unwrap(),
-        );
+        black_box(single_session.serve().unwrap());
     });
 
     section("prepared vs cold batched serving (k=256, d=256, B=8)");
     let requests: Vec<Vec<f64>> =
         (0..8).map(|_| (0..256).map(|_| rng.normal()).collect()).collect();
+    let batched_session = Session::builder(&live_spec)
+        .allocation(live_alloc.clone())
+        .data(a.clone())
+        .requests(requests.clone())
+        .config(jcfg.clone())
+        .mode(Mode::Batched)
+        .build()
+        .unwrap();
     run_quick("serve batch cold (re-encode per batch)", || {
-        black_box(
-            run_job_batched(
-                &live_spec,
-                &live_alloc,
-                &a,
-                &requests,
-                Arc::new(NativeCompute),
-                &jcfg,
-            )
-            .unwrap(),
-        );
+        black_box(batched_session.serve().unwrap());
     });
     let mut prepared =
         PreparedJob::new(&live_spec, &live_alloc, &a, &jcfg).unwrap();

@@ -12,15 +12,28 @@
 //! All policies produce an [`Allocation`]: per-group real-valued loads
 //! `l_(j)`, the implied `(n, k)` MDS code, and (where the paper defines one)
 //! the analytic latency lower bound.
+//!
+//! The free functions above are the raw solvers; the [`policy`] module
+//! wraps each in a [`Policy`] object and registers it in the central
+//! **registry**, which is the single source of truth for policy names
+//! across the CLI, the simulator, the workload layer, and the figure
+//! harness. New schemes implement [`Policy`] in one module and add one
+//! [`policy::PolicyEntry`] line.
 
 pub mod group_code;
 pub mod integerize;
+pub mod policy;
 pub mod proposed;
 pub mod reisizadeh;
 pub mod uniform;
 
 pub use group_code::{group_code_allocation, integer_group_r, solve_group_r};
 pub use integerize::{largest_remainder_loads, optimize_integer_loads};
+pub use policy::{
+    DecodeRule, GroupCodePolicy, ParamSpec, Policy, PolicyEntry,
+    ProposedPolicy, ReisizadehPolicy, UncodedPolicy, UniformOptimalNPolicy,
+    UniformRatePolicy,
+};
 pub use proposed::{
     optimal_latency_bound, proposed_allocation, proposed_allocation_capped,
 };

@@ -1,0 +1,461 @@
+//! The [`Policy`] trait and the central policy **registry** — the single
+//! source of truth for allocation-policy names.
+//!
+//! Before this module existed, every policy was a free function with its
+//! own signature, and each CLI subcommand (`simulate --scheme`,
+//! `workload --policies`, `allocate`) kept a private `match` from name
+//! strings to those functions. Adding a policy meant editing five call
+//! sites. Now a policy is one object implementing [`Policy`], and every
+//! name-to-policy resolution in the crate — CLI subcommands, the figure
+//! harness, tests — goes through [`resolve`] / [`entries`]. Adding a new
+//! scheme (e.g. a communication-delay-aware allocation à la Sun et al.,
+//! arXiv:2109.11246) is one module implementing the trait plus **one
+//! [`PolicyEntry`] line** in [`REGISTRY`].
+//!
+//! # Example
+//!
+//! ```
+//! use hetcoded::allocation::policy::{self, DecodeRule, Policy};
+//! use hetcoded::model::{ClusterSpec, LatencyModel};
+//!
+//! let spec = ClusterSpec::paper_two_group(10_000);
+//! // Resolve by registry name; parameterized policies take `name=value`.
+//! let p = policy::resolve("proposed")?;
+//! let alloc = p.allocate(LatencyModel::A, &spec)?;
+//! assert!(alloc.latency_bound.is_some());
+//! assert_eq!(p.decode_rule(), DecodeRule::AnyK);
+//!
+//! let g = policy::resolve("group-code=100")?;
+//! assert_eq!(g.decode_rule(), DecodeRule::PerGroup);
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+
+use crate::allocation::{
+    group_code_allocation, proposed_allocation, proposed_allocation_capped,
+    reisizadeh_allocation, uncoded_allocation, uniform_allocation, Allocation,
+};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+
+/// How a policy's code decodes: from **any** `k` aggregated rows (the
+/// `(n, k)` MDS code over the whole matrix, §II-C) or **per group** (the
+/// fixed-`r` group code of [33], which needs `r_j` completions from every
+/// group). The simulator and the workload layer pick their order-statistic
+/// sampler from this, so a new policy never has to touch either.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeRule {
+    /// Job completes once any workers holding `k` coded rows finish.
+    AnyK,
+    /// Job completes once every group has returned its `r_j` results
+    /// (the allocation's [`Allocation::r`] vector must be populated).
+    PerGroup,
+}
+
+/// A load-allocation policy: everything the rest of the crate needs to
+/// know about one scheme from the paper's evaluation (or a new one).
+///
+/// Implementations are cheap value objects; the registry hands them out as
+/// `Box<dyn Policy>`. The [`crate::sim`] engine, the [`crate::workload`]
+/// queueing layer, and the [`crate::coordinator::Session`] facade all
+/// consume `&dyn Policy`, so a new scheme is a drop-in.
+pub trait Policy: Send + Sync + std::fmt::Debug {
+    /// Stable display name used in figures, CSV output, and reports
+    /// (e.g. `"uniform-rate-0.500"`). Distinct from the registry name,
+    /// which is the CLI-facing spelling (e.g. `"uniform-rate"`).
+    fn name(&self) -> String;
+
+    /// Solve the policy's allocation on `spec` under `model`.
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation>;
+
+    /// [`Policy::allocate`] under a coded-row budget: the solution's `n`
+    /// must not exceed `n_cap` (re-solving mid-stream must not mint coded
+    /// rows — see [`crate::coordinator::PreparedJob::rechunk`]). The
+    /// default refuses budgets the unconstrained solution overruns;
+    /// policies with a principled projection (the proposed optimum)
+    /// override it.
+    fn allocate_capped(
+        &self,
+        model: LatencyModel,
+        spec: &ClusterSpec,
+        n_cap: f64,
+    ) -> Result<Allocation> {
+        let a = self.allocate(model, spec)?;
+        if a.n > n_cap {
+            return Err(Error::InvalidSpec(format!(
+                "policy `{}` wants n = {:.1} > coded-row budget {n_cap} and \
+                 defines no capped projection",
+                self.name(),
+                a.n
+            )));
+        }
+        Ok(a)
+    }
+
+    /// Which completion rule the code decodes under (drives the
+    /// order-statistic sampler choice in `sim` and `workload`).
+    fn decode_rule(&self) -> DecodeRule {
+        DecodeRule::AnyK
+    }
+
+    /// Whether the paper derives a closed-form expected-latency bound for
+    /// this policy (`T*` for the proposed optimum, `1/r` for the group
+    /// code); simulation results surface [`Allocation::latency_bound`]
+    /// only when this is true.
+    fn reports_bound(&self) -> bool {
+        false
+    }
+}
+
+/// The proposed optimal allocation (Theorem 2 / Corollary 2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProposedPolicy;
+
+impl Policy for ProposedPolicy {
+    fn name(&self) -> String {
+        "proposed".into()
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        proposed_allocation(model, spec)
+    }
+
+    fn allocate_capped(
+        &self,
+        model: LatencyModel,
+        spec: &ClusterSpec,
+        n_cap: f64,
+    ) -> Result<Allocation> {
+        proposed_allocation_capped(model, spec, n_cap)
+    }
+
+    fn reports_bound(&self) -> bool {
+        true
+    }
+}
+
+/// The uncoded baseline: rate-1 uniform, every worker must finish.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UncodedPolicy;
+
+impl Policy for UncodedPolicy {
+    fn name(&self) -> String {
+        "uncoded".into()
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        uncoded_allocation(model, spec)
+    }
+}
+
+/// Uniform allocation reusing the proposed optimum's code length `n*`
+/// (§III-D-1) — isolates the *allocation shape* from the *code rate*.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniformOptimalNPolicy;
+
+impl Policy for UniformOptimalNPolicy {
+    fn name(&self) -> String {
+        "uniform-n*".into()
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        let opt = proposed_allocation(model, spec)?;
+        uniform_allocation(model, spec, opt.n)
+    }
+}
+
+/// Uniform allocation with an explicit code rate `k/n`.
+#[derive(Clone, Copy, Debug)]
+pub struct UniformRatePolicy {
+    /// Code rate `k/n` in `(0, 1]`.
+    pub rate: f64,
+}
+
+impl UniformRatePolicy {
+    /// Validate the rate and build the policy.
+    pub fn new(rate: f64) -> Result<UniformRatePolicy> {
+        if !(rate > 0.0 && rate <= 1.0) || !rate.is_finite() {
+            return Err(Error::InvalidSpec(format!(
+                "uniform-rate needs a rate in (0, 1], got {rate}"
+            )));
+        }
+        Ok(UniformRatePolicy { rate })
+    }
+}
+
+impl Policy for UniformRatePolicy {
+    fn name(&self) -> String {
+        format!("uniform-rate-{:.3}", self.rate)
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        uniform_allocation(model, spec, spec.k as f64 / self.rate)
+    }
+}
+
+/// The fixed-`r` group code of [33] (§III-D-2, Theorem 4): group-wise
+/// decode, so the completion rule is per-group.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupCodePolicy {
+    /// Target per-group completion count `r`.
+    pub r: f64,
+}
+
+impl GroupCodePolicy {
+    /// Validate `r` and build the policy.
+    pub fn new(r: f64) -> Result<GroupCodePolicy> {
+        if !(r > 0.0) || !r.is_finite() {
+            return Err(Error::InvalidSpec(format!(
+                "group-code needs a positive finite r, got {r}"
+            )));
+        }
+        Ok(GroupCodePolicy { r })
+    }
+}
+
+impl Policy for GroupCodePolicy {
+    fn name(&self) -> String {
+        format!("group-code-r{:.0}", self.r)
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        group_code_allocation(model, spec, self.r)
+    }
+
+    fn decode_rule(&self) -> DecodeRule {
+        DecodeRule::PerGroup
+    }
+
+    fn reports_bound(&self) -> bool {
+        true
+    }
+}
+
+/// The heterogeneous allocation of Reisizadeh et al. [32] (Appendix D).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReisizadehPolicy;
+
+impl Policy for ReisizadehPolicy {
+    fn name(&self) -> String {
+        "reisizadeh".into()
+    }
+
+    fn allocate(&self, model: LatencyModel, spec: &ClusterSpec) -> Result<Allocation> {
+        reisizadeh_allocation(model, spec)
+    }
+}
+
+/// Metadata for a policy's optional scalar parameter: which CLI flag feeds
+/// it, its default, and what it means.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    /// CLI flag name (without `--`) that supplies the parameter when the
+    /// `name=value` form is not used.
+    pub flag: &'static str,
+    /// Value used when neither `name=value` nor the flag is given.
+    pub default: f64,
+    /// One-line human description of the parameter.
+    pub what: &'static str,
+}
+
+/// One registry row: the CLI-facing name, a summary for `help`, the
+/// optional parameter, and the constructor.
+pub struct PolicyEntry {
+    /// CLI-facing policy name (`--scheme`, `--policies`, `--policy`).
+    pub name: &'static str,
+    /// One-line description for help output.
+    pub summary: &'static str,
+    /// Scalar parameter, if the policy takes one.
+    pub param: Option<ParamSpec>,
+    builder: fn(Option<f64>) -> Result<Box<dyn Policy>>,
+}
+
+impl PolicyEntry {
+    /// Build the policy, defaulting a missing parameter and rejecting a
+    /// parameter the policy does not take.
+    pub fn build(&self, param: Option<f64>) -> Result<Box<dyn Policy>> {
+        match (&self.param, param) {
+            (None, Some(v)) => Err(Error::InvalidSpec(format!(
+                "policy `{}` takes no parameter (got `{v}`)",
+                self.name
+            ))),
+            (None, None) => (self.builder)(None),
+            (Some(ps), p) => (self.builder)(Some(p.unwrap_or(ps.default))),
+        }
+    }
+}
+
+impl std::fmt::Debug for PolicyEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PolicyEntry")
+            .field("name", &self.name)
+            .field("param", &self.param)
+            .finish()
+    }
+}
+
+/// The registry itself. **This slice is the single source of truth for
+/// policy names**: every CLI subcommand and the figure harness resolve
+/// through it. Adding a policy = implementing [`Policy`] in one module and
+/// appending one entry here.
+pub static REGISTRY: &[PolicyEntry] = &[
+    PolicyEntry {
+        name: "proposed",
+        summary: "optimal allocation of Theorem 2 / Corollary 2",
+        param: None,
+        builder: |_| Ok(Box::new(ProposedPolicy)),
+    },
+    PolicyEntry {
+        name: "uncoded",
+        summary: "rate-1 uniform baseline (every worker must finish)",
+        param: None,
+        builder: |_| Ok(Box::new(UncodedPolicy)),
+    },
+    PolicyEntry {
+        name: "uniform-nstar",
+        summary: "uniform allocation at the optimal code length n*",
+        param: None,
+        builder: |_| Ok(Box::new(UniformOptimalNPolicy)),
+    },
+    PolicyEntry {
+        name: "uniform-rate",
+        summary: "uniform allocation at an explicit code rate k/n",
+        param: Some(ParamSpec { flag: "rate", default: 0.5, what: "code rate in (0, 1]" }),
+        builder: |p| {
+            UniformRatePolicy::new(p.expect("registry supplies the default"))
+                .map(|x| Box::new(x) as Box<dyn Policy>)
+        },
+    },
+    PolicyEntry {
+        name: "group-code",
+        summary: "fixed-r group code of [33] (group-wise decode)",
+        param: Some(ParamSpec {
+            flag: "group-r",
+            default: 100.0,
+            what: "per-group completion target r",
+        }),
+        builder: |p| {
+            GroupCodePolicy::new(p.expect("registry supplies the default"))
+                .map(|x| Box::new(x) as Box<dyn Policy>)
+        },
+    },
+    PolicyEntry {
+        name: "reisizadeh",
+        summary: "heterogeneous allocation of Reisizadeh et al. [32]",
+        param: None,
+        builder: |_| Ok(Box::new(ReisizadehPolicy)),
+    },
+];
+
+/// All registry rows, in display order.
+pub fn entries() -> &'static [PolicyEntry] {
+    REGISTRY
+}
+
+/// Look up one registry row by CLI name.
+pub fn entry(name: &str) -> Option<&'static PolicyEntry> {
+    REGISTRY.iter().find(|e| e.name == name)
+}
+
+/// Every registered CLI policy name, in display order.
+pub fn policy_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Resolve a policy spec string: `name` (parameter defaulted) or
+/// `name=value` for parameterized policies, e.g. `"uniform-rate=0.4"` or
+/// `"group-code=120"`. Unknown names list the registry.
+pub fn resolve(spec: &str) -> Result<Box<dyn Policy>> {
+    let (name, param) = match spec.split_once('=') {
+        Some((n, v)) => {
+            let p = v.trim().parse::<f64>().map_err(|_| {
+                Error::InvalidSpec(format!(
+                    "policy `{n}`: cannot parse parameter `{v}`"
+                ))
+            })?;
+            (n.trim(), Some(p))
+        }
+        None => (spec.trim(), None),
+    };
+    let e = entry(name).ok_or_else(|| unknown_policy(name))?;
+    e.build(param)
+}
+
+/// The error for an unresolvable policy name, listing what the registry
+/// does know.
+pub fn unknown_policy(name: &str) -> Error {
+    Error::InvalidSpec(format!(
+        "unknown policy `{name}` (known: {})",
+        policy_names().join(", ")
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolve() {
+        let names = policy_names();
+        for (i, n) in names.iter().enumerate() {
+            assert!(
+                !names[i + 1..].contains(n),
+                "duplicate registry name `{n}`"
+            );
+            let p = resolve(n).unwrap_or_else(|e| panic!("{n}: {e}"));
+            assert!(!p.name().is_empty());
+        }
+        assert!(resolve("no-such-policy").is_err());
+    }
+
+    #[test]
+    fn every_policy_allocates_on_the_paper_cluster() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        for e in entries() {
+            let p = e.build(None).unwrap();
+            let a = p
+                .allocate(LatencyModel::A, &spec)
+                .unwrap_or_else(|err| panic!("{}: {err}", e.name));
+            a.validate(&spec).unwrap();
+            if p.decode_rule() == DecodeRule::PerGroup {
+                assert_eq!(a.r.len(), spec.num_groups());
+            }
+        }
+    }
+
+    #[test]
+    fn param_syntax_and_validation() {
+        let p = resolve("uniform-rate=0.4").unwrap();
+        assert_eq!(p.name(), "uniform-rate-0.400");
+        assert!(resolve("uniform-rate=1.5").is_err());
+        assert!(resolve("uniform-rate=x").is_err());
+        assert!(resolve("group-code=0").is_err());
+        // Parameter on a parameter-less policy is rejected.
+        assert!(entry("proposed").unwrap().build(Some(1.0)).is_err());
+        // Defaults flow from the registry.
+        let g = resolve("group-code").unwrap();
+        assert_eq!(g.name(), "group-code-r100");
+    }
+
+    #[test]
+    fn default_capped_allocation_refuses_overrun() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let unc = UncodedPolicy;
+        // Uncoded wants n = k exactly; a budget of k passes, below-k is
+        // refused by the allocation itself.
+        let a = unc
+            .allocate_capped(LatencyModel::A, &spec, spec.k as f64)
+            .unwrap();
+        assert!((a.n - spec.k as f64).abs() < 1e-9);
+        let ur = UniformRatePolicy::new(0.5).unwrap();
+        assert!(ur
+            .allocate_capped(LatencyModel::A, &spec, spec.k as f64)
+            .is_err());
+        // The proposed policy projects onto the budget instead.
+        let p = ProposedPolicy;
+        let free = p.allocate(LatencyModel::A, &spec).unwrap();
+        let capped = p
+            .allocate_capped(LatencyModel::A, &spec, free.n * 0.9)
+            .unwrap();
+        assert!(capped.n <= free.n * 0.9 + 1e-6);
+    }
+}

@@ -85,6 +85,36 @@ impl Args {
         self.switches.iter().any(|s| s == key)
     }
 
+    /// All flag and switch names present on the command line (a name that
+    /// parsed as a flag or as a bare switch is reported either way — the
+    /// grammar cannot distinguish `--adaptive` at end-of-line from
+    /// `--adaptive <value>`, so validation treats the buckets uniformly).
+    pub fn given_names(&self) -> impl Iterator<Item = &str> {
+        self.flags
+            .keys()
+            .map(String::as_str)
+            .chain(self.switches.iter().map(String::as_str))
+    }
+
+    /// Reject any flag/switch not in `allowed`, with a did-you-mean
+    /// suggestion and a `hetcoded help <subcommand>` pointer. Before this
+    /// check existed a typo like `--max-bath 8` silently ran with the
+    /// default.
+    pub fn reject_unknown(&self, subcommand: &str, allowed: &[&str]) -> Result<()> {
+        for name in self.given_names() {
+            if !allowed.contains(&name) {
+                let hint = closest_flag(name, allowed)
+                    .map(|c| format!(" (did you mean `--{c}`?)"))
+                    .unwrap_or_default();
+                return Err(Error::InvalidSpec(format!(
+                    "unknown flag --{name} for `{subcommand}`{hint}; see \
+                     `hetcoded help {subcommand}`"
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Comma-separated typed list flag with default, e.g.
     /// `--rho 0.3,0.6,0.9` or `--policies proposed,uniform-nstar`.
     /// Empty segments are skipped, so trailing commas are harmless.
@@ -108,6 +138,35 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+/// The allowed flag nearest to `name` by edit distance, when it is close
+/// enough to be a plausible typo (distance ≤ 2, or ≤ 1/3 of the name's
+/// length for long flags).
+fn closest_flag<'a>(name: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    let budget = 2usize.max(name.len() / 3);
+    allowed
+        .iter()
+        .map(|&c| (levenshtein(name, c), c))
+        .filter(|(d, _)| *d <= budget)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| c)
+}
+
+/// Classic two-row Levenshtein distance over bytes (flag names are ASCII).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -167,5 +226,37 @@ mod tests {
     fn negative_flag_values() {
         let a = Args::parse(toks("x --offset -3")).unwrap();
         assert_eq!(a.get::<i32>("offset", 0).unwrap(), -3);
+    }
+
+    #[test]
+    fn unknown_flags_rejected_with_hint() {
+        let allowed = &["max-batch", "rate", "seed", "adaptive"];
+        // The motivating typo: --max-bath used to run with the default.
+        let a = Args::parse(toks("run --max-bath 8")).unwrap();
+        let err = a.reject_unknown("run", allowed).unwrap_err().to_string();
+        assert!(err.contains("--max-bath"), "{err}");
+        assert!(err.contains("did you mean `--max-batch`?"), "{err}");
+        assert!(err.contains("hetcoded help run"), "{err}");
+        // Switches are validated too.
+        let a = Args::parse(toks("run --adaptiev")).unwrap();
+        let err = a.reject_unknown("run", allowed).unwrap_err().to_string();
+        assert!(err.contains("did you mean `--adaptive`?"), "{err}");
+        // A name far from everything gets no suggestion but still fails.
+        let a = Args::parse(toks("run --zzzzzzzzzzzz 1")).unwrap();
+        let err = a.reject_unknown("run", allowed).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+        // Known flags pass.
+        let a = Args::parse(toks("run --max-batch 8 --adaptive")).unwrap();
+        a.reject_unknown("run", allowed).unwrap();
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", "abd"), 1);
+        assert_eq!(levenshtein("max-bath", "max-batch"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("", "abc"), 3);
     }
 }

@@ -1,7 +1,9 @@
 //! Failure- and drift-aware serving: the adaptive re-allocation loop.
 //!
-//! [`serve_arrivals_adaptive`] is [`crate::coordinator::serve_arrivals`]
-//! plus three production concerns layered on the same prepared fast path:
+//! This is the engine behind an arrivals-mode
+//! [`crate::coordinator::Session`] with a scenario and/or adaptivity
+//! attached — a plain arrivals stream plus three production concerns
+//! layered on the same prepared fast path:
 //!
 //! 1. **Scenario injection** — each batch's straggle realization is drawn
 //!    from the *effective* cluster a [`FailureScenario`] has produced so
@@ -12,10 +14,12 @@
 //!    keep missing batches are suspected dead after
 //!    [`AdaptiveServeConfig::death_after`] consecutive misses.
 //! 3. **Re-allocation without re-encoding** — when the estimator detects
-//!    drift (or deaths are suspected), the paper's allocation is re-solved
-//!    on the estimated surviving cluster
-//!    ([`crate::allocation::proposed_allocation_capped`], budgeted to the
-//!    `n` coded rows that already exist) and the encoded rows are
+//!    drift (or deaths are suspected), the allocation is re-solved on the
+//!    estimated surviving cluster through the session policy's
+//!    [`crate::allocation::Policy::allocate_capped`] (the paper's
+//!    projection, [`crate::allocation::proposed_allocation_capped`], when
+//!    no policy object is attached), budgeted to the `n` coded rows that
+//!    already exist, and the encoded rows are
 //!    re-sliced via [`PreparedJob::rechunk`]. The steady-state invariant
 //!    survives adaptation: [`AdaptiveServeReport::post_setup_encodes`]
 //!    stays **0** no matter how many times the stream re-allocates.
@@ -23,7 +27,7 @@
 //! The model-time mirror of this loop for the queueing layer is
 //! [`crate::workload::drift::run_workload_drift`].
 
-use crate::allocation::{proposed_allocation_capped, Allocation};
+use crate::allocation::{proposed_allocation_capped, Allocation, Policy};
 use crate::coding::Matrix;
 use crate::coordinator::failures::{FailureScenario, ScenarioState};
 use crate::coordinator::master::{derive_stream_seed, STRAGGLE_SEED_TAG};
@@ -88,12 +92,26 @@ pub struct AdaptiveServeReport {
     /// The cluster parameters the loop believed at the end (assumed spec
     /// updated by each re-allocation from the estimator).
     pub assumed_spec: ClusterSpec,
+    /// Decode factorization-cache `(hits, misses)` over the stream.
+    pub decode_cache: (u64, u64),
 }
 
 /// Serve an arrival stream under a failure/drift scenario, optionally
 /// adapting the allocation online. With an empty scenario and `adapt:
-/// None` this is exactly [`crate::coordinator::serve_arrivals`] (which
-/// delegates here), bit-identical straggle realizations included.
+/// None` this is exactly a plain arrivals-mode stream, bit-identical
+/// straggle realizations included.
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(requests.to_vec()).config(cfg.clone())
+/// .compute(compute).mode(Mode::Arrivals { offsets, max_batch })
+/// .scenario(scenario.clone()).adaptive(adapt_cfg).build()?.serve()?` —
+/// the adaptation trace lands in the unified
+/// [`crate::coordinator::ServeOutcome`] counters.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Arrivals plus \
+            .scenario(..)/.adaptive(..) instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn serve_arrivals_adaptive(
     spec: &ClusterSpec,
@@ -106,6 +124,67 @@ pub fn serve_arrivals_adaptive(
     cfg: &JobConfig,
     scenario: &FailureScenario,
     adapt: Option<&AdaptiveServeConfig>,
+) -> Result<AdaptiveServeReport> {
+    let mut builder = crate::coordinator::Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.to_vec())
+        .config(cfg.clone())
+        .compute(compute)
+        .scenario(scenario.clone())
+        .mode(crate::coordinator::Mode::Arrivals {
+            offsets: arrival_offsets.to_vec(),
+            max_batch,
+        });
+    if let Some(ad) = adapt {
+        builder = builder.adaptive(*ad);
+    }
+    // Note: built from an explicit allocation (no policy object), so
+    // re-solves use the proposed projection — the historical behaviour of
+    // this function, preserved bit-identically.
+    let outcome = builder.build()?.serve()?;
+    let assumed_spec = outcome.assumed_spec.unwrap_or_else(|| spec.clone());
+    Ok(AdaptiveServeReport {
+        serve: ServeReport {
+            recorder: outcome.recorder,
+            worst_error: outcome.worst_error,
+            jobs: outcome.jobs,
+            makespan: outcome.makespan,
+            encodes: outcome.encodes,
+        },
+        reallocations: outcome.reallocations,
+        rechunks: outcome.rechunks,
+        suspected_dead: outcome.suspected_dead,
+        post_setup_encodes: outcome.post_setup_encodes,
+        assumed_spec,
+        decode_cache: (outcome.decode_cache_hits, outcome.decode_cache_misses),
+    })
+}
+
+/// The adaptive serving engine behind arrivals-mode
+/// [`crate::coordinator::Session::serve`] (and the deprecated
+/// [`serve_arrivals_adaptive`] shim).
+///
+/// `resolve_policy` is the policy whose
+/// [`crate::allocation::Policy::allocate_capped`] re-solves the
+/// allocation on the estimated surviving cluster; `None` (sessions built
+/// from an explicit allocation, and the legacy shim) falls back to the
+/// paper's proposed projection — the historical behaviour. A policy whose
+/// capped solve refuses the budget simply keeps the current chunking
+/// (the existing failed-re-solve fallback).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn serve_arrivals_adaptive_impl(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    arrival_offsets: &[Duration],
+    max_batch: usize,
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+    scenario: &FailureScenario,
+    adapt: Option<&AdaptiveServeConfig>,
+    resolve_policy: Option<&dyn Policy>,
 ) -> Result<AdaptiveServeReport> {
     if requests.len() != arrival_offsets.len() {
         return Err(Error::InvalidSpec(format!(
@@ -222,11 +301,18 @@ pub fn serve_arrivals_adaptive(
                             &alive_counts,
                             ad.est.min_obs,
                         )?;
-                        let realloc = proposed_allocation_capped(
-                            cfg.model,
-                            &est_spec,
-                            prepared.n() as f64,
-                        )?;
+                        let realloc = match resolve_policy {
+                            Some(p) => p.allocate_capped(
+                                cfg.model,
+                                &est_spec,
+                                prepared.n() as f64,
+                            )?,
+                            None => proposed_allocation_capped(
+                                cfg.model,
+                                &est_spec,
+                                prepared.n() as f64,
+                            )?,
+                        };
                         let per_worker = integer_per_worker_capped(
                             &state,
                             &suspected,
@@ -279,6 +365,7 @@ pub fn serve_arrivals_adaptive(
             .collect(),
         post_setup_encodes: prepared.encode_count().saturating_sub(1),
         assumed_spec: assumed,
+        decode_cache: prepared.decode_cache_stats(),
     })
 }
 
@@ -423,6 +510,10 @@ fn integer_per_worker_capped(
 }
 
 #[cfg(test)]
+// The deprecated shim is exercised deliberately: these tests double as
+// regression coverage that it reproduces the historical behaviour through
+// the Session facade.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::allocation::uniform_allocation;

@@ -1,7 +1,17 @@
 //! The master: dispatch, collect-until-`k`, decode.
+//!
+//! This module owns the **cold one-shot path** ([`run_job_impl`]): build
+//! the generator, encode, dispatch to worker threads, collect until `k`,
+//! decode. The serving loops live in [`crate::coordinator::Session`]
+//! (which composes the cold path, the prepared fast path, and the
+//! adaptive stream behind one builder); the free functions here are
+//! `#[deprecated]` shims kept for source compatibility, each delegating
+//! to an equivalent `Session` and proven bit-identical under fixed seeds
+//! by `rust/tests/session_parity.rs`.
 
 use crate::allocation::Allocation;
 use crate::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use crate::coordinator::session::{Mode, Session};
 use crate::coordinator::{Compute, LatencyRecorder, StragglerInjector};
 use crate::model::{ClusterSpec, LatencyModel};
 use crate::{Error, Result};
@@ -81,7 +91,10 @@ struct WorkerReply {
     pairs: Vec<(usize, f64)>,
 }
 
-/// Run one coded distributed matvec job end-to-end.
+/// The cold one-shot job: encode, dispatch, collect until `k`, decode.
+/// Shared engine behind [`Mode::Single`], [`Mode::Sequential`], and
+/// [`Mode::Pipelined`] — and, through them, the deprecated [`run_job`] /
+/// [`serve_requests`] / [`serve_requests_pipelined`] shims.
 ///
 /// `a` is the uncoded data matrix (`k × d`, `k = spec.k`); `x` the input
 /// vector. Workers are real threads: each sleeps its injected straggle
@@ -89,7 +102,7 @@ struct WorkerReply {
 /// returns as soon as `k` rows are aggregated and decoded. Worker threads
 /// still sleeping are detached (their late results are discarded), so the
 /// measured wall latency is the master's, not the stragglers'.
-pub fn run_job(
+pub(crate) fn run_job_impl(
     spec: &ClusterSpec,
     alloc: &Allocation,
     a: &Matrix,
@@ -201,6 +214,40 @@ pub fn run_job(
     })
 }
 
+/// Run one coded distributed matvec job end-to-end.
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(vec![x.to_vec()]).config(cfg.clone())
+/// .compute(compute).mode(Mode::Single).build()?.serve()?` — the single
+/// report is `outcome.jobs[0]`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Single instead"
+)]
+pub fn run_job(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    x: &[f64],
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+) -> Result<JobReport> {
+    let outcome = Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(vec![x.to_vec()])
+        .config(cfg.clone())
+        .compute(compute)
+        .mode(Mode::Single)
+        .build()?
+        .serve()?;
+    outcome
+        .jobs
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Runtime("session produced no job report".into()))
+}
+
 /// Domain-separation tag so straggle delays and generator entries never share
 /// an RNG stream even though both derive from `JobConfig::seed`.
 pub(crate) const STRAGGLE_SEED_TAG: u64 = 0x57A6_61E5_57A6_61E5;
@@ -261,8 +308,17 @@ pub struct ServeReport {
 /// This is the *one-shot* convenience wrapper: it builds a
 /// [`crate::coordinator::PreparedJob`] (generator, encode, chunk) and runs
 /// a single batch through it, so it re-encodes on every call. Serving
-/// loops should construct the `PreparedJob` themselves (as
-/// [`serve_arrivals`] does) and reuse it across batches.
+/// loops should use an arrivals-mode [`Session`] (or construct the
+/// `PreparedJob` themselves) and reuse it across batches.
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(requests.to_vec()).config(cfg.clone())
+/// .compute(compute).mode(Mode::Batched).build()?.serve()?` — the reports
+/// are `outcome.jobs`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Batched instead"
+)]
 pub fn run_job_batched(
     spec: &ClusterSpec,
     alloc: &Allocation,
@@ -271,19 +327,30 @@ pub fn run_job_batched(
     compute: Arc<dyn Compute>,
     cfg: &JobConfig,
 ) -> Result<Vec<JobReport>> {
-    if requests.is_empty() {
-        return Err(Error::InvalidSpec("empty request batch".into()));
-    }
-    // One-shot: the PreparedJob's setup clones (spec/cfg/matrix) are noise
-    // next to the O(n·k·d) encode this path pays anyway.
-    let mut prepared = crate::coordinator::PreparedJob::new(spec, alloc, a, cfg)?;
-    prepared.run_batch(requests, compute, cfg.seed)
+    let outcome = Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.to_vec())
+        .config(cfg.clone())
+        .compute(compute)
+        .mode(Mode::Batched)
+        .build()?
+        .serve()?;
+    Ok(outcome.jobs)
 }
 
 /// Serve `requests` concurrently (pipelined): every request's workers are
 /// dispatched immediately on their own threads, so request `i+1` does not
 /// wait for request `i`'s stragglers. Returns per-request latencies plus the
 /// batch makespan — the throughput view of the system.
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(requests.to_vec()).config(cfg.clone())
+/// .compute(compute).mode(Mode::Pipelined).build()?.serve()?`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Pipelined instead"
+)]
 pub fn serve_requests_pipelined(
     spec: &ClusterSpec,
     alloc: &Allocation,
@@ -292,39 +359,16 @@ pub fn serve_requests_pipelined(
     compute: Arc<dyn Compute>,
     cfg: &JobConfig,
 ) -> Result<ServeReport> {
-    let start = Instant::now();
-    let mut handles = Vec::with_capacity(requests.len());
-    for (i, x) in requests.iter().enumerate() {
-        let mut jcfg = cfg.clone();
-        jcfg.seed = derive_stream_seed(cfg.seed, i as u64);
-        let spec = spec.clone();
-        let alloc = alloc.clone();
-        let a = a.clone();
-        let x = x.clone();
-        let cmp = Arc::clone(&compute);
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("request-{i}"))
-                .spawn(move || run_job(&spec, &alloc, &a, &x, cmp, &jcfg))
-                .map_err(|e| Error::Runtime(format!("spawn request {i}: {e}")))?,
-        );
-    }
-    let mut recorder = LatencyRecorder::new();
-    let mut jobs = Vec::with_capacity(requests.len());
-    let mut worst = 0.0f64;
-    for h in handles {
-        let report = h.join().map_err(|_| {
-            Error::Runtime("request thread panicked".into())
-        })??;
-        recorder.record(report.wall_latency, report.decoded.len());
-        worst = fold_worst_error(worst, report.max_error);
-        jobs.push(report);
-    }
-    let encodes = jobs.len() as u64; // one run_job (and encode) per request
-    let mut out =
-        ServeReport { recorder, worst_error: worst, jobs, makespan: None, encodes };
-    out.makespan = Some(start.elapsed());
-    Ok(out)
+    Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.to_vec())
+        .config(cfg.clone())
+        .compute(compute)
+        .mode(Mode::Pipelined)
+        .build()?
+        .serve()
+        .map(super::ServeOutcome::into_serve_report)
 }
 
 /// Serve a *stream* of requests arriving at `arrival_offsets` (wall-clock
@@ -355,8 +399,20 @@ pub fn serve_requests_pipelined(
 ///
 /// This is the static-cluster view: the failure/drift-aware loop with the
 /// same batching semantics (and bit-identical behaviour under an empty
-/// scenario — this function delegates to it) is
-/// [`crate::coordinator::serve_arrivals_adaptive`].
+/// scenario) attaches through [`SessionBuilder::scenario`] /
+/// [`SessionBuilder::adaptive`] on the same arrivals mode.
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(requests.to_vec()).config(cfg.clone())
+/// .compute(compute).mode(Mode::Arrivals { offsets, max_batch })
+/// .build()?.serve()?`.
+///
+/// [`SessionBuilder::scenario`]: crate::coordinator::SessionBuilder::scenario
+/// [`SessionBuilder::adaptive`]: crate::coordinator::SessionBuilder::adaptive
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Arrivals instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn serve_arrivals(
     spec: &ClusterSpec,
@@ -368,24 +424,32 @@ pub fn serve_arrivals(
     compute: Arc<dyn Compute>,
     cfg: &JobConfig,
 ) -> Result<ServeReport> {
-    crate::coordinator::serve_arrivals_adaptive(
-        spec,
-        alloc,
-        a,
-        requests,
-        arrival_offsets,
-        max_batch,
-        compute,
-        cfg,
-        &crate::coordinator::FailureScenario::none(),
-        None,
-    )
-    .map(|r| r.serve)
+    Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.to_vec())
+        .config(cfg.clone())
+        .compute(compute)
+        .mode(Mode::Arrivals {
+            offsets: arrival_offsets.to_vec(),
+            max_batch,
+        })
+        .build()?
+        .serve()
+        .map(super::ServeOutcome::into_serve_report)
 }
 
 /// Serve `requests` input vectors sequentially over the same cluster and
 /// allocation, recording latency percentiles (the serving-loop view of the
 /// system). Each request draws fresh straggle delays (seed-derived).
+///
+/// Migration: `Session::builder(spec).allocation(alloc.clone())
+/// .data(a.clone()).requests(requests.to_vec()).config(cfg.clone())
+/// .compute(compute).mode(Mode::Sequential).build()?.serve()?`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session with Mode::Sequential instead"
+)]
 pub fn serve_requests(
     spec: &ClusterSpec,
     alloc: &Allocation,
@@ -394,22 +458,29 @@ pub fn serve_requests(
     compute: Arc<dyn Compute>,
     cfg: &JobConfig,
 ) -> Result<ServeReport> {
-    let mut recorder = LatencyRecorder::new();
-    let mut jobs = Vec::with_capacity(requests.len());
-    let mut worst = 0.0f64;
-    for (i, x) in requests.iter().enumerate() {
-        let mut jcfg = cfg.clone();
-        jcfg.seed = derive_stream_seed(cfg.seed, i as u64);
-        let report = run_job(spec, alloc, a, x, Arc::clone(&compute), &jcfg)?;
-        recorder.record(report.wall_latency, report.decoded.len());
-        worst = fold_worst_error(worst, report.max_error);
-        jobs.push(report);
-    }
-    let encodes = jobs.len() as u64;
-    Ok(ServeReport { recorder, worst_error: worst, jobs, makespan: None, encodes })
+    Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.to_vec())
+        .config(cfg.clone())
+        .compute(compute)
+        .mode(Mode::Sequential)
+        .build()?
+        .serve()
+        .map(|outcome| {
+            // The documented legacy shape: the sequential loop reports no
+            // makespan (per-request latencies are the measure).
+            let mut report = outcome.into_serve_report();
+            report.makespan = None;
+            report
+        })
 }
 
 #[cfg(test)]
+// The deprecated shims are exercised deliberately: these tests double as
+// regression coverage that each shim still reproduces its historical
+// behaviour through the Session facade.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::allocation::proposed_allocation;

@@ -1,13 +1,30 @@
 //! Latency metrics for the serving path.
 
 use crate::math::Summary;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Records per-request latencies and exposes percentiles/throughput.
+///
+/// Two throughput views are reported, because they answer different
+/// questions:
+///
+/// - [`LatencyRecorder::rows_per_cpu_second`] divides by **cumulative**
+///   per-request latency — the per-request cost view. Under batched or
+///   pipelined serving, where requests overlap in time, the cumulative
+///   latency counts the same wall-clock interval once per in-flight
+///   request, so this *understates* the system's real throughput.
+/// - [`LatencyRecorder::rows_per_wall_second`] divides by the measured
+///   **wall-clock serving span** ([`LatencyRecorder::wall_span`]) — the
+///   system throughput view, correct under overlap.
 #[derive(Clone, Debug)]
 pub struct LatencyRecorder {
     summary: Summary,
     total_rows: u64,
+    /// Instant of the first `record` call plus that request's latency —
+    /// together with `last` this spans the serving window.
+    first: Option<(Instant, f64)>,
+    /// Instant of the most recent `record` call.
+    last: Option<Instant>,
 }
 
 impl Default for LatencyRecorder {
@@ -22,11 +39,20 @@ impl LatencyRecorder {
         LatencyRecorder {
             summary: Summary::keeping_samples(),
             total_rows: 0,
+            first: None,
+            last: None,
         }
     }
 
-    /// Record one request's wall latency and decoded row count.
+    /// Record one request's wall latency and decoded row count. Call at
+    /// request *completion* (every serving loop does): the wall span is
+    /// anchored on completion instants.
     pub fn record(&mut self, latency: Duration, rows: usize) {
+        let now = Instant::now();
+        if self.first.is_none() {
+            self.first = Some((now, latency.as_secs_f64()));
+        }
+        self.last = Some(now);
         self.summary.add(latency.as_secs_f64());
         self.total_rows += rows as u64;
     }
@@ -46,9 +72,25 @@ impl LatencyRecorder {
         self.summary.percentile(p)
     }
 
-    /// Rows decoded per second of cumulative latency (sequential-serving
-    /// throughput proxy).
-    pub fn rows_per_second(&self) -> f64 {
+    /// The wall-clock serving span in seconds: first completion → last
+    /// completion, extended back by the first request's own latency (so a
+    /// single-request recorder spans exactly that request's latency, and a
+    /// sequential stream spans ≈ the sum of its latencies). `0.0` when
+    /// nothing was recorded.
+    pub fn wall_span(&self) -> f64 {
+        match (&self.first, &self.last) {
+            (Some((first, first_latency)), Some(last)) => {
+                last.duration_since(*first).as_secs_f64() + first_latency
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Rows decoded per second of **cumulative** per-request latency — the
+    /// per-request cost view. Under batched/pipelined serving requests
+    /// overlap, so this understates system throughput; see
+    /// [`LatencyRecorder::rows_per_wall_second`].
+    pub fn rows_per_cpu_second(&self) -> f64 {
         let total_time = self.summary.mean() * self.summary.count() as f64;
         if total_time <= 0.0 {
             0.0
@@ -57,19 +99,45 @@ impl LatencyRecorder {
         }
     }
 
+    /// Rows decoded per second of **wall-clock** serving span — the system
+    /// throughput view, correct when requests overlap (batched, pipelined,
+    /// and arrivals serving).
+    pub fn rows_per_wall_second(&self) -> f64 {
+        let span = self.wall_span();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.total_rows as f64 / span
+        }
+    }
+
+    /// Historical alias of [`LatencyRecorder::rows_per_cpu_second`]. It
+    /// divided by cumulative latency while claiming to be a throughput,
+    /// overstating wall time whenever requests overlapped.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use rows_per_cpu_second (same value) or rows_per_wall_second \
+                (true throughput under overlap)"
+    )]
+    pub fn rows_per_second(&self) -> f64 {
+        self.rows_per_cpu_second()
+    }
+
     /// One-line report.
     pub fn report(&self) -> String {
         if self.count() == 0 {
             return "no requests recorded".into();
         }
         format!(
-            "requests={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms rows/s={:.0}",
+            "requests={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms \
+             rows/cpu-s={:.0} rows/wall-s={:.0}",
             self.count(),
             self.mean() * 1e3,
             self.percentile(50.0) * 1e3,
             self.percentile(95.0) * 1e3,
             self.percentile(99.0) * 1e3,
-            self.rows_per_second()
+            self.rows_per_cpu_second(),
+            self.rows_per_wall_second()
         )
     }
 }
@@ -88,15 +156,57 @@ mod tests {
         assert!((rec.mean() - 0.030).abs() < 1e-9);
         assert!((rec.percentile(50.0) - 0.030).abs() < 1e-9);
         // 500 rows over 0.15s cumulative.
-        assert!((rec.rows_per_second() - 500.0 / 0.15).abs() < 1e-6);
+        assert!((rec.rows_per_cpu_second() - 500.0 / 0.15).abs() < 1e-6);
         assert!(rec.report().contains("requests=5"));
+        assert!(rec.report().contains("rows/wall-s="));
+    }
+
+    #[test]
+    fn wall_span_reflects_overlap() {
+        // Five "requests" recorded back-to-back (≈ fully overlapped, as in
+        // one decoded batch): the wall span collapses to about the first
+        // latency, so the wall rate exceeds the cpu rate — the exact bias
+        // the old cumulative-only metric hid.
+        let mut rec = LatencyRecorder::new();
+        for _ in 0..5 {
+            rec.record(Duration::from_millis(30), 100);
+        }
+        let span = rec.wall_span();
+        assert!(span >= 0.030, "span {span} must include the first latency");
+        assert!(span < 0.030 + 0.5, "span {span} unexpectedly long");
+        assert!(rec.rows_per_wall_second() > rec.rows_per_cpu_second());
+    }
+
+    #[test]
+    fn single_request_wall_equals_cpu() {
+        let mut rec = LatencyRecorder::new();
+        rec.record(Duration::from_millis(40), 200);
+        // One request: span = its latency (plus the sub-microsecond gap
+        // between the two Instant::now() reads).
+        let wall = rec.rows_per_wall_second();
+        let cpu = rec.rows_per_cpu_second();
+        assert!((wall - cpu).abs() / cpu < 1e-3, "wall {wall} vs cpu {cpu}");
+    }
+
+    #[test]
+    fn sequential_span_tracks_sum_of_latencies() {
+        // Records spaced by real sleeps approximate a sequential loop; the
+        // span must cover the sleeps plus the first latency.
+        let mut rec = LatencyRecorder::new();
+        rec.record(Duration::from_millis(5), 10);
+        std::thread::sleep(Duration::from_millis(20));
+        rec.record(Duration::from_millis(5), 10);
+        let span = rec.wall_span();
+        assert!(span >= 0.025, "span {span} must cover sleep + first latency");
     }
 
     #[test]
     fn empty_recorder_is_safe() {
         let rec = LatencyRecorder::new();
         assert_eq!(rec.count(), 0);
-        assert_eq!(rec.rows_per_second(), 0.0);
+        assert_eq!(rec.rows_per_cpu_second(), 0.0);
+        assert_eq!(rec.rows_per_wall_second(), 0.0);
+        assert_eq!(rec.wall_span(), 0.0);
         assert_eq!(rec.report(), "no requests recorded");
     }
 }

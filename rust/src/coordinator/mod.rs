@@ -23,6 +23,33 @@
 //! re-solving the paper's allocation on the estimated surviving cluster
 //! and re-slicing the already-encoded rows ([`PreparedJob::rechunk`])
 //! with zero additional encode work.
+//!
+//! **Entry point**: the [`Session`] facade. Policy × mode × scenario ×
+//! adaptivity are orthogonal builder knobs, and every serve returns one
+//! [`ServeOutcome`]:
+//!
+//! ```no_run
+//! # use hetcoded::allocation::policy;
+//! # use hetcoded::coding::Matrix;
+//! # use hetcoded::coordinator::{Mode, Session};
+//! # use hetcoded::model::ClusterSpec;
+//! # let spec = ClusterSpec::paper_two_group(64);
+//! # let a = Matrix::from_fn(64, 8, |_, _| 0.5);
+//! # let requests: Vec<Vec<f64>> = vec![vec![0.5; 8]; 4];
+//! let outcome = Session::builder(&spec)
+//!     .policy(policy::resolve("proposed")?)
+//!     .data(a)
+//!     .requests(requests)
+//!     .mode(Mode::PoissonArrivals { rate: 50.0, max_batch: 8 })
+//!     .build()?
+//!     .serve()?;
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+//!
+//! The six legacy free functions (`run_job`, `run_job_batched`,
+//! `serve_requests`, `serve_requests_pipelined`, `serve_arrivals`,
+//! `serve_arrivals_adaptive`) are `#[deprecated]` shims over `Session`,
+//! bit-identical under fixed seeds (`rust/tests/session_parity.rs`).
 
 pub mod adaptive;
 pub mod compute;
@@ -30,20 +57,23 @@ pub mod failures;
 pub mod master;
 pub mod metrics;
 pub mod prepared;
+pub mod session;
 pub mod straggler;
 
-pub use adaptive::{
-    serve_arrivals_adaptive, AdaptiveServeConfig, AdaptiveServeReport,
-};
+#[allow(deprecated)]
+pub use adaptive::serve_arrivals_adaptive;
+pub use adaptive::{AdaptiveServeConfig, AdaptiveServeReport};
 pub use compute::{Compute, NativeCompute};
 #[cfg(feature = "xla")]
 pub use compute::XlaService;
 pub use failures::{FailureEvent, FailureKind, FailureScenario, ScenarioState};
+#[allow(deprecated)]
 pub use master::{
-    derive_stream_seed, run_job, run_job_batched, serve_arrivals,
-    serve_requests, serve_requests_pipelined, JobConfig, JobReport,
-    ServeReport,
+    run_job, run_job_batched, serve_arrivals, serve_requests,
+    serve_requests_pipelined,
 };
+pub use master::{derive_stream_seed, JobConfig, JobReport, ServeReport};
 pub use metrics::LatencyRecorder;
 pub use prepared::{PreparedJob, WorkerObservation};
+pub use session::{Mode, ServeOutcome, Session, SessionBuilder};
 pub use straggler::StragglerInjector;

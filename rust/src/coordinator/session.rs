@@ -1,0 +1,783 @@
+//! The [`Session`] facade: one entry point for every serving shape.
+//!
+//! Three PRs of growth left the coordinator with six overlapping free
+//! functions (`run_job`, `run_job_batched`, `serve_requests`,
+//! `serve_requests_pipelined`, `serve_arrivals`,
+//! `serve_arrivals_adaptive`), each with its own signature and report
+//! type. A `Session` makes the four orthogonal knobs explicit:
+//!
+//! - **policy × allocation** — a registry-resolved
+//!   [`Policy`](crate::allocation::Policy) (solved at
+//!   [`SessionBuilder::build`]) or an explicit [`Allocation`];
+//! - **mode** ([`Mode`]) — how requests are scheduled onto the cluster
+//!   (single / sequential / pipelined / one batch / arrival replay);
+//! - **scenario** ([`FailureScenario`]) — scripted deaths, slowdowns, and
+//!   drift against batch indices of an arrivals stream;
+//! - **adaptivity** ([`AdaptiveServeConfig`]) — the online estimator +
+//!   re-allocation loop on top of the same stream.
+//!
+//! Every serve returns one [`ServeOutcome`] — the superset of the legacy
+//! `JobReport` / `ServeReport` / `AdaptiveServeReport` — with the encode,
+//! re-chunk, and decode-cache counters always populated. The legacy free
+//! functions survive as `#[deprecated]` shims that build a `Session`,
+//! proven bit-identical under fixed seeds by `rust/tests/session_parity.rs`.
+//!
+//! # State machine
+//!
+//! ```text
+//! SessionBuilder --build()--> Session --serve()--> ServeOutcome
+//!   .policy(p) | .allocation(a)     |
+//!   .data(A) .requests(X)           +-- Single      -> cold path, 1 job
+//!   .config(JobConfig)              +-- Sequential  -> cold path per request
+//!   .mode(Mode)                     +-- Pipelined   -> cold path, all in flight
+//!   .scenario(s) .adaptive(cfg)     +-- Batched     -> PreparedJob, 1 batch
+//!   .compute(backend)               +-- Arrivals    -> PreparedJob stream
+//!                                        (+ scenario/adaptive loop)
+//! ```
+//!
+//! # Example
+//!
+//! ```
+//! use hetcoded::allocation::policy;
+//! use hetcoded::coding::Matrix;
+//! use hetcoded::coordinator::{JobConfig, Mode, Session};
+//! use hetcoded::math::Rng;
+//! use hetcoded::model::{ClusterSpec, Group};
+//!
+//! let spec = ClusterSpec::new(
+//!     vec![Group { n: 4, mu: 8.0, alpha: 1.0 }, Group { n: 6, mu: 2.0, alpha: 1.0 }],
+//!     32,
+//! )?;
+//! let mut rng = Rng::new(7);
+//! let a = Matrix::from_fn(32, 4, |_, _| rng.normal());
+//! let requests: Vec<Vec<f64>> =
+//!     (0..3).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+//! let outcome = Session::builder(&spec)
+//!     .policy(policy::resolve("uniform-rate=0.5")?)
+//!     .data(a)
+//!     .requests(requests)
+//!     .config(JobConfig { time_scale: 0.002, ..Default::default() })
+//!     .mode(Mode::Batched)
+//!     .build()?
+//!     .serve()?;
+//! assert_eq!(outcome.jobs.len(), 3);
+//! assert!(outcome.worst_error < 1e-8);
+//! assert_eq!(outcome.encodes, 1); // one batch = one encode pass
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+
+use crate::allocation::{Allocation, Policy};
+use crate::coding::Matrix;
+use crate::coordinator::adaptive::{
+    serve_arrivals_adaptive_impl, AdaptiveServeConfig,
+};
+use crate::coordinator::master::{
+    derive_stream_seed, fold_worst_error, run_job_impl, JobConfig, JobReport,
+    ServeReport,
+};
+use crate::coordinator::{
+    Compute, FailureScenario, LatencyRecorder, NativeCompute, PreparedJob,
+};
+use crate::math::Rng;
+use crate::model::ClusterSpec;
+use crate::workload::ArrivalProcess;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Domain-separation tag for the arrival-trace RNG stream of
+/// [`Mode::PoissonArrivals`] (kept identical to the historical `run
+/// --mode arrivals` derivation so traces replay bit-identically).
+pub const ARRIVAL_SEED_TAG: u64 = 0xA221;
+
+/// How a [`Session`] schedules its requests onto the cluster.
+#[derive(Clone, Debug)]
+pub enum Mode {
+    /// Exactly one request through the cold one-shot path (encode,
+    /// dispatch, decode) using `JobConfig::seed` as-is — the legacy
+    /// `run_job`.
+    Single,
+    /// Requests one after another; each draws a fresh generator and
+    /// straggle realization from a derived seed — the legacy
+    /// `serve_requests`.
+    Sequential,
+    /// Every request's workers dispatched immediately on their own
+    /// threads; request `i+1` does not wait for request `i`'s stragglers —
+    /// the legacy `serve_requests_pipelined`.
+    Pipelined,
+    /// All requests as **one** coded batch over a prepared job: each
+    /// worker evaluates its chunk against every request in a single
+    /// backend call, one straggle realization for the batch — the legacy
+    /// `run_job_batched`.
+    Batched,
+    /// Replay an arrival trace through the prepared fast path: encode
+    /// once, drain queued requests in batches of up to `max_batch`.
+    /// Scenarios and adaptive re-allocation attach to this mode — the
+    /// legacy `serve_arrivals` / `serve_arrivals_adaptive`.
+    Arrivals {
+        /// Wall-clock arrival offsets from serving start (ascending), one
+        /// per request.
+        offsets: Vec<Duration>,
+        /// Maximum requests drained into one coded batch.
+        max_batch: usize,
+    },
+    /// [`Mode::Arrivals`] with the offsets drawn from a Poisson process at
+    /// `rate` arrivals/second (derived deterministically from
+    /// `JobConfig::seed` ^ [`ARRIVAL_SEED_TAG`] at build time).
+    PoissonArrivals {
+        /// Arrival rate in requests per wall-clock second.
+        rate: f64,
+        /// Maximum requests drained into one coded batch.
+        max_batch: usize,
+    },
+}
+
+/// The unified result of [`Session::serve`]: a superset of the legacy
+/// `JobReport` / `ServeReport` / `AdaptiveServeReport` views, with the
+/// encode / re-chunk / decode-cache counters always populated (zero for
+/// modes where the mechanism cannot fire, e.g. no re-chunks outside
+/// arrivals mode; the one-shot cold paths build cache-less decoders, so
+/// their cache counters are 0/0 by construction).
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// Per-request latency metrics (sojourns in arrivals mode).
+    pub recorder: LatencyRecorder,
+    /// Max decode error across requests (NaN — not 0 — when
+    /// [`JobConfig::verify_decode`] is off: nothing was verified).
+    pub worst_error: f64,
+    /// Per-request reports, in request order.
+    pub jobs: Vec<JobReport>,
+    /// Wall time for the whole serve (`None` only for [`Mode::Single`],
+    /// where the single job's `wall_latency` is the measure).
+    pub makespan: Option<Duration>,
+    /// Encode passes performed. Prepared modes (batched/arrivals) hold
+    /// this at 1 regardless of batch count; the cold modes pay one per
+    /// request by construction.
+    pub encodes: u64,
+    /// Re-chunk (re-allocation) passes on the prepared job.
+    pub rechunks: u64,
+    /// Decode factorization-cache hits (prepared modes).
+    pub decode_cache_hits: u64,
+    /// Decode factorization-cache misses (prepared modes).
+    pub decode_cache_misses: u64,
+    /// Estimator-triggered re-solves (adaptive arrivals mode).
+    pub reallocations: u64,
+    /// Workers suspected dead by the end of the stream (sorted).
+    pub suspected_dead: Vec<usize>,
+    /// Encode passes after setup — the adaptation invariant: stays 0, no
+    /// matter how many times the stream re-allocates.
+    pub post_setup_encodes: u64,
+    /// The cluster parameters the loop believed at the end (arrivals mode;
+    /// differs from the spec only after adaptive re-solves).
+    pub assumed_spec: Option<ClusterSpec>,
+}
+
+impl ServeOutcome {
+    /// Collapse into the legacy [`ServeReport`] shape (drops the
+    /// adaptation and cache counters).
+    pub fn into_serve_report(self) -> ServeReport {
+        ServeReport {
+            recorder: self.recorder,
+            worst_error: self.worst_error,
+            jobs: self.jobs,
+            makespan: self.makespan,
+            encodes: self.encodes,
+        }
+    }
+
+    fn one_shot(
+        recorder: LatencyRecorder,
+        worst_error: f64,
+        jobs: Vec<JobReport>,
+        makespan: Option<Duration>,
+        encodes: u64,
+    ) -> ServeOutcome {
+        ServeOutcome {
+            recorder,
+            worst_error,
+            jobs,
+            makespan,
+            encodes,
+            rechunks: 0,
+            decode_cache_hits: 0,
+            decode_cache_misses: 0,
+            reallocations: 0,
+            suspected_dead: Vec::new(),
+            post_setup_encodes: 0,
+            assumed_spec: None,
+        }
+    }
+}
+
+/// Builder for a [`Session`]; start from [`Session::builder`].
+pub struct SessionBuilder {
+    spec: ClusterSpec,
+    cfg: JobConfig,
+    alloc: Option<Allocation>,
+    policy: Option<Box<dyn Policy>>,
+    data: Option<Matrix>,
+    requests: Vec<Vec<f64>>,
+    mode: Mode,
+    scenario: FailureScenario,
+    adaptive: Option<AdaptiveServeConfig>,
+    compute: Option<Arc<dyn Compute>>,
+}
+
+impl SessionBuilder {
+    /// Solve the allocation with this policy at build time (under
+    /// `JobConfig::model`). Mutually exclusive with
+    /// [`SessionBuilder::allocation`].
+    pub fn policy(mut self, policy: Box<dyn Policy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Use an explicit, already-solved allocation. Mutually exclusive with
+    /// [`SessionBuilder::policy`].
+    pub fn allocation(mut self, alloc: Allocation) -> Self {
+        self.alloc = Some(alloc);
+        self
+    }
+
+    /// The uncoded data matrix `A` (`k × d`, `k = spec.k`). Required.
+    pub fn data(mut self, a: Matrix) -> Self {
+        self.data = Some(a);
+        self
+    }
+
+    /// The request vectors (each of length `d`) to serve.
+    pub fn requests(mut self, requests: Vec<Vec<f64>>) -> Self {
+        self.requests = requests;
+        self
+    }
+
+    /// Job configuration (latency model, seed, time scale, encode threads,
+    /// decode cache, …). Defaults to [`JobConfig::default`].
+    pub fn config(mut self, cfg: JobConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Serving mode. Defaults to [`Mode::Sequential`].
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Scripted failure/drift scenario (arrivals modes only).
+    pub fn scenario(mut self, scenario: FailureScenario) -> Self {
+        self.scenario = scenario;
+        self
+    }
+
+    /// Enable the online estimator + re-allocation loop (arrivals modes
+    /// only). Re-solves go through the session policy's
+    /// [`Policy::allocate_capped`] when the session was built with
+    /// [`SessionBuilder::policy`]; sessions built from an explicit
+    /// allocation re-solve with the paper's proposed projection (the
+    /// historical behaviour).
+    pub fn adaptive(mut self, cfg: AdaptiveServeConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
+    /// Compute backend. Defaults to [`NativeCompute`].
+    pub fn compute(mut self, compute: Arc<dyn Compute>) -> Self {
+        self.compute = Some(compute);
+        self
+    }
+
+    /// Validate the configuration and produce a ready-to-serve
+    /// [`Session`]: resolves the policy into an allocation, validates it
+    /// against the spec, and materializes Poisson arrival offsets.
+    pub fn build(self) -> Result<Session> {
+        let a = self.data.ok_or_else(|| {
+            Error::InvalidSpec(
+                "Session needs the data matrix (SessionBuilder::data)".into(),
+            )
+        })?;
+        if a.rows() != self.spec.k {
+            return Err(Error::InvalidSpec(format!(
+                "data matrix has {} rows, spec.k = {}",
+                a.rows(),
+                self.spec.k
+            )));
+        }
+        let (alloc, policy) = match (self.alloc, self.policy) {
+            (Some(_), Some(_)) => {
+                return Err(Error::InvalidSpec(
+                    "Session got both .allocation(..) and .policy(..); \
+                     pick one"
+                        .into(),
+                ))
+            }
+            (Some(alloc), None) => (alloc, None),
+            (None, Some(p)) => {
+                let alloc = p.allocate(self.cfg.model, &self.spec)?;
+                (alloc, Some(p))
+            }
+            (None, None) => {
+                return Err(Error::InvalidSpec(
+                    "Session needs .policy(..) or .allocation(..)".into(),
+                ))
+            }
+        };
+        alloc.validate(&self.spec)?;
+        let mode = match self.mode {
+            Mode::PoissonArrivals { rate, max_batch } => {
+                let mut rng = Rng::new(self.cfg.seed ^ ARRIVAL_SEED_TAG);
+                let offsets = ArrivalProcess::Poisson { rate }
+                    .times(self.requests.len(), &mut rng)?
+                    .into_iter()
+                    .map(Duration::from_secs_f64)
+                    .collect();
+                Mode::Arrivals { offsets, max_batch }
+            }
+            m => m,
+        };
+        if !matches!(mode, Mode::Arrivals { .. })
+            && (!self.scenario.is_empty() || self.adaptive.is_some())
+        {
+            return Err(Error::InvalidSpec(
+                "failure scenarios and adaptive serving need an arrivals \
+                 mode (Mode::Arrivals / Mode::PoissonArrivals)"
+                    .into(),
+            ));
+        }
+        Ok(Session {
+            spec: self.spec,
+            alloc,
+            policy,
+            a,
+            requests: self.requests,
+            cfg: self.cfg,
+            mode,
+            scenario: self.scenario,
+            adaptive: self.adaptive,
+            compute: self.compute.unwrap_or_else(|| Arc::new(NativeCompute)),
+        })
+    }
+}
+
+/// A fully-configured serving session: spec + allocation + data + requests
+/// + mode (+ scenario/adaptivity). Built by [`SessionBuilder`]; serving is
+/// side-effect-free on the session, so one session can serve repeatedly
+/// (each [`Session::serve`] re-runs the whole configured stream).
+pub struct Session {
+    spec: ClusterSpec,
+    alloc: Allocation,
+    /// The policy the session was built from (`None` for explicit
+    /// allocations). Adaptive arrivals re-solves go through its
+    /// `allocate_capped`, so the adaptation stays on the chosen policy.
+    policy: Option<Box<dyn Policy>>,
+    a: Matrix,
+    requests: Vec<Vec<f64>>,
+    cfg: JobConfig,
+    mode: Mode,
+    scenario: FailureScenario,
+    adaptive: Option<AdaptiveServeConfig>,
+    compute: Arc<dyn Compute>,
+}
+
+impl Session {
+    /// Start building a session for `spec`.
+    pub fn builder(spec: &ClusterSpec) -> SessionBuilder {
+        SessionBuilder {
+            spec: spec.clone(),
+            cfg: JobConfig::default(),
+            alloc: None,
+            policy: None,
+            data: None,
+            requests: Vec::new(),
+            mode: Mode::Sequential,
+            scenario: FailureScenario::none(),
+            adaptive: None,
+            compute: None,
+        }
+    }
+
+    /// The allocation this session serves under (solved from the policy at
+    /// build time, or the explicit one).
+    pub fn allocation(&self) -> &Allocation {
+        &self.alloc
+    }
+
+    /// The normalized serving mode ([`Mode::PoissonArrivals`] appears as
+    /// [`Mode::Arrivals`] with its materialized offsets).
+    pub fn mode(&self) -> &Mode {
+        &self.mode
+    }
+
+    /// Run the configured serve and return the unified outcome.
+    pub fn serve(&self) -> Result<ServeOutcome> {
+        match &self.mode {
+            Mode::Single => self.serve_single(),
+            Mode::Sequential => self.serve_sequential(),
+            Mode::Pipelined => self.serve_pipelined(),
+            Mode::Batched => self.serve_batched(),
+            Mode::Arrivals { offsets, max_batch } => {
+                self.serve_arrivals(offsets, *max_batch)
+            }
+            Mode::PoissonArrivals { .. } => unreachable!("normalized in build"),
+        }
+    }
+
+    fn serve_single(&self) -> Result<ServeOutcome> {
+        if self.requests.len() != 1 {
+            return Err(Error::InvalidSpec(format!(
+                "Mode::Single needs exactly one request, got {}",
+                self.requests.len()
+            )));
+        }
+        let report = run_job_impl(
+            &self.spec,
+            &self.alloc,
+            &self.a,
+            &self.requests[0],
+            Arc::clone(&self.compute),
+            &self.cfg,
+        )?;
+        let mut recorder = LatencyRecorder::new();
+        recorder.record(report.wall_latency, report.decoded.len());
+        let worst = fold_worst_error(0.0, report.max_error);
+        Ok(ServeOutcome::one_shot(recorder, worst, vec![report], None, 1))
+    }
+
+    fn serve_sequential(&self) -> Result<ServeOutcome> {
+        let start = Instant::now();
+        let mut recorder = LatencyRecorder::new();
+        let mut jobs = Vec::with_capacity(self.requests.len());
+        let mut worst = 0.0f64;
+        for (i, x) in self.requests.iter().enumerate() {
+            let mut jcfg = self.cfg.clone();
+            jcfg.seed = derive_stream_seed(self.cfg.seed, i as u64);
+            let report = run_job_impl(
+                &self.spec,
+                &self.alloc,
+                &self.a,
+                x,
+                Arc::clone(&self.compute),
+                &jcfg,
+            )?;
+            recorder.record(report.wall_latency, report.decoded.len());
+            worst = fold_worst_error(worst, report.max_error);
+            jobs.push(report);
+        }
+        let encodes = jobs.len() as u64;
+        Ok(ServeOutcome::one_shot(
+            recorder,
+            worst,
+            jobs,
+            Some(start.elapsed()),
+            encodes,
+        ))
+    }
+
+    fn serve_pipelined(&self) -> Result<ServeOutcome> {
+        let start = Instant::now();
+        let mut handles = Vec::with_capacity(self.requests.len());
+        for (i, x) in self.requests.iter().enumerate() {
+            let mut jcfg = self.cfg.clone();
+            jcfg.seed = derive_stream_seed(self.cfg.seed, i as u64);
+            let spec = self.spec.clone();
+            let alloc = self.alloc.clone();
+            let a = self.a.clone();
+            let x = x.clone();
+            let cmp = Arc::clone(&self.compute);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("request-{i}"))
+                    .spawn(move || run_job_impl(&spec, &alloc, &a, &x, cmp, &jcfg))
+                    .map_err(|e| {
+                        Error::Runtime(format!("spawn request {i}: {e}"))
+                    })?,
+            );
+        }
+        let mut recorder = LatencyRecorder::new();
+        let mut jobs = Vec::with_capacity(self.requests.len());
+        let mut worst = 0.0f64;
+        for h in handles {
+            let report = h
+                .join()
+                .map_err(|_| Error::Runtime("request thread panicked".into()))??;
+            recorder.record(report.wall_latency, report.decoded.len());
+            worst = fold_worst_error(worst, report.max_error);
+            jobs.push(report);
+        }
+        let encodes = jobs.len() as u64; // one cold job (and encode) per request
+        Ok(ServeOutcome::one_shot(
+            recorder,
+            worst,
+            jobs,
+            Some(start.elapsed()),
+            encodes,
+        ))
+    }
+
+    fn serve_batched(&self) -> Result<ServeOutcome> {
+        if self.requests.is_empty() {
+            return Err(Error::InvalidSpec("empty request batch".into()));
+        }
+        let start = Instant::now();
+        let mut prepared =
+            PreparedJob::new(&self.spec, &self.alloc, &self.a, &self.cfg)?;
+        let reports = prepared.run_batch(
+            &self.requests,
+            Arc::clone(&self.compute),
+            self.cfg.seed,
+        )?;
+        let mut recorder = LatencyRecorder::new();
+        let mut worst = 0.0f64;
+        for r in &reports {
+            recorder.record(r.wall_latency, r.decoded.len());
+            worst = fold_worst_error(worst, r.max_error);
+        }
+        let (hits, misses) = prepared.decode_cache_stats();
+        Ok(ServeOutcome {
+            recorder,
+            worst_error: worst,
+            jobs: reports,
+            makespan: Some(start.elapsed()),
+            encodes: prepared.encode_count(),
+            rechunks: prepared.rechunk_count(),
+            decode_cache_hits: hits,
+            decode_cache_misses: misses,
+            reallocations: 0,
+            suspected_dead: Vec::new(),
+            post_setup_encodes: prepared.encode_count().saturating_sub(1),
+            assumed_spec: None,
+        })
+    }
+
+    fn serve_arrivals(
+        &self,
+        offsets: &[Duration],
+        max_batch: usize,
+    ) -> Result<ServeOutcome> {
+        let rep = serve_arrivals_adaptive_impl(
+            &self.spec,
+            &self.alloc,
+            &self.a,
+            &self.requests,
+            offsets,
+            max_batch,
+            Arc::clone(&self.compute),
+            &self.cfg,
+            &self.scenario,
+            self.adaptive.as_ref(),
+            self.policy.as_deref(),
+        )?;
+        Ok(ServeOutcome {
+            recorder: rep.serve.recorder,
+            worst_error: rep.serve.worst_error,
+            jobs: rep.serve.jobs,
+            makespan: rep.serve.makespan,
+            encodes: rep.serve.encodes,
+            rechunks: rep.rechunks,
+            decode_cache_hits: rep.decode_cache.0,
+            decode_cache_misses: rep.decode_cache.1,
+            reallocations: rep.reallocations,
+            suspected_dead: rep.suspected_dead,
+            post_setup_encodes: rep.post_setup_encodes,
+            assumed_spec: Some(rep.assumed_spec),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::{policy, uniform_allocation};
+    use crate::model::{Group, LatencyModel};
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap()
+    }
+
+    fn data(jobs: usize, seed: u64) -> (Matrix, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let reqs = (0..jobs)
+            .map(|_| (0..8).map(|_| rng.normal()).collect())
+            .collect();
+        (a, reqs)
+    }
+
+    fn fast_cfg() -> JobConfig {
+        JobConfig { time_scale: 0.002, ..Default::default() }
+    }
+
+    #[test]
+    fn builder_validates_inputs() {
+        let spec = small_spec();
+        let (a, reqs) = data(2, 91);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        // Missing data matrix.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .requests(reqs.clone())
+            .build()
+            .is_err());
+        // Missing policy/allocation.
+        assert!(Session::builder(&spec)
+            .data(a.clone())
+            .requests(reqs.clone())
+            .build()
+            .is_err());
+        // Both policy and allocation.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .policy(policy::resolve("proposed").unwrap())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .build()
+            .is_err());
+        // Scenario outside arrivals mode.
+        let scenario = FailureScenario::parse(Some("0:1"), None).unwrap();
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .scenario(scenario)
+            .mode(Mode::Sequential)
+            .build()
+            .is_err());
+        // Adaptive outside arrivals mode.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .adaptive(AdaptiveServeConfig::default())
+            .mode(Mode::Batched)
+            .build()
+            .is_err());
+        // Wrong-shaped data matrix.
+        let mut rng = Rng::new(1);
+        let wrong = Matrix::from_fn(32, 8, |_, _| rng.normal());
+        assert!(Session::builder(&spec)
+            .allocation(alloc)
+            .data(wrong)
+            .requests(reqs)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn single_mode_requires_one_request() {
+        let spec = small_spec();
+        let (a, reqs) = data(2, 92);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let session = Session::builder(&spec)
+            .allocation(alloc)
+            .data(a)
+            .requests(reqs)
+            .config(fast_cfg())
+            .mode(Mode::Single)
+            .build()
+            .unwrap();
+        assert!(session.serve().is_err());
+    }
+
+    #[test]
+    fn every_mode_serves_and_populates_counters() {
+        let spec = small_spec();
+        let (a, reqs) = data(4, 93);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let offsets: Vec<Duration> =
+            (0..4).map(|i| Duration::from_millis(2 * i as u64)).collect();
+        let modes: Vec<(Mode, u64)> = vec![
+            (Mode::Sequential, 4),
+            (Mode::Pipelined, 4),
+            (Mode::Batched, 1),
+            (Mode::Arrivals { offsets, max_batch: 2 }, 1),
+            (Mode::PoissonArrivals { rate: 200.0, max_batch: 2 }, 1),
+        ];
+        for (mode, encodes) in modes {
+            let label = format!("{mode:?}");
+            let outcome = Session::builder(&spec)
+                .allocation(alloc.clone())
+                .data(a.clone())
+                .requests(reqs.clone())
+                .config(fast_cfg())
+                .mode(mode)
+                .build()
+                .unwrap()
+                .serve()
+                .unwrap();
+            assert_eq!(outcome.jobs.len(), 4, "{label}");
+            assert_eq!(outcome.recorder.count(), 4, "{label}");
+            assert!(outcome.worst_error < 1e-8, "{label}");
+            assert_eq!(outcome.encodes, encodes, "{label}");
+            assert_eq!(outcome.reallocations, 0, "{label}");
+            assert_eq!(outcome.rechunks, 0, "{label}");
+            assert_eq!(outcome.post_setup_encodes, 0, "{label}");
+            assert!(outcome.suspected_dead.is_empty(), "{label}");
+            assert!(outcome.makespan.is_some(), "{label}");
+        }
+    }
+
+    #[test]
+    fn policy_resolution_at_build_matches_explicit_allocation() {
+        let spec = small_spec();
+        let (a, reqs) = data(1, 94);
+        let cfg = fast_cfg();
+        let by_policy = Session::builder(&spec)
+            .policy(policy::resolve("proposed").unwrap())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .config(cfg.clone())
+            .mode(Mode::Single)
+            .build()
+            .unwrap();
+        let explicit = crate::allocation::proposed_allocation(cfg.model, &spec).unwrap();
+        assert_eq!(by_policy.allocation().loads, explicit.loads);
+        let o1 = by_policy.serve().unwrap();
+        let o2 = Session::builder(&spec)
+            .allocation(explicit)
+            .data(a)
+            .requests(reqs)
+            .config(cfg)
+            .mode(Mode::Single)
+            .build()
+            .unwrap()
+            .serve()
+            .unwrap();
+        assert_eq!(o1.jobs[0].decoded, o2.jobs[0].decoded);
+        assert_eq!(o1.jobs[0].rows_collected, o2.jobs[0].rows_collected);
+    }
+
+    #[test]
+    fn poisson_offsets_are_seed_deterministic() {
+        let spec = small_spec();
+        let (a, reqs) = data(3, 95);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let build = || {
+            Session::builder(&spec)
+                .allocation(alloc.clone())
+                .data(a.clone())
+                .requests(reqs.clone())
+                .config(fast_cfg())
+                .mode(Mode::PoissonArrivals { rate: 500.0, max_batch: 4 })
+                .build()
+                .unwrap()
+        };
+        let (s1, s2) = (build(), build());
+        match (s1.mode(), s2.mode()) {
+            (
+                Mode::Arrivals { offsets: o1, .. },
+                Mode::Arrivals { offsets: o2, .. },
+            ) => {
+                assert_eq!(o1, o2);
+                assert_eq!(o1.len(), 3);
+            }
+            other => panic!("PoissonArrivals not normalized: {other:?}"),
+        }
+    }
+}

@@ -6,10 +6,10 @@
 //! uniform with rate ½, group-code lower bound `1/r`, proposed lower bound
 //! `T*` — plus, as an extension, the *simulated* group-code scheme.
 
-use crate::allocation::optimal_latency_bound;
+use crate::allocation::{optimal_latency_bound, policy};
 use crate::figures::{Figure, FigureOpts, Series};
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{simulate_scheme, Scheme};
+use crate::sim::simulate_policy;
 use crate::Result;
 
 const GROUP_R: f64 = 100.0;
@@ -21,6 +21,12 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
     let all_ns: [usize; 7] = [250, 500, 1000, 2500, 5000, 10_000, 20_000];
     let ns: Vec<usize> = all_ns.iter().copied().take(opts.points.max(4)).collect();
     let cfg = opts.sim_config();
+    // Policies resolved once through the central registry.
+    let p_proposed = policy::resolve("proposed")?;
+    let p_uncoded = policy::resolve("uncoded")?;
+    let p_nstar = policy::resolve("uniform-nstar")?;
+    let p_half = policy::resolve("uniform-rate=0.5")?;
+    let p_group = policy::resolve("group-code=100")?;
 
     let mut proposed = vec![];
     let mut uncoded = vec![];
@@ -32,26 +38,24 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
     for &n_total in &ns {
         let spec = ClusterSpec::paper_five_group(n_total, k);
         let x = spec.total_workers() as f64;
-        let p = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?;
+        let p = simulate_policy(&spec, &*p_proposed, LatencyModel::A, &cfg)?;
         proposed.push((x, p.mean));
         uncoded.push((
             x,
-            simulate_scheme(&spec, Scheme::Uncoded, LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_uncoded, LatencyModel::A, &cfg)?.mean,
         ));
         uniform_nstar.push((
             x,
-            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
-                .mean,
+            simulate_policy(&spec, &*p_nstar, LatencyModel::A, &cfg)?.mean,
         ));
         uniform_half.push((
             x,
-            simulate_scheme(&spec, Scheme::UniformRate(0.5), LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_half, LatencyModel::A, &cfg)?.mean,
         ));
         if n_total as f64 > GROUP_R {
             group_sim.push((
                 x,
-                simulate_scheme(&spec, Scheme::GroupCode(GROUP_R), LatencyModel::A, &cfg)?
-                    .mean,
+                simulate_policy(&spec, &*p_group, LatencyModel::A, &cfg)?.mean,
             ));
         }
         group_bound.push((x, 1.0 / GROUP_R));

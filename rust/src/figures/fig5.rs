@@ -1,10 +1,10 @@
 //! Fig. 5: expected latency vs `q` (scale of `μ`) at fixed `N = 2500`
 //! for the five-group cluster of Fig. 4.
 
-use crate::allocation::optimal_latency_bound;
+use crate::allocation::{optimal_latency_bound, policy};
 use crate::figures::{logspace, Figure, FigureOpts, Series};
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{simulate_scheme, Scheme};
+use crate::sim::simulate_policy;
 use crate::Result;
 
 const GROUP_R: f64 = 100.0;
@@ -15,6 +15,10 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
     let base = ClusterSpec::paper_five_group(2500, k);
     let qs = logspace(-2.0, 1.5, opts.points.max(6));
     let cfg = opts.sim_config();
+    let p_proposed = policy::resolve("proposed")?;
+    let p_uncoded = policy::resolve("uncoded")?;
+    let p_nstar = policy::resolve("uniform-nstar")?;
+    let p_half = policy::resolve("uniform-rate=0.5")?;
 
     let mut proposed = vec![];
     let mut uncoded = vec![];
@@ -26,20 +30,19 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
         let spec = base.scaled_mu(q);
         proposed.push((
             q,
-            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_proposed, LatencyModel::A, &cfg)?.mean,
         ));
         uncoded.push((
             q,
-            simulate_scheme(&spec, Scheme::Uncoded, LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_uncoded, LatencyModel::A, &cfg)?.mean,
         ));
         uniform_nstar.push((
             q,
-            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
-                .mean,
+            simulate_policy(&spec, &*p_nstar, LatencyModel::A, &cfg)?.mean,
         ));
         uniform_half.push((
             q,
-            simulate_scheme(&spec, Scheme::UniformRate(0.5), LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_half, LatencyModel::A, &cfg)?.mean,
         ));
         group_bound.push((q, 1.0 / GROUP_R));
         t_star.push((q, optimal_latency_bound(LatencyModel::A, &spec)));

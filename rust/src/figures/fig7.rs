@@ -5,9 +5,10 @@
 //! Paper observation: at `q = 1` the rate-⅔ uniform code beats the uniform
 //! scheme that reuses the optimal `n*`.
 
+use crate::allocation::policy;
 use crate::figures::{logspace, Figure, FigureOpts, Series};
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{simulate_scheme, Scheme};
+use crate::sim::simulate_policy;
 use crate::Result;
 
 /// Generate Fig. 7.
@@ -17,6 +18,12 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
     let qs = logspace(-2.0, 1.5, opts.points.max(6));
     let cfg = opts.sim_config();
     let rates = [0.5, 2.0 / 3.0, 0.75, 0.9];
+    let p_proposed = policy::resolve("proposed")?;
+    let p_nstar = policy::resolve("uniform-nstar")?;
+    let p_rates = rates
+        .iter()
+        .map(|&rate| policy::resolve(&format!("uniform-rate={rate}")))
+        .collect::<Result<Vec<_>>>()?;
 
     let mut series: Vec<Series> = Vec::new();
     let mut proposed = vec![];
@@ -26,18 +33,16 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
         let spec = base.scaled_mu(q);
         proposed.push((
             q,
-            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?.mean,
+            simulate_policy(&spec, &*p_proposed, LatencyModel::A, &cfg)?.mean,
         ));
         uniform_nstar.push((
             q,
-            simulate_scheme(&spec, Scheme::UniformWithOptimalN, LatencyModel::A, &cfg)?
-                .mean,
+            simulate_policy(&spec, &*p_nstar, LatencyModel::A, &cfg)?.mean,
         ));
-        for (i, &rate) in rates.iter().enumerate() {
+        for (i, p) in p_rates.iter().enumerate() {
             per_rate[i].push((
                 q,
-                simulate_scheme(&spec, Scheme::UniformRate(rate), LatencyModel::A, &cfg)?
-                    .mean,
+                simulate_policy(&spec, &**p, LatencyModel::A, &cfg)?.mean,
             ));
         }
     }

@@ -4,9 +4,10 @@
 //! Paper observations: the best uniform rate is near **0.52**, and the
 //! proposed allocation is ≈**10 % below** that best uniform point.
 
+use crate::allocation::policy;
 use crate::figures::{linspace, Figure, FigureOpts, Series};
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{simulate_scheme, Scheme};
+use crate::sim::simulate_policy;
 use crate::Result;
 
 /// Generate Fig. 8.
@@ -18,11 +19,12 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
 
     let mut uniform = Vec::with_capacity(rates.len());
     for &rate in &rates {
-        let r =
-            simulate_scheme(&spec, Scheme::UniformRate(rate), LatencyModel::A, &cfg)?;
+        let p = policy::resolve(&format!("uniform-rate={rate}"))?;
+        let r = simulate_policy(&spec, &*p, LatencyModel::A, &cfg)?;
         uniform.push((rate, r.mean));
     }
-    let prop = simulate_scheme(&spec, Scheme::Proposed, LatencyModel::A, &cfg)?;
+    let prop =
+        simulate_policy(&spec, &*policy::resolve("proposed")?, LatencyModel::A, &cfg)?;
     let proposed_line: Vec<(f64, f64)> =
         rates.iter().map(|&rt| (rt, prop.mean)).collect();
     let bound_line: Vec<(f64, f64)> =

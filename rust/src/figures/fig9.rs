@@ -5,10 +5,10 @@
 //! Both schemes achieve the lower bound `T*_b` (they coincide under group
 //! heterogeneity; see `allocation::reisizadeh`).
 
-use crate::allocation::optimal_latency_bound;
+use crate::allocation::{optimal_latency_bound, policy};
 use crate::figures::{Figure, FigureOpts, Series};
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{simulate_scheme, Scheme};
+use crate::sim::simulate_policy;
 use crate::Result;
 
 /// Generate Fig. 9.
@@ -17,6 +17,8 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
     let all_ns: [usize; 6] = [250, 500, 1000, 2000, 4000, 8000];
     let ns: Vec<usize> = all_ns.iter().copied().take(opts.points.max(4)).collect();
     let cfg = opts.sim_config();
+    let p_proposed = policy::resolve("proposed")?;
+    let p_reis = policy::resolve("reisizadeh")?;
 
     let mut proposed = vec![];
     let mut reisizadeh = vec![];
@@ -26,11 +28,11 @@ pub fn generate(opts: &FigureOpts) -> Result<Figure> {
         let x = spec.total_workers() as f64;
         proposed.push((
             x,
-            simulate_scheme(&spec, Scheme::Proposed, LatencyModel::B, &cfg)?.mean,
+            simulate_policy(&spec, &*p_proposed, LatencyModel::B, &cfg)?.mean,
         ));
         reisizadeh.push((
             x,
-            simulate_scheme(&spec, Scheme::Reisizadeh, LatencyModel::B, &cfg)?.mean,
+            simulate_policy(&spec, &*p_reis, LatencyModel::B, &cfg)?.mean,
         ));
         bound.push((x, optimal_latency_bound(LatencyModel::B, &spec)));
     }

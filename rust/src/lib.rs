@@ -3,7 +3,49 @@
 //! Production-quality reproduction of *"Optimal Load Allocation for Coded
 //! Distributed Computation in Heterogeneous Clusters"* (Kim, Park, Choi, 2019).
 //!
-//! The library implements, from scratch:
+//! ## The public API in two types
+//!
+//! Everything composes through two abstractions:
+//!
+//! - **[`allocation::Policy`]** — one load-allocation scheme (how many
+//!   coded rows each worker group gets). The central **registry**
+//!   ([`allocation::policy`]) is the single source of truth for policy
+//!   names: `allocation::policy::resolve("proposed")?` hands back a
+//!   `Box<dyn Policy>` that the simulator ([`sim::simulate_policy`]), the
+//!   queueing layer ([`workload::run_workload_policy`]), and the live
+//!   coordinator all accept. New schemes are one module + one registry
+//!   line.
+//! - **[`coordinator::Session`]** — one live serve. Policy × mode ×
+//!   scenario × adaptivity are orthogonal builder knobs; every serve
+//!   returns a unified [`coordinator::ServeOutcome`]:
+//!
+//! ```no_run
+//! use hetcoded::allocation::policy;
+//! use hetcoded::coding::Matrix;
+//! use hetcoded::coordinator::{Mode, Session};
+//! use hetcoded::model::ClusterSpec;
+//!
+//! let spec = ClusterSpec::paper_two_group(256);
+//! let a = Matrix::from_fn(256, 64, |i, j| ((i + j) as f64).sin());
+//! let requests: Vec<Vec<f64>> = vec![vec![1.0; 64]; 32];
+//! let outcome = Session::builder(&spec)
+//!     .policy(policy::resolve("proposed")?)
+//!     .data(a)
+//!     .requests(requests)
+//!     .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 8 })
+//!     .build()?
+//!     .serve()?;
+//! println!("{}", outcome.recorder.report());
+//! assert_eq!(outcome.encodes, 1); // prepared fast path: one encode per stream
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+//!
+//! The six pre-facade serving functions (`run_job`, `run_job_batched`,
+//! `serve_requests`, `serve_requests_pipelined`, `serve_arrivals`,
+//! `serve_arrivals_adaptive`) remain as `#[deprecated]` shims over
+//! `Session`, bit-identical under fixed seeds.
+//!
+//! ## Layer inventory
 //!
 //! - the **math substrate**: Lambert W (both real branches), harmonic numbers,
 //!   a deterministic xoshiro/SplitMix RNG, summary statistics ([`math`]);
@@ -12,7 +54,8 @@
 //! - every **load-allocation policy** evaluated by the paper: the proposed
 //!   optimum (Theorem 2), its model-B variant (Corollary 2), uniform / uncoded
 //!   allocation, the fixed-`r` group code of [33] (Theorem 4), and the scheme
-//!   of Reisizadeh et al. [32] (Appendix D) ([`allocation`]);
+//!   of Reisizadeh et al. [32] (Appendix D) ([`allocation`]), behind the
+//!   [`allocation::Policy`] trait + registry;
 //! - a real-valued systematic **MDS coding layer** (Vandermonde generator,
 //!   encoder, any-k decoder) with its own dense linear algebra ([`coding`]);
 //! - a **Monte-Carlo cluster simulator** reproducing Figs. 4–9 ([`sim`]);
@@ -26,17 +69,18 @@
 //!   [`runtime`]), scripted failure/drift scenarios
 //!   ([`coordinator::failures`]), and an online-estimating adaptive
 //!   re-allocation loop that re-slices encoded rows without re-encoding
-//!   ([`coordinator::adaptive`], [`model::estimator`]);
+//!   ([`coordinator::adaptive`], [`model::estimator`]) — all served
+//!   through [`coordinator::Session`];
 //! - the **figure harness** regenerating every plot in the paper
-//!   ([`figures`]).
+//!   ([`figures`]), resolving its policies through the registry.
 //!
 //! The PJRT/XLA execution path is gated behind the `xla` cargo feature
 //! (off by default) so the analytical and simulation layers build and test
 //! without the native `xla_extension` library; the `NativeCompute` backend
 //! always works.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory (and its "Public API map")
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod allocation;
 pub mod bench;

@@ -2,33 +2,33 @@
 //!
 //! Subcommands:
 //!
-//! - `allocate` — print the allocation every policy produces for a cluster;
-//! - `simulate` — Monte-Carlo latency of one scheme on a cluster;
+//! - `allocate` — print the allocation every registered policy produces;
+//! - `simulate` — Monte-Carlo latency of one policy on a cluster;
 //! - `workload` — throughput/utilization/sojourn under sustained traffic;
 //! - `figures`  — regenerate paper figures (CSV + ASCII);
 //! - `run`      — live coded matvec over the coordinator (native or PJRT);
 //! - `help`     — this text.
+//!
+//! Every policy name is resolved through the central registry
+//! ([`hetcoded::allocation::policy`]); every live serving shape goes
+//! through the [`Session`] facade. Unknown flags are rejected with a
+//! did-you-mean hint ([`Args::reject_unknown`]).
 
-use hetcoded::allocation::{
-    group_code_allocation, proposed_allocation, reisizadeh_allocation,
-    uncoded_allocation, uniform_allocation,
-};
+use hetcoded::allocation::policy::{self, Policy, PolicyEntry};
 use hetcoded::cli::Args;
 use hetcoded::coding::Matrix;
 use hetcoded::coordinator::{
-    serve_arrivals_adaptive, serve_requests, serve_requests_pipelined,
-    AdaptiveServeConfig, Compute, FailureScenario, JobConfig, NativeCompute,
-    ServeReport,
+    AdaptiveServeConfig, Compute, FailureScenario, JobConfig, Mode,
+    NativeCompute, Session,
 };
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, EstimatorConfig, LatencyModel};
-
-use hetcoded::sim::{simulate_scheme, Scheme, SimConfig};
+use hetcoded::sim::{simulate_policy, Scheme, SimConfig};
 use hetcoded::workload::{
-    mean_service, run_workload, run_workload_drift, service_sampler,
-    AdaptPolicy, ArrivalProcess, DriftSchedule, DriftWorkloadConfig,
-    WorkloadConfig,
+    mean_service, run_workload_drift, run_workload_policy, service_sampler,
+    service_sampler_for, AdaptPolicy, ArrivalProcess, DriftSchedule,
+    DriftWorkloadConfig, WorkloadConfig,
 };
 use hetcoded::{Error, Result};
 use std::sync::Arc;
@@ -51,15 +51,89 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Flags accepted by each subcommand (used by [`Args::reject_unknown`] so
+/// a typo like `--max-bath` fails loudly instead of running with the
+/// default). Keep in sync with the `help` text.
+const ALLOCATE_FLAGS: &[&str] = &[
+    "config", "paper", "n-total", "k", "q", "model", "rate", "group-r",
+    "analytic",
+];
+const SIMULATE_FLAGS: &[&str] = &[
+    "config", "paper", "n-total", "k", "q", "model", "scheme", "samples",
+    "seed", "threads", "rate", "group-r",
+];
+const WORKLOAD_FLAGS: &[&str] = &[
+    "config",
+    "paper",
+    "n-total",
+    "k",
+    "q",
+    "model",
+    "policies",
+    "rho",
+    "rates",
+    "arrivals",
+    "jobs",
+    "servers",
+    "seed",
+    "burst-on",
+    "burst-off",
+    "calib-samples",
+    "drift",
+    "drift-window",
+    "drift-min-obs",
+    "drift-threshold",
+    "drift-check-every",
+    "rate",
+    "group-r",
+];
+const FIGURES_FLAGS: &[&str] =
+    &["fig", "all", "samples", "points", "seed", "out", "threads", "quick"];
+const RUN_FLAGS: &[&str] = &[
+    "backend",
+    "config",
+    "model",
+    "k",
+    "d",
+    "requests",
+    "time-scale",
+    "seed",
+    "dead",
+    "mode",
+    "rate",
+    "max-batch",
+    "encode-threads",
+    "decode-cache",
+    "failures",
+    "drift",
+    "adaptive",
+    "policy",
+];
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
-        Some("allocate") => cmd_allocate(args),
-        Some("simulate") => cmd_simulate(args),
-        Some("workload") => cmd_workload(args),
-        Some("figures") => cmd_figures(args),
-        Some("run") => cmd_run(args),
+        Some("allocate") => {
+            args.reject_unknown("allocate", ALLOCATE_FLAGS)?;
+            cmd_allocate(args)
+        }
+        Some("simulate") => {
+            args.reject_unknown("simulate", SIMULATE_FLAGS)?;
+            cmd_simulate(args)
+        }
+        Some("workload") => {
+            args.reject_unknown("workload", WORKLOAD_FLAGS)?;
+            cmd_workload(args)
+        }
+        Some("figures") => {
+            args.reject_unknown("figures", FIGURES_FLAGS)?;
+            cmd_figures(args)
+        }
+        Some("run") => {
+            args.reject_unknown("run", RUN_FLAGS)?;
+            cmd_run(args)
+        }
         Some("help") | None => {
-            print!("{HELP}");
+            print!("{}", help_text());
             Ok(())
         }
         Some(other) => Err(Error::InvalidSpec(format!(
@@ -68,21 +142,34 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "\
+/// Compose the help text; the POLICIES section is generated from the
+/// registry so the list can never drift from the code.
+fn help_text() -> String {
+    let mut policies = String::new();
+    for e in policy::entries() {
+        let param = match &e.param {
+            Some(ps) => format!(" (param: --{} or {}=V, default {})", ps.flag, e.name, ps.default),
+            None => String::new(),
+        };
+        policies.push_str(&format!("    {:<14} {}{}\n", e.name, e.summary, param));
+    }
+    format!(
+        "\
 hetcoded — optimal load allocation for coded distributed computation
           (Kim, Park, Choi 2019 reproduction)
 
 USAGE: hetcoded <subcommand> [flags]
 
+POLICIES (the registry; any <policy> below, `name` or `name=param`)
+{policies}
 SUBCOMMANDS
   allocate  --config <toml> | --paper <fig2|fig4|fig8|fig9> [--n-total N] [--q Q]
-            Print every policy's allocation for the cluster.
-  simulate  --config <toml> | --paper <...> --scheme <name> [--samples S]
+            [--model a|b] [--rate R] [--group-r R] [--analytic]
+            Print every registered policy's allocation for the cluster.
+  simulate  --config <toml> | --paper <...> --scheme <policy> [--samples S]
             [--seed S] [--model a|b] [--rate R] [--group-r R] [--n-total N] [--q Q]
-            Monte-Carlo expected latency of one scheme.
-            Schemes: proposed, uncoded, uniform-nstar, uniform-rate,
-                     group-code, reisizadeh.
-  workload  [--config <toml> | --paper <...>] [--policies p1,p2,...]
+            Monte-Carlo expected latency of one policy.
+  workload  [--config <toml> | --paper <...>] [--policies p1,p2=V,...]
             [--rho 0.3,0.6,0.9 | --rates L1,L2,...] [--arrivals poisson|
             deterministic|onoff] [--jobs J] [--servers C] [--seed S]
             [--model a|b] [--burst-on T --burst-off T] [--k K] [--q Q]
@@ -106,23 +193,29 @@ SUBCOMMANDS
             [--out DIR] [--quick]
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
   run       [--backend native|xla] [--config <toml>] [--k K] [--d D]
-            [--requests R] [--time-scale T] [--seed S] [--dead i,j,...]
-            [--mode seq|pipelined|arrivals] [--rate R] [--max-batch B]
-            [--encode-threads T] [--decode-cache C]
+            [--policy <policy>] [--requests R] [--time-scale T] [--seed S]
+            [--dead i,j,...] [--mode seq|pipelined|batched|arrivals]
+            [--rate R] [--max-batch B] [--encode-threads T] [--decode-cache C]
             [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
-            Live coded matvec jobs over the thread coordinator. `--mode
-            arrivals` replays a Poisson trace (`--rate` arrivals/s) through
-            the prepared-job fast path: the matrix is encoded once and
-            queued requests are served in batches of <= --max-batch.
-            --decode-cache only applies to arrivals mode (seq/pipelined
-            draw a fresh generator per request, so factorizations cannot
-            recur across requests). --failures kills workers at a batch
-            index, --drift dilates group G by factor F at a batch index,
-            and --adaptive turns on the online estimator + re-allocation
-            loop (all three need --mode arrivals); re-allocation re-slices
-            the encoded rows, so `encode passes` stays 1 regardless.
+            Here --rate is the *arrivals* rate; parameterized policies
+            use the name=param form (e.g. --policy uniform-rate=0.5).
+            Live coded matvec jobs through the coordinator's Session
+            facade. `--mode arrivals` replays a Poisson trace (`--rate`
+            arrivals/s) through the prepared-job fast path: the matrix is
+            encoded once and queued requests are served in batches of
+            <= --max-batch; `--mode batched` serves all requests as one
+            coded batch. --decode-cache only applies to the prepared
+            modes (seq/pipelined draw a fresh generator per request, so
+            factorizations cannot recur across requests). --failures
+            kills workers at a batch index, --drift dilates group G by
+            factor F at a batch index, and --adaptive turns on the online
+            estimator + re-allocation loop (all three need --mode
+            arrivals); re-allocation re-slices the encoded rows, so
+            `encode passes` stays 1 regardless.
   help      This text.
-";
+"
+    )
+}
 
 fn load_spec(args: &Args) -> Result<ClusterSpec> {
     let n_total = args.get::<usize>("n-total", 2500)?;
@@ -154,6 +247,28 @@ fn parse_model(args: &Args) -> Result<LatencyModel> {
     }
 }
 
+/// Build one registry entry's policy, reading its parameter from the
+/// entry's CLI flag (`--rate`, `--group-r`) with the registry default.
+fn build_entry_policy(args: &Args, entry: &PolicyEntry) -> Result<Box<dyn Policy>> {
+    let param = match &entry.param {
+        Some(ps) => Some(args.get::<f64>(ps.flag, ps.default)?),
+        None => None,
+    };
+    entry.build(param)
+}
+
+/// Resolve a policy name through the central registry — the **only**
+/// name-to-policy translation in the CLI. Accepts `name` (parameter read
+/// from the policy's flag, e.g. `--rate` / `--group-r`) or `name=value`.
+fn resolve_policy_arg(args: &Args, spec_str: &str) -> Result<Box<dyn Policy>> {
+    if spec_str.contains('=') {
+        return policy::resolve(spec_str);
+    }
+    let entry = policy::entry(spec_str.trim())
+        .ok_or_else(|| policy::unknown_policy(spec_str.trim()))?;
+    build_entry_policy(args, entry)
+}
+
 fn cmd_allocate(args: &Args) -> Result<()> {
     let spec = load_spec(args)?;
     let model = parse_model(args)?;
@@ -168,21 +283,6 @@ fn cmd_allocate(args: &Args) -> Result<()> {
         println!("  group {j}: N_j={} mu={} alpha={}", g.n, g.mu, g.alpha);
     }
     println!();
-    let mut rows: Vec<(String, Vec<f64>, f64, Option<f64>)> = Vec::new();
-    let p = proposed_allocation(model, &spec)?;
-    rows.push((p.policy.clone(), p.loads.clone(), p.n, p.latency_bound));
-    let u = uncoded_allocation(model, &spec)?;
-    rows.push((u.policy.clone(), u.loads.clone(), u.n, u.latency_bound));
-    if let Ok(un) = uniform_allocation(model, &spec, p.n) {
-        rows.push(("uniform(n*)".into(), un.loads.clone(), un.n, None));
-    }
-    let gr = args.get::<f64>("group-r", 100.0)?;
-    match group_code_allocation(model, &spec, gr) {
-        Ok(g) => rows.push((g.policy.clone(), g.loads.clone(), g.n, g.latency_bound)),
-        Err(e) => println!("group-code(r={gr}): {e}"),
-    }
-    let z = reisizadeh_allocation(model, &spec)?;
-    rows.push((z.policy.clone(), z.loads.clone(), z.n, z.latency_bound));
     // `--analytic` adds the CLT expected-latency estimate (no Monte Carlo).
     let analytic = args.switch("analytic");
     println!(
@@ -193,57 +293,54 @@ fn cmd_allocate(args: &Args) -> Result<()> {
         "bound",
         if analytic { "   E[T] (CLT)" } else { "" }
     );
-    for (name, loads, n, bound) in rows {
-        let loads_s: Vec<String> = loads.iter().map(|l| format!("{l:.2}")).collect();
-        let clt = if analytic {
-            match hetcoded::model::clt_expected_latency(&spec, &loads, model) {
-                Ok(t) => format!("   {t:>10.4e}"),
-                Err(_) => "            -".into(),
+    for entry in policy::entries() {
+        // Degrade per row: a bad parameter (or an unsolvable policy) costs
+        // one line, not the whole table.
+        let p = match build_entry_policy(args, entry) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("{:<22} {e}", entry.name);
+                continue;
             }
-        } else {
-            String::new()
         };
-        println!(
-            "{:<22} {:>10.1} {:>8.4}  {:>12}{}  [{}]",
-            name,
-            n,
-            k / n,
-            bound.map_or("-".into(), |b| format!("{b:.4e}")),
-            clt,
-            loads_s.join(", ")
-        );
+        match p.allocate(model, &spec) {
+            Ok(a) => {
+                let loads_s: Vec<String> =
+                    a.loads.iter().map(|l| format!("{l:.2}")).collect();
+                let clt = if analytic {
+                    match hetcoded::model::clt_expected_latency(&spec, &a.loads, model) {
+                        Ok(t) => format!("   {t:>10.4e}"),
+                        Err(_) => "            -".into(),
+                    }
+                } else {
+                    String::new()
+                };
+                println!(
+                    "{:<22} {:>10.1} {:>8.4}  {:>12}{}  [{}]",
+                    p.name(),
+                    a.n,
+                    k / a.n,
+                    a.latency_bound.map_or("-".into(), |b| format!("{b:.4e}")),
+                    clt,
+                    loads_s.join(", ")
+                );
+            }
+            Err(e) => println!("{:<22} {e}", p.name()),
+        }
     }
     Ok(())
-}
-
-/// Resolve a scheme by name; `--rate` / `--group-r` flags parameterize the
-/// uniform-rate and group-code schemes.
-fn parse_scheme_named(name: &str, args: &Args) -> Result<Scheme> {
-    match name {
-        "proposed" => Ok(Scheme::Proposed),
-        "uncoded" => Ok(Scheme::Uncoded),
-        "uniform-nstar" => Ok(Scheme::UniformWithOptimalN),
-        "uniform-rate" => Ok(Scheme::UniformRate(args.get::<f64>("rate", 0.5)?)),
-        "group-code" => Ok(Scheme::GroupCode(args.get::<f64>("group-r", 100.0)?)),
-        "reisizadeh" => Ok(Scheme::Reisizadeh),
-        other => Err(Error::InvalidSpec(format!("unknown scheme `{other}`"))),
-    }
-}
-
-fn parse_scheme(args: &Args) -> Result<Scheme> {
-    parse_scheme_named(args.flag("scheme").unwrap_or("proposed"), args)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let spec = load_spec(args)?;
     let model = parse_model(args)?;
-    let scheme = parse_scheme(args)?;
+    let p = resolve_policy_arg(args, args.flag("scheme").unwrap_or("proposed"))?;
     let cfg = SimConfig {
         samples: args.get::<usize>("samples", 10_000)?,
         seed: args.get::<u64>("seed", 2019)?,
         threads: args.get::<usize>("threads", 0)?,
     };
-    let r = simulate_scheme(&spec, scheme, model, &cfg)?;
+    let r = simulate_policy(&spec, &*p, model, &cfg)?;
     println!(
         "scheme={} model={model:?} N={} k={}",
         r.scheme,
@@ -282,11 +379,11 @@ fn cmd_workload(args: &Args) -> Result<()> {
     if let Some(drift) = args.flag("drift") {
         return cmd_workload_drift(args, &spec, model, drift, jobs, seed, calib);
     }
-    let policies = args.get_list::<String>(
+    let policy_specs = args.get_list::<String>(
         "policies",
         &["proposed".to_string(), "uniform-nstar".to_string()],
     )?;
-    if policies.is_empty() {
+    if policy_specs.is_empty() {
         return Err(Error::InvalidSpec("--policies list is empty".into()));
     }
     let rhos = args.get_list::<f64>("rho", &[0.3, 0.6, 0.9])?;
@@ -301,11 +398,13 @@ fn cmd_workload(args: &Args) -> Result<()> {
 
     // Calibrate each policy's mean service time once; E[S] converts
     // offered-load fractions into absolute rates and sizes burst windows.
-    let mut calibrated: Vec<(Scheme, f64)> = Vec::with_capacity(policies.len());
-    for pname in &policies {
-        let scheme = parse_scheme_named(pname, args)?;
-        let (_, mut sampler) = service_sampler(&spec, scheme, model)?;
-        calibrated.push((scheme, mean_service(&mut sampler, calib, seed ^ 0xCA11B)));
+    let mut calibrated: Vec<(Box<dyn Policy>, f64)> =
+        Vec::with_capacity(policy_specs.len());
+    for pname in &policy_specs {
+        let p = resolve_policy_arg(args, pname)?;
+        let (_, mut sampler) = service_sampler_for(&spec, &*p, model)?;
+        let es = mean_service(&mut sampler, calib, seed ^ 0xCA11B);
+        calibrated.push((p, es));
     }
     // ON/OFF burst windows must be identical across policies for the table
     // to be a fair same-traffic comparison, so the default (~20 service
@@ -330,7 +429,8 @@ fn cmd_workload(args: &Args) -> Result<()> {
         "policy", "rate", "rho", "thruput", "util", "E[S]", "p50", "p95",
         "p99", "maxQ"
     );
-    for &(scheme, es) in &calibrated {
+    for (p, es) in &calibrated {
+        let es = *es;
         let rates: Vec<f64> = match &abs_rates {
             Some(rs) => rs.clone(),
             None => rhos.iter().map(|r| r / es).collect(),
@@ -353,7 +453,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
                 }
             };
             let wcfg = WorkloadConfig { arrivals, jobs, servers, seed };
-            let rep = run_workload(&spec, scheme, model, &wcfg)?;
+            let rep = run_workload_policy(&spec, &**p, model, &wcfg)?;
             println!(
                 "{:<22} {:>9.4} {:>6.2}  {:>9.4} {:>6.3} {:>10.4e} {:>10.4e} \
                  {:>10.4e} {:>10.4e} {:>7}",
@@ -578,7 +678,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         )?
     };
     let model = parse_model(args)?;
-    let alloc = proposed_allocation(model, &spec)?;
+    // Any registered policy can drive the live path (default: proposed).
+    // `run` accepts only the `name=value` parameter form: its own `--rate`
+    // flag is the *arrivals* rate, so the registry's per-policy flags
+    // (`--rate`, `--group-r`) must not be read here.
+    let live_policy = policy::resolve(args.flag("policy").unwrap_or("proposed"))?;
+    let alloc = live_policy.allocate(model, &spec)?;
     let mut cfg = JobConfig {
         model,
         time_scale: args.get::<f64>("time-scale", 0.02)?,
@@ -611,82 +716,79 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => return Err(Error::InvalidSpec(format!("unknown backend `{other}`"))),
     };
 
-    let mode = args.flag("mode").unwrap_or("seq").to_string();
+    let mode_name = args.flag("mode").unwrap_or("seq").to_string();
     let scenario =
         FailureScenario::parse(args.flag("failures"), args.flag("drift"))?;
+    let scenario_events = scenario.events().len();
     let adaptive = args.switch("adaptive");
-    if (!scenario.is_empty() || adaptive) && mode != "arrivals" {
+    if (!scenario.is_empty() || adaptive) && mode_name != "arrivals" {
         return Err(Error::InvalidSpec(
             "--failures/--drift/--adaptive need --mode arrivals (the \
              prepared serving stream)"
                 .into(),
         ));
     }
-    println!(
-        "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
-         mode={mode} n={} (rate {:.3})",
-        spec.total_workers(),
-        spec.num_groups(),
-        alloc.integer_n(&spec),
-        spec.k as f64 / alloc.integer_n(&spec) as f64,
-    );
-    let report: ServeReport = match mode.as_str() {
-        "seq" => serve_requests(&spec, &alloc, &a, &reqs, compute, &cfg)?,
-        "pipelined" => {
-            serve_requests_pipelined(&spec, &alloc, &a, &reqs, compute, &cfg)?
-        }
-        "arrivals" => {
-            // Poisson trace replayed through the prepared-job fast path:
-            // encode once, then batch-serve whatever has queued up.
-            let rate = args.get::<f64>("rate", 50.0)?;
-            let max_batch = args.get::<usize>("max-batch", 8)?;
-            let mut arrival_rng = Rng::new(seed ^ 0xA221);
-            let offsets: Vec<std::time::Duration> =
-                ArrivalProcess::Poisson { rate }
-                    .times(requests, &mut arrival_rng)?
-                    .into_iter()
-                    .map(std::time::Duration::from_secs_f64)
-                    .collect();
-            let adapt_cfg = adaptive.then(AdaptiveServeConfig::default);
-            let rep = serve_arrivals_adaptive(
-                &spec,
-                &alloc,
-                &a,
-                &reqs,
-                &offsets,
-                max_batch,
-                compute,
-                &cfg,
-                &scenario,
-                adapt_cfg.as_ref(),
-            )?;
-            if adaptive || !scenario.is_empty() {
-                println!(
-                    "scenario events {}  reallocations {}  \
-                     post-setup encodes {}  suspected dead {:?}",
-                    scenario.events().len(),
-                    rep.reallocations,
-                    rep.post_setup_encodes,
-                    rep.suspected_dead,
-                );
-            }
-            rep.serve
-        }
+    let mode = match mode_name.as_str() {
+        "seq" => Mode::Sequential,
+        "pipelined" => Mode::Pipelined,
+        "batched" => Mode::Batched,
+        "arrivals" => Mode::PoissonArrivals {
+            rate: args.get::<f64>("rate", 50.0)?,
+            max_batch: args.get::<usize>("max-batch", 8)?,
+        },
         other => {
             return Err(Error::InvalidSpec(format!("unknown --mode `{other}`")))
         }
     };
-    println!("{}", report.recorder.report());
-    println!("worst decode error vs direct A·x: {:.3e}", report.worst_error);
-    match report.makespan {
-        Some(makespan) => println!(
-            "makespan {:.1} ms, encode passes {}",
-            makespan.as_secs_f64() * 1e3,
-            report.encodes
-        ),
-        None => println!("encode passes {}", report.encodes),
+    println!(
+        "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
+         mode={mode_name} policy={} n={} (rate {:.3})",
+        spec.total_workers(),
+        spec.num_groups(),
+        live_policy.name(),
+        alloc.integer_n(&spec),
+        spec.k as f64 / alloc.integer_n(&spec) as f64,
+    );
+    // Attach the *policy object* (not the pre-solved allocation): adaptive
+    // re-solves must go through this policy's `allocate_capped`, not the
+    // proposed fallback. The header above used the same deterministic
+    // solve, so nothing diverges.
+    let mut builder = Session::builder(&spec)
+        .policy(live_policy)
+        .data(a)
+        .requests(reqs)
+        .config(cfg)
+        .compute(compute)
+        .scenario(scenario)
+        .mode(mode);
+    if adaptive {
+        builder = builder.adaptive(AdaptiveServeConfig::default());
     }
-    for (i, j) in report.jobs.iter().enumerate() {
+    let outcome = builder.build()?.serve()?;
+    if adaptive || scenario_events > 0 {
+        println!(
+            "scenario events {scenario_events}  reallocations {}  \
+             post-setup encodes {}  suspected dead {:?}",
+            outcome.reallocations,
+            outcome.post_setup_encodes,
+            outcome.suspected_dead,
+        );
+    }
+    println!("{}", outcome.recorder.report());
+    println!("worst decode error vs direct A·x: {:.3e}", outcome.worst_error);
+    match outcome.makespan {
+        Some(makespan) => println!(
+            "makespan {:.1} ms, encode passes {}, rechunks {}, \
+             decode cache {}h/{}m",
+            makespan.as_secs_f64() * 1e3,
+            outcome.encodes,
+            outcome.rechunks,
+            outcome.decode_cache_hits,
+            outcome.decode_cache_misses,
+        ),
+        None => println!("encode passes {}", outcome.encodes),
+    }
+    for (i, j) in outcome.jobs.iter().enumerate() {
         println!(
             "  req {i}: wall {:.1}ms model {:.4} workers {} rows {}",
             j.wall_latency.as_secs_f64() * 1e3,

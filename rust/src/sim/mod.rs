@@ -14,4 +14,6 @@ pub use montecarlo::{
     latency_any_k, latency_any_k_detailed, latency_per_group, monte_carlo,
     monte_carlo_scratch, AnyKSampler, GroupMaxSampler, SimConfig,
 };
-pub use schemes::{scheme_allocation, simulate_scheme, Scheme, SchemeResult};
+pub use schemes::{
+    scheme_allocation, simulate_policy, simulate_scheme, Scheme, SchemeResult,
+};

@@ -1,14 +1,25 @@
 //! Wiring of allocation policies into the Monte-Carlo engine.
+//!
+//! The engine is policy-agnostic: it needs an [`Allocation`], a
+//! [`DecodeRule`] to pick the order-statistic sampler, and a display name —
+//! exactly the [`Policy`] trait. [`simulate_policy`] is the primary entry
+//! point; the [`Scheme`] enum survives as a `Copy` convenience for code
+//! that enumerates the paper's evaluation set, and delegates everything to
+//! its [`Policy`] object.
 
 use crate::allocation::{
-    group_code_allocation, proposed_allocation, reisizadeh_allocation,
-    uncoded_allocation, uniform_allocation, Allocation,
+    Allocation, DecodeRule, GroupCodePolicy, Policy, ProposedPolicy,
+    ReisizadehPolicy, UncodedPolicy, UniformOptimalNPolicy, UniformRatePolicy,
 };
 use crate::model::{ClusterSpec, LatencyModel};
 use crate::sim::{latency_any_k, latency_per_group, SimConfig};
 use crate::Result;
 
-/// A named end-to-end scheme from the paper's evaluation.
+/// A named end-to-end scheme from the paper's evaluation — the `Copy`
+/// value-type view of the policy set. Each variant denotes one
+/// [`Policy`] object ([`Scheme::policy`]); new policies beyond the paper's
+/// evaluation set need **no** variant here — implement [`Policy`] and add
+/// a registry line ([`crate::allocation::policy::REGISTRY`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Scheme {
     /// Proposed allocation (Theorem 2 / Corollary 2) with its `(n*, k)` code.
@@ -26,16 +37,24 @@ pub enum Scheme {
 }
 
 impl Scheme {
-    /// Stable display name used in figures and CSV output.
-    pub fn name(&self) -> String {
-        match self {
-            Scheme::Proposed => "proposed".into(),
-            Scheme::Uncoded => "uncoded".into(),
-            Scheme::UniformWithOptimalN => "uniform-n*".into(),
-            Scheme::UniformRate(r) => format!("uniform-rate-{r:.3}"),
-            Scheme::GroupCode(r) => format!("group-code-r{r:.0}"),
-            Scheme::Reisizadeh => "reisizadeh".into(),
+    /// The [`Policy`] object this scheme denotes. Parameter validation
+    /// happens when the policy allocates (invalid rates/`r` surface as
+    /// `InvalidSpec`), matching the registry-built objects exactly.
+    pub fn policy(&self) -> Box<dyn Policy> {
+        match *self {
+            Scheme::Proposed => Box::new(ProposedPolicy),
+            Scheme::Uncoded => Box::new(UncodedPolicy),
+            Scheme::UniformWithOptimalN => Box::new(UniformOptimalNPolicy),
+            Scheme::UniformRate(rate) => Box::new(UniformRatePolicy { rate }),
+            Scheme::GroupCode(r) => Box::new(GroupCodePolicy { r }),
+            Scheme::Reisizadeh => Box::new(ReisizadehPolicy),
         }
+    }
+
+    /// Stable display name used in figures and CSV output (delegates to
+    /// [`Policy::name`]).
+    pub fn name(&self) -> String {
+        self.policy().name()
     }
 }
 
@@ -64,50 +83,48 @@ pub fn scheme_allocation(
     scheme: Scheme,
     model: LatencyModel,
 ) -> Result<Allocation> {
-    let k = spec.k as f64;
-    match scheme {
-        Scheme::Proposed => proposed_allocation(model, spec),
-        Scheme::Uncoded => uncoded_allocation(model, spec),
-        Scheme::UniformWithOptimalN => {
-            let opt = proposed_allocation(model, spec)?;
-            uniform_allocation(model, spec, opt.n)
-        }
-        Scheme::UniformRate(rate) => uniform_allocation(model, spec, k / rate),
-        Scheme::GroupCode(r) => group_code_allocation(model, spec, r),
-        Scheme::Reisizadeh => reisizadeh_allocation(model, spec),
-    }
+    scheme.policy().allocate(model, spec)
 }
 
-/// Simulate `scheme` on `spec` under `model`.
-pub fn simulate_scheme(
+/// Simulate any [`Policy`] on `spec` under `model`: allocate, pick the
+/// order-statistic sampler from the policy's [`DecodeRule`], and run the
+/// Monte-Carlo engine. This is how `simulate --scheme` and the figure
+/// harness evaluate registry-resolved policies.
+pub fn simulate_policy(
     spec: &ClusterSpec,
-    scheme: Scheme,
+    policy: &dyn Policy,
     model: LatencyModel,
     cfg: &SimConfig,
 ) -> Result<SchemeResult> {
     let k = spec.k as f64;
-    let a = scheme_allocation(spec, scheme, model)?;
-    let s = match scheme {
-        Scheme::GroupCode(_) => {
-            latency_per_group(spec, &a.loads, &a.r, model, cfg)?
-        }
-        _ => latency_any_k(spec, &a.loads, model, cfg)?,
+    let a = policy.allocate(model, spec)?;
+    let s = match policy.decode_rule() {
+        DecodeRule::PerGroup => latency_per_group(spec, &a.loads, &a.r, model, cfg)?,
+        DecodeRule::AnyK => latency_any_k(spec, &a.loads, model, cfg)?,
     };
     // Only the policies for which the paper derives a latency expression
     // report a bound (`T*` for the proposed optimum, `1/r` for the group
     // code); the rest are simulation-only baselines.
-    let bound = match scheme {
-        Scheme::Proposed | Scheme::GroupCode(_) => a.latency_bound,
-        _ => None,
-    };
+    let bound = if policy.reports_bound() { a.latency_bound } else { None };
     Ok(SchemeResult {
-        scheme: scheme.name(),
+        scheme: policy.name(),
         mean: s.mean(),
         stderr: s.stderr(),
         bound,
         rate: k / a.n,
         n: a.n,
     })
+}
+
+/// Simulate `scheme` on `spec` under `model` ([`simulate_policy`] over the
+/// scheme's [`Policy`] object).
+pub fn simulate_scheme(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+    cfg: &SimConfig,
+) -> Result<SchemeResult> {
+    simulate_policy(spec, &*scheme.policy(), model, cfg)
 }
 
 #[cfg(test)]
@@ -195,5 +212,28 @@ mod tests {
             .unwrap();
         assert!(mid.mean < lo.mean, "mid {} !< lo {}", mid.mean, lo.mean);
         assert!(mid.mean < hi.mean, "mid {} !< hi {}", mid.mean, hi.mean);
+    }
+
+    #[test]
+    fn scheme_and_registry_policies_agree() {
+        // The Scheme enum and the registry must denote the same objects:
+        // identical names and identical allocations.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let pairs: [(Scheme, &str); 6] = [
+            (Scheme::Proposed, "proposed"),
+            (Scheme::Uncoded, "uncoded"),
+            (Scheme::UniformWithOptimalN, "uniform-nstar"),
+            (Scheme::UniformRate(0.5), "uniform-rate=0.5"),
+            (Scheme::GroupCode(100.0), "group-code=100"),
+            (Scheme::Reisizadeh, "reisizadeh"),
+        ];
+        for (scheme, spec_str) in pairs {
+            let reg = crate::allocation::policy::resolve(spec_str).unwrap();
+            assert_eq!(scheme.name(), reg.name(), "{spec_str}");
+            let a = scheme_allocation(&spec, scheme, LatencyModel::A).unwrap();
+            let b = reg.allocate(LatencyModel::A, &spec).unwrap();
+            assert_eq!(a.loads, b.loads, "{spec_str}");
+            assert_eq!(a.n, b.n, "{spec_str}");
+        }
     }
 }

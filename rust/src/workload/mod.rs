@@ -74,8 +74,10 @@ pub use drift::{
     DriftSchedule, DriftWorkloadConfig, Realloc,
 };
 pub use queue::{
-    run_workload, simulate_queue, QueueTrace, WorkloadConfig, WorkloadReport,
+    run_workload, run_workload_policy, simulate_queue, QueueTrace,
+    WorkloadConfig, WorkloadReport,
 };
 pub use service::{
-    mean_service, saturation_rate, service_sampler, ServiceSampler,
+    mean_service, saturation_rate, service_sampler, service_sampler_for,
+    ServiceSampler,
 };

@@ -12,11 +12,12 @@
 //! the simulation is a single O(n · servers) pass — no event heap — and is
 //! bit-reproducible from a seed.
 
+use crate::allocation::Policy;
 use crate::math::{Rng, Summary};
 use crate::model::{ClusterSpec, LatencyModel};
 use crate::sim::Scheme;
 use crate::workload::arrivals::ArrivalProcess;
-use crate::workload::service::{service_sampler, ServiceSampler};
+use crate::workload::service::{service_sampler_for, ServiceSampler};
 use crate::{Error, Result};
 
 /// Configuration of one throughput-under-load run.
@@ -217,19 +218,20 @@ impl WorkloadReport {
     }
 }
 
-/// Run one complete throughput-under-load experiment: generate arrivals,
-/// build `scheme`'s service sampler on `spec`, run the queue, and
-/// summarize. Bit-reproducible from `cfg.seed`.
-pub fn run_workload(
+/// Run one complete throughput-under-load experiment for any [`Policy`]:
+/// generate arrivals, build the policy's service sampler on `spec`, run
+/// the queue, and summarize. Bit-reproducible from `cfg.seed`. This is the
+/// entry point `workload --policies` uses for registry-resolved policies.
+pub fn run_workload_policy(
     spec: &ClusterSpec,
-    scheme: Scheme,
+    policy: &dyn Policy,
     model: LatencyModel,
     cfg: &WorkloadConfig,
 ) -> Result<WorkloadReport> {
     if cfg.jobs == 0 {
         return Err(Error::InvalidSpec("workload needs at least one job".into()));
     }
-    let (_, mut sampler) = service_sampler(spec, scheme, model)?;
+    let (_, mut sampler) = service_sampler_for(spec, policy, model)?;
     let mut root = Rng::new(cfg.seed);
     let mut arrival_rng = root.split();
     let mut service_rng = root.split();
@@ -237,17 +239,28 @@ pub fn run_workload(
     let trace =
         simulate_queue(&arrivals, &mut sampler, cfg.servers, &mut service_rng)?;
     Ok(WorkloadReport::from_trace(
-        scheme.name(),
+        policy.name(),
         &cfg.arrivals,
         cfg.servers,
         &trace,
     ))
 }
 
+/// [`run_workload_policy`] over a [`Scheme`]'s policy object.
+pub fn run_workload(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+    cfg: &WorkloadConfig,
+) -> Result<WorkloadReport> {
+    run_workload_policy(spec, &*scheme.policy(), model, cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{order_stats, Group};
+    use crate::workload::service::service_sampler;
 
     fn cfg(rate: f64, jobs: usize) -> WorkloadConfig {
         WorkloadConfig {

@@ -7,10 +7,10 @@
 //! samplers here are the simulator's [`AnyKSampler`] / [`GroupMaxSampler`]
 //! wrapped per policy: one draw = one job's service time.
 
-use crate::allocation::Allocation;
+use crate::allocation::{Allocation, DecodeRule, Policy};
 use crate::math::Rng;
 use crate::model::{ClusterSpec, LatencyModel};
-use crate::sim::{scheme_allocation, AnyKSampler, GroupMaxSampler, Scheme};
+use crate::sim::{AnyKSampler, GroupMaxSampler, Scheme};
 use crate::Result;
 
 /// A policy-specific sampler of i.i.d. single-job service times.
@@ -34,24 +34,38 @@ impl ServiceSampler {
     }
 }
 
-/// Build `scheme`'s allocation on `spec` together with its service-time
-/// sampler.
-pub fn service_sampler(
+/// Build any [`Policy`]'s allocation on `spec` together with its
+/// service-time sampler — the sampler family follows the policy's
+/// [`DecodeRule`], so registry-resolved policies plug straight into the
+/// queueing layer.
+pub fn service_sampler_for(
     spec: &ClusterSpec,
-    scheme: Scheme,
+    policy: &dyn Policy,
     model: LatencyModel,
 ) -> Result<(Allocation, ServiceSampler)> {
-    let alloc = scheme_allocation(spec, scheme, model)?;
-    let sampler = match scheme {
-        Scheme::GroupCode(_) => ServiceSampler::GroupMax(GroupMaxSampler::new(
+    let alloc = policy.allocate(model, spec)?;
+    let sampler = match policy.decode_rule() {
+        DecodeRule::PerGroup => ServiceSampler::GroupMax(GroupMaxSampler::new(
             spec,
             &alloc.loads,
             &alloc.r,
             model,
         )?),
-        _ => ServiceSampler::AnyK(AnyKSampler::new(spec, &alloc.loads, model)?),
+        DecodeRule::AnyK => {
+            ServiceSampler::AnyK(AnyKSampler::new(spec, &alloc.loads, model)?)
+        }
     };
     Ok((alloc, sampler))
+}
+
+/// Build `scheme`'s allocation on `spec` together with its service-time
+/// sampler ([`service_sampler_for`] over the scheme's [`Policy`] object).
+pub fn service_sampler(
+    spec: &ClusterSpec,
+    scheme: Scheme,
+    model: LatencyModel,
+) -> Result<(Allocation, ServiceSampler)> {
+    service_sampler_for(spec, &*scheme.policy(), model)
 }
 
 /// Estimate the mean service time `E[S]` with `samples` deterministic

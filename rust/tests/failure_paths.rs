@@ -1,6 +1,11 @@
 //! Failure-path integration tests: dead workers on the prepared serving
 //! path, clean sub-`k` failures (no hangs), and the live adaptive loop
 //! re-allocating under scripted scenarios without ever re-encoding.
+//!
+//! Exercises the deprecated `serve_arrivals_adaptive` shim on purpose: it
+//! must keep reproducing its historical behaviour through the `Session`
+//! facade (see also `session_parity.rs` for bit-identity).
+#![allow(deprecated)]
 
 use hetcoded::allocation::uniform_allocation;
 use hetcoded::coding::Matrix;

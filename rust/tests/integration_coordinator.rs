@@ -1,5 +1,10 @@
 //! Integration tests: the full coordinator over both compute backends,
 //! including failure injection and batched serving.
+//!
+//! Exercises the deprecated free-function shims on purpose: they must
+//! keep reproducing their historical behaviour through the `Session`
+//! facade (see also `session_parity.rs` for bit-identity).
+#![allow(deprecated)]
 
 use hetcoded::allocation::{proposed_allocation, uniform_allocation};
 use hetcoded::coding::Matrix;
@@ -104,7 +109,8 @@ fn serving_loop_has_stable_percentiles() {
     assert_eq!(report.recorder.count(), 12);
     assert!(report.worst_error < 1e-8);
     assert!(report.recorder.percentile(95.0) >= report.recorder.percentile(50.0));
-    assert!(report.recorder.rows_per_second() > 0.0);
+    assert!(report.recorder.rows_per_cpu_second() > 0.0);
+    assert!(report.recorder.rows_per_wall_second() > 0.0);
 }
 
 #[cfg(feature = "xla")]

@@ -1,6 +1,11 @@
 //! Integration tests: the workload layer end-to-end — policy sweep over
 //! arrival rates on the paper's 2-group cluster (the `workload` CLI
 //! scenario), plus the live batched serving loop on the thread coordinator.
+//!
+//! Exercises the deprecated `serve_arrivals` shim on purpose: it must
+//! keep reproducing its historical behaviour through the `Session`
+//! facade (see also `session_parity.rs` for bit-identity).
+#![allow(deprecated)]
 
 use hetcoded::allocation::uniform_allocation;
 use hetcoded::coding::Matrix;

@@ -8,6 +8,11 @@
 //!   per-job decode on real encoded data;
 //! - the cached repeated-pattern decode is at least 2× faster than
 //!   refactorizing (the §Perf acceptance floor; the real ratio is ~k/3).
+//!
+//! Exercises the deprecated free-function shims on purpose: they must
+//! keep reproducing their historical behaviour through the `Session`
+//! facade (see also `session_parity.rs` for bit-identity).
+#![allow(deprecated)]
 
 use hetcoded::allocation::uniform_allocation;
 use hetcoded::coding::{Decoder, Generator, GeneratorKind, Matrix};

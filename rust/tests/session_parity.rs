@@ -1,0 +1,408 @@
+//! API-parity tests for the `Session` redesign (ISSUE 4 acceptance):
+//!
+//! - each deprecated free-function shim (`run_job`, `run_job_batched`,
+//!   `serve_requests`, `serve_requests_pipelined`, `serve_arrivals`,
+//!   `serve_arrivals_adaptive`) produces **bit-identical** deterministic
+//!   outputs to the equivalent `Session` configuration under a fixed
+//!   seed — decoded vectors compared exactly, plus worker usage, row
+//!   counts, model latencies, and the adaptation trace (wall-clock
+//!   durations are the only fields excluded: they are real time);
+//! - every policy name the CLI accepts resolves through the registry to
+//!   exactly one `Policy`.
+#![allow(deprecated)]
+
+use hetcoded::allocation::{policy, uniform_allocation, Allocation, Policy};
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{
+    run_job, run_job_batched, serve_arrivals, serve_arrivals_adaptive,
+    serve_requests, serve_requests_pipelined, AdaptiveServeConfig,
+    FailureEvent, FailureKind, FailureScenario, JobConfig, JobReport, Mode,
+    NativeCompute, ServeOutcome, Session,
+};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, EstimatorConfig, Group, LatencyModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_spec() -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap()
+}
+
+fn redundant_alloc(spec: &ClusterSpec) -> Allocation {
+    uniform_allocation(LatencyModel::A, spec, 128.0).unwrap()
+}
+
+fn data(jobs: usize, seed: u64) -> (Matrix, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+    let reqs = (0..jobs)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    (a, reqs)
+}
+
+fn fast_cfg(seed: u64) -> JobConfig {
+    JobConfig { time_scale: 0.002, seed, ..Default::default() }
+}
+
+/// The deterministic projection of a job report (everything except the
+/// wall clock).
+fn job_key(j: &JobReport) -> (Vec<f64>, Option<f64>, usize, usize, usize) {
+    (
+        j.decoded.clone(),
+        j.model_latency,
+        j.workers_used,
+        j.rows_collected,
+        j.n,
+    )
+}
+
+fn assert_jobs_identical(a: &[JobReport], b: &[JobReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: job count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(job_key(x), job_key(y), "{what}: job {i} diverged");
+        // max_error is either bit-equal or both NaN.
+        assert!(
+            x.max_error == y.max_error
+                || (x.max_error.is_nan() && y.max_error.is_nan()),
+            "{what}: job {i} max_error {} vs {}",
+            x.max_error,
+            y.max_error
+        );
+    }
+}
+
+fn session(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    reqs: &[Vec<f64>],
+    cfg: &JobConfig,
+    mode: Mode,
+) -> ServeOutcome {
+    Session::builder(spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(reqs.to_vec())
+        .config(cfg.clone())
+        .compute(Arc::new(NativeCompute))
+        .mode(mode)
+        .build()
+        .unwrap()
+        .serve()
+        .unwrap()
+}
+
+#[test]
+fn run_job_shim_matches_single_mode_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(1, 1001);
+    let cfg = fast_cfg(0xD00D);
+    let shim = run_job(
+        &spec,
+        &alloc,
+        &a,
+        &reqs[0],
+        Arc::new(NativeCompute),
+        &cfg,
+    )
+    .unwrap();
+    let outcome = session(&spec, &alloc, &a, &reqs, &cfg, Mode::Single);
+    assert_jobs_identical(&[shim], &outcome.jobs, "run_job");
+    assert_eq!(outcome.encodes, 1);
+}
+
+#[test]
+fn run_job_batched_shim_matches_batched_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(5, 1002);
+    let cfg = fast_cfg(0xBA7C);
+    let shim = run_job_batched(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        Arc::new(NativeCompute),
+        &cfg,
+    )
+    .unwrap();
+    let outcome = session(&spec, &alloc, &a, &reqs, &cfg, Mode::Batched);
+    assert_jobs_identical(&shim, &outcome.jobs, "run_job_batched");
+    assert_eq!(outcome.encodes, 1);
+    // One batch, one straggle realization: every request shares it.
+    assert!(outcome
+        .jobs
+        .windows(2)
+        .all(|w| w[0].workers_used == w[1].workers_used));
+}
+
+#[test]
+fn serve_requests_shim_matches_sequential_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(6, 1003);
+    let cfg = fast_cfg(0x5E9);
+    let shim = serve_requests(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        Arc::new(NativeCompute),
+        &cfg,
+    )
+    .unwrap();
+    let outcome = session(&spec, &alloc, &a, &reqs, &cfg, Mode::Sequential);
+    assert_jobs_identical(&shim.jobs, &outcome.jobs, "serve_requests");
+    assert_eq!(shim.encodes, outcome.encodes);
+    assert_eq!(shim.worst_error, outcome.worst_error);
+    // Documented legacy shape: no makespan on the sequential report; the
+    // unified outcome always has one.
+    assert!(shim.makespan.is_none());
+    assert!(outcome.makespan.is_some());
+}
+
+#[test]
+fn serve_requests_pipelined_shim_matches_pipelined_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(5, 1004);
+    let cfg = fast_cfg(0x919E);
+    let shim = serve_requests_pipelined(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        Arc::new(NativeCompute),
+        &cfg,
+    )
+    .unwrap();
+    let outcome = session(&spec, &alloc, &a, &reqs, &cfg, Mode::Pipelined);
+    assert_jobs_identical(&shim.jobs, &outcome.jobs, "serve_requests_pipelined");
+    assert_eq!(shim.encodes, outcome.encodes);
+    assert_eq!(shim.worst_error, outcome.worst_error);
+    assert!(shim.makespan.is_some());
+}
+
+#[test]
+fn serve_arrivals_shim_matches_arrivals_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(8, 1005);
+    let cfg = fast_cfg(0xA3);
+    // All requests arrive at t = 0 so batch composition (3, 3, 2) is
+    // independent of wall-clock timing — the comparison must not race the
+    // drain loop.
+    let offsets: Vec<Duration> = vec![Duration::ZERO; 8];
+    let shim = serve_arrivals(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        &offsets,
+        3,
+        Arc::new(NativeCompute),
+        &cfg,
+    )
+    .unwrap();
+    let outcome = session(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        &cfg,
+        Mode::Arrivals { offsets: offsets.clone(), max_batch: 3 },
+    );
+    assert_jobs_identical(&shim.jobs, &outcome.jobs, "serve_arrivals");
+    assert_eq!(shim.encodes, 1);
+    assert_eq!(outcome.encodes, 1);
+    assert_eq!(outcome.post_setup_encodes, 0);
+    assert_eq!(shim.worst_error, outcome.worst_error);
+}
+
+#[test]
+fn serve_arrivals_adaptive_shim_matches_adaptive_session() {
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(14, 1006);
+    let cfg = fast_cfg(0xADA);
+    let offsets: Vec<Duration> =
+        (0..14).map(|i| Duration::from_millis(4 * i as u64)).collect();
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 2,
+        kind: FailureKind::KillWorkers(vec![0, 5]),
+    }])
+    .unwrap();
+    let adapt = AdaptiveServeConfig {
+        est: EstimatorConfig {
+            min_obs: 1_000_000, // isolate the death path from drift noise
+            check_every: 1,
+            ..Default::default()
+        },
+        death_after: 3,
+    };
+    let shim = serve_arrivals_adaptive(
+        &spec,
+        &alloc,
+        &a,
+        &reqs,
+        &offsets,
+        1,
+        Arc::new(NativeCompute),
+        &cfg,
+        &scenario,
+        Some(&adapt),
+    )
+    .unwrap();
+    let outcome = Session::builder(&spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(reqs.clone())
+        .config(cfg.clone())
+        .compute(Arc::new(NativeCompute))
+        .scenario(scenario)
+        .adaptive(adapt)
+        .mode(Mode::Arrivals { offsets, max_batch: 1 })
+        .build()
+        .unwrap()
+        .serve()
+        .unwrap();
+    assert_jobs_identical(
+        &shim.serve.jobs,
+        &outcome.jobs,
+        "serve_arrivals_adaptive",
+    );
+    // The full adaptation trace must agree, bit for bit.
+    assert_eq!(shim.reallocations, outcome.reallocations);
+    assert_eq!(shim.rechunks, outcome.rechunks);
+    assert_eq!(shim.suspected_dead, outcome.suspected_dead);
+    assert_eq!(shim.post_setup_encodes, outcome.post_setup_encodes);
+    assert_eq!(shim.serve.encodes, outcome.encodes);
+    let shim_spec = &shim.assumed_spec;
+    let sess_spec = outcome.assumed_spec.as_ref().unwrap();
+    assert_eq!(shim_spec.k, sess_spec.k);
+    assert_eq!(shim_spec.num_groups(), sess_spec.num_groups());
+    for (x, y) in shim_spec.groups.iter().zip(&sess_spec.groups) {
+        assert_eq!(x.n, y.n);
+        assert_eq!(x.mu, y.mu);
+        assert_eq!(x.alpha, y.alpha);
+    }
+    // Something actually happened in this scenario, in both paths.
+    assert!(outcome.reallocations >= 1);
+    for w in [0usize, 5] {
+        assert!(outcome.suspected_dead.contains(&w), "worker {w}");
+    }
+    assert_eq!(outcome.post_setup_encodes, 0);
+}
+
+#[test]
+fn adaptive_session_resolves_with_its_own_policy() {
+    // A session built from a *policy* (not an explicit allocation) must
+    // re-solve through that policy's `allocate_capped` when workers die:
+    // here uniform-rate-0.5 — the re-solved allocation (n = 2k over the 8
+    // survivors) fits the coded-row budget, so the re-allocation succeeds,
+    // stays decodable, and never re-encodes. The legacy shim path (None
+    // policy) is covered by serve_arrivals_adaptive_shim_matches above.
+    let spec = small_spec();
+    let (a, reqs) = data(14, 1008);
+    let cfg = fast_cfg(0xF00F);
+    let offsets: Vec<Duration> =
+        (0..14).map(|i| Duration::from_millis(4 * i as u64)).collect();
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 2,
+        kind: FailureKind::KillWorkers(vec![0, 5]),
+    }])
+    .unwrap();
+    let adapt = AdaptiveServeConfig {
+        est: EstimatorConfig {
+            min_obs: 1_000_000,
+            check_every: 1,
+            ..Default::default()
+        },
+        death_after: 3,
+    };
+    let outcome = Session::builder(&spec)
+        .policy(policy::resolve("uniform-rate=0.5").unwrap())
+        .data(a)
+        .requests(reqs)
+        .config(cfg)
+        .scenario(scenario)
+        .adaptive(adapt)
+        .mode(Mode::Arrivals { offsets, max_batch: 1 })
+        .build()
+        .unwrap()
+        .serve()
+        .unwrap();
+    assert_eq!(outcome.recorder.count(), 14);
+    assert!(outcome.worst_error < 1e-8, "err {}", outcome.worst_error);
+    assert!(outcome.reallocations >= 1, "re-solve through the policy failed");
+    for w in [0usize, 5] {
+        assert!(outcome.suspected_dead.contains(&w), "worker {w}");
+    }
+    assert_eq!(outcome.post_setup_encodes, 0);
+    assert_eq!(outcome.encodes, 1);
+}
+
+#[test]
+fn session_serve_is_deterministic_across_repeat_serves() {
+    // One built session, served twice: all deterministic fields identical
+    // (fresh wall clocks aside) — the facade owns no hidden mutable state.
+    let spec = small_spec();
+    let alloc = redundant_alloc(&spec);
+    let (a, reqs) = data(4, 1007);
+    let cfg = fast_cfg(0x9E9E);
+    // t = 0 arrivals: deterministic (2, 2) batching on both serves.
+    let offsets: Vec<Duration> = vec![Duration::ZERO; 4];
+    let session = Session::builder(&spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(reqs)
+        .config(cfg)
+        .mode(Mode::Arrivals { offsets, max_batch: 2 })
+        .build()
+        .unwrap();
+    let o1 = session.serve().unwrap();
+    let o2 = session.serve().unwrap();
+    assert_jobs_identical(&o1.jobs, &o2.jobs, "repeat serve");
+    assert_eq!(o1.encodes, o2.encodes);
+}
+
+#[test]
+fn every_cli_policy_name_resolves_to_exactly_one_policy() {
+    // The registry is the single source of truth: every name is unique,
+    // resolves, allocates on the paper cluster, and the parameterized
+    // spellings resolve to the same policy as their flag-driven form.
+    let names = policy::policy_names();
+    assert!(names.contains(&"proposed"));
+    assert!(names.contains(&"uncoded"));
+    assert!(names.contains(&"uniform-nstar"));
+    assert!(names.contains(&"uniform-rate"));
+    assert!(names.contains(&"group-code"));
+    assert!(names.contains(&"reisizadeh"));
+    for (i, name) in names.iter().enumerate() {
+        assert_eq!(
+            names.iter().position(|n| n == name),
+            Some(i),
+            "duplicate registry name `{name}`"
+        );
+        let p = policy::resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let alloc = p
+            .allocate(LatencyModel::A, &spec)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        alloc.validate(&spec).unwrap();
+    }
+    // Unknown names fail with the registry listing.
+    let err = policy::resolve("nonexistent").unwrap_err().to_string();
+    for name in &names {
+        assert!(err.contains(name), "error should list `{name}`: {err}");
+    }
+}
