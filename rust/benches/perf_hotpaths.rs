@@ -5,13 +5,18 @@
 //! - Monte-Carlo latency sampling (`latency_any_k` / `latency_per_group`);
 //! - LU factorization + decode at serving sizes;
 //! - factorization-cached vs uncached decode on a repeated straggler
-//!   pattern, and batched multi-RHS vs per-request decode;
-//! - MDS encode (setup path), blocked single- vs multi-threaded;
+//!   pattern, and batched multi-RHS vs per-request decode (single and
+//!   pooled);
+//! - MDS encode (setup path) on the persistent pool, and the spawn-vs-pool
+//!   dispatch overhead the PR 5 runtime removed;
+//! - small-matrix matmul latency (the granularity gate must keep it at
+//!   single-stream speed — the old flat spawn threshold's failure mode);
 //! - end-to-end `run_job` through the thread coordinator (native backend);
-//! - prepared-job vs cold batched serving (the encode-hoisting fast path).
+//! - prepared-job vs cold batched serving (the encode-hoisting fast path,
+//!   now allocation-free and pool-backed in steady state).
 //!
 //! Set `BENCH_JSON_DIR` (or run `make bench-json`) to capture `name →
-//! ns/op` into `BENCH_PR2.json`.
+//! ns/op` into `BENCH_PR5.json`.
 
 use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
@@ -21,10 +26,29 @@ use hetcoded::coordinator::{
 };
 use hetcoded::math::{wm1_neg_exp, Rng};
 use hetcoded::model::{ClusterSpec, LatencyModel};
+use hetcoded::runtime::pool::WorkPool;
 use hetcoded::sim::{latency_any_k, latency_per_group, SimConfig};
 use std::sync::Arc;
 
 fn main() {
+    section("runtime: pool dispatch vs per-call thread spawn");
+    // The overhead PR 5 removes from every parallel hot-path call: a
+    // `std::thread::scope` pays 8 OS spawns + joins per call, the
+    // persistent pool one channel push per helper + an atomic claim per
+    // task. This gap is what the >=2x serving/sweep headline comes from
+    // at small per-batch work sizes.
+    run("spawn 8 scoped threads (noop, per-call baseline)", || {
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {});
+            }
+        });
+    });
+    let pool8 = WorkPool::new(8);
+    run("pool dispatch 8 tasks (noop, persistent workers)", || {
+        pool8.scope_run(8, |_| {});
+    });
+
     section("math");
     run("lambertw: wm1_neg_exp over t in [1, 750]", || {
         let mut acc = 0.0;
@@ -49,6 +73,13 @@ fn main() {
     let cfg_mt = SimConfig { samples: 1_000, seed: 7, threads: 0 };
     run_quick("latency_any_k: N=2500, 1k samples, auto threads", || {
         black_box(latency_any_k(&spec, &alloc.loads, LatencyModel::A, &cfg_mt).unwrap());
+    });
+    // The fig4-9 sweep shape at the headline thread count: one MC point
+    // exactly as the figure harness dispatches it, 8 deterministic streams
+    // on the persistent pool (pre-PR 5 this spawned 8 threads per point).
+    let cfg_8 = SimConfig { samples: 1_000, seed: 7, threads: 8 };
+    run_quick("latency_any_k: N=2500, 1k samples, 8 streams (fig sweep point)", || {
+        black_box(latency_any_k(&spec, &alloc.loads, LatencyModel::A, &cfg_8).unwrap());
     });
     let r = vec![20.0, 20.0, 20.0, 20.0, 20.0];
     run_quick("latency_per_group: N=2500, 1k samples", || {
@@ -101,6 +132,12 @@ fn main() {
         run_quick(&format!("decode k={k} B=32 multi-RHS (one pass)"), || {
             black_box(dec.decode_batch(&rows, &cols).unwrap());
         });
+        let mut dec_pooled = Decoder::new(gen.clone());
+        dec_pooled.set_pool(Some(Arc::new(WorkPool::new(8))));
+        dec_pooled.decode_batch(&rows, &cols).unwrap(); // warm cache + arenas
+        run_quick(&format!("decode k={k} B=32 multi-RHS (pooled, 8 workers)"), || {
+            black_box(dec_pooled.decode_batch(&rows, &cols).unwrap());
+        });
         run_quick(&format!("decode k={k} B=32 per-request loop"), || {
             for col in &cols {
                 let pairs: Vec<(usize, f64)> =
@@ -116,11 +153,43 @@ fn main() {
         let gen =
             Generator::new(GeneratorKind::SystematicRandom, n, k, 1).unwrap();
         let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let pool1 = WorkPool::new(1);
+        // Names kept from the pre-pool snapshots ("1 thread"/"auto
+        // threads") for cross-PR diffability; both now run the
+        // register-blocked microkernel, inline vs on the persistent pool.
         run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), 1 thread"), || {
-            black_box(gen.matrix().matmul_blocked(&a, 1));
+            black_box(gen.matrix().matmul_on(&a, &pool1));
         });
         run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), auto threads"), || {
-            black_box(gen.matrix().matmul_blocked(&a, 0));
+            black_box(gen.matrix().matmul(&a));
+        });
+        run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), pool of 8"), || {
+            black_box(gen.matrix().matmul_on(&a, &pool8));
+        });
+    }
+
+    section("small-matrix matmul (granularity gate: no pooling regression)");
+    {
+        // Below one task grain the pooled path must collapse to the
+        // inline kernel: identical latency with a 1-worker and an
+        // 8-worker pool. (The old flat 1 MFLOP spawn threshold got this
+        // right only by never threading anything medium-sized.)
+        let pool1 = WorkPool::new(1);
+        let a32 = Matrix::from_fn(32, 32, |_, _| rng.normal());
+        let b32 = Matrix::from_fn(32, 32, |_, _| rng.normal());
+        run("matmul 32x32x32 single-stream", || {
+            black_box(a32.matmul_on(&b32, &pool1));
+        });
+        run("matmul 32x32x32 pooled (gated inline)", || {
+            black_box(a32.matmul_on(&b32, &pool8));
+        });
+        let a128 = Matrix::from_fn(128, 128, |_, _| rng.normal());
+        let b128 = Matrix::from_fn(128, 128, |_, _| rng.normal());
+        run("matmul 128x128x128 single-stream", || {
+            black_box(a128.matmul_on(&b128, &pool1));
+        });
+        run("matmul 128x128x128 pooled (granularity-split)", || {
+            black_box(a128.matmul_on(&b128, &pool8));
         });
     }
 

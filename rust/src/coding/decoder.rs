@@ -24,8 +24,10 @@
 use crate::coding::bjorck_pereyra::VandermondeFactor;
 use crate::coding::linalg::Lu;
 use crate::coding::{Generator, Matrix};
+use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Default number of cached decode factorizations. Under group
 /// heterogeneity only ~`G` distinct group-boundary straggle patterns
@@ -52,18 +54,18 @@ impl Factor {
 
     /// Solve for a batch of RHS columns (each of length `k`) sharing this
     /// factorization: the LU arm sweeps all columns per substitution pass
-    /// ([`Lu::solve_matrix`]); the Vandermonde arm solves per column but
-    /// shares the precomputed reciprocals. Column `b` of the result equals
-    /// [`Factor::solve_one`] of input `b`.
-    fn solve_many(&self, k: usize, columns: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+    /// through a reusable flat staging buffer ([`Lu::solve_columns`] — no
+    /// per-call `O(k·B)` allocation beyond the returned solutions); the
+    /// Vandermonde arm solves per column but shares the precomputed
+    /// reciprocals. Column `b` of the result equals [`Factor::solve_one`]
+    /// of input `b`.
+    fn solve_many(
+        &self,
+        columns: &[Vec<f64>],
+        lu_scratch: &mut Vec<f64>,
+    ) -> Result<Vec<Vec<f64>>> {
         match self {
-            Factor::Lu(lu) => {
-                let b = Matrix::from_fn(k, columns.len(), |r, c| columns[c][r]);
-                let x = lu.solve_matrix(&b)?;
-                Ok((0..columns.len())
-                    .map(|c| (0..k).map(|r| x[(r, c)]).collect())
-                    .collect())
-            }
+            Factor::Lu(lu) => lu.solve_columns(columns, lu_scratch),
             Factor::Vandermonde(v) => v
                 .solve_multi(columns)
                 .map_err(|e| Error::Decode(format!("BP solve failed: {e}"))),
@@ -183,6 +185,10 @@ struct DecodeScratch {
     sorted_rows: Vec<usize>,
     /// `ys` permuted to match `sorted_rows`.
     sorted_ys: Vec<f64>,
+    /// Batch-path RHS staging: request columns permuted to `sorted_rows`
+    /// order. Outer and inner `Vec`s are reused across batches — the
+    /// decode-RHS arena of the allocation-free serving hot path.
+    sorted_cols: Vec<Vec<f64>>,
 }
 
 impl DecodeScratch {
@@ -209,17 +215,36 @@ impl DecodeScratch {
     }
 }
 
+/// Per-FLOP granularity for splitting a multi-RHS decode across the pool
+/// (mirrors the matmul kernel's task sizing: a column chunk must carry
+/// enough substitution work to amortize pool dispatch).
+const DECODE_TASK_FLOPS: usize = 1 << 17;
+
 /// Decoder bound to a generator.
 pub struct Decoder {
     generator: Generator,
     scratch: DecodeScratch,
     cache: FactorCache,
+    /// Pool for the multi-RHS batch solve (`None` = single-threaded).
+    pool: Option<PoolHandle>,
+    /// Per-stream LU staging buffers for the parallel batch solve, reused
+    /// across batches (index `s` belongs to column chunk `s`; the `Mutex`
+    /// only satisfies the borrow checker — chunk indices are disjoint, so
+    /// locks are never contended).
+    solve_scratches: Vec<Mutex<Vec<f64>>>,
+    /// Decode-scratch allocation/grow events (see
+    /// [`Decoder::scratch_grows`]).
+    grows: u64,
 }
 
 impl Clone for Decoder {
-    /// Clones the generator binding; scratch and cache start empty.
+    /// Clones the generator binding and pool handle; scratch and cache
+    /// start empty.
     fn clone(&self) -> Self {
-        Decoder::with_cache_capacity(self.generator.clone(), self.cache.cap)
+        let mut d =
+            Decoder::with_cache_capacity(self.generator.clone(), self.cache.cap);
+        d.pool = self.pool.clone();
+        d
     }
 }
 
@@ -255,7 +280,29 @@ impl Decoder {
             generator,
             scratch: DecodeScratch::default(),
             cache: FactorCache::new(capacity),
+            pool: None,
+            solve_scratches: Vec::new(),
+            grows: 0,
         }
+    }
+
+    /// Attach (or detach) the compute pool the multi-RHS batch solve runs
+    /// on. With a pool, [`Decoder::decode_batch`] splits its column chunk
+    /// work across the pool's workers — bit-identical results, the chunks
+    /// are reduced in column order.
+    pub fn set_pool(&mut self, pool: Option<PoolHandle>) {
+        self.pool = pool;
+    }
+
+    /// Scratch-arena allocation/grow events since construction: the number
+    /// of decode calls that had to allocate or enlarge a staging buffer
+    /// (row/permutation scratch, the batch RHS arena, or the per-stream LU
+    /// staging). After the first batch of a steady-state serving stream
+    /// this stays flat — the measured half of the "allocation-free hot
+    /// path" invariant ([`crate::coordinator::ServeOutcome`]'s
+    /// `steady_allocs`).
+    pub fn scratch_grows(&self) -> u64 {
+        self.grows
     }
 
     /// Factorization-cache hit/miss counters (since construction).
@@ -299,7 +346,7 @@ impl Decoder {
     /// any arrival permutation of a repeated straggler *set*, skipping
     /// straight to the `O(k²)` solve.
     pub fn decode(&mut self, received: &[(usize, f64)]) -> Result<Vec<f64>> {
-        let Decoder { generator, scratch, cache } = self;
+        let Decoder { generator, scratch, cache, .. } = self;
         let k = generator.k();
         if received.len() < k {
             return Err(Error::Decode(format!(
@@ -376,7 +423,15 @@ impl Decoder {
             }
         }
         {
-            let Decoder { generator, scratch, cache } = &mut *self;
+            let Decoder {
+                generator,
+                scratch,
+                cache,
+                pool,
+                solve_scratches,
+                grows,
+            } = &mut *self;
+            let mut grew = scratch.rows.capacity() < k;
             Self::check_indices(&mut scratch.seen, generator.n(), rows.iter())?;
             // Sort the shared first-`k` support once; permute each
             // request's values to match.
@@ -387,12 +442,71 @@ impl Decoder {
             if let Ok(factor) =
                 cache.get_or_build(key, || factor_rows(generator, key))
             {
+                let m = columns.len();
+                // Stage the permuted RHS columns in the reusable arena.
                 let order = &scratch.order;
-                let sorted_cols: Vec<Vec<f64>> = columns
-                    .iter()
-                    .map(|col| order.iter().map(|&i| col[i]).collect())
-                    .collect();
-                let out = factor.solve_many(k, &sorted_cols);
+                let staging = &mut scratch.sorted_cols;
+                if staging.len() < m {
+                    grew = true;
+                    staging.resize_with(m, Vec::new);
+                }
+                for (dst, col) in staging.iter_mut().zip(columns) {
+                    grew |= dst.capacity() < order.len();
+                    dst.clear();
+                    dst.extend(order.iter().map(|&i| col[i]));
+                }
+                let staged = &staging[..m];
+                // Split the batch into column chunks with enough
+                // substitution work each (~k² FLOPs per column) to
+                // amortize pool dispatch; chunk results are reduced in
+                // column order, so the split is invisible in the output.
+                // `streams` is recomputed from the chunk width so no task
+                // is ever empty (ceil-of-ceil can strand a tail task).
+                let target = match pool {
+                    Some(p) => (k.saturating_mul(k).saturating_mul(m)
+                        / DECODE_TASK_FLOPS)
+                        .clamp(1, p.threads())
+                        .min(m),
+                    None => 1,
+                };
+                let per = m.div_ceil(target);
+                let streams = m.div_ceil(per);
+                if solve_scratches.len() < streams {
+                    grew = true;
+                    solve_scratches.resize_with(streams, Mutex::default);
+                }
+                if matches!(factor, Factor::Lu(_)) {
+                    // Only the LU arm stages into the flat solve scratch
+                    // (the BP arm would otherwise tick the counter
+                    // forever), and slot `s` only ever needs its own
+                    // chunk's width — the tail chunk is shorter.
+                    for (s, slot) in
+                        solve_scratches.iter().take(streams).enumerate()
+                    {
+                        let chunk_len = per.min(m - s * per);
+                        let cap = slot.lock().expect("solve scratch").capacity();
+                        grew |= cap < k * chunk_len;
+                    }
+                }
+                *grows += u64::from(grew);
+                let out = if streams <= 1 {
+                    let mut lu_scratch =
+                        solve_scratches[0].lock().expect("solve scratch");
+                    factor.solve_many(staged, &mut lu_scratch)
+                } else {
+                    let p = pool.as_ref().expect("streams > 1 implies a pool");
+                    let chunks = p.run_collect(streams, |s| {
+                        let c0 = s * per;
+                        let c1 = (c0 + per).min(m);
+                        let mut lu_scratch =
+                            solve_scratches[s].lock().expect("solve scratch");
+                        factor.solve_many(&staged[c0..c1], &mut lu_scratch)
+                    });
+                    chunks
+                        .into_iter()
+                        .collect::<Result<Vec<_>>>()
+                        .map(|v| v.into_iter().flatten().collect())
+                };
                 cache.release_uncached();
                 return out;
             }
@@ -656,6 +770,42 @@ mod tests {
                 let single = dec.decode(&pairs).unwrap();
                 assert_eq!(got, &single, "{kind:?}");
             }
+        }
+    }
+
+    #[test]
+    fn pooled_decode_batch_is_bit_identical_and_stops_growing() {
+        use crate::runtime::pool::WorkPool;
+        use std::sync::Arc;
+        // Sizes big enough that k²·B crosses the parallel-split threshold
+        // (96²·50 ≈ 460 KFLOP → 3 column chunks on a big enough pool),
+        // with B chosen so the split is uneven (17/17/16): the tail
+        // chunk's shorter scratch must not tick the grow counter forever.
+        let (n, k, b) = (144usize, 96usize, 50usize);
+        let gen = Generator::new(GeneratorKind::SystematicRandom, n, k, 8).unwrap();
+        let mut rng = Rng::new(77);
+        let rows: Vec<usize> = (n - k..n).collect();
+        let columns: Vec<Vec<f64>> = (0..b)
+            .map(|_| (0..k).map(|_| rng.normal()).collect())
+            .collect();
+        let mut baseline = Decoder::new(gen.clone());
+        let want = baseline.decode_batch(&rows, &columns).unwrap();
+        for pool_size in [1usize, 2, 7, 16] {
+            let mut dec = Decoder::new(gen.clone());
+            dec.set_pool(Some(Arc::new(WorkPool::new(pool_size))));
+            let got = dec.decode_batch(&rows, &columns).unwrap();
+            assert_eq!(got, want, "pool={pool_size}");
+            // First batch may size the arenas; repeats must not grow.
+            let after_first = dec.scratch_grows();
+            for _ in 0..5 {
+                let again = dec.decode_batch(&rows, &columns).unwrap();
+                assert_eq!(again, want, "pool={pool_size}");
+            }
+            assert_eq!(
+                dec.scratch_grows(),
+                after_first,
+                "pool={pool_size}: steady-state decode grew a scratch buffer"
+            );
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Row encoder: `Ã = G·A` and per-worker chunking.
 
 use crate::coding::{Generator, Matrix};
+use crate::runtime::pool::WorkPool;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -52,16 +53,59 @@ impl Encoder {
         self.encodes.load(Ordering::Relaxed)
     }
 
-    /// Encode: `Ã = G·A`, where `A ∈ R^{k×d}`.
+    /// Encode: `Ã = G·A`, where `A ∈ R^{k×d}`, on the shared global
+    /// [`WorkPool`].
     pub fn encode(&self, a: &Matrix) -> Result<Matrix> {
-        self.encode_with_threads(a, 1)
+        self.encode_on(a, WorkPool::global_ref())
     }
 
-    /// Encode through the blocked multi-threaded matmul kernel (`threads ==
-    /// 0` uses available parallelism). The encode is the setup-path
-    /// bottleneck at serving sizes — O(n·k·d) — and parallelizes over coded
-    /// rows with bit-identical results for any thread count.
+    /// Encode on an explicit pool handle — the serving-path entry point
+    /// ([`crate::coordinator::JobConfig`] threads one pool through every
+    /// encode of a session). The encode is the setup-path bottleneck at
+    /// serving sizes — O(n·k·d) — and parallelizes over coded rows through
+    /// the register-blocked matmul kernel with bit-identical results for
+    /// any pool size.
+    pub fn encode_on(&self, a: &Matrix, pool: &WorkPool) -> Result<Matrix> {
+        self.encode_capped(a, pool, pool.threads())
+    }
+
+    /// [`Encoder::encode_on`] with an explicit cap on the task split —
+    /// how the per-request cold path honors
+    /// [`crate::coordinator::JobConfig`]'s `encode_threads` as a
+    /// concurrency bound without constructing a pool per call. Results
+    /// are bit-identical for any cap.
+    pub fn encode_capped(
+        &self,
+        a: &Matrix,
+        pool: &WorkPool,
+        max_streams: usize,
+    ) -> Result<Matrix> {
+        self.check_shape(a)?;
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        Ok(self.generator.matrix().matmul_streams(a, pool, max_streams))
+    }
+
+    /// Pre-pool compatibility shim: `threads` now only caps the task
+    /// split; execution happens on the shared global [`WorkPool`] (no
+    /// per-call thread spawns).
+    ///
+    /// Migration: `encoder.encode_on(&a, &pool)` with a
+    /// [`crate::runtime::pool::PoolHandle`] (or plain [`Encoder::encode`]
+    /// for the global pool).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use encode_on with a runtime::pool::WorkPool handle \
+                (or encode() for the global pool)"
+    )]
     pub fn encode_with_threads(&self, a: &Matrix, threads: usize) -> Result<Matrix> {
+        self.check_shape(a)?;
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        #[allow(deprecated)]
+        let coded = self.generator.matrix().matmul_blocked(a, threads);
+        Ok(coded)
+    }
+
+    fn check_shape(&self, a: &Matrix) -> Result<()> {
         if a.rows() != self.generator.k() {
             return Err(Error::InvalidSpec(format!(
                 "data matrix has {} rows, code dimension k={}",
@@ -69,8 +113,7 @@ impl Encoder {
                 self.generator.k()
             )));
         }
-        self.encodes.fetch_add(1, Ordering::Relaxed);
-        Ok(self.generator.matrix().matmul_blocked(a, threads))
+        Ok(())
     }
 
     /// Split coded rows into per-worker chunks by an integer load vector
@@ -166,11 +209,15 @@ mod tests {
         for i in 0..4 {
             assert_eq!(coded.row(i), a.row(i), "systematic row {i}");
         }
-        // The call counter measures actual encode invocations (thread
-        // count is irrelevant, and results are bit-identical).
+        // The call counter measures actual encode invocations (pool size
+        // is irrelevant, and results are bit-identical).
+        let pool = crate::runtime::pool::WorkPool::new(3);
+        let pooled = enc.encode_on(&a, &pool).unwrap();
+        assert_eq!(pooled, coded);
+        #[allow(deprecated)] // the shim must keep counting and matching
         let threaded = enc.encode_with_threads(&a, 0).unwrap();
         assert_eq!(threaded, coded);
-        assert_eq!(enc.encode_calls(), 2);
+        assert_eq!(enc.encode_calls(), 3);
         assert_eq!(enc.clone().encode_calls(), 0);
     }
 

@@ -4,6 +4,7 @@
 //! matmul, matvec, LU decomposition with partial pivoting, solve, and a
 //! condition-number estimate for decode diagnostics.
 
+use crate::runtime::pool::WorkPool;
 use crate::{Error, Result};
 
 /// Row-major dense matrix.
@@ -91,51 +92,77 @@ impl Matrix {
         y
     }
 
-    /// Matrix product `self · other` (single-threaded blocked kernel).
+    /// Matrix product `self · other` on the shared global
+    /// [`WorkPool`] — parallel when the product is big enough to amortize
+    /// pool dispatch, inline otherwise, bit-identical either way.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        self.matmul_blocked(other, 1)
+        self.matmul_on(other, WorkPool::global_ref())
     }
 
-    /// Cache-blocked matrix product with a `threads` knob (`0` = available
-    /// parallelism, matching [`crate::sim::SimConfig::threads`]).
+    /// Cache-blocked, register-tiled matrix product executed on `pool`.
     ///
-    /// The kernel tiles the i-k-j loop so a `MM_KC × MM_JC` block of
-    /// `other` stays resident in cache across a sweep of `self`'s rows, and
-    /// partitions output *rows* across threads. Per output element the
-    /// `k`-summation order is unchanged, so the result is bit-identical to
-    /// the naive kernel for every tile shape and thread count.
+    /// The kernel ([`matmul_block_micro`]) tiles the i-k-j loop so a
+    /// `MM_KC × MM_JC` block of `other` stays resident in cache across a
+    /// sweep of `self`'s rows, and partitions output *rows* into
+    /// pool tasks sized by a per-task FLOP granularity
+    /// ([`MM_TASK_FLOPS`]). Per output element the `k`-summation order is
+    /// fixed (ascending), so the result is bit-identical for every tile
+    /// shape, task split, and pool size.
+    pub fn matmul_on(&self, other: &Matrix, pool: &WorkPool) -> Matrix {
+        self.matmul_streams(other, pool, pool.threads())
+    }
+
+    /// Pre-pool compatibility shim: `threads` now only caps the task
+    /// split; execution happens on the shared global [`WorkPool`] (no
+    /// per-call thread spawns). `0` = the pool's full parallelism.
+    ///
+    /// Migration: `a.matmul_on(&b, &pool)` with a
+    /// [`crate::runtime::pool::PoolHandle`] (or plain [`Matrix::matmul`]
+    /// for the global pool).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use matmul_on with a runtime::pool::WorkPool handle \
+                (or matmul() for the global pool)"
+    )]
     pub fn matmul_blocked(&self, other: &Matrix, threads: usize) -> Matrix {
+        let pool = WorkPool::global_ref();
+        let cap = if threads == 0 { pool.threads() } else { threads };
+        self.matmul_streams(other, pool, cap)
+    }
+
+    /// Shared engine: split output rows into `<= max_streams` tasks of at
+    /// least [`MM_TASK_FLOPS`] each and run them on `pool` (crate-visible
+    /// so the encoder can cap concurrency without a dedicated pool).
+    pub(crate) fn matmul_streams(
+        &self,
+        other: &Matrix,
+        pool: &WorkPool,
+        max_streams: usize,
+    ) -> Matrix {
         assert_eq!(self.cols, other.rows, "dimension mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
         if self.rows == 0 || other.cols == 0 {
             return out;
         }
-        let hw = if threads == 0 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        // Below ~1 MFLOP, thread spawn overhead dominates any speedup.
-        let flops = self.rows * self.cols * other.cols;
-        let threads = if flops < (1 << 20) { 1 } else { hw.min(self.rows).max(1) };
-        if threads <= 1 {
-            matmul_block(
-                self.rows, self.cols, other.cols, &self.data, &other.data,
-                &mut out.data,
-            );
-            return out;
-        }
-        let rows_per = self.rows.div_ceil(threads);
+        // Per-task granularity check (not a flat threshold): parallelize
+        // only into tasks that individually carry enough FLOPs to amortize
+        // pool dispatch, so small products stay inline with zero overhead
+        // and medium ones get exactly as many streams as they can feed.
+        let flops = self
+            .rows
+            .saturating_mul(self.cols)
+            .saturating_mul(other.cols);
+        let tasks = (flops / MM_TASK_FLOPS)
+            .clamp(1, max_streams.max(1))
+            .min(self.rows);
+        // `tasks == 1` runs inline on the calling thread (scope_run's
+        // degenerate path) — still visible in the pool's region counters.
+        let rows_per = self.rows.div_ceil(tasks);
         let (kdim, n) = (self.cols, other.cols);
-        std::thread::scope(|scope| {
-            for (t, out_rows) in out.data.chunks_mut(rows_per * n).enumerate() {
-                let m = out_rows.len() / n;
-                let a_rows = &self.data[t * rows_per * kdim..][..m * kdim];
-                let b = &other.data;
-                scope.spawn(move || {
-                    matmul_block(m, kdim, n, a_rows, b, out_rows);
-                });
-            }
+        pool.run_chunks_mut(&mut out.data, rows_per * n, |t, out_rows| {
+            let m = out_rows.len() / n;
+            let a_rows = &self.data[t * rows_per * kdim..][..m * kdim];
+            matmul_block_micro(m, kdim, n, a_rows, &other.data, out_rows);
         });
         out
     }
@@ -175,11 +202,104 @@ impl Matrix {
 const MM_KC: usize = 64;
 /// `j`-dimension tile width.
 const MM_JC: usize = 512;
+/// Register-tile height: rows of `self` processed together so each loaded
+/// `other` row feeds [`MM_MR`] accumulator streams. The microkernel body
+/// is hand-unrolled to exactly this height — change both together.
+const MM_MR: usize = 4;
+/// Minimum FLOPs per parallel task. With the persistent [`WorkPool`] the
+/// cost of going parallel is a channel push + an atomic claim (~ a few µs),
+/// not a per-call thread spawn (~ tens of µs), so the profitable crossover
+/// sits near ~128 KFLOP of scalar work per task — way below the old flat
+/// 1 MFLOP spawn threshold that gated the whole *product*. Deriving the
+/// task count as `flops / MM_TASK_FLOPS` makes small matrices stay inline
+/// (no latency regression) while medium ones split into exactly as many
+/// streams as they can keep busy.
+const MM_TASK_FLOPS: usize = 1 << 17;
+
+/// Register-blocked microkernel: the same `MM_KC × MM_JC` cache tiling as
+/// [`matmul_block`], with `self`'s rows additionally processed in
+/// [`MM_MR`]-row register tiles. Each loaded `b` row then feeds four
+/// independent accumulator streams over a bounds-check-free inner loop
+/// (every slice is pre-cut to the tile width `w`, so LLVM proves the
+/// indices in-range and autovectorizes the four fused update streams).
+///
+/// Bit-identity: per output element the `k`-summation order is ascending,
+/// exactly as in [`matmul_block`]. The only op-sequence difference is that
+/// a register tile with *some* nonzero `a` entries also adds the
+/// `0.0 · b` products of its zero entries, which scalar [`matmul_block`]
+/// skips — and `x + (±0.0 · b)` is bitwise `x` for every finite `b`
+/// (accumulators start at `+0.0` and can never become `-0.0`), so results
+/// are byte-equal for all finite inputs. Non-finite inputs (where
+/// `0 · ∞ = NaN` makes the skip observable) are outside the coding
+/// layer's domain; `microkernel_bit_identical_to_scalar_fallback` in the
+/// test module pins the finite-input equivalence.
+fn matmul_block_micro(
+    m: usize,
+    kdim: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    let m_tiled = m - m % MM_MR;
+    for jc in (0..n).step_by(MM_JC) {
+        let jhi = (jc + MM_JC).min(n);
+        let w = jhi - jc;
+        for kc in (0..kdim).step_by(MM_KC) {
+            let khi = (kc + MM_KC).min(kdim);
+            let mut i = 0usize;
+            while i < m_tiled {
+                let (r0, rest) = out[i * n..(i + MM_MR) * n].split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                let o0 = &mut r0[jc..jhi];
+                let o1 = &mut r1[jc..jhi];
+                let o2 = &mut r2[jc..jhi];
+                let o3 = &mut r3[jc..jhi];
+                for kk in kc..khi {
+                    let a0 = a[i * kdim + kk];
+                    let a1 = a[(i + 1) * kdim + kk];
+                    let a2 = a[(i + 2) * kdim + kk];
+                    let a3 = a[(i + 3) * kdim + kk];
+                    // Whole-tile zero skip: systematic generators are
+                    // mostly identity rows, and an all-zero column of the
+                    // register tile contributes nothing (bit-exactly).
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + jc..kk * n + jhi];
+                    for j in 0..w {
+                        let bv = brow[j];
+                        o0[j] += a0 * bv;
+                        o1[j] += a1 * bv;
+                        o2[j] += a2 * bv;
+                        o3[j] += a3 * bv;
+                    }
+                }
+                i += MM_MR;
+            }
+        }
+    }
+    // Remainder rows (< MM_MR): the scalar fallback kernel, whose
+    // per-element summation order is the same ascending-k sequence.
+    if m_tiled < m {
+        matmul_block(
+            m - m_tiled,
+            kdim,
+            n,
+            &a[m_tiled * kdim..],
+            b,
+            &mut out[m_tiled * n..],
+        );
+    }
+}
 
 /// Tiled i-k-j kernel over raw row-major slices: `out (m×n) += a (m×kdim) ·
 /// b (kdim×n)`. `out` must come in zeroed. For each output element the
 /// contributions are accumulated in ascending `k` order (tiles ascend, and
 /// `kk` ascends within a tile), so results match the naive loop bit for bit.
+/// Kept as the scalar reference the register-blocked
+/// [`matmul_block_micro`] is asserted bit-identical against.
 fn matmul_block(m: usize, kdim: usize, n: usize, a: &[f64], b: &[f64], out: &mut [f64]) {
     for jc in (0..n).step_by(MM_JC) {
         let jhi = (jc + MM_JC).min(n);
@@ -367,6 +487,77 @@ impl Lu {
         Ok(x)
     }
 
+    /// Multi-RHS solve into a reusable flat scratch buffer: `columns[c]`
+    /// is one length-`n` RHS; the permuted system is staged in `scratch`
+    /// (`n × columns.len()` row-major — resized once, then reused across
+    /// calls with no further allocation) and both substitution sweeps run
+    /// in place. Per column the operation sequence is exactly
+    /// [`Lu::solve_matrix`]'s (and therefore [`Lu::solve`]'s — keep the
+    /// three in sync), so each returned column is bit-identical to a
+    /// single solve of that column. This is the allocation-free engine
+    /// behind [`crate::coding::Decoder::decode_batch`].
+    pub fn solve_columns(
+        &self,
+        columns: &[Vec<f64>],
+        scratch: &mut Vec<f64>,
+    ) -> Result<Vec<Vec<f64>>> {
+        let n = self.n;
+        let m = columns.len();
+        for (c, col) in columns.iter().enumerate() {
+            if col.len() != n {
+                return Err(Error::Numerical(format!(
+                    "rhs column {c} has {} rows, factorization is {n}×{n}",
+                    col.len()
+                )));
+            }
+        }
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        scratch.clear();
+        scratch.resize(n * m, 0.0);
+        let x = &mut scratch[..n * m];
+        // Stage the row permutation.
+        for i in 0..n {
+            let p = self.perm[i];
+            let row = &mut x[i * m..(i + 1) * m];
+            for (xi, col) in row.iter_mut().zip(columns) {
+                *xi = col[p];
+            }
+        }
+        // Forward substitution (unit lower), all columns per row sweep.
+        for i in 1..n {
+            let (above, below) = x.split_at_mut(i * m);
+            let row_i = &mut below[..m];
+            for j in 0..i {
+                let f = self.lu[i * n + j];
+                let row_j = &above[j * m..(j + 1) * m];
+                for (xi, &xj) in row_i.iter_mut().zip(row_j.iter()) {
+                    *xi -= f * xj;
+                }
+            }
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let (above, below) = x.split_at_mut((i + 1) * m);
+            let row_i = &mut above[i * m..(i + 1) * m];
+            for j in (i + 1)..n {
+                let f = self.lu[i * n + j];
+                let row_j = &below[(j - i - 1) * m..(j - i) * m];
+                for (xi, &xj) in row_i.iter_mut().zip(row_j.iter()) {
+                    *xi -= f * xj;
+                }
+            }
+            let d = self.lu[i * n + i];
+            for xi in row_i.iter_mut() {
+                *xi /= d;
+            }
+        }
+        Ok((0..m)
+            .map(|c| (0..n).map(|r| x[r * m + c]).collect())
+            .collect())
+    }
+
     /// Determinant from the factorization.
     pub fn det(&self) -> f64 {
         let mut d = self.sign;
@@ -437,6 +628,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // matmul_blocked: the shim must stay bit-correct
     fn blocked_matmul_matches_naive_all_shapes() {
         // Reference kernel: the pre-blocking naive i-k-j loop.
         fn naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -455,14 +647,61 @@ mod tests {
             out
         }
         let mut rng = Rng::new(9);
-        // Shapes straddling the tile sizes (64/512) and the thread cutoff.
-        for (m, k, n) in [(1, 1, 1), (3, 70, 5), (65, 64, 513), (130, 200, 96)] {
+        // Shapes straddling the tile sizes (64/512), the register-tile
+        // height (4), and the task-granularity cutoff.
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 70, 5),
+            (4, 4, 4),
+            (5, 33, 9),
+            (65, 64, 513),
+            (130, 200, 96),
+        ] {
             let a = Matrix::from_fn(m, k, |_, _| rng.normal());
             let b = Matrix::from_fn(k, n, |_, _| rng.normal());
             let want = naive(&a, &b);
+            assert_eq!(a.matmul(&b), want, "m={m} k={k} n={n} (global pool)");
             for threads in [1usize, 0, 3] {
                 let got = a.matmul_blocked(&b, threads);
                 assert_eq!(got, want, "m={m} k={k} n={n} threads={threads}");
+            }
+            for pool_size in [1usize, 2, 7] {
+                let pool = WorkPool::new(pool_size);
+                let got = a.matmul_on(&b, &pool);
+                assert_eq!(got, want, "m={m} k={k} n={n} pool={pool_size}");
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_bit_identical_to_scalar_fallback() {
+        // The register-blocked kernel must be byte-equal to the scalar
+        // kernel for finite inputs — including zero-heavy patterns like
+        // the systematic identity block, where the two kernels take
+        // different zero-skip paths.
+        let mut rng = Rng::new(41);
+        for (m, k, n) in [(4, 8, 8), (7, 64, 17), (66, 65, 130), (129, 32, 513)] {
+            for zero_density in [0.0f64, 0.5, 0.95] {
+                let a = Matrix::from_fn(m, k, |i, j| {
+                    if rng.next_f64() < zero_density {
+                        0.0
+                    } else if i == j {
+                        1.0 // identity-ish diagonal, systematic style
+                    } else {
+                        rng.normal()
+                    }
+                });
+                let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+                let mut micro = vec![0.0; m * n];
+                let mut scalar = vec![0.0; m * n];
+                matmul_block_micro(m, k, n, a.data(), b.data(), &mut micro);
+                matmul_block(m, k, n, a.data(), b.data(), &mut scalar);
+                assert!(
+                    micro.iter().zip(&scalar).all(|(x, y)| {
+                        x.to_bits() == y.to_bits()
+                    }),
+                    "m={m} k={k} n={n} zeros={zero_density}"
+                );
             }
         }
     }
@@ -488,6 +727,39 @@ mod tests {
         // Shape mismatch rejected.
         let a = Matrix::identity(3);
         assert!(a.lu().unwrap().solve_matrix(&Matrix::zeros(4, 2)).is_err());
+    }
+
+    #[test]
+    fn solve_columns_matches_solve_matrix_and_reuses_scratch() {
+        let mut rng = Rng::new(13);
+        let mut scratch = Vec::new();
+        for n in [1usize, 5, 32] {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let lu = a.lu().unwrap();
+            let columns: Vec<Vec<f64>> = (0..6)
+                .map(|_| (0..n).map(|_| rng.normal()).collect())
+                .collect();
+            let b = Matrix::from_fn(n, 6, |r, c| columns[c][r]);
+            let want = lu.solve_matrix(&b).unwrap();
+            let got = lu.solve_columns(&columns, &mut scratch).unwrap();
+            for (c, col) in got.iter().enumerate() {
+                for (r, v) in col.iter().enumerate() {
+                    assert_eq!(
+                        v.to_bits(),
+                        want[(r, c)].to_bits(),
+                        "n={n} col={c} row={r}"
+                    );
+                }
+            }
+            // Second call with the sized scratch must not reallocate.
+            let cap = scratch.capacity();
+            let again = lu.solve_columns(&columns, &mut scratch).unwrap();
+            assert_eq!(again, got);
+            assert_eq!(scratch.capacity(), cap, "n={n}: scratch grew");
+            // Bad column length rejected; empty batch is empty.
+            assert!(lu.solve_columns(&[vec![0.0; n + 1]], &mut scratch).is_err());
+            assert!(lu.solve_columns(&[], &mut scratch).unwrap().is_empty());
+        }
     }
 
     #[test]

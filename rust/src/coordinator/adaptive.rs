@@ -89,6 +89,11 @@ pub struct AdaptiveServeReport {
     /// Encode passes performed *after* construction — the re-allocation
     /// invariant: always 0, adaptation re-slices cached coded rows.
     pub post_setup_encodes: u64,
+    /// Scratch-arena allocation/grow events *after the first batch* (the
+    /// first batch sizes the arenas) — the allocation-free hot-path
+    /// invariant: 0 in steady state, measured from
+    /// [`PreparedJob::scratch_grows`], not declared.
+    pub steady_allocs: u64,
     /// The cluster parameters the loop believed at the end (assumed spec
     /// updated by each re-allocation from the estimator).
     pub assumed_spec: ClusterSpec,
@@ -156,6 +161,7 @@ pub fn serve_arrivals_adaptive(
         rechunks: outcome.rechunks,
         suspected_dead: outcome.suspected_dead,
         post_setup_encodes: outcome.post_setup_encodes,
+        steady_allocs: outcome.steady_allocs,
         assumed_spec,
         decode_cache: (outcome.decode_cache_hits, outcome.decode_cache_misses),
     })
@@ -229,6 +235,10 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     let mut worst = 0.0f64;
     let mut next = 0usize;
     let mut batch_idx = 0u64;
+    // Reusable straggle-draw buffer (redrawn in place per batch) and the
+    // post-first-batch baseline for the steady-allocation invariant.
+    let mut injector_slot: Option<crate::coordinator::StragglerInjector> = None;
+    let mut grows_baseline: Option<u64> = None;
     while next < requests.len() {
         // Block until the head-of-line request has arrived.
         let now = start.elapsed();
@@ -245,17 +255,35 @@ pub(crate) fn serve_arrivals_adaptive_impl(
             end += 1;
         }
         state.advance(scenario, batch_idx)?;
-        let injector = state.injector(
-            cfg.model,
-            prepared.per_worker(),
-            cfg.time_scale,
-            derive_stream_seed(cfg.seed, batch_idx) ^ STRAGGLE_SEED_TAG,
-        )?;
+        let batch_seed = derive_stream_seed(cfg.seed, batch_idx) ^ STRAGGLE_SEED_TAG;
+        if injector_slot.is_none() {
+            injector_slot = Some(state.injector(
+                cfg.model,
+                prepared.per_worker(),
+                cfg.time_scale,
+                batch_seed,
+            )?);
+        } else {
+            let inj = injector_slot.as_mut().expect("slot checked above");
+            state.injector_into(
+                inj,
+                cfg.model,
+                prepared.per_worker(),
+                cfg.time_scale,
+                batch_seed,
+            )?;
+        }
+        let injector = injector_slot.as_ref().expect("injector just staged");
         let (reports, observed) = prepared.run_batch_injected(
             &requests[next..end],
             Arc::clone(&compute),
-            &injector,
+            injector,
         )?;
+        if grows_baseline.is_none() {
+            // The first batch sizes every arena; steady state is measured
+            // from here.
+            grows_baseline = Some(prepared.scratch_grows());
+        }
         let done = start.elapsed();
         for (i, report) in reports.into_iter().enumerate() {
             let sojourn = done.saturating_sub(arrival_offsets[next + i]);
@@ -364,6 +392,8 @@ pub(crate) fn serve_arrivals_adaptive_impl(
             .filter_map(|(w, &s)| s.then_some(w))
             .collect(),
         post_setup_encodes: prepared.encode_count().saturating_sub(1),
+        steady_allocs: grows_baseline
+            .map_or(0, |base| prepared.scratch_grows() - base),
         assumed_spec: assumed,
         decode_cache: prepared.decode_cache_stats(),
     })

@@ -299,6 +299,25 @@ impl ScenarioState {
         .with_slowdowns(&self.slow)?
         .with_dead(self.dead.iter().copied()))
     }
+
+    /// In-place form of [`ScenarioState::injector`]: redraw an existing
+    /// injector from the current effective cluster, reusing its buffers
+    /// (bit-identical to a fresh [`ScenarioState::injector`] call) — the
+    /// adaptive serving loop's per-batch path, which otherwise allocated
+    /// one `O(N)` delay vector per batch.
+    pub fn injector_into(
+        &self,
+        inj: &mut StragglerInjector,
+        model: LatencyModel,
+        per_worker_loads: &[usize],
+        time_scale: f64,
+        seed: u64,
+    ) -> Result<()> {
+        inj.resample(&self.spec, model, per_worker_loads, time_scale, seed)?;
+        inj.apply_slowdowns(&self.slow)?;
+        inj.set_dead(self.dead.iter().copied());
+        Ok(())
+    }
 }
 
 #[cfg(test)]

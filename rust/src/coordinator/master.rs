@@ -14,6 +14,7 @@ use crate::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
 use crate::coordinator::session::{Mode, Session};
 use crate::coordinator::{Compute, LatencyRecorder, StragglerInjector};
 use crate::model::{ClusterSpec, LatencyModel};
+use crate::runtime::pool::{PoolHandle, WorkPool};
 use crate::{Error, Result};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -32,8 +33,18 @@ pub struct JobConfig {
     pub dead_workers: Vec<usize>,
     /// MDS generator construction.
     pub generator: GeneratorKind,
-    /// Threads for the setup-path encode matmul (`0` = available
-    /// parallelism; results are bit-identical for any thread count).
+    /// Pool-size hint for sessions that build their own compute pool
+    /// (`0` = available parallelism): [`crate::coordinator::SessionBuilder`]
+    /// without an explicit [`SessionBuilder::pool`] handle builds a
+    /// per-session [`WorkPool`] of this many workers when the hint is
+    /// nonzero, and shares the global pool otherwise. Results are
+    /// bit-identical for any value — this only bounds CPU use.
+    ///
+    /// (Historically the thread count of a per-call encode spawn; the
+    /// name is kept so existing configs and the `--encode-threads` CLI
+    /// flag keep working.)
+    ///
+    /// [`SessionBuilder::pool`]: crate::coordinator::SessionBuilder::pool
     pub encode_threads: usize,
     /// Capacity of the decode factorization cache on the prepared serving
     /// path (`0` disables caching). Each entry holds `O(k²)` doubles —
@@ -46,6 +57,11 @@ pub struct JobConfig {
     /// measure the true straggle + collect + solve critical path
     /// (`max_error` is then NaN).
     pub verify_decode: bool,
+    /// The persistent compute pool every parallel kernel of this job
+    /// (encode matmul, multi-RHS decode) runs on. `None` = the shared
+    /// global pool; sessions fill this at build time so one pool is
+    /// reused across every batch of the stream.
+    pub pool: Option<PoolHandle>,
 }
 
 impl Default for JobConfig {
@@ -59,6 +75,38 @@ impl Default for JobConfig {
             encode_threads: 0,
             decode_cache: crate::coding::DEFAULT_FACTOR_CACHE,
             verify_decode: true,
+            pool: None,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Per-call pool resolution: the attached handle if any, otherwise
+    /// the shared global pool. Never constructs a pool (so per-request
+    /// cold paths cannot regress into per-call spawns); the
+    /// `encode_threads` hint is honored at *setup boundaries* via
+    /// [`JobConfig::resolve_pool`], and on the cold path by capping the
+    /// task split instead ([`crate::coding::Encoder::encode_capped`]).
+    pub fn compute_pool(&self) -> PoolHandle {
+        match &self.pool {
+            Some(p) => Arc::clone(p),
+            None => Arc::clone(WorkPool::global()),
+        }
+    }
+
+    /// Setup-boundary pool resolution (session build, prepared-job
+    /// construction): explicit handle first, then the `encode_threads`
+    /// sizing hint — a dedicated pool built **once** for the session /
+    /// prepared job and reused by every batch — then the shared global
+    /// pool. This is what keeps a pre-pool `JobConfig { encode_threads:
+    /// 2, .. }` bounding CPU use exactly as it used to.
+    pub fn resolve_pool(&self) -> PoolHandle {
+        match &self.pool {
+            Some(p) => Arc::clone(p),
+            None if self.encode_threads > 0 => {
+                Arc::new(WorkPool::new(self.encode_threads))
+            }
+            None => Arc::clone(WorkPool::global()),
         }
     }
 }
@@ -121,10 +169,18 @@ pub(crate) fn run_job_impl(
     let per_worker = alloc.per_worker_loads(spec);
     let n: usize = per_worker.iter().sum();
 
-    // Encode & chunk.
+    // Encode & chunk (on the job's pool — no per-call thread spawns; an
+    // `encode_threads` cap bounds the task split rather than building a
+    // pool per call).
     let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
     let encoder = Encoder::new(gen.clone());
-    let coded = encoder.encode_with_threads(a, cfg.encode_threads)?;
+    let pool = cfg.compute_pool();
+    let streams = if cfg.encode_threads > 0 {
+        cfg.encode_threads
+    } else {
+        pool.threads()
+    };
+    let coded = encoder.encode_capped(a, &pool, streams)?;
     let chunks = encoder.chunk(&coded, &per_worker)?;
 
     // Straggle injection.

@@ -15,7 +15,11 @@
 //!
 //! Serving loops go through the [`prepared`] fast path: a [`PreparedJob`]
 //! owns the generator, encoded chunks, and factorization-cached decoder,
-//! so steady-state batches pay only straggle + collect + solve.
+//! so steady-state batches pay only straggle + collect + solve — with
+//! every parallel kernel on a persistent [`crate::runtime::pool::WorkPool`]
+//! (one per session, shareable via [`SessionBuilder::pool`]) and every
+//! big per-batch buffer reused ([`ServeOutcome`]'s `steady_allocs`
+//! measures that steady-state batches allocate nothing).
 //!
 //! Long-lived streams face failures and drift; the [`failures`] module
 //! scripts them (deaths, machine slowdowns, group drift) and

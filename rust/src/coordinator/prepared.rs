@@ -34,6 +34,7 @@ use crate::coordinator::master::{
 };
 use crate::coordinator::{Compute, StragglerInjector};
 use crate::model::ClusterSpec;
+use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -89,9 +90,30 @@ pub struct PreparedJob {
     /// Re-chunk (re-allocation) passes performed since construction.
     rechunks: u64,
     decoder: Decoder,
-    /// Reusable collection buffers (row support + per-request columns).
+    /// The persistent compute pool encode/decode kernels run on (resolved
+    /// once from [`JobConfig::compute_pool`]).
+    pool: PoolHandle,
+    /// Reusable collection buffers (row support + per-request columns) —
+    /// the worker-output arena.
     rows_buf: Vec<usize>,
     cols_buf: Vec<Vec<f64>>,
+    /// Reusable straggle-draw buffer for [`PreparedJob::run_batch`]
+    /// (redrawn in place per batch; `None` until the first batch).
+    injector_scratch: Option<StragglerInjector>,
+    /// Reusable sort buffer for the analytic-completion computation.
+    completion_order: Vec<usize>,
+    /// Reusable request-dispatch arena: reclaimed via `Arc::try_unwrap`
+    /// once the previous batch's stragglers have drained.
+    xs_slot: Option<Arc<Vec<Vec<f64>>>>,
+    /// High-water-mark parking lots for inner buffers evicted when a
+    /// batch shrinks (arrival batches vary in size; without these, every
+    /// smaller batch would drop sized buffers a later bigger batch then
+    /// re-allocates).
+    xs_spare: Vec<Vec<f64>>,
+    cols_spare: Vec<Vec<f64>>,
+    /// Scratch-arena allocation/grow events (see
+    /// [`PreparedJob::scratch_grows`]).
+    grows: u64,
 }
 
 impl PreparedJob {
@@ -118,12 +140,17 @@ impl PreparedJob {
         let gen =
             Generator::new(cfg.generator, n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
         let encoder = Encoder::new(gen.clone());
-        let coded = encoder.encode_with_threads(a, cfg.encode_threads)?;
+        // Setup boundary: honors the `encode_threads` hint by building a
+        // dedicated pool once for this job's whole lifetime.
+        let pool = cfg.resolve_pool();
+        let coded = encoder.encode_on(a, &pool)?;
         let chunks = encoder
             .chunk(&coded, &per_worker)?
             .into_iter()
             .map(Arc::new)
             .collect();
+        let mut decoder = Decoder::with_cache_capacity(gen, cfg.decode_cache);
+        decoder.set_pool(Some(Arc::clone(&pool)));
         Ok(PreparedJob {
             spec: spec.clone(),
             cfg: cfg.clone(),
@@ -134,10 +161,35 @@ impl PreparedJob {
             coded,
             chunks,
             rechunks: 0,
-            decoder: Decoder::with_cache_capacity(gen, cfg.decode_cache),
+            decoder,
+            pool,
             rows_buf: Vec::new(),
             cols_buf: Vec::new(),
+            injector_scratch: None,
+            completion_order: Vec::new(),
+            xs_slot: None,
+            xs_spare: Vec::new(),
+            cols_spare: Vec::new(),
+            grows: 0,
         })
+    }
+
+    /// The compute pool this job's kernels run on.
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
+    }
+
+    /// Scratch-arena allocation/grow events since construction — one per
+    /// batch that had to allocate or enlarge a big per-batch buffer (the
+    /// request-dispatch arena, the straggle-draw buffer, the collection
+    /// buffers, or the decoder's RHS/solve staging). The first batch sizes
+    /// everything; a steady-state stream holds this flat afterwards, which
+    /// is the measured invariant behind
+    /// [`crate::coordinator::ServeOutcome`]'s `steady_allocs` (mirroring
+    /// the `encodes == 1` pattern: counted where the buffers live, not
+    /// declared).
+    pub fn scratch_grows(&self) -> u64 {
+        self.grows + self.decoder.scratch_grows()
     }
 
     /// Code length `n` actually used.
@@ -201,16 +253,73 @@ impl PreparedJob {
         compute: Arc<dyn Compute>,
         batch_seed: u64,
     ) -> Result<Vec<JobReport>> {
-        let injector = StragglerInjector::sample(
+        // Redraw the straggle realization into the reusable injector —
+        // bit-identical to a fresh sample, no per-batch allocation after
+        // the first batch.
+        let mut injector = match self.injector_scratch.take() {
+            Some(inj) => inj,
+            None => {
+                self.grows += 1;
+                StragglerInjector::sample(
+                    &self.spec,
+                    self.cfg.model,
+                    &self.per_worker,
+                    self.cfg.time_scale,
+                    batch_seed ^ STRAGGLE_SEED_TAG,
+                )?
+            }
+        };
+        injector.resample(
             &self.spec,
             self.cfg.model,
             &self.per_worker,
             self.cfg.time_scale,
             batch_seed ^ STRAGGLE_SEED_TAG,
-        )?
-        .with_dead(self.cfg.dead_workers.iter().copied());
-        self.run_batch_injected(requests, compute, &injector)
-            .map(|(reports, _)| reports)
+        )?;
+        injector.set_dead(self.cfg.dead_workers.iter().copied());
+        let result = self.run_batch_injected(requests, compute, &injector);
+        self.injector_scratch = Some(injector);
+        result.map(|(reports, _)| reports)
+    }
+
+    /// Stage the batch's request vectors in the reusable dispatch arena.
+    ///
+    /// Worker threads hold the returned `Arc` while they sleep out their
+    /// straggle delays, so the buffer cannot simply be overwritten — it is
+    /// *reclaimed* via `Arc::try_unwrap` at the next batch once every
+    /// straggler has dropped its clone. Steady state (same-shaped batches,
+    /// stragglers drained between batches) then touches no allocator; a
+    /// straggler still alive from the previous batch forces one fresh
+    /// allocation, which is counted, not hidden.
+    fn stage_requests(&mut self, requests: &[Vec<f64>]) -> Arc<Vec<Vec<f64>>> {
+        let mut buf = match self.xs_slot.take().map(Arc::try_unwrap) {
+            Some(Ok(v)) => v,
+            _ => {
+                self.grows += 1;
+                Vec::new()
+            }
+        };
+        if buf.capacity() < requests.len() {
+            self.grows += 1;
+        }
+        // Shrink by parking sized inner buffers (a later bigger batch
+        // reclaims them); grow from the parking lot before the allocator.
+        while buf.len() > requests.len() {
+            self.xs_spare.push(buf.pop().expect("len checked"));
+        }
+        while buf.len() < requests.len() {
+            buf.push(self.xs_spare.pop().unwrap_or_default());
+        }
+        let mut inner_grew = false;
+        for (dst, src) in buf.iter_mut().zip(requests) {
+            inner_grew |= dst.capacity() < src.len();
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        self.grows += u64::from(inner_grew);
+        let arc = Arc::new(buf);
+        self.xs_slot = Some(Arc::clone(&arc));
+        arc
     }
 
     /// [`PreparedJob::run_batch`] with an explicit straggle realization —
@@ -237,9 +346,13 @@ impl PreparedJob {
         }
         let b = requests.len();
         let k = self.spec.k;
-        let model_latency = injector.analytic_completion(&self.per_worker, k);
+        let model_latency = injector.analytic_completion_with(
+            &self.per_worker,
+            k,
+            &mut self.completion_order,
+        );
 
-        let xs_arc: Arc<Vec<Vec<f64>>> = Arc::new(requests.to_vec());
+        let xs_arc = self.stage_requests(requests);
         let (tx, rx) = mpsc::channel::<BatchReply>();
         let start = Instant::now();
         for chunk in &self.chunks {
@@ -268,12 +381,28 @@ impl PreparedJob {
         }
         drop(tx); // master holds only the receiver
 
-        // Collect the shared row support until k rows.
+        // Collect the shared row support until k rows, into arenas
+        // reserved to the hard bound (`n` coded rows exist in total) so
+        // capacity is fixed up front instead of drifting with straggle
+        // realizations — after this block, collection itself can never
+        // allocate. A shrinking batch parks its surplus columns; a
+        // growing one reclaims them before touching the allocator.
+        let mut grew = self.rows_buf.capacity() < self.n;
         self.rows_buf.clear();
-        self.cols_buf.resize_with(b, Vec::new);
-        for col in self.cols_buf.iter_mut() {
-            col.clear();
+        self.rows_buf.reserve(self.n);
+        while self.cols_buf.len() > b {
+            self.cols_spare
+                .push(self.cols_buf.pop().expect("len checked"));
         }
+        while self.cols_buf.len() < b {
+            self.cols_buf.push(self.cols_spare.pop().unwrap_or_default());
+        }
+        for col in self.cols_buf.iter_mut() {
+            grew |= col.capacity() < self.n;
+            col.clear();
+            col.reserve(self.n);
+        }
+        self.grows += u64::from(grew);
         let mut workers_used = 0usize;
         let mut observed = Vec::new();
         while self.rows_buf.len() < k {
@@ -467,6 +596,41 @@ mod tests {
         assert!(prepared.rechunk(&[1, 2, 3]).is_err());
         assert!(prepared.rechunk(&[n; 10]).is_err());
         assert!(prepared.rechunk(&[1; 10]).is_err());
+    }
+
+    #[test]
+    fn steady_state_batches_do_not_grow_scratch() {
+        // The allocation-free hot-path invariant, measured: after the
+        // first batch sizes the arenas (and its stragglers drain so the
+        // dispatch Arc can be reclaimed), same-shaped batches perform
+        // zero big-buffer allocations.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(76);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut cfg = fast_cfg();
+        cfg.verify_decode = false;
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let requests: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..8).map(|_| rng.normal()).collect())
+            .collect();
+        let drain = std::time::Duration::from_millis(60);
+        for seed in 0..2u64 {
+            prepared.run_batch(&requests, Arc::new(NativeCompute), seed).unwrap();
+            std::thread::sleep(drain); // let stragglers release the Arc
+        }
+        let warmed = prepared.scratch_grows();
+        assert!(warmed > 0, "first batch must have sized the arenas");
+        for seed in 2..8u64 {
+            prepared.run_batch(&requests, Arc::new(NativeCompute), seed).unwrap();
+            std::thread::sleep(drain);
+        }
+        assert_eq!(
+            prepared.scratch_grows(),
+            warmed,
+            "steady-state batches allocated big buffers"
+        );
+        assert_eq!(prepared.encode_count(), 1);
     }
 
     #[test]

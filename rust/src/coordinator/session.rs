@@ -80,6 +80,7 @@ use crate::coordinator::{
 };
 use crate::math::Rng;
 use crate::model::ClusterSpec;
+use crate::runtime::pool::PoolHandle;
 use crate::workload::ArrivalProcess;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -167,6 +168,15 @@ pub struct ServeOutcome {
     /// Encode passes after setup — the adaptation invariant: stays 0, no
     /// matter how many times the stream re-allocates.
     pub post_setup_encodes: u64,
+    /// Scratch-arena allocation/grow events after the first batch of a
+    /// prepared stream (the first batch sizes the arenas) — the
+    /// allocation-free hot-path invariant, measured from
+    /// [`crate::coordinator::PreparedJob::scratch_grows`] exactly like
+    /// `encodes` is measured from the encoder's call counter: a
+    /// steady-state stream holds this at **0** (no big per-batch buffer —
+    /// request staging, straggle draws, collection columns, decode RHS —
+    /// is allocated after warm-up).
+    pub steady_allocs: u64,
     /// The cluster parameters the loop believed at the end (arrivals mode;
     /// differs from the spec only after adaptive re-solves).
     pub assumed_spec: Option<ClusterSpec>,
@@ -204,6 +214,7 @@ impl ServeOutcome {
             reallocations: 0,
             suspected_dead: Vec::new(),
             post_setup_encodes: 0,
+            steady_allocs: 0,
             assumed_spec: None,
         }
     }
@@ -221,9 +232,22 @@ pub struct SessionBuilder {
     scenario: FailureScenario,
     adaptive: Option<AdaptiveServeConfig>,
     compute: Option<Arc<dyn Compute>>,
+    pool: Option<PoolHandle>,
 }
 
 impl SessionBuilder {
+    /// Share an existing compute pool with this session (several sessions
+    /// can serve off one pool — worker threads are spawned once, at pool
+    /// construction, never per session or per batch). Without this, the
+    /// session resolves a pool at build time via
+    /// [`JobConfig::resolve_pool`]: a dedicated
+    /// [`crate::runtime::pool::WorkPool`] of [`JobConfig::encode_threads`]
+    /// workers when that hint is nonzero, the shared global pool
+    /// otherwise.
+    pub fn pool(mut self, pool: PoolHandle) -> Self {
+        self.pool = Some(pool);
+        self
+    }
     /// Solve the allocation with this policy at build time (under
     /// `JobConfig::model`). Mutually exclusive with
     /// [`SessionBuilder::allocation`].
@@ -289,7 +313,10 @@ impl SessionBuilder {
 
     /// Validate the configuration and produce a ready-to-serve
     /// [`Session`]: resolves the policy into an allocation, validates it
-    /// against the spec, and materializes Poisson arrival offsets.
+    /// against the spec, resolves the compute pool (explicit handle >
+    /// `JobConfig::pool` > `encode_threads` hint > global pool — built
+    /// once here and reused by every batch the session serves), and
+    /// materializes Poisson arrival offsets.
     pub fn build(self) -> Result<Session> {
         let a = self.data.ok_or_else(|| {
             Error::InvalidSpec(
@@ -323,9 +350,18 @@ impl SessionBuilder {
             }
         };
         alloc.validate(&self.spec)?;
+        // Resolve the session's compute pool once: every encode and
+        // decode of every batch runs on it (explicit handle first, then a
+        // JobConfig-attached one, then the encode_threads sizing hint,
+        // then the shared global pool).
+        let mut cfg = self.cfg;
+        if let Some(p) = self.pool {
+            cfg.pool = Some(p);
+        }
+        cfg.pool = Some(cfg.resolve_pool());
         let mode = match self.mode {
             Mode::PoissonArrivals { rate, max_batch } => {
-                let mut rng = Rng::new(self.cfg.seed ^ ARRIVAL_SEED_TAG);
+                let mut rng = Rng::new(cfg.seed ^ ARRIVAL_SEED_TAG);
                 let offsets = ArrivalProcess::Poisson { rate }
                     .times(self.requests.len(), &mut rng)?
                     .into_iter()
@@ -350,7 +386,7 @@ impl SessionBuilder {
             policy,
             a,
             requests: self.requests,
-            cfg: self.cfg,
+            cfg,
             mode,
             scenario: self.scenario,
             adaptive: self.adaptive,
@@ -393,7 +429,16 @@ impl Session {
             scenario: FailureScenario::none(),
             adaptive: None,
             compute: None,
+            pool: None,
         }
+    }
+
+    /// The compute pool this session's kernels run on (resolved at
+    /// [`SessionBuilder::build`]). Introspection hook: tests pin that two
+    /// sessions sharing a handle really share workers and that serving
+    /// never spawns more.
+    pub fn pool(&self) -> &PoolHandle {
+        self.cfg.pool.as_ref().expect("pool resolved at build")
     }
 
     /// The allocation this session serves under (solved from the policy at
@@ -545,6 +590,8 @@ impl Session {
             reallocations: 0,
             suspected_dead: Vec::new(),
             post_setup_encodes: prepared.encode_count().saturating_sub(1),
+            // One batch: warm-up is the whole serve, nothing after it.
+            steady_allocs: 0,
             assumed_spec: None,
         })
     }
@@ -579,6 +626,7 @@ impl Session {
             reallocations: rep.reallocations,
             suspected_dead: rep.suspected_dead,
             post_setup_encodes: rep.post_setup_encodes,
+            steady_allocs: rep.steady_allocs,
             assumed_spec: Some(rep.assumed_spec),
         })
     }

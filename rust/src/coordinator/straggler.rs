@@ -32,6 +32,28 @@ impl StragglerInjector {
         time_scale: f64,
         seed: u64,
     ) -> Result<StragglerInjector> {
+        let mut inj = StragglerInjector {
+            delays: Vec::with_capacity(per_worker_loads.len()),
+            dead: BTreeSet::new(),
+            time_scale,
+        };
+        inj.resample(spec, model, per_worker_loads, time_scale, seed)?;
+        Ok(inj)
+    }
+
+    /// Redraw this injector in place — the serving hot path's reuse hook.
+    /// Draws exactly what [`StragglerInjector::sample`] would (same RNG
+    /// stream, same delays, bit for bit) but into the existing delay
+    /// buffer, clearing the dead set, so a per-batch realization costs no
+    /// allocation after the first batch.
+    pub fn resample(
+        &mut self,
+        spec: &ClusterSpec,
+        model: LatencyModel,
+        per_worker_loads: &[usize],
+        time_scale: f64,
+        seed: u64,
+    ) -> Result<()> {
         if per_worker_loads.len() != spec.total_workers() {
             return Err(Error::InvalidSpec(format!(
                 "{} loads for {} workers",
@@ -42,8 +64,10 @@ impl StragglerInjector {
         if !(time_scale > 0.0) {
             return Err(Error::InvalidSpec("time_scale must be positive".into()));
         }
+        self.time_scale = time_scale;
+        self.dead.clear();
         let mut rng = Rng::new(seed);
-        let mut delays = Vec::with_capacity(per_worker_loads.len());
+        self.delays.clear();
         let mut w = 0usize;
         for g in &spec.groups {
             for _ in 0..g.n {
@@ -51,7 +75,7 @@ impl StragglerInjector {
                     // Drained worker (e.g. after an adaptive re-chunk):
                     // nothing dispatched, so it never completes. Dispatch
                     // loops skip it; `analytic_completion` ignores it.
-                    delays.push(f64::INFINITY);
+                    self.delays.push(f64::INFINITY);
                 } else {
                     let dist = RuntimeDist::new(
                         model,
@@ -60,28 +84,36 @@ impl StragglerInjector {
                         g.mu,
                         g.alpha,
                     );
-                    delays.push(dist.sample(&mut rng));
+                    self.delays.push(dist.sample(&mut rng));
                 }
                 w += 1;
             }
         }
-        Ok(StragglerInjector {
-            delays,
-            dead: BTreeSet::new(),
-            time_scale,
-        })
+        Ok(())
     }
 
     /// Mark workers as permanently failed (they never respond).
     pub fn with_dead(mut self, dead: impl IntoIterator<Item = usize>) -> Self {
-        self.dead = dead.into_iter().collect();
+        self.set_dead(dead);
         self
+    }
+
+    /// In-place form of [`StragglerInjector::with_dead`].
+    pub fn set_dead(&mut self, dead: impl IntoIterator<Item = usize>) {
+        self.dead.clear();
+        self.dead.extend(dead);
     }
 
     /// Multiply each worker's sampled delay by a per-worker slowdown
     /// factor (`1.0` = unchanged) — the scenario layer's hook for
     /// machine-level slowdowns on top of the group-level distribution.
     pub fn with_slowdowns(mut self, factors: &[f64]) -> Result<Self> {
+        self.apply_slowdowns(factors)?;
+        Ok(self)
+    }
+
+    /// In-place form of [`StragglerInjector::with_slowdowns`].
+    pub fn apply_slowdowns(&mut self, factors: &[f64]) -> Result<()> {
         if factors.len() != self.delays.len() {
             return Err(Error::InvalidSpec(format!(
                 "{} slowdown factors for {} workers",
@@ -97,7 +129,7 @@ impl StragglerInjector {
         for (d, f) in self.delays.iter_mut().zip(factors) {
             *d *= f;
         }
-        Ok(self)
+        Ok(())
     }
 
     /// Number of workers.
@@ -129,12 +161,26 @@ impl StragglerInjector {
     /// the instant cumulative collected load first reaches `k`, given the
     /// per-worker loads (dead and zero-load workers excluded).
     pub fn analytic_completion(&self, per_worker_loads: &[usize], k: usize) -> Option<f64> {
-        let mut order: Vec<usize> = (0..self.delays.len())
-            .filter(|&w| !self.is_dead(w) && per_worker_loads[w] > 0)
-            .collect();
+        self.analytic_completion_with(per_worker_loads, k, &mut Vec::new())
+    }
+
+    /// [`StragglerInjector::analytic_completion`] with a caller-provided
+    /// sort buffer, so per-batch serving loops avoid the `O(N)` allocation
+    /// (the buffer is cleared and refilled; contents on entry are ignored).
+    pub fn analytic_completion_with(
+        &self,
+        per_worker_loads: &[usize],
+        k: usize,
+        order: &mut Vec<usize>,
+    ) -> Option<f64> {
+        order.clear();
+        order.extend(
+            (0..self.delays.len())
+                .filter(|&w| !self.is_dead(w) && per_worker_loads[w] > 0),
+        );
         order.sort_by(|&a, &b| self.delays[a].total_cmp(&self.delays[b]));
         let mut cum = 0usize;
-        for w in order {
+        for &w in order.iter() {
             cum += per_worker_loads[w];
             if cum >= k {
                 return Some(self.delays[w]);
@@ -169,6 +215,48 @@ mod tests {
         for w in 0..10 {
             assert_eq!(a.model_delay(w), b.model_delay(w));
         }
+    }
+
+    #[test]
+    fn resample_matches_fresh_sample_and_reuses_buffer() {
+        let loads = vec![20usize; 10];
+        let mut inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 5)
+                .unwrap()
+                .with_dead([1]);
+        let cap = inj.delays.capacity();
+        // Redraw with a different seed: identical to a fresh sample, dead
+        // set cleared, no reallocation.
+        inj.resample(&spec(), LatencyModel::A, &loads, 0.5, 9).unwrap();
+        let fresh =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 0.5, 9)
+                .unwrap();
+        for w in 0..10 {
+            assert_eq!(
+                inj.model_delay(w).to_bits(),
+                fresh.model_delay(w).to_bits(),
+                "worker {w}"
+            );
+            assert_eq!(inj.wall_delay(w), fresh.wall_delay(w));
+        }
+        assert!(!inj.is_dead(1), "resample must clear the dead set");
+        assert_eq!(inj.delays.capacity(), cap, "resample reallocated");
+        // Invalid arguments still rejected in place.
+        assert!(inj.resample(&spec(), LatencyModel::A, &loads[..9], 1.0, 5).is_err());
+        assert!(inj.resample(&spec(), LatencyModel::A, &loads, 0.0, 5).is_err());
+    }
+
+    #[test]
+    fn completion_scratch_variant_matches() {
+        let loads = vec![30usize; 10];
+        let inj =
+            StragglerInjector::sample(&spec(), LatencyModel::A, &loads, 1.0, 8).unwrap();
+        let want = inj.analytic_completion(&loads, 100);
+        let mut scratch = Vec::new();
+        assert_eq!(inj.analytic_completion_with(&loads, 100, &mut scratch), want);
+        let cap = scratch.capacity();
+        assert_eq!(inj.analytic_completion_with(&loads, 100, &mut scratch), want);
+        assert_eq!(scratch.capacity(), cap);
     }
 
     #[test]

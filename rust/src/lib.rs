@@ -58,6 +58,11 @@
 //!   [`allocation::Policy`] trait + registry;
 //! - a real-valued systematic **MDS coding layer** (Vandermonde generator,
 //!   encoder, any-k decoder) with its own dense linear algebra ([`coding`]);
+//! - a **persistent compute pool** ([`runtime::pool`]) every parallel hot
+//!   path (blocked matmul, encode, multi-RHS decode, Monte-Carlo sweeps)
+//!   runs on — fixed worker threads, deterministic index-ordered
+//!   reduction (bit-identical results at any pool size), no per-call
+//!   thread spawns;
 //! - a **Monte-Carlo cluster simulator** reproducing Figs. 4–9 ([`sim`]);
 //! - a **workload layer** modelling sustained job traffic — arrival
 //!   processes, FIFO queueing, and throughput/utilization/sojourn metrics

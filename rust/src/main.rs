@@ -779,12 +779,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     match outcome.makespan {
         Some(makespan) => println!(
             "makespan {:.1} ms, encode passes {}, rechunks {}, \
-             decode cache {}h/{}m",
+             decode cache {}h/{}m, steady-state allocs {}",
             makespan.as_secs_f64() * 1e3,
             outcome.encodes,
             outcome.rechunks,
             outcome.decode_cache_hits,
             outcome.decode_cache_misses,
+            outcome.steady_allocs,
         ),
         None => println!("encode passes {}", outcome.encodes),
     }

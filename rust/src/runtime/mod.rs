@@ -17,6 +17,15 @@
 //! Manifest parsing is always available; the PJRT `Runtime` itself (and
 //! everything touching the `xla` crate) is gated behind the `xla` cargo
 //! feature, since it needs the native `xla_extension` library at link time.
+//!
+//! The other half of this module is the CPU-side execution substrate: the
+//! persistent [`pool::WorkPool`] every parallel hot path (blocked matmul,
+//! encode, multi-RHS decode, Monte-Carlo sweeps) runs on instead of
+//! spawning threads per call.
+
+pub mod pool;
+
+pub use pool::{PoolHandle, WorkPool};
 
 #[cfg(feature = "xla")]
 use crate::coding::Matrix;

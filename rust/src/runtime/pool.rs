@@ -1,0 +1,466 @@
+//! Persistent compute pool: the crate-wide replacement for per-call
+//! `std::thread::scope` spawns.
+//!
+//! # Why a pool
+//!
+//! Every hot path that used to parallelize — the blocked matmul behind
+//! encode, the Monte-Carlo sweeps behind the figures, the multi-RHS decode
+//! — paid a fresh OS-thread spawn per *call*. That cost (tens of µs per
+//! thread) is invisible for one big encode but dominates exactly the small
+//! per-call work items the paper's optimal allocation produces for slow
+//! groups, and a serving loop pays it once per batch, forever. A
+//! [`WorkPool`] spawns its workers **once**; after that a parallel region
+//! is one channel push per helper plus an atomic fetch-add per task.
+//!
+//! # Determinism
+//!
+//! The pool never decides *what* the work units are — callers fix the task
+//! partition (row ranges, RNG stream indices, column chunks) up front, and
+//! the pool only executes it. Results are reduced in **task-index order**
+//! ([`WorkPool::run_collect`] slot `i` belongs to task `i`;
+//! [`WorkPool::run_chunks_mut`] chunk `i` is the `i`-th slice), so outputs
+//! are byte-identical no matter how many workers the pool has, which
+//! worker ran which task, or in what order tasks finished. This is the
+//! invariant the bit-identity suite (`rust/tests/pool_identity.rs`) pins
+//! across pool sizes {1, 2, 7, 16}.
+//!
+//! # Scheduling ("work-stealing-lite")
+//!
+//! Tasks of one parallel region are claimed from a shared atomic cursor —
+//! a degenerate single-queue form of work stealing: an idle worker always
+//! takes the next undone task, so uneven task costs self-balance without
+//! any per-worker deques. The **caller participates**: it claims tasks in
+//! the same loop as the workers, which (a) keeps a 1-worker pool exactly
+//! as fast as the single-threaded code and (b) makes nested use safe — a
+//! pool task that opens its own parallel region drains that region itself
+//! if every worker is busy, so the pool cannot deadlock on itself.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A shareable handle to a [`WorkPool`] — what gets threaded through
+/// [`crate::coordinator::JobConfig`] and
+/// [`crate::coordinator::SessionBuilder::pool`] so one pool serves every
+/// batch of a session (or several sessions at once).
+pub type PoolHandle = Arc<WorkPool>;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue state shared between the pool handle and its worker threads.
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    available: Condvar,
+    /// Tasks executed across all parallel regions (introspection/tests).
+    tasks_run: AtomicU64,
+    /// Parallel regions executed (introspection/tests).
+    scopes_run: AtomicU64,
+}
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A fixed-size persistent worker pool executing scoped task batches.
+///
+/// Construction spawns `threads - 1` background workers (the calling
+/// thread is always the `threads`-th execution context of a parallel
+/// region); `Drop` shuts them down and joins. Most code should share the
+/// process-wide [`WorkPool::global`] pool rather than constructing one.
+pub struct WorkPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for WorkPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkPool")
+            .field("threads", &self.threads)
+            .field("spawned_workers", &self.workers.len())
+            .field("tasks_run", &self.tasks_run())
+            .finish()
+    }
+}
+
+/// State of one `scope_run` parallel region, shared with helper jobs.
+///
+/// `data`/`call` form a lifetime-erased pointer to the caller's closure
+/// (a monomorphized trampoline instead of a `dyn` fat pointer, so no
+/// lifetime gymnastics). Soundness rests on two facts: (1) `scope_run`
+/// does not return until `done == tasks` (the completion latch), and a
+/// task index is only ever claimed before that point, so every call
+/// through `data` happens while the closure is alive; (2) a helper job
+/// that is dequeued *after* the region completed claims an index `>=
+/// tasks` and exits without touching `data` (holding the stale raw
+/// pointer is fine — it is never dereferenced).
+struct ScopeState {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    tasks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    finished: Mutex<bool>,
+    cv: Condvar,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced under the latch
+// discipline documented on `ScopeState`; everything else is Sync.
+unsafe impl Send for ScopeState {}
+unsafe impl Sync for ScopeState {}
+
+/// Monomorphized trampoline: reconstitute the erased closure and call it.
+///
+/// # Safety
+/// `p` must point to a live `F` (guaranteed by the `ScopeState` latch).
+unsafe fn call_closure<F: Fn(usize) + Sync>(p: *const (), i: usize) {
+    (*(p as *const F))(i)
+}
+
+/// Claim-and-run loop shared by the calling thread and helper jobs.
+fn run_scope_tasks(st: &ScopeState) {
+    loop {
+        let i = st.next.fetch_add(1, Ordering::Relaxed);
+        if i >= st.tasks {
+            return;
+        }
+        // SAFETY: see `ScopeState` — a claimed index < tasks keeps the
+        // region (and the closure) alive until `done` is counted below.
+        let result =
+            catch_unwind(AssertUnwindSafe(|| unsafe { (st.call)(st.data, i) }));
+        if let Err(payload) = result {
+            let mut slot = st.panic.lock().expect("panic slot poisoned");
+            slot.get_or_insert(payload);
+        }
+        if st.done.fetch_add(1, Ordering::AcqRel) + 1 == st.tasks {
+            let mut fin = st.finished.lock().expect("latch poisoned");
+            *fin = true;
+            st.cv.notify_all();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-index writers can be captured by a
+/// `Sync` closure. Callers guarantee disjointness.
+struct SendPtr<T>(*mut T);
+// SAFETY: used only for writes to caller-guaranteed-disjoint indices
+// while the owning buffer is pinned by a blocked `scope_run` caller.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl WorkPool {
+    /// Build a pool with `threads` execution contexts (`0` = available
+    /// parallelism). Spawns `threads - 1` background workers; the thread
+    /// that opens a parallel region is always the remaining context, so
+    /// `WorkPool::new(1)` spawns nothing and runs everything inline.
+    pub fn new(threads: usize) -> WorkPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            tasks_run: AtomicU64::new(0),
+            scopes_run: AtomicU64::new(0),
+        });
+        let workers = (0..threads.saturating_sub(1))
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hetcoded-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkPool { shared, workers, threads }
+    }
+
+    /// The process-wide shared pool, sized to available parallelism and
+    /// built on first use. Sessions without an explicit
+    /// [`PoolHandle`] run here; it is never torn down.
+    pub fn global() -> &'static PoolHandle {
+        static GLOBAL: OnceLock<PoolHandle> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(WorkPool::new(0)))
+    }
+
+    /// The global pool as a plain reference — shorthand for kernel call
+    /// sites that take `&WorkPool` rather than a handle.
+    pub fn global_ref() -> &'static WorkPool {
+        WorkPool::global().as_ref()
+    }
+
+    /// Execution contexts (background workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Background worker threads actually spawned (`threads() - 1`). The
+    /// "no thread leak" introspection hook: this is fixed at construction
+    /// and never grows, no matter how many sessions share the pool.
+    pub fn spawned_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Tasks executed since construction (all parallel regions).
+    pub fn tasks_run(&self) -> u64 {
+        self.shared.tasks_run.load(Ordering::Relaxed)
+    }
+
+    /// Parallel regions executed since construction.
+    pub fn scopes_run(&self) -> u64 {
+        self.shared.scopes_run.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(0..tasks)` across the pool, blocking until every task has
+    /// completed. The calling thread participates; task panics are
+    /// propagated to the caller after the region drains. `f` fixes the
+    /// work partition — results must not depend on which worker runs which
+    /// task (the pool guarantees nothing about assignment, only that each
+    /// index runs exactly once).
+    pub fn scope_run<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        self.shared.scopes_run.fetch_add(1, Ordering::Relaxed);
+        self.shared.tasks_run.fetch_add(tasks as u64, Ordering::Relaxed);
+        let helpers = self.workers.len().min(tasks.saturating_sub(1));
+        if helpers == 0 {
+            // Inline fast path: nothing to coordinate with.
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        // Lifetime-erased; `scope_run` blocks on the latch below until
+        // all claimed tasks finish, so `f` outlives every call.
+        let state = Arc::new(ScopeState {
+            data: &f as *const F as *const (),
+            call: call_closure::<F>,
+            tasks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            finished: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            for _ in 0..helpers {
+                let st = Arc::clone(&state);
+                q.jobs.push_back(Box::new(move || run_scope_tasks(&st)));
+            }
+        }
+        // One wakeup per helper job pushed.
+        for _ in 0..helpers {
+            self.shared.available.notify_one();
+        }
+        run_scope_tasks(&state);
+        let mut fin = state.finished.lock().expect("latch poisoned");
+        while !*fin {
+            fin = state.cv.wait(fin).expect("latch poisoned");
+        }
+        drop(fin);
+        if let Some(payload) = state.panic.lock().expect("panic slot").take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Run `f(0..tasks)` and collect the return values **in task-index
+    /// order** — the deterministic reduction primitive (task `i`'s result
+    /// lands in slot `i` regardless of scheduling).
+    pub fn run_collect<T, F>(&self, tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None)
+            .take(tasks)
+            .collect();
+        let slots = SendPtr(out.as_mut_ptr());
+        self.scope_run(tasks, |i| {
+            let v = f(i);
+            // SAFETY: each task writes exactly its own index (disjoint),
+            // and `scope_run` keeps `out` pinned until every write lands.
+            unsafe { *slots.0.add(i) = Some(v) };
+        });
+        out.into_iter()
+            .map(|slot| slot.expect("pool task completed without a result"))
+            .collect()
+    }
+
+    /// Split `data` into `chunk_len`-sized pieces (last one shorter) and
+    /// run `f(chunk_index, chunk)` for each across the pool — the parallel
+    /// equivalent of `data.chunks_mut(chunk_len).enumerate()`, with chunk
+    /// `i` always the `i`-th slice so writers stay deterministic.
+    pub fn run_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let tasks = n.div_ceil(chunk_len);
+        let base = SendPtr(data.as_mut_ptr());
+        self.scope_run(tasks, |i| {
+            let start = i * chunk_len;
+            let len = chunk_len.min(n - start);
+            // SAFETY: chunks are disjoint by construction and `data` is
+            // pinned by the blocked `scope_run` caller.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+            f(i, chunk);
+        });
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).expect("pool queue poisoned");
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1usize, 2, 7, 16] {
+            let pool = WorkPool::new(threads);
+            let hits: Vec<AtomicUsize> =
+                (0..100).map(|_| AtomicUsize::new(0)).collect();
+            pool.scope_run(100, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+            assert_eq!(pool.tasks_run(), 100);
+            assert_eq!(pool.scopes_run(), 1);
+        }
+    }
+
+    #[test]
+    fn collect_is_index_ordered_for_any_pool_size() {
+        let expect: Vec<usize> = (0..57).map(|i| i * i).collect();
+        for threads in [1usize, 2, 7, 16] {
+            let pool = WorkPool::new(threads);
+            let got = pool.run_collect(57, |i| i * i);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_partitions_disjointly() {
+        let mut data = vec![0u32; 103];
+        let pool = WorkPool::new(5);
+        pool.run_chunks_mut(&mut data, 10, |ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + ci as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1 + (i / 10) as u32, "index {i}");
+        }
+        // Empty data and zero tasks are no-ops.
+        pool.run_chunks_mut(&mut [] as &mut [u32], 4, |_, _| unreachable!());
+        pool.scope_run(0, |_| unreachable!());
+    }
+
+    #[test]
+    fn worker_count_is_fixed_and_reused() {
+        let pool = WorkPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.spawned_workers(), 3);
+        for _ in 0..50 {
+            pool.scope_run(8, |_| {});
+        }
+        // 50 regions later: same worker set, no spawn per call.
+        assert_eq!(pool.spawned_workers(), 3);
+        assert_eq!(pool.scopes_run(), 50);
+        assert_eq!(pool.tasks_run(), 400);
+    }
+
+    #[test]
+    fn single_context_pool_runs_inline() {
+        let pool = WorkPool::new(1);
+        assert_eq!(pool.spawned_workers(), 0);
+        let got = pool.run_collect(9, |i| i + 1);
+        assert_eq!(got, (1..=9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_regions_complete() {
+        // A pool task opening its own region must drain it even when every
+        // other worker is busy — the caller-participates rule.
+        let pool = WorkPool::new(2);
+        let sums = pool.run_collect(4, |i| {
+            let inner = pool.run_collect(3, |j| (i + 1) * (j + 1));
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(sums, vec![6, 12, 18, 24]);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_drain() {
+        let pool = WorkPool::new(3);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_run(10, |i| {
+                if i == 4 {
+                    panic!("task 4 exploded");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool survives the panic and keeps serving.
+        assert_eq!(pool.run_collect(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = Arc::as_ptr(WorkPool::global());
+        let b = Arc::as_ptr(WorkPool::global());
+        assert_eq!(a, b);
+        assert!(WorkPool::global().threads() >= 1);
+    }
+}

@@ -3,16 +3,19 @@
 //! Estimates the expected computation latency `E[T_{r:N}]` of §II-C: sample
 //! every worker's completion time from its shifted-exponential runtime
 //! distribution and record the instant the master has aggregated `k` coded
-//! rows. The engine is multi-threaded (deterministic per-thread RNG streams)
-//! because the paper's figures need `10^4` samples across dozens of sweep
-//! points.
+//! rows. The engine is multi-threaded — deterministic per-stream RNG
+//! splits executed on the persistent [`crate::runtime::pool::WorkPool`]
+//! (no thread spawns per call, summaries merged in stream order, results
+//! byte-identical at any pool size) — because the paper's figures need
+//! `10^4` samples across dozens of sweep points.
 
 pub mod montecarlo;
 pub mod schemes;
 
 pub use montecarlo::{
     latency_any_k, latency_any_k_detailed, latency_per_group, monte_carlo,
-    monte_carlo_scratch, AnyKSampler, GroupMaxSampler, SimConfig,
+    monte_carlo_scratch, monte_carlo_scratch_inner_on, AnyKSampler,
+    GroupMaxSampler, SimConfig,
 };
 pub use schemes::{
     scheme_allocation, simulate_policy, simulate_scheme, Scheme, SchemeResult,

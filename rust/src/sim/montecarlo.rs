@@ -2,6 +2,7 @@
 
 use crate::math::{Rng, Summary};
 use crate::model::{ClusterSpec, LatencyModel};
+use crate::runtime::pool::WorkPool;
 use crate::{Error, Result};
 
 /// Simulation configuration.
@@ -52,8 +53,42 @@ where
 }
 
 /// Like [`monte_carlo_scratch`] but optionally retaining every sample so the
-/// caller can read percentiles (tail-latency analysis).
+/// caller can read percentiles (tail-latency analysis). Runs on the shared
+/// global [`WorkPool`].
 pub fn monte_carlo_scratch_inner<S, I, F>(
+    cfg: &SimConfig,
+    keep_samples: bool,
+    init: I,
+    f: F,
+) -> Summary
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut Rng, &mut S) -> f64 + Sync,
+{
+    monte_carlo_scratch_inner_on(
+        WorkPool::global_ref(),
+        cfg,
+        keep_samples,
+        init,
+        f,
+    )
+}
+
+/// The Monte-Carlo engine on an explicit pool handle.
+///
+/// The sample *partition* is fixed by `cfg.threads` alone: stream `t` of
+/// `T = cfg.effective_threads()` draws its `samples/T (+1)` samples from
+/// the seed-derived RNG stream `seed ^ GOLDEN·(t+1)`, with per-stream
+/// scratch (the sampler's buffers) built once and reused across all of
+/// that stream's iterations. The pool only *executes* the streams —
+/// stream summaries are collected and merged in stream-index order
+/// ([`WorkPool::run_collect`]) — so for a fixed `cfg` the result is
+/// byte-identical on any pool size (the pool-identity suite pins this
+/// across pools of 1/2/7/16 workers). No threads are spawned per call:
+/// figure sweeps dispatch hundreds of these back-to-back onto the same
+/// persistent workers.
+pub fn monte_carlo_scratch_inner_on<S, I, F>(
+    pool: &WorkPool,
     cfg: &SimConfig,
     keep_samples: bool,
     init: I,
@@ -76,31 +111,26 @@ where
     }
     let per = cfg.samples / threads;
     let extra = cfg.samples % threads;
-    let mut total = new_summary();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let count = per + usize::from(t < extra);
-            let fref = &f;
-            let iref = &init;
-            let seed = cfg.seed;
-            handles.push(scope.spawn(move || {
-                // Derive an independent stream per thread.
-                let mut rng = Rng::new(
-                    seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1)),
-                );
-                let mut scratch = iref();
-                let mut s = new_summary();
-                for _ in 0..count {
-                    s.add(fref(&mut rng, &mut scratch));
-                }
-                s
-            }));
+    let seed = cfg.seed;
+    let summaries = pool.run_collect(threads, |t| {
+        // Derive an independent stream per task index (not per worker:
+        // the stream split is the deterministic unit, the pool worker
+        // that happens to run it is not).
+        let mut rng = Rng::new(
+            seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1)),
+        );
+        let count = per + usize::from(t < extra);
+        let mut scratch = init();
+        let mut s = new_summary();
+        for _ in 0..count {
+            s.add(f(&mut rng, &mut scratch));
         }
-        for h in handles {
-            total.merge(&h.join().expect("sim thread panicked"));
-        }
+        s
     });
+    let mut total = new_summary();
+    for s in &summaries {
+        total.merge(s);
+    }
     total
 }
 
@@ -483,6 +513,38 @@ mod tests {
         let a = latency_any_k(&spec, &loads, LatencyModel::A, &cfg).unwrap();
         let b = latency_any_k(&spec, &loads, LatencyModel::A, &cfg).unwrap();
         assert_eq!(a.mean(), b.mean());
+    }
+
+    #[test]
+    fn stream_split_is_pool_size_invariant() {
+        // cfg.threads fixes the deterministic stream partition; the pool
+        // only executes it. Any pool size must reproduce the same summary
+        // byte for byte.
+        use crate::runtime::pool::WorkPool;
+        let spec = ClusterSpec::paper_two_group(1000);
+        let loads = vec![2.0, 2.0];
+        let cfg = SimConfig { samples: 700, seed: 23, threads: 5 };
+        let base = AnyKSampler::new(&spec, &loads, LatencyModel::A).unwrap();
+        let reference = monte_carlo_scratch_inner_on(
+            &WorkPool::new(1),
+            &cfg,
+            false,
+            || base.clone(),
+            |rng, s: &mut AnyKSampler| s.sample(rng),
+        );
+        for pool_size in [2usize, 7, 16] {
+            let pool = WorkPool::new(pool_size);
+            let got = monte_carlo_scratch_inner_on(
+                &pool,
+                &cfg,
+                false,
+                || base.clone(),
+                |rng, s: &mut AnyKSampler| s.sample(rng),
+            );
+            assert_eq!(got.mean().to_bits(), reference.mean().to_bits());
+            assert_eq!(got.max().to_bits(), reference.max().to_bits());
+            assert_eq!(got.count(), reference.count());
+        }
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Pool-runtime acceptance suite (PR 5).
+//!
+//! Pins the two contracts the persistent compute pool must honor:
+//!
+//! 1. **Bit-identity**: every pooled kernel — matmul, encode, multi-RHS
+//!    decode, Monte-Carlo sweeps — produces byte-identical results across
+//!    pool sizes {1, 2, 7, 16}, because the deterministic work partition
+//!    and the index-ordered reduction are fixed by the caller, never by
+//!    scheduling.
+//! 2. **Pool reuse**: sessions share one pool without spawning threads per
+//!    session or per batch (worker count is fixed at pool construction),
+//!    and the steady-state serving loop performs zero big-buffer
+//!    allocations after warm-up (`ServeOutcome::steady_allocs == 0`,
+//!    measured, mirroring the `encodes == 1` pattern).
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use hetcoded::coordinator::{JobConfig, Mode, NativeCompute, Session};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use hetcoded::runtime::pool::WorkPool;
+use hetcoded::sim::{monte_carlo_scratch_inner_on, AnyKSampler, SimConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+const POOL_SIZES: [usize; 4] = [1, 2, 7, 16];
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn matmul_bit_identical_across_pool_sizes() {
+    // Includes a zero-heavy systematic-style matrix, the case where the
+    // register microkernel and the scalar fallback take different
+    // zero-skip paths.
+    let mut rng = Rng::new(1);
+    for (m, k, n) in [(67, 130, 96), (256, 128, 64), (4, 4, 4)] {
+        let a = Matrix::from_fn(m, k, |i, j| {
+            if (i + j) % 3 == 0 {
+                0.0
+            } else {
+                rng.normal()
+            }
+        });
+        let b = random_matrix(k, n, 2 + m as u64);
+        let reference = bits(&a.matmul_on(&b, &WorkPool::new(1)));
+        for threads in POOL_SIZES {
+            let pool = WorkPool::new(threads);
+            let got = bits(&a.matmul_on(&b, &pool));
+            assert_eq!(got, reference, "m={m} k={k} n={n} pool={threads}");
+        }
+    }
+}
+
+#[test]
+fn encode_bit_identical_across_pool_sizes() {
+    for kind in [GeneratorKind::SystematicRandom, GeneratorKind::Vandermonde] {
+        let gen = Generator::new(kind, 192, 128, 7).unwrap();
+        let a = random_matrix(128, 96, 3);
+        let enc = Encoder::new(gen);
+        let reference = bits(&enc.encode_on(&a, &WorkPool::new(1)).unwrap());
+        for threads in POOL_SIZES {
+            let pool = WorkPool::new(threads);
+            let got = bits(&enc.encode_on(&a, &pool).unwrap());
+            assert_eq!(got, reference, "{kind:?} pool={threads}");
+        }
+    }
+}
+
+#[test]
+fn decode_batch_bit_identical_across_pool_sizes() {
+    let (n, k, b) = (192usize, 128usize, 32usize);
+    let gen = Generator::new(GeneratorKind::SystematicRandom, n, k, 9).unwrap();
+    let mut rng = Rng::new(11);
+    let rows: Vec<usize> = (n - k..n).collect();
+    let columns: Vec<Vec<f64>> = (0..b)
+        .map(|_| (0..k).map(|_| rng.normal()).collect())
+        .collect();
+    let mut single = Decoder::new(gen.clone());
+    let reference = single.decode_batch(&rows, &columns).unwrap();
+    for threads in POOL_SIZES {
+        let mut dec = Decoder::new(gen.clone());
+        dec.set_pool(Some(Arc::new(WorkPool::new(threads))));
+        let got = dec.decode_batch(&rows, &columns).unwrap();
+        assert_eq!(got.len(), reference.len(), "pool={threads}");
+        for (c, (gc, rc)) in got.iter().zip(&reference).enumerate() {
+            let same = gc
+                .iter()
+                .zip(rc)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "pool={threads} column={c} diverged");
+        }
+    }
+}
+
+#[test]
+fn monte_carlo_bit_identical_across_pool_sizes() {
+    // cfg.threads fixes the deterministic stream split; the pool size is
+    // pure execution and must be invisible in the summary.
+    let spec = ClusterSpec::paper_two_group(1000);
+    let loads = vec![2.5, 2.5];
+    let base = AnyKSampler::new(&spec, &loads, LatencyModel::A).unwrap();
+    for stream_count in [1usize, 3, 8] {
+        let cfg = SimConfig { samples: 900, seed: 31, threads: stream_count };
+        let reference = monte_carlo_scratch_inner_on(
+            &WorkPool::new(1),
+            &cfg,
+            false,
+            || base.clone(),
+            |rng, s: &mut AnyKSampler| s.sample(rng),
+        );
+        for threads in POOL_SIZES {
+            let pool = WorkPool::new(threads);
+            let got = monte_carlo_scratch_inner_on(
+                &pool,
+                &cfg,
+                false,
+                || base.clone(),
+                |rng, s: &mut AnyKSampler| s.sample(rng),
+            );
+            assert_eq!(
+                got.mean().to_bits(),
+                reference.mean().to_bits(),
+                "streams={stream_count} pool={threads}"
+            );
+            assert_eq!(got.count(), reference.count());
+            assert_eq!(got.max().to_bits(), reference.max().to_bits());
+        }
+    }
+}
+
+fn serving_spec() -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap()
+}
+
+#[test]
+fn sessions_share_one_pool_without_thread_leak() {
+    let spec = serving_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let a = random_matrix(64, 8, 21);
+    let mut rng = Rng::new(22);
+    let requests: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    let cfg = JobConfig { time_scale: 0.002, ..Default::default() };
+
+    let pool = Arc::new(WorkPool::new(3));
+    assert_eq!(pool.spawned_workers(), 2);
+    let build = |seed: u64| {
+        Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(requests.clone())
+            .config(JobConfig { seed, ..cfg.clone() })
+            .compute(Arc::new(NativeCompute))
+            .mode(Mode::Batched)
+            .pool(Arc::clone(&pool))
+            .build()
+            .unwrap()
+    };
+    let s1 = build(100);
+    let s2 = build(200);
+    // Both sessions resolved to the same pool object.
+    assert!(Arc::ptr_eq(s1.pool(), &pool));
+    assert!(Arc::ptr_eq(s2.pool(), &pool));
+    let o1 = s1.serve().unwrap();
+    let o2 = s2.serve().unwrap();
+    assert!(o1.worst_error < 1e-8 && o2.worst_error < 1e-8);
+    // The introspection hook: serving through two sessions executed work
+    // on the shared pool yet spawned nothing beyond the fixed worker set.
+    assert_eq!(pool.spawned_workers(), 2, "thread leak: workers grew");
+    assert!(pool.scopes_run() > 0, "sessions never used the shared pool");
+
+    // A session with its own pool decodes to the same bits — pooling is
+    // invisible in results.
+    let own = Session::builder(&spec)
+        .allocation(alloc.clone())
+        .data(a.clone())
+        .requests(requests.clone())
+        .config(JobConfig { seed: 100, ..cfg.clone() })
+        .compute(Arc::new(NativeCompute))
+        .mode(Mode::Batched)
+        .pool(Arc::new(WorkPool::new(7)))
+        .build()
+        .unwrap()
+        .serve()
+        .unwrap();
+    for (j1, j2) in o1.jobs.iter().zip(&own.jobs) {
+        assert_eq!(j1.decoded, j2.decoded);
+    }
+}
+
+#[test]
+fn encode_threads_hint_sizes_a_per_session_pool() {
+    let spec = serving_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let a = random_matrix(64, 8, 31);
+    let session = Session::builder(&spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(vec![vec![0.5; 8]])
+        .config(JobConfig {
+            time_scale: 0.002,
+            encode_threads: 2,
+            ..Default::default()
+        })
+        .mode(Mode::Single)
+        .build()
+        .unwrap();
+    assert_eq!(session.pool().threads(), 2);
+    // Without a hint, the shared global pool is used.
+    let spec = serving_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let global = Session::builder(&spec)
+        .allocation(alloc)
+        .data(random_matrix(64, 8, 32))
+        .requests(vec![vec![0.5; 8]])
+        .config(JobConfig { time_scale: 0.002, ..Default::default() })
+        .mode(Mode::Single)
+        .build()
+        .unwrap();
+    assert!(Arc::ptr_eq(global.pool(), WorkPool::global()));
+}
+
+#[test]
+fn arrivals_stream_serves_allocation_free_after_warmup() {
+    // Three same-shaped batches with enough gap for each batch's
+    // stragglers to drain: the first batch sizes every arena, and the
+    // outcome proves nothing grew afterwards — alongside the existing
+    // encodes == 1 invariant.
+    let spec = serving_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let a = random_matrix(64, 8, 41);
+    let mut rng = Rng::new(42);
+    let requests: Vec<Vec<f64>> = (0..12)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    let offsets: Vec<Duration> = (0..12)
+        .map(|i| Duration::from_millis(80 * (i as u64 / 4)))
+        .collect();
+    let outcome = Session::builder(&spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(requests)
+        .config(JobConfig {
+            time_scale: 0.002,
+            verify_decode: false,
+            ..Default::default()
+        })
+        .compute(Arc::new(NativeCompute))
+        .mode(Mode::Arrivals { offsets, max_batch: 4 })
+        .pool(Arc::new(WorkPool::new(4)))
+        .build()
+        .unwrap()
+        .serve()
+        .unwrap();
+    assert_eq!(outcome.jobs.len(), 12);
+    assert_eq!(outcome.encodes, 1, "prepared stream must encode once");
+    assert_eq!(
+        outcome.steady_allocs, 0,
+        "steady-state batches allocated big buffers"
+    );
+}
