@@ -23,9 +23,10 @@ bench:
 
 # Machine-readable bench snapshot: run the perf benches with JSON capture
 # (the in-repo harness appends `"name": ns_per_op,` fragments when
-# BENCH_JSON_DIR is set) and merge them into BENCH_PR5.json so the bench
-# trajectory is diffable across PRs (BENCH_PR2/PR3.json are the previous
-# snapshots' schemas). Bench names must be unique across the two binaries
+# BENCH_JSON_DIR is set) and merge them into BENCH_PR6.json so the bench
+# trajectory is diffable across PRs (BENCH_PR2/PR3/PR5.json are the
+# previous snapshots' schemas; PR 6 adds the sparse-vs-dense CSR encode
+# ablation rows). Bench names must be unique across the two binaries
 # (they are today); a collision would emit duplicate JSON keys.
 bench-json:
 	rm -rf target/bench-json && mkdir -p target/bench-json
@@ -35,8 +36,8 @@ bench-json:
 	  { echo "error: benches emitted no JSON fragments (BENCH_JSON_DIR plumbing broken?)"; exit 1; }
 	{ echo '{'; \
 	  echo '  "_meta": "flat map: benchmark name -> median ns/op from the in-repo bench harness; regenerate with make bench-json",'; \
-	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR5.json
-	@echo "wrote BENCH_PR5.json"
+	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR6.json
+	@echo "wrote BENCH_PR6.json"
 
 lint:
 	cargo fmt --all --check

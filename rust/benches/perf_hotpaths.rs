@@ -13,14 +13,17 @@
 //!   single-stream speed — the old flat spawn threshold's failure mode);
 //! - end-to-end `run_job` through the thread coordinator (native backend);
 //! - prepared-job vs cold batched serving (the encode-hoisting fast path,
-//!   now allocation-free and pool-backed in steady state).
+//!   now allocation-free and pool-backed in steady state);
+//! - sparse-vs-dense encode ablation: the CSR O(nnz·d) kernel behind the
+//!   `sparse-parity` code against the dense register-blocked kernel on
+//!   the same generator matrix, single-stream and pooled.
 //!
 //! Set `BENCH_JSON_DIR` (or run `make bench-json`) to capture `name →
-//! ns/op` into `BENCH_PR5.json`.
+//! ns/op` into `BENCH_PR6.json`.
 
 use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
-use hetcoded::coding::{Decoder, Generator, GeneratorKind, Matrix};
+use hetcoded::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
 use hetcoded::coordinator::{
     JobConfig, Mode, NativeCompute, PreparedJob, Session,
 };
@@ -164,6 +167,35 @@ fn main() {
             black_box(gen.matrix().matmul(&a));
         });
         run_quick(&format!("encode G({n}x{k}) @ A({k}x{d}), pool of 8"), || {
+            black_box(gen.matrix().matmul_on(&a, &pool8));
+        });
+    }
+
+    section("sparse vs dense encode (CSR kernel ablation, same generator)");
+    {
+        // The sparse-parity generator at the serving size above: 1024
+        // systematic singletons + 512 weight-8 parity rows (~0.33% dense),
+        // encoded through the CSR kernel vs the dense register-blocked
+        // kernel on the *same* matrix. The ratio is the O(nnz·d) claim.
+        let (k, n, d) = (1024usize, 1536usize, 256usize);
+        let gen = Generator::new(GeneratorKind::SparseParity, n, k, 1).unwrap();
+        let csr = gen.sparse().expect("sparse-parity generator carries CSR");
+        let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let enc = Encoder::new(gen.clone());
+        let pool1 = WorkPool::new(1);
+        run_quick(&format!("sparse encode G({n}x{k}) w=8 @ A({k}x{d}), pool of 8"), || {
+            black_box(enc.encode_capped(&a, &pool8, 8).unwrap());
+        });
+        run_quick(&format!("sparse csr matmul G({n}x{k}) @ A({k}x{d}), 1 thread"), || {
+            black_box(csr.matmul_on(&a, &pool1));
+        });
+        run_quick(&format!("sparse csr matmul G({n}x{k}) @ A({k}x{d}), pool of 8"), || {
+            black_box(csr.matmul_on(&a, &pool8));
+        });
+        run_quick(&format!("dense matmul same sparse G({n}x{k}) @ A({k}x{d}), 1 thread"), || {
+            black_box(gen.matrix().matmul_on(&a, &pool1));
+        });
+        run_quick(&format!("dense matmul same sparse G({n}x{k}) @ A({k}x{d}), pool of 8"), || {
             black_box(gen.matrix().matmul_on(&a, &pool8));
         });
     }

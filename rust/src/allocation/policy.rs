@@ -12,6 +12,14 @@
 //! arXiv:2109.11246) is one module implementing the trait plus **one
 //! [`PolicyEntry`] line** in [`REGISTRY`].
 //!
+//! Policies are **code-agnostic**: an allocation assigns integer row
+//! counts `l_i` and never inspects the generator, so the same policy
+//! serves under any [`crate::coding::Code`] registry entry (the code
+//! registry in [`crate::coding::code`] deliberately mirrors this one —
+//! `policy × code` are orthogonal axes, resolved independently at session
+//! build). Only [`Policy::decode_rule`] touches decode semantics, and it
+//! describes the *allocation's* completion rule, not the code's algebra.
+//!
 //! # Example
 //!
 //! ```

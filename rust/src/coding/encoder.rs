@@ -74,6 +74,14 @@ impl Encoder {
     /// [`crate::coordinator::JobConfig`]'s `encode_threads` as a
     /// concurrency bound without constructing a pool per call. Results
     /// are bit-identical for any cap.
+    ///
+    /// This is the one dispatch point between the dense and sparse encode
+    /// kernels: a generator carrying a CSR mirror ([`Generator::sparse`],
+    /// e.g. the `SparseParity` family) encodes through the O(nnz·d)
+    /// sparse kernel, everything else through the dense register-blocked
+    /// matmul — bit-identical to each other for finite inputs (see
+    /// [`crate::coding::CsrMatrix::matmul_on`]), so which kernel ran is
+    /// unobservable in the coded rows.
     pub fn encode_capped(
         &self,
         a: &Matrix,
@@ -82,7 +90,10 @@ impl Encoder {
     ) -> Result<Matrix> {
         self.check_shape(a)?;
         self.encodes.fetch_add(1, Ordering::Relaxed);
-        Ok(self.generator.matrix().matmul_streams(a, pool, max_streams))
+        Ok(match self.generator.sparse() {
+            Some(csr) => csr.matmul_streams(a, pool, max_streams),
+            None => self.generator.matrix().matmul_streams(a, pool, max_streams),
+        })
     }
 
     /// Pre-pool compatibility shim: `threads` now only caps the task
@@ -219,6 +230,32 @@ mod tests {
         assert_eq!(threaded, coded);
         assert_eq!(enc.encode_calls(), 3);
         assert_eq!(enc.clone().encode_calls(), 0);
+    }
+
+    #[test]
+    fn sparse_encode_routes_through_csr_and_matches_dense() {
+        // The SparseParity generator encodes through the CSR kernel; the
+        // result must be byte-equal to pushing its dense mirror through
+        // the dense kernel (which kernel ran is unobservable).
+        let g = Generator::new(GeneratorKind::SparseParity, 40, 16, 9).unwrap();
+        let enc = Encoder::new(g.clone());
+        let a = random_matrix(16, 12, 10);
+        let coded = enc.encode(&a).unwrap();
+        assert_eq!(enc.encode_calls(), 1);
+        assert_eq!(coded.rows(), 40);
+        // Systematic prefix passes the data through untouched.
+        for i in 0..16 {
+            assert_eq!(coded.row(i), a.row(i), "systematic row {i}");
+        }
+        let dense = g.matrix().matmul(&a);
+        assert!(
+            coded
+                .data()
+                .iter()
+                .zip(dense.data())
+                .all(|(c, d)| c.to_bits() == d.to_bits()),
+            "sparse encode diverged from dense mirror"
+        );
     }
 
     #[test]

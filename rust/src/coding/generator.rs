@@ -1,8 +1,15 @@
-//! MDS generator matrices over the reals.
+//! Generator matrices over the reals: two MDS families plus an
+//! LDPC-style sparse-parity family.
 
-use crate::coding::Matrix;
+use crate::coding::{CsrMatrix, Matrix};
 use crate::math::Rng;
 use crate::{Error, Result};
+
+/// Nonzeros per parity row of the [`GeneratorKind::SparseParity`]
+/// construction (capped at `k`). Weight 8 keeps the encode O(nnz) = O(8·n)
+/// while leaving random k-subsets overwhelmingly likely to be invertible
+/// at serving-scale `k`.
+const SPARSE_PARITY_WEIGHT: usize = 8;
 
 /// Which generator construction to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,6 +20,15 @@ pub enum GeneratorKind {
     /// Systematic `[I_k; R]` with Gaussian `R`: MDS with probability 1,
     /// well-conditioned at practical `k`. The default.
     SystematicRandom,
+    /// Systematic `[I_k; S]` with **sparse** `S`: each parity row holds
+    /// `min(k, 8)` entries of value `±1/√w` — the real-field analogue of an
+    /// LDPC XOR parity (a signed, scaled sum of `w` data rows). The
+    /// nonzeros are mirrored in a [`CsrMatrix`] ([`Generator::sparse`]), so
+    /// the encode costs O(nnz·d) instead of O(n·k·d). **Not MDS**: a
+    /// specific k-subset of rows can be structurally singular, in which
+    /// case decode reports a clean error ([`Generator::rows_invertible`]
+    /// returns `false`) rather than an answer.
+    SparseParity,
 }
 
 /// An `(n, k)` generator matrix with construction metadata.
@@ -25,18 +41,22 @@ pub struct Generator {
     /// Evaluation nodes (Vandermonde construction only) — lets the decoder
     /// use the O(k²) Björck–Pereyra solver instead of LU.
     nodes: Option<Vec<f64>>,
+    /// CSR mirror of `g` (sparse constructions only) — routes the encoder
+    /// onto the O(nnz) sparse kernel ([`CsrMatrix::matmul_on`]).
+    sparse: Option<CsrMatrix>,
 }
 
 impl Generator {
-    /// Build an `(n, k)` generator. `seed` only affects
-    /// [`GeneratorKind::SystematicRandom`].
+    /// Build an `(n, k)` generator. `seed` only affects the random
+    /// families ([`GeneratorKind::SystematicRandom`],
+    /// [`GeneratorKind::SparseParity`]).
     pub fn new(kind: GeneratorKind, n: usize, k: usize, seed: u64) -> Result<Self> {
         if k == 0 || n < k {
             return Err(Error::InvalidSpec(format!(
                 "generator needs n >= k >= 1, got n={n}, k={k}"
             )));
         }
-        let (g, nodes) = match kind {
+        let (g, nodes, sparse) = match kind {
             GeneratorKind::Vandermonde => {
                 // Distinct Chebyshev nodes on [-1, 1]: x_i = cos((2i+1)π/2n).
                 let nodes: Vec<f64> = (0..n)
@@ -47,6 +67,7 @@ impl Generator {
                 (
                     Matrix::from_fn(n, k, |i, j| nodes[i].powi(j as i32)),
                     Some(nodes),
+                    None,
                 )
             }
             GeneratorKind::SystematicRandom => {
@@ -64,10 +85,49 @@ impl Generator {
                         }
                     }),
                     None,
+                    None,
                 )
             }
+            GeneratorKind::SparseParity => {
+                let w = k.min(SPARSE_PARITY_WEIGHT);
+                let scale = 1.0 / (w as f64).sqrt();
+                let mut rng = Rng::new(seed);
+                let mut g = Matrix::zeros(n, k);
+                for i in 0..k {
+                    g[(i, i)] = 1.0;
+                }
+                let mut cols: Vec<usize> = Vec::with_capacity(w);
+                for i in k..n {
+                    // Staircase guarantee: parity row i always touches data
+                    // row (i - k) mod k, so every data row is covered as
+                    // soon as n - k >= k; the remaining w - 1 columns are
+                    // rejection-sampled distinct.
+                    cols.clear();
+                    cols.push((i - k) % k);
+                    while cols.len() < w {
+                        let c = rng.gen_range(k as u64) as usize;
+                        if !cols.contains(&c) {
+                            cols.push(c);
+                        }
+                    }
+                    cols.sort_unstable();
+                    for &c in &cols {
+                        let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                        g[(i, c)] = sign * scale;
+                    }
+                }
+                let csr = CsrMatrix::from_dense(&g);
+                (g, None, Some(csr))
+            }
         };
-        Ok(Generator { kind, n, k, g, nodes })
+        Ok(Generator { kind, n, k, g, nodes, sparse })
+    }
+
+    /// CSR mirror of the generator (sparse constructions only) — the
+    /// encoder dispatches through this onto the O(nnz) sparse kernel when
+    /// present.
+    pub fn sparse(&self) -> Option<&CsrMatrix> {
+        self.sparse.as_ref()
     }
 
     /// Evaluation nodes (Vandermonde construction only).
@@ -180,5 +240,63 @@ mod tests {
         assert_eq!(a.matrix(), b.matrix());
         let c = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 10).unwrap();
         assert_ne!(a.matrix(), c.matrix());
+        let s1 = Generator::new(GeneratorKind::SparseParity, 10, 4, 9).unwrap();
+        let s2 = Generator::new(GeneratorKind::SparseParity, 10, 4, 9).unwrap();
+        assert_eq!(s1.matrix(), s2.matrix());
+        assert_eq!(s1.sparse(), s2.sparse());
+    }
+
+    #[test]
+    fn sparse_parity_structure() {
+        let (n, k) = (48, 32);
+        let g = Generator::new(GeneratorKind::SparseParity, n, k, 11).unwrap();
+        // Dense-only families expose no CSR mirror.
+        assert!(Generator::new(GeneratorKind::Vandermonde, 8, 4, 0)
+            .unwrap()
+            .sparse()
+            .is_none());
+        assert!(Generator::new(GeneratorKind::SystematicRandom, 8, 4, 0)
+            .unwrap()
+            .sparse()
+            .is_none());
+        let csr = g.sparse().expect("sparse family carries a CSR mirror");
+        // The mirror is exactly the dense matrix, compressed.
+        assert_eq!(&csr.to_dense(), g.matrix());
+        // Systematic prefix: identity rows of weight 1.
+        for i in 0..k {
+            let (cols, vals) = csr.row_entries(i);
+            assert_eq!(cols, &[i]);
+            assert_eq!(vals, &[1.0]);
+        }
+        // Parity rows: weight min(k, 8), entries ±1/√w, staircase column
+        // (i − k) mod k always present.
+        let w = k.min(8);
+        let scale = 1.0 / (w as f64).sqrt();
+        for i in k..n {
+            let (cols, vals) = csr.row_entries(i);
+            assert_eq!(cols.len(), w, "parity row {i}");
+            assert!(cols.contains(&((i - k) % k)), "parity row {i} staircase");
+            assert!(cols.windows(2).all(|p| p[0] < p[1]), "parity row {i} order");
+            assert!(
+                vals.iter().all(|v| (v.abs() - scale).abs() < 1e-15),
+                "parity row {i} magnitudes"
+            );
+        }
+        // nnz = k identity entries + w per parity row.
+        assert_eq!(csr.nnz(), k + (n - k) * w);
+        // Weight caps at k when k < 8.
+        let tiny = Generator::new(GeneratorKind::SparseParity, 7, 3, 5).unwrap();
+        let (cols, _) = tiny.sparse().unwrap().row_entries(5);
+        assert_eq!(cols, &[0, 1, 2]);
+    }
+
+    #[test]
+    fn sparse_parity_systematic_subset_decodes() {
+        // The k systematic rows are the identity — always invertible — and
+        // rows_invertible is honest about sub/super-sized subsets.
+        let g = Generator::new(GeneratorKind::SparseParity, 20, 8, 3).unwrap();
+        let systematic: Vec<usize> = (0..8).collect();
+        assert!(g.rows_invertible(&systematic));
+        assert!(!g.rows_invertible(&systematic[..7]));
     }
 }

@@ -322,6 +322,246 @@ fn matmul_block(m: usize, kdim: usize, n: usize, a: &[f64], b: &[f64], out: &mut
     }
 }
 
+/// Register-tile width of the sparse-row × dense-matrix microkernel: one
+/// [`SPMM_NR`]-wide accumulator strip stays resident in registers across a
+/// row's whole nonzero sweep, so each loaded nonzero feeds [`SPMM_NR`]
+/// independent fused update streams (the sparse analogue of [`MM_MR`]).
+const SPMM_NR: usize = 8;
+
+/// Compressed-sparse-row (CSR) matrix over `f64`.
+///
+/// The sparse mirror of [`Matrix`] for the coding layer: a sparse
+/// generator (`coding::Generator` with a
+/// [`crate::coding::GeneratorKind::SparseParity`] construction) keeps its
+/// nonzeros here so the encode `Ã = G·A` costs O(nnz·d) instead of
+/// O(n·k·d). Nonzeros are stored row-major with **ascending column order
+/// inside every row** — that ordering *is* the summation order of every
+/// kernel below, which is what makes the results reproducible and
+/// bit-identical to the dense kernels (see [`CsrMatrix::matmul_on`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row pointers: row `i`'s nonzeros live at `indptr[i]..indptr[i+1]`.
+    indptr: Vec<usize>,
+    /// Column index of each nonzero, ascending within every row.
+    indices: Vec<usize>,
+    /// Value of each nonzero.
+    vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR parts, validating the invariants every kernel
+    /// relies on: `indptr` has `rows + 1` monotone entries ending at
+    /// `indices.len()`, `indices.len() == vals.len()`, and each row's
+    /// column indices are strictly ascending and in-bounds.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        vals: Vec<f64>,
+    ) -> Result<CsrMatrix> {
+        if indptr.len() != rows + 1 {
+            return Err(Error::Numerical(format!(
+                "CSR indptr has {} entries for {} rows (need rows + 1)",
+                indptr.len(),
+                rows
+            )));
+        }
+        if indices.len() != vals.len() {
+            return Err(Error::Numerical(format!(
+                "CSR has {} column indices but {} values",
+                indices.len(),
+                vals.len()
+            )));
+        }
+        if indptr[0] != 0 || indptr[rows] != indices.len() {
+            return Err(Error::Numerical(format!(
+                "CSR indptr must span 0..={} (got {}..={})",
+                indices.len(),
+                indptr[0],
+                indptr[rows]
+            )));
+        }
+        for r in 0..rows {
+            let (lo, hi) = (indptr[r], indptr[r + 1]);
+            if lo > hi {
+                return Err(Error::Numerical(format!(
+                    "CSR indptr decreases at row {r}"
+                )));
+            }
+            let row_cols = &indices[lo..hi];
+            if row_cols.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(Error::Numerical(format!(
+                    "CSR row {r} columns not strictly ascending"
+                )));
+            }
+            if row_cols.last().is_some_and(|&c| c >= cols) {
+                return Err(Error::Numerical(format!(
+                    "CSR row {r} column out of bounds (cols = {cols})"
+                )));
+            }
+        }
+        Ok(CsrMatrix { rows, cols, indptr, indices, vals })
+    }
+
+    /// Compress a dense matrix, dropping entries that compare equal to
+    /// zero (`-0.0` included — adding `±0.0` to an accumulator that is
+    /// never `-0.0` is a bitwise no-op, so the drop is exact; see
+    /// [`CsrMatrix::matmul_on`]).
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(m.rows() + 1);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        indptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: m.rows(), cols: m.cols(), indptr, indices, vals }
+    }
+
+    /// Expand back to a dense [`Matrix`].
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            for (&j, &v) in self.indices[lo..hi].iter().zip(&self.vals[lo..hi]) {
+                out[(i, j)] = v;
+            }
+        }
+        out
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row `i`'s nonzeros as parallel `(columns, values)` slices
+    /// (columns ascending).
+    pub fn row_entries(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Sparse matrix–vector product `self · x`, accumulating each row in
+    /// stored (ascending-column) order — the same per-element order as
+    /// [`Matrix::matvec`] with the zero terms elided, so results are
+    /// bit-identical for finite inputs.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        for (i, out) in y.iter_mut().enumerate() {
+            let (cols, vals) = self.row_entries(i);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            *out = acc;
+        }
+        y
+    }
+
+    /// Sparse × dense product `self · other` on the shared global
+    /// [`WorkPool`].
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        self.matmul_on(other, WorkPool::global_ref())
+    }
+
+    /// Register-blocked sparse × dense matrix product executed on `pool` —
+    /// the O(nnz·d) encode kernel behind sparse generators.
+    ///
+    /// Output rows are partitioned into pool tasks exactly like the dense
+    /// kernel ([`Matrix::matmul_on`]): the task split is derived from a
+    /// per-task FLOP granularity ([`MM_TASK_FLOPS`], with FLOPs estimated
+    /// as `nnz · other.cols`), each task owns a contiguous strip of output
+    /// rows, and the reduction inside one output element is a serial sweep
+    /// of that row's nonzeros in stored ascending-column order
+    /// ([`spmm_row`]). The pool size and task split choose only *who*
+    /// computes a row, never the order *within* it, so results are
+    /// bit-identical across pool sizes.
+    ///
+    /// Against the dense kernel the only op-sequence difference is the
+    /// elided `0·b` products of `self`'s zero entries — and `x + (±0.0)`
+    /// is bitwise `x` because the accumulators start at `+0.0` and can
+    /// never become `-0.0`, so for finite inputs the result is byte-equal
+    /// to `self.to_dense().matmul_on(other, pool)`
+    /// (`csr_matmul_bit_identical_to_dense` pins this).
+    pub fn matmul_on(&self, other: &Matrix, pool: &WorkPool) -> Matrix {
+        self.matmul_streams(other, pool, pool.threads())
+    }
+
+    /// Shared engine: split output rows into `<= max_streams` tasks of at
+    /// least [`MM_TASK_FLOPS`] each and run them on `pool` (crate-visible
+    /// so the encoder can cap concurrency without a dedicated pool).
+    pub(crate) fn matmul_streams(
+        &self,
+        other: &Matrix,
+        pool: &WorkPool,
+        max_streams: usize,
+    ) -> Matrix {
+        assert_eq!(self.cols, other.rows(), "dimension mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols());
+        if self.rows == 0 || other.cols() == 0 {
+            return out;
+        }
+        let flops = self.nnz().saturating_mul(other.cols());
+        let tasks = (flops / MM_TASK_FLOPS)
+            .clamp(1, max_streams.max(1))
+            .min(self.rows);
+        let rows_per = self.rows.div_ceil(tasks);
+        let n = other.cols();
+        pool.run_chunks_mut(&mut out.data, rows_per * n, |t, out_rows| {
+            for (li, orow) in out_rows.chunks_mut(n).enumerate() {
+                let (cols, vals) = self.row_entries(t * rows_per + li);
+                spmm_row(cols, vals, other.data(), n, orow);
+            }
+        });
+        out
+    }
+}
+
+/// One sparse output row: `out_row (1×n) += Σ_nz vals·b[cols]`, with the
+/// `n` dimension processed in [`SPMM_NR`]-wide register tiles. Per output
+/// element the nonzeros are accumulated in stored (ascending-column)
+/// order regardless of the tile width — the tiles partition *columns* of
+/// the output, not the reduction — so the result is independent of
+/// [`SPMM_NR`] and of how rows were assigned to pool tasks. An empty row
+/// writes nothing and leaves the zeroed output untouched.
+fn spmm_row(cols: &[usize], vals: &[f64], b: &[f64], n: usize, out_row: &mut [f64]) {
+    if cols.is_empty() {
+        return;
+    }
+    for jc in (0..n).step_by(SPMM_NR) {
+        let w = SPMM_NR.min(n - jc);
+        let mut acc = [0.0f64; SPMM_NR];
+        for (&c, &v) in cols.iter().zip(vals) {
+            let brow = &b[c * n + jc..c * n + jc + w];
+            for (a, &bv) in acc[..w].iter_mut().zip(brow) {
+                *a += v * bv;
+            }
+        }
+        out_row[jc..jc + w].copy_from_slice(&acc[..w]);
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline]
@@ -801,5 +1041,140 @@ mod tests {
         let a = Matrix::from_vec(2, 2, vec![1.0, -7.0, 3.0, 2.0]);
         assert_eq!(a.max_abs(), 7.0);
         assert_eq!(a.norm_inf(), 8.0);
+    }
+
+    /// Sparse test patterns shared by the CSR unit tests: each returns a
+    /// dense matrix whose sparsity shape is adversarial for the kernel's
+    /// row partitioning (empty rows, a lone dense row, a single live
+    /// column, nothing at all, and a mixed random pattern).
+    fn sparse_patterns(rows: usize, cols: usize, seed: u64) -> Vec<(&'static str, Matrix)> {
+        let mut rng = Rng::new(seed);
+        vec![
+            (
+                "empty-rows",
+                Matrix::from_fn(rows, cols, |i, _| {
+                    if i % 3 == 0 {
+                        0.0
+                    } else {
+                        rng.normal()
+                    }
+                }),
+            ),
+            (
+                "one-dense-row",
+                Matrix::from_fn(rows, cols, |i, _| {
+                    if i == rows / 2 {
+                        rng.normal()
+                    } else {
+                        0.0
+                    }
+                }),
+            ),
+            (
+                "single-column",
+                Matrix::from_fn(rows, cols, |_, j| {
+                    if j == cols / 3 {
+                        rng.normal()
+                    } else {
+                        0.0
+                    }
+                }),
+            ),
+            ("all-zero", Matrix::zeros(rows, cols)),
+            (
+                "random-sparse",
+                Matrix::from_fn(rows, cols, |_, _| {
+                    if rng.next_f64() < 0.85 {
+                        0.0
+                    } else {
+                        rng.normal()
+                    }
+                }),
+            ),
+        ]
+    }
+
+    #[test]
+    fn csr_dense_roundtrip_and_counts() {
+        for (name, a) in sparse_patterns(23, 17, 51) {
+            let csr = CsrMatrix::from_dense(&a);
+            assert_eq!(csr.rows(), 23, "{name}");
+            assert_eq!(csr.cols(), 17, "{name}");
+            let expect_nnz = a.data().iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(csr.nnz(), expect_nnz, "{name}");
+            assert_eq!(csr.to_dense(), a, "{name}");
+            // Columns ascend within every row.
+            for i in 0..csr.rows() {
+                let (cols, vals) = csr.row_entries(i);
+                assert_eq!(cols.len(), vals.len(), "{name}");
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "{name} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_from_parts_validates() {
+        // A valid 2×3 matrix: [[0, 1.5, 0], [2.0, 0, -3.0]].
+        let ok = CsrMatrix::from_parts(
+            2,
+            3,
+            vec![0, 1, 3],
+            vec![1, 0, 2],
+            vec![1.5, 2.0, -3.0],
+        )
+        .unwrap();
+        assert_eq!(ok.nnz(), 3);
+        assert_eq!(ok.to_dense().row(1), &[2.0, 0.0, -3.0]);
+        // indptr arity, span, monotonicity; index order and bounds;
+        // value/index length mismatch.
+        assert!(CsrMatrix::from_parts(2, 3, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_parts(1, 3, vec![0, 2], vec![0], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_parts(1, 3, vec![1, 1], vec![0], vec![1.0]).is_err());
+        assert!(
+            CsrMatrix::from_parts(1, 3, vec![0, 2], vec![2, 1], vec![1.0, 1.0]).is_err()
+        );
+        assert!(CsrMatrix::from_parts(1, 3, vec![0, 1], vec![3], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_parts(1, 3, vec![0, 1], vec![0], vec![]).is_err());
+    }
+
+    #[test]
+    fn csr_matvec_bit_identical_to_dense() {
+        let mut rng = Rng::new(52);
+        for (name, a) in sparse_patterns(31, 19, 53) {
+            let x: Vec<f64> = (0..19).map(|_| rng.normal()).collect();
+            let want = a.matvec(&x);
+            let got = CsrMatrix::from_dense(&a).matvec(&x);
+            assert_eq!(want.len(), got.len(), "{name}");
+            assert!(
+                want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                "{name}: sparse matvec diverged from dense"
+            );
+        }
+    }
+
+    #[test]
+    fn csr_matmul_bit_identical_to_dense() {
+        // Shapes straddling the register-tile width (SPMM_NR = 8) and the
+        // task-granularity cutoff; every adversarial sparsity pattern.
+        for (rows, kdim, n) in [(13, 9, 1), (37, 29, 24), (64, 48, 130)] {
+            for (name, a) in sparse_patterns(rows, kdim, 54 + n as u64) {
+                let b = Matrix::from_fn(kdim, n, |i, j| {
+                    let mut rng = Rng::new((i * n + j) as u64 + 1);
+                    rng.normal()
+                });
+                let want = a.matmul_on(&b, &WorkPool::new(1));
+                for pool_size in [1usize, 2, 7] {
+                    let pool = WorkPool::new(pool_size);
+                    let got = CsrMatrix::from_dense(&a).matmul_on(&b, &pool);
+                    assert!(
+                        want.data()
+                            .iter()
+                            .zip(got.data())
+                            .all(|(w, g)| w.to_bits() == g.to_bits()),
+                        "{name} {rows}x{kdim}x{n} pool={pool_size}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -5,7 +5,7 @@
 //! independent. The master recovers `A·x` from any `k` coded inner products
 //! by solving `G_B · z = y_B`.
 //!
-//! Two generator families are provided:
+//! Three generator families are provided:
 //!
 //! - [`GeneratorKind::Vandermonde`]: rows `[1, x_i, …, x_i^{k-1}]` on distinct
 //!   Chebyshev nodes — *provably* MDS over the reals, but the decode system's
@@ -13,18 +13,29 @@
 //! - [`GeneratorKind::SystematicRandom`]: `G = [I_k; R]` with Gaussian `R` —
 //!   MDS with probability 1 and well-conditioned at practical `k` (the
 //!   default; this is what the live coordinator uses).
+//! - [`GeneratorKind::SparseParity`]: `G = [I_k; S]` with sparse `±1/√w`
+//!   parity rows — the LDPC-style analogue; *not* MDS, but encodes in
+//!   O(nnz·d) through the CSR kernel instead of dense FLOPs.
+//!
+//! Codes are pluggable: the [`code::Code`] trait bundles generator
+//! construction, encode, and decode behind one object, and the registry in
+//! [`code`] (mirroring the policy registry) maps CLI names — `mds-random`,
+//! `mds-vandermonde`, `sparse-parity` — to implementations.
 //!
 //! The dense linear algebra (LU with partial pivoting, matmul, matvec) is
-//! implemented in [`linalg`] from scratch.
+//! implemented in [`linalg`] from scratch, alongside the [`CsrMatrix`]
+//! sparse type and its pool-parallel SpMM kernel.
 
 pub mod bjorck_pereyra;
+pub mod code;
 pub mod decoder;
 pub mod encoder;
 pub mod generator;
 pub mod linalg;
 
 pub use bjorck_pereyra::VandermondeFactor;
+pub use code::{Code, CodeEntry, MdsCode, SparseParityCode};
 pub use decoder::{Decoder, DEFAULT_FACTOR_CACHE};
 pub use encoder::Encoder;
 pub use generator::{Generator, GeneratorKind};
-pub use linalg::{Lu, Matrix};
+pub use linalg::{CsrMatrix, Lu, Matrix};

@@ -24,6 +24,15 @@
 //!    survives adaptation: [`AdaptiveServeReport::post_setup_encodes`]
 //!    stays **0** no matter how many times the stream re-allocates.
 //!
+//! The whole loop is **code-agnostic**: it never touches
+//! `Encoder`/`Decoder` directly, only the [`PreparedJob`] it was handed —
+//! which routes setup/encode/decode through the job's resolved
+//! [`crate::coding::Code`]. Re-slicing already-encoded rows via
+//! [`PreparedJob::rechunk`] is pure row bookkeeping, so adaptation works
+//! unchanged for every registry code (including the sparse-parity code,
+//! whose non-MDS decode failures surface as clean batch errors here like
+//! any other decode error).
+//!
 //! The model-time mirror of this loop for the queueing layer is
 //! [`crate::workload::drift::run_workload_drift`].
 

@@ -10,7 +10,8 @@
 //! by `rust/tests/session_parity.rs`.
 
 use crate::allocation::Allocation;
-use crate::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use crate::coding::code::{self, Code};
+use crate::coding::{Decoder, Encoder, GeneratorKind, Matrix};
 use crate::coordinator::session::{Mode, Session};
 use crate::coordinator::{Compute, LatencyRecorder, StragglerInjector};
 use crate::model::{ClusterSpec, LatencyModel};
@@ -31,8 +32,14 @@ pub struct JobConfig {
     pub seed: u64,
     /// Workers that never respond (permanent failures).
     pub dead_workers: Vec<usize>,
-    /// MDS generator construction.
+    /// MDS generator construction. Ignored when [`JobConfig::code`] names
+    /// a registry code (the code then owns generator construction).
     pub generator: GeneratorKind,
+    /// Registry name of the erasure code to serve with (the CLI `--code`
+    /// flag; see [`crate::coding::code`]). `None` — the default — resolves
+    /// the code from [`JobConfig::generator`], which keeps pre-registry
+    /// configs bit-identical.
+    pub code: Option<String>,
     /// Pool-size hint for sessions that build their own compute pool
     /// (`0` = available parallelism): [`crate::coordinator::SessionBuilder`]
     /// without an explicit [`SessionBuilder::pool`] handle builds a
@@ -72,6 +79,7 @@ impl Default for JobConfig {
             seed: 0xAB5,
             dead_workers: vec![],
             generator: GeneratorKind::SystematicRandom,
+            code: None,
             encode_threads: 0,
             decode_cache: crate::coding::DEFAULT_FACTOR_CACHE,
             verify_decode: true,
@@ -107,6 +115,18 @@ impl JobConfig {
                 Arc::new(WorkPool::new(self.encode_threads))
             }
             None => Arc::clone(WorkPool::global()),
+        }
+    }
+
+    /// Resolve the erasure code every setup/encode/decode of this job
+    /// routes through: the registry entry named by [`JobConfig::code`] if
+    /// set, otherwise the code for [`JobConfig::generator`]
+    /// ([`code::for_kind`] — identical behaviour to the pre-registry
+    /// hard-wiring). Errors list the registry's known names.
+    pub fn resolve_code(&self) -> Result<Box<dyn Code>> {
+        match &self.code {
+            Some(name) => code::resolve(name),
+            None => Ok(code::for_kind(self.generator)),
         }
     }
 }
@@ -171,8 +191,11 @@ pub(crate) fn run_job_impl(
 
     // Encode & chunk (on the job's pool — no per-call thread spawns; an
     // `encode_threads` cap bounds the task split rather than building a
-    // pool per call).
-    let gen = Generator::new(cfg.generator, n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
+    // pool per call). Setup and encode route through the resolved
+    // `Code`; for the dense MDS codes the call chain is identical to the
+    // pre-trait hard-wiring, so the output is bit-identical.
+    let job_code = cfg.resolve_code()?;
+    let gen = job_code.setup(n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
     let encoder = Encoder::new(gen.clone());
     let pool = cfg.compute_pool();
     let streams = if cfg.encode_threads > 0 {
@@ -180,7 +203,7 @@ pub(crate) fn run_job_impl(
     } else {
         pool.threads()
     };
-    let coded = encoder.encode_capped(a, &pool, streams)?;
+    let coded = job_code.encode(&encoder, a, &pool, streams)?;
     let chunks = encoder.chunk(&coded, &per_worker)?;
 
     // Straggle injection.

@@ -13,6 +13,14 @@
 //! supported; the MDS code tolerates them as long as the surviving load
 //! covers `k`.
 //!
+//! The erasure code itself is pluggable: every setup/encode/decode routes
+//! through a [`crate::coding::Code`] resolved once per job from the code
+//! registry ([`JobConfig::code`] / [`SessionBuilder::code`] / the CLI
+//! `--code` flag), with the generator-kind default reproducing the
+//! pre-registry behaviour bit for bit. Everything downstream — allocation,
+//! chunking, straggle handling, [`PreparedJob::rechunk`] — is
+//! code-agnostic.
+//!
 //! Serving loops go through the [`prepared`] fast path: a [`PreparedJob`]
 //! owns the generator, encoded chunks, and factorization-cached decoder,
 //! so steady-state batches pay only straggle + collect + solve — with

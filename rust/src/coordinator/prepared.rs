@@ -27,8 +27,9 @@
 //! `G` group-boundary patterns dominate) skip refactorization entirely.
 
 use crate::allocation::Allocation;
+use crate::coding::code::Code;
 use crate::coding::encoder::WorkerChunk;
-use crate::coding::{Decoder, Encoder, Generator, Matrix};
+use crate::coding::{Decoder, Encoder, Matrix};
 use crate::coordinator::master::{
     JobConfig, JobReport, GENERATOR_SEED_TAG, STRAGGLE_SEED_TAG,
 };
@@ -71,6 +72,11 @@ pub struct PreparedJob {
     cfg: JobConfig,
     per_worker: Vec<usize>,
     n: usize,
+    /// The erasure code every setup/encode/decode of this job routes
+    /// through (resolved once from [`JobConfig::resolve_code`]). For the
+    /// dense MDS codes the trait's default methods delegate to the exact
+    /// pre-trait call chain, so prepared serving is bit-identical.
+    code: Box<dyn Code>,
     /// The uncoded data matrix — kept only when `cfg.verify_decode`, for
     /// ground-truth error reporting (`None` drops the O(k·d) copy).
     a: Option<Matrix>,
@@ -137,13 +143,13 @@ impl PreparedJob {
         alloc.validate(spec)?;
         let per_worker = alloc.per_worker_loads(spec);
         let n: usize = per_worker.iter().sum();
-        let gen =
-            Generator::new(cfg.generator, n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
+        let code = cfg.resolve_code()?;
+        let gen = code.setup(n, spec.k, cfg.seed ^ GENERATOR_SEED_TAG)?;
         let encoder = Encoder::new(gen.clone());
         // Setup boundary: honors the `encode_threads` hint by building a
         // dedicated pool once for this job's whole lifetime.
         let pool = cfg.resolve_pool();
-        let coded = encoder.encode_on(a, &pool)?;
+        let coded = code.encode(&encoder, a, &pool, pool.threads())?;
         let chunks = encoder
             .chunk(&coded, &per_worker)?
             .into_iter()
@@ -156,6 +162,7 @@ impl PreparedJob {
             cfg: cfg.clone(),
             per_worker,
             n,
+            code,
             a: cfg.verify_decode.then(|| a.clone()),
             encoder,
             coded,
@@ -177,6 +184,11 @@ impl PreparedJob {
     /// The compute pool this job's kernels run on.
     pub fn pool(&self) -> &PoolHandle {
         &self.pool
+    }
+
+    /// The erasure code this job serves with.
+    pub fn code(&self) -> &dyn Code {
+        self.code.as_ref()
     }
 
     /// Scratch-arena allocation/grow events since construction — one per
@@ -429,8 +441,11 @@ impl PreparedJob {
             }
         }
         let rows_collected = self.rows_buf.len();
-        let decoded_all =
-            self.decoder.decode_batch(&self.rows_buf, &self.cols_buf[..b])?;
+        let decoded_all = self.code.decode_rows(
+            &mut self.decoder,
+            &self.rows_buf,
+            &self.cols_buf[..b],
+        )?;
         let wall_latency = start.elapsed();
 
         let mut reports = Vec::with_capacity(b);

@@ -233,6 +233,7 @@ pub struct SessionBuilder {
     adaptive: Option<AdaptiveServeConfig>,
     compute: Option<Arc<dyn Compute>>,
     pool: Option<PoolHandle>,
+    code: Option<String>,
 }
 
 impl SessionBuilder {
@@ -279,6 +280,16 @@ impl SessionBuilder {
     /// decode cache, …). Defaults to [`JobConfig::default`].
     pub fn config(mut self, cfg: JobConfig) -> Self {
         self.cfg = cfg;
+        self
+    }
+
+    /// Serve with the named registry code (`mds-random`,
+    /// `mds-vandermonde`, `sparse-parity`; see [`crate::coding::code`]).
+    /// Overrides [`JobConfig::code`]; the name is validated at
+    /// [`SessionBuilder::build`]. Without this, the code is resolved from
+    /// [`JobConfig::generator`] — identical to pre-registry behaviour.
+    pub fn code(mut self, name: impl Into<String>) -> Self {
+        self.code = Some(name.into());
         self
     }
 
@@ -359,6 +370,11 @@ impl SessionBuilder {
             cfg.pool = Some(p);
         }
         cfg.pool = Some(cfg.resolve_pool());
+        if let Some(name) = self.code {
+            cfg.code = Some(name);
+        }
+        // Fail unknown code names here, not on the first serve.
+        cfg.resolve_code()?;
         let mode = match self.mode {
             Mode::PoissonArrivals { rate, max_batch } => {
                 let mut rng = Rng::new(cfg.seed ^ ARRIVAL_SEED_TAG);
@@ -430,6 +446,7 @@ impl Session {
             adaptive: None,
             compute: None,
             pool: None,
+            code: None,
         }
     }
 
@@ -799,6 +816,56 @@ mod tests {
             .unwrap();
         assert_eq!(o1.jobs[0].decoded, o2.jobs[0].decoded);
         assert_eq!(o1.jobs[0].rows_collected, o2.jobs[0].rows_collected);
+    }
+
+    #[test]
+    fn code_knob_validates_at_build_and_serves() {
+        let spec = small_spec();
+        let (a, reqs) = data(2, 96);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        // Unknown names fail at build, not on the first serve.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .code("no-such-code")
+            .build()
+            .is_err());
+        // Naming the default code serves exactly like not naming one.
+        let outcome = Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .config(fast_cfg())
+            .code("mds-random")
+            .mode(Mode::Batched)
+            .build()
+            .unwrap()
+            .serve()
+            .unwrap();
+        assert_eq!(outcome.jobs.len(), 2);
+        assert!(outcome.worst_error < 1e-8);
+        assert_eq!(outcome.encodes, 1);
+        // The sparse code is not MDS: whichever k-subset of rows arrives
+        // first either decodes correctly or fails *cleanly* (Err, never a
+        // wrong answer or a hang) — that is its documented contract.
+        let sparse = Session::builder(&spec)
+            .allocation(alloc)
+            .data(a)
+            .requests(reqs)
+            .config(fast_cfg())
+            .code("sparse-parity")
+            .mode(Mode::Batched)
+            .build()
+            .unwrap();
+        match sparse.serve() {
+            Ok(o) => {
+                assert_eq!(o.jobs.len(), 2);
+                assert!(o.worst_error < 1e-8, "err {}", o.worst_error);
+            }
+            Err(Error::Decode(_)) | Err(Error::Numerical(_)) => {}
+            Err(e) => panic!("sparse-parity serve failed unexpectedly: {e}"),
+        }
     }
 
     #[test]

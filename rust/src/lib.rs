@@ -3,9 +3,9 @@
 //! Production-quality reproduction of *"Optimal Load Allocation for Coded
 //! Distributed Computation in Heterogeneous Clusters"* (Kim, Park, Choi, 2019).
 //!
-//! ## The public API in two types
+//! ## The public API in three types
 //!
-//! Everything composes through two abstractions:
+//! Everything composes through three abstractions:
 //!
 //! - **[`allocation::Policy`]** — one load-allocation scheme (how many
 //!   coded rows each worker group gets). The central **registry**
@@ -15,9 +15,14 @@
 //!   queueing layer ([`workload::run_workload_policy`]), and the live
 //!   coordinator all accept. New schemes are one module + one registry
 //!   line.
-//! - **[`coordinator::Session`]** — one live serve. Policy × mode ×
-//!   scenario × adaptivity are orthogonal builder knobs; every serve
-//!   returns a unified [`coordinator::ServeOutcome`]:
+//! - **[`coding::Code`]** — one erasure code (setup / encode /
+//!   decode-rows), with its own registry ([`coding::code`]) mirroring
+//!   the policy one: `mds-random` (default), `mds-vandermonde`, and the
+//!   non-MDS `sparse-parity` with an O(nnz) CSR encode. Policy and code
+//!   are orthogonal axes, resolved independently at session build.
+//! - **[`coordinator::Session`]** — one live serve. Policy × code ×
+//!   mode × scenario × adaptivity are orthogonal builder knobs; every
+//!   serve returns a unified [`coordinator::ServeOutcome`]:
 //!
 //! ```no_run
 //! use hetcoded::allocation::policy;
@@ -30,6 +35,7 @@
 //! let requests: Vec<Vec<f64>> = vec![vec![1.0; 64]; 32];
 //! let outcome = Session::builder(&spec)
 //!     .policy(policy::resolve("proposed")?)
+//!     .code("mds-vandermonde") // erasure code by registry name
 //!     .data(a)
 //!     .requests(requests)
 //!     .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 8 })
@@ -56,8 +62,10 @@
 //!   allocation, the fixed-`r` group code of [33] (Theorem 4), and the scheme
 //!   of Reisizadeh et al. [32] (Appendix D) ([`allocation`]), behind the
 //!   [`allocation::Policy`] trait + registry;
-//! - a real-valued systematic **MDS coding layer** (Vandermonde generator,
-//!   encoder, any-k decoder) with its own dense linear algebra ([`coding`]);
+//! - a real-valued **coding layer** behind the pluggable [`coding::Code`]
+//!   trait: systematic-random and Vandermonde MDS plus an LDPC-style
+//!   sparse-parity code, an encoder, an any-k decoder, and its own dense
+//!   (`Matrix`) and sparse (`CsrMatrix`) linear algebra ([`coding`]);
 //! - a **persistent compute pool** ([`runtime::pool`]) every parallel hot
 //!   path (blocked matmul, encode, multi-RHS decode, Monte-Carlo sweeps)
 //!   runs on — fixed worker threads, deterministic index-ordered

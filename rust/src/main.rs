@@ -16,7 +16,7 @@
 
 use hetcoded::allocation::policy::{self, Policy, PolicyEntry};
 use hetcoded::cli::Args;
-use hetcoded::coding::Matrix;
+use hetcoded::coding::{code, Matrix};
 use hetcoded::coordinator::{
     AdaptiveServeConfig, Compute, FailureScenario, JobConfig, Mode,
     NativeCompute, Session,
@@ -108,6 +108,7 @@ const RUN_FLAGS: &[&str] = &[
     "drift",
     "adaptive",
     "policy",
+    "code",
 ];
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -153,6 +154,10 @@ fn help_text() -> String {
         };
         policies.push_str(&format!("    {:<14} {}{}\n", e.name, e.summary, param));
     }
+    let mut codes = String::new();
+    for e in code::entries() {
+        codes.push_str(&format!("    {:<16} {}\n", e.name, e.summary));
+    }
     format!(
         "\
 hetcoded — optimal load allocation for coded distributed computation
@@ -162,6 +167,8 @@ USAGE: hetcoded <subcommand> [flags]
 
 POLICIES (the registry; any <policy> below, `name` or `name=param`)
 {policies}
+CODES (the erasure-code registry; `run --code <name>`)
+{codes}
 SUBCOMMANDS
   allocate  --config <toml> | --paper <fig2|fig4|fig8|fig9> [--n-total N] [--q Q]
             [--model a|b] [--rate R] [--group-r R] [--analytic]
@@ -193,7 +200,8 @@ SUBCOMMANDS
             [--out DIR] [--quick]
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
   run       [--backend native|xla] [--config <toml>] [--k K] [--d D]
-            [--policy <policy>] [--requests R] [--time-scale T] [--seed S]
+            [--policy <policy>] [--code <code>] [--requests R]
+            [--time-scale T] [--seed S]
             [--dead i,j,...] [--mode seq|pipelined|batched|arrivals]
             [--rate R] [--max-batch B] [--encode-threads T] [--decode-cache C]
             [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
@@ -211,7 +219,10 @@ SUBCOMMANDS
             factor F at a batch index, and --adaptive turns on the online
             estimator + re-allocation loop (all three need --mode
             arrivals); re-allocation re-slices the encoded rows, so
-            `encode passes` stays 1 regardless.
+            `encode passes` stays 1 regardless. --code picks the erasure
+            code from the CODES registry (default mds-random; the sparse
+            code is not MDS — a decode can fail cleanly if an unlucky
+            k-subset of rows arrives first).
   help      This text.
 "
     )
@@ -693,6 +704,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             .get::<usize>("decode-cache", hetcoded::coding::DEFAULT_FACTOR_CACHE)?,
         ..Default::default()
     };
+    if let Some(code_name) = args.flag("code") {
+        // Validate through the registry now so a typo fails before any
+        // data is generated, with the known names listed.
+        code::resolve(code_name)?;
+        cfg.code = Some(code_name.to_string());
+    }
     if let Some(dead) = args.flag("dead") {
         cfg.dead_workers = dead
             .split(',')
@@ -742,10 +759,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     println!(
         "live coded matvec: N={} groups={} k={k} d={d} backend={backend_name} \
-         mode={mode_name} policy={} n={} (rate {:.3})",
+         mode={mode_name} policy={} code={} n={} (rate {:.3})",
         spec.total_workers(),
         spec.num_groups(),
         live_policy.name(),
+        cfg.resolve_code()?.name(),
         alloc.integer_n(&spec),
         spec.k as f64 / alloc.integer_n(&spec) as f64,
     );

@@ -75,6 +75,30 @@ pub mod gen {
         ClusterSpec::new(groups, k).expect("generated spec valid")
     }
 
+    /// Random code dimensions: `k ∈ [2, max_k]`, `n ∈ [k, k + max_extra]`.
+    pub fn code_dims(
+        rng: &mut Rng,
+        max_k: usize,
+        max_extra: usize,
+    ) -> (usize, usize) {
+        let k = 2 + rng.gen_range((max_k - 1) as u64) as usize;
+        let n = k + rng.gen_range((max_extra + 1) as u64) as usize;
+        (n, k)
+    }
+
+    /// Random `m`-subset of `0..n`, in random arrival order, no repeats
+    /// (partial Fisher–Yates).
+    pub fn row_subset(rng: &mut Rng, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "subset of {m} from {n} rows");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + rng.gen_range((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
     /// Random cluster with all shift parameters equal (group-code compatible).
     pub fn cluster_equal_alpha(
         rng: &mut Rng,
@@ -139,6 +163,27 @@ mod tests {
             let spec = gen::cluster(rng, 6, 100, 1000);
             if spec.total_workers() == 0 || spec.num_groups() == 0 {
                 return Err("empty".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generated_code_dims_and_subsets_valid() {
+        property("gen code dims/subsets", 100, |rng| {
+            let (n, k) = gen::code_dims(rng, 12, 12);
+            if !(2..=12).contains(&k) || !(k..=k + 12).contains(&n) {
+                return Err(format!("dims out of range: n={n} k={k}"));
+            }
+            let rows = gen::row_subset(rng, n, k);
+            if rows.len() != k {
+                return Err(format!("subset size {}", rows.len()));
+            }
+            let mut sorted = rows.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != k || sorted.iter().any(|&r| r >= n) {
+                return Err(format!("subset invalid: {rows:?}"));
             }
             Ok(())
         });

@@ -1,0 +1,207 @@
+//! Golden bit-identity fixtures for the `Code` trait refactor.
+//!
+//! The trait's default methods are documented as *delegation*, not
+//! reimplementation: `setup` → `Generator::new`, `encode` →
+//! `Encoder::encode_capped`, `decode_rows` → `Decoder::decode_batch`.
+//! These tests pin that claim at the bit level, so any future `Code`
+//! implementation that silently forks the dense path fails here:
+//!
+//! - component level: the trait path and the raw pre-trait call chain
+//!   produce byte-identical coded matrices and decoded columns for the
+//!   dense Vandermonde and systematic-random generators;
+//! - session level: a `Session` that names a code through the registry
+//!   serves bit-identically to one that resolves the same generator the
+//!   pre-registry way (`JobConfig::generator`, `code: None`);
+//! - fixture level: the systematic prefix of every systematic generator
+//!   equals the input rows exactly, and an FNV-1a digest of the coded
+//!   matrix is invariant across pool sizes and repeat encodes.
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::code;
+use hetcoded::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use hetcoded::coordinator::{JobConfig, Mode, NativeCompute, Session};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use hetcoded::runtime::pool::WorkPool;
+use std::sync::Arc;
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// FNV-1a over the bit patterns — the digest that anchors the fixture.
+fn digest(m: &Matrix) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in m.data() {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+#[test]
+fn trait_path_bit_identical_to_legacy_components() {
+    let (n, k, d) = (96usize, 64usize, 8usize);
+    let pool = WorkPool::new(2);
+    for (name, kind) in [
+        ("mds-vandermonde", GeneratorKind::Vandermonde),
+        ("mds-random", GeneratorKind::SystematicRandom),
+    ] {
+        let code = code::resolve(name).unwrap();
+        let a = random_matrix(k, d, 0x601D);
+
+        // Legacy chain, exactly as the coordinator called it before the
+        // registry existed.
+        let legacy_gen = Generator::new(kind, n, k, 7).unwrap();
+        let legacy_enc = Encoder::new(legacy_gen.clone());
+        let legacy_coded = legacy_enc.encode_capped(&a, &pool, 2).unwrap();
+
+        // Trait chain with identical inputs.
+        let gen = code.setup(n, k, 7).unwrap();
+        let encoder = Encoder::new(gen.clone());
+        let coded = code.encode(&encoder, &a, &pool, 2).unwrap();
+
+        assert_eq!(bits(&coded), bits(&legacy_coded), "{name}: encode forked");
+        assert_eq!(
+            bits(gen.matrix()),
+            bits(legacy_gen.matrix()),
+            "{name}: generator forked"
+        );
+
+        // Decode a scattered k-subset through both paths.
+        let rows: Vec<usize> = (0..n).filter(|r| r % 3 != 1).take(k).collect();
+        let x: Vec<f64> = (0..d).map(|j| 0.25 * (j as f64 + 1.0)).collect();
+        let y = coded.matvec(&x);
+        let col: Vec<f64> = rows.iter().map(|&r| y[r]).collect();
+        let legacy_out = Decoder::new(legacy_gen)
+            .decode_batch(&rows, &[col.clone()])
+            .unwrap();
+        let mut decoder = Decoder::new(gen);
+        let out = code.decode_rows(&mut decoder, &rows, &[col]).unwrap();
+        let same = out[0]
+            .iter()
+            .zip(&legacy_out[0])
+            .all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(same, "{name}: decode forked");
+    }
+}
+
+#[test]
+fn session_with_registry_code_serves_bit_identically_to_generator_config() {
+    let spec = ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let a = random_matrix(64, 8, 0xF1C);
+    let mut rng = Rng::new(0xF1D);
+    let reqs: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    for (name, kind) in [
+        ("mds-vandermonde", GeneratorKind::Vandermonde),
+        ("mds-random", GeneratorKind::SystematicRandom),
+    ] {
+        let serve = |use_registry: bool| {
+            let cfg = JobConfig {
+                time_scale: 0.002,
+                seed: 0x60A1,
+                generator: kind,
+                ..Default::default()
+            };
+            let mut b = Session::builder(&spec)
+                .allocation(alloc.clone())
+                .data(a.clone())
+                .requests(reqs.clone())
+                .config(cfg)
+                .compute(Arc::new(NativeCompute))
+                .mode(Mode::Batched);
+            if use_registry {
+                b = b.code(name);
+            }
+            b.build().unwrap().serve().unwrap()
+        };
+        let legacy = serve(false);
+        let named = serve(true);
+        assert_eq!(legacy.jobs.len(), named.jobs.len(), "{name}");
+        for (i, (x, y)) in legacy.jobs.iter().zip(&named.jobs).enumerate() {
+            assert_eq!(x.decoded, y.decoded, "{name}: job {i} decoded forked");
+            assert_eq!(x.rows_collected, y.rows_collected, "{name}: job {i}");
+        }
+        assert_eq!(legacy.encodes, named.encodes, "{name}");
+        assert!(
+            legacy.worst_error == named.worst_error
+                || (legacy.worst_error.is_nan() && named.worst_error.is_nan()),
+            "{name}: worst_error {} vs {}",
+            legacy.worst_error,
+            named.worst_error
+        );
+        // Dense serving stays accurate after the refactor (Vandermonde at
+        // k = 64 carries the serving-path tolerance, cf. prepared_path.rs).
+        assert!(legacy.worst_error < 1e-2, "{name}: {}", legacy.worst_error);
+    }
+}
+
+#[test]
+fn systematic_prefix_is_the_input_matrix_bit_for_bit() {
+    // The analytic fixture: every systematic code's first k coded rows ARE
+    // the input rows — no arithmetic, no tolerance.
+    let (n, k, d) = (48usize, 32usize, 5usize);
+    let a = random_matrix(k, d, 0x575);
+    for name in ["mds-random", "sparse-parity"] {
+        let code = code::resolve(name).unwrap();
+        let gen = code.setup(n, k, 11).unwrap();
+        let encoder = Encoder::new(gen);
+        let coded = code
+            .encode(&encoder, &a, WorkPool::global_ref(), 1)
+            .unwrap();
+        for i in 0..k {
+            for j in 0..d {
+                assert_eq!(
+                    coded.row(i)[j].to_bits(),
+                    a.row(i)[j].to_bits(),
+                    "{name}: systematic row {i} col {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn coded_digest_invariant_across_pool_sizes_and_repeats() {
+    // The digest fixture: one number per registered code that moves if any
+    // bit of the coded matrix moves — across pool sizes, stream caps, and
+    // repeat encodes.
+    let (n, k, d) = (96usize, 64usize, 8usize);
+    let a = random_matrix(k, d, 0xD16);
+    for e in code::entries() {
+        let code = e.build();
+        let gen = code.setup(n, k, 13).unwrap();
+        let encoder = Encoder::new(gen);
+        let reference =
+            digest(&code.encode(&encoder, &a, &WorkPool::new(1), 1).unwrap());
+        for threads in [1usize, 2, 7, 16] {
+            let pool = WorkPool::new(threads);
+            for streams in [1usize, 3, 16] {
+                let got =
+                    digest(&code.encode(&encoder, &a, &pool, streams).unwrap());
+                assert_eq!(
+                    got, reference,
+                    "{}: digest moved at pool={threads} streams={streams}",
+                    e.name
+                );
+            }
+        }
+    }
+}

@@ -2,7 +2,8 @@
 //!
 //! Pins the two contracts the persistent compute pool must honor:
 //!
-//! 1. **Bit-identity**: every pooled kernel — matmul, encode, multi-RHS
+//! 1. **Bit-identity**: every pooled kernel — matmul (dense and CSR
+//!    sparse), encode under every registered generator family, multi-RHS
 //!    decode, Monte-Carlo sweeps — produces byte-identical results across
 //!    pool sizes {1, 2, 7, 16}, because the deterministic work partition
 //!    and the index-ordered reduction are fixed by the caller, never by
@@ -14,7 +15,7 @@
 //!    measured, mirroring the `encodes == 1` pattern).
 
 use hetcoded::allocation::uniform_allocation;
-use hetcoded::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
+use hetcoded::coding::{CsrMatrix, Decoder, Encoder, Generator, GeneratorKind, Matrix};
 use hetcoded::coordinator::{JobConfig, Mode, NativeCompute, Session};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, Group, LatencyModel};
@@ -60,7 +61,11 @@ fn matmul_bit_identical_across_pool_sizes() {
 
 #[test]
 fn encode_bit_identical_across_pool_sizes() {
-    for kind in [GeneratorKind::SystematicRandom, GeneratorKind::Vandermonde] {
+    for kind in [
+        GeneratorKind::SystematicRandom,
+        GeneratorKind::Vandermonde,
+        GeneratorKind::SparseParity,
+    ] {
         let gen = Generator::new(kind, 192, 128, 7).unwrap();
         let a = random_matrix(128, 96, 3);
         let enc = Encoder::new(gen);
@@ -69,6 +74,76 @@ fn encode_bit_identical_across_pool_sizes() {
             let pool = WorkPool::new(threads);
             let got = bits(&enc.encode_on(&a, &pool).unwrap());
             assert_eq!(got, reference, "{kind:?} pool={threads}");
+        }
+    }
+}
+
+#[test]
+fn csr_matmul_bit_identical_to_dense_on_adversarial_patterns() {
+    // The sparse kernel's determinism claim (`CsrMatrix::matmul_on` docs):
+    // byte-equality with the dense kernel, at every pool size, on the
+    // patterns where the two take maximally different paths — empty rows
+    // (the CSR kernel writes nothing), one fully dense row (the CSR row
+    // sweep degenerates to the dense one), a single-column matrix, a
+    // single populated column, and the all-zero matrix — plus dimensions
+    // that are not multiples of the register tile width.
+    let mut rng = Rng::new(51);
+    let dense_row = 7usize;
+    let patterns: Vec<(&str, Matrix)> = vec![
+        ("all-zero", Matrix::zeros(16, 20)),
+        (
+            "empty-rows",
+            Matrix::from_fn(33, 20, |i, _| {
+                if i % 3 == 0 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            }),
+        ),
+        (
+            "one-dense-row",
+            Matrix::from_fn(33, 20, |i, j| {
+                if i == dense_row || (i + 3 * j) % 11 == 0 {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            }),
+        ),
+        ("single-column-shape", Matrix::from_fn(19, 1, |_, _| rng.normal())),
+        (
+            "single-populated-column",
+            Matrix::from_fn(19, 20, |_, j| {
+                if j == 4 {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            }),
+        ),
+    ];
+    for (what, a) in &patterns {
+        let csr = CsrMatrix::from_dense(a);
+        // n = 13: not a multiple of the register tile width.
+        for n in [1usize, 13, 64] {
+            let b = random_matrix(a.cols(), n, 60 + n as u64);
+            let reference = bits(&a.matmul_on(&b, &WorkPool::new(1)));
+            for threads in POOL_SIZES {
+                let pool = WorkPool::new(threads);
+                assert_eq!(
+                    bits(&csr.matmul_on(&b, &pool)),
+                    reference,
+                    "{what}: n={n} pool={threads}"
+                );
+                // The dense kernel agrees with itself too, so a failure
+                // above is attributable to the sparse path.
+                assert_eq!(
+                    bits(&a.matmul_on(&b, &pool)),
+                    reference,
+                    "{what}: dense n={n} pool={threads}"
+                );
+            }
         }
     }
 }

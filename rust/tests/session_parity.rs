@@ -8,7 +8,8 @@
 //!   counts, model latencies, and the adaptation trace (wall-clock
 //!   durations are the only fields excluded: they are real time);
 //! - every policy name the CLI accepts resolves through the registry to
-//!   exactly one `Policy`.
+//!   exactly one `Policy`, and (since the `Code` registry mirrors it)
+//!   every code name resolves to exactly one `Code`.
 #![allow(deprecated)]
 
 use hetcoded::allocation::{policy, uniform_allocation, Allocation, Policy};
@@ -402,6 +403,36 @@ fn every_cli_policy_name_resolves_to_exactly_one_policy() {
     }
     // Unknown names fail with the registry listing.
     let err = policy::resolve("nonexistent").unwrap_err().to_string();
+    for name in &names {
+        assert!(err.contains(name), "error should list `{name}`: {err}");
+    }
+}
+
+#[test]
+fn every_cli_code_name_resolves_to_exactly_one_code() {
+    // The code registry mirrors the policy registry: unique names, each
+    // resolving to a code whose setup succeeds on a serving-sized (n, k),
+    // and unknown names list every known name.
+    use hetcoded::coding::code;
+    let names = code::code_names();
+    assert!(names.contains(&"mds-random"));
+    assert!(names.contains(&"mds-vandermonde"));
+    assert!(names.contains(&"sparse-parity"));
+    for (i, name) in names.iter().enumerate() {
+        assert_eq!(
+            names.iter().position(|n| n == name),
+            Some(i),
+            "duplicate code registry name `{name}`"
+        );
+        let c = code::resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(c.name(), *name, "registry name / code name mismatch");
+        let gen = c
+            .setup(128, 64, 17)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(gen.matrix().rows(), 128);
+        assert_eq!(gen.matrix().cols(), 64);
+    }
+    let err = code::resolve("nonexistent").unwrap_err().to_string();
     for name in &names {
         assert!(err.contains(name), "error should list `{name}`: {err}");
     }
