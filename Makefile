@@ -2,7 +2,7 @@
 # tier-1 verification; everything XLA/PJRT additionally needs `make
 # artifacts` (Python + JAX) and a build with `--features xla`.
 
-.PHONY: build test artifacts figures bench bench-json lint doc
+.PHONY: build test artifacts figures bench bench-json bench-schema lint doc
 
 build:
 	cargo build --release
@@ -23,11 +23,13 @@ bench:
 
 # Machine-readable bench snapshot: run the perf benches with JSON capture
 # (the in-repo harness appends `"name": ns_per_op,` fragments when
-# BENCH_JSON_DIR is set) and merge them into BENCH_PR6.json so the bench
-# trajectory is diffable across PRs (BENCH_PR2/PR3/PR5.json are the
-# previous snapshots' schemas; PR 6 adds the sparse-vs-dense CSR encode
-# ablation rows). Bench names must be unique across the two binaries
-# (they are today); a collision would emit duplicate JSON keys.
+# BENCH_JSON_DIR is set) and merge them into BENCH_PR7.json so the bench
+# trajectory is diffable across PRs (BENCH_PR2/PR3/PR5/PR6.json are the
+# previous snapshots' schemas; PR 7 adds the sharded admission front-end
+# rows). Bench names must be unique across the two binaries (they are
+# today, and `scripts/check_bench_schema` fails on a collision); after
+# regenerating, run `make bench-schema` to confirm the snapshot matches
+# the harness.
 bench-json:
 	rm -rf target/bench-json && mkdir -p target/bench-json
 	BENCH_JSON_DIR=$(CURDIR)/target/bench-json cargo bench --bench perf_hotpaths
@@ -36,8 +38,14 @@ bench-json:
 	  { echo "error: benches emitted no JSON fragments (BENCH_JSON_DIR plumbing broken?)"; exit 1; }
 	{ echo '{'; \
 	  echo '  "_meta": "flat map: benchmark name -> median ns/op from the in-repo bench harness; regenerate with make bench-json",'; \
-	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR6.json
-	@echo "wrote BENCH_PR6.json"
+	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR7.json
+	@echo "wrote BENCH_PR7.json"
+
+# Validate every BENCH_PR*.json snapshot (flat name -> ns/op-or-null map,
+# no duplicate keys) and, where cargo exists, diff the newest snapshot's
+# keys against the names the harness emits in BENCH_LIST mode.
+bench-schema:
+	python3 scripts/check_bench_schema
 
 lint:
 	cargo fmt --all --check

@@ -3,17 +3,28 @@
 //! - arrival-trace generation (Poisson and bursty ON/OFF);
 //! - single-job service sampling (the Rényi any-`k` merge, per draw);
 //! - a full throughput-under-load run (arrivals → FIFO queue → metrics)
-//!   at serving scale for the two headline policies.
+//!   at serving scale for the two headline policies;
+//! - the sharded admission front end (tenant-keyed shard queues,
+//!   work-stealing drain, SLO-adaptive batching) at 100k–200k arrivals,
+//!   plus a live front-end `Session` serve through the coordinator.
 
+use hetcoded::allocation::{policy, uniform_allocation};
 use hetcoded::bench::{black_box, run, run_quick, section};
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::{
+    FrontEndConfig, JobConfig, Mode, NativeCompute, Session,
+};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, EstimatorConfig, Group, LatencyModel};
 use hetcoded::sim::Scheme;
 use hetcoded::workload::{
-    run_workload, run_workload_drift, service_sampler, AdaptPolicy,
-    ArrivalProcess, DriftEvent, DriftKind, DriftSchedule,
-    DriftWorkloadConfig, WorkloadConfig,
+    mean_service, run_admission, run_workload, run_workload_drift,
+    service_sampler, AdaptPolicy, AdmissionConfig, ArrivalProcess,
+    BatchPolicy, DriftEvent, DriftKind, DriftSchedule, DriftWorkloadConfig,
+    SloConfig, TenantSpec, WorkloadConfig,
 };
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     section("arrival generation (10k jobs per call)");
@@ -80,6 +91,112 @@ fn main() {
             let rep =
                 run_workload(&spec, scheme, LatencyModel::A, &cfg).unwrap();
             black_box(rep.throughput);
+        });
+    }
+
+    section("admission front end (sharded, multi-tenant, event-driven)");
+    {
+        let p = policy::resolve("proposed").unwrap();
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es = mean_service(&mut sampler, 1_000, 3);
+        run_quick("admission 100k fifo-parity (1 shard, 1 tenant)", || {
+            let cfg = AdmissionConfig::fifo_parity(
+                ArrivalProcess::Poisson { rate: 0.8 / es },
+                100_000,
+                1,
+                2019,
+            );
+            let rep =
+                run_admission(&spec, &*p, LatencyModel::A, &cfg).unwrap();
+            black_box(rep.throughput);
+        });
+        // 8 tenants at 0.45/E[S] each over 4 drainers: rho = 0.9 per
+        // drainer at single-job batches — the saturation knee batching
+        // is meant to push past.
+        let sharded = |batch| AdmissionConfig {
+            tenants: (0..8)
+                .map(|_| TenantSpec {
+                    arrivals: ArrivalProcess::Poisson { rate: 0.45 / es },
+                    weight: 1.0,
+                })
+                .collect(),
+            jobs: 200_000,
+            shards: 4,
+            drainers: 4,
+            steal: true,
+            batch,
+            amortize: 0.75,
+            seed: 2019,
+        };
+        run_quick("admission 200k 4-shard steal fixed-batch", || {
+            let rep = run_admission(
+                &spec,
+                &*p,
+                LatencyModel::A,
+                &sharded(BatchPolicy::Fixed(16)),
+            )
+            .unwrap();
+            black_box((rep.throughput, rep.steals));
+        });
+        run_quick("admission 200k 4-shard steal slo-adaptive", || {
+            let rep = run_admission(
+                &spec,
+                &*p,
+                LatencyModel::A,
+                &sharded(BatchPolicy::Adaptive(SloConfig {
+                    target_p99: 25.0 * es,
+                    ..Default::default()
+                })),
+            )
+            .unwrap();
+            black_box((rep.throughput, rep.final_batch_limit));
+        });
+    }
+
+    section("live front end (Session drain, coordinator + WorkPool)");
+    {
+        let spec = ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(11);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let reqs: Vec<Vec<f64>> = (0..64)
+            .map(|_| (0..8).map(|_| rng.normal()).collect())
+            .collect();
+        let offsets = vec![Duration::ZERO; 64];
+        run_quick("live front-end serve 64 req (2 shards x 4 tenants)", || {
+            let outcome = Session::builder(&spec)
+                .allocation(alloc.clone())
+                .data(a.clone())
+                .requests(reqs.clone())
+                .config(JobConfig {
+                    time_scale: 0.002,
+                    seed: 7,
+                    ..Default::default()
+                })
+                .compute(Arc::new(NativeCompute))
+                .front_end(FrontEndConfig {
+                    shards: 2,
+                    tenants: 4,
+                    weights: Vec::new(),
+                    batch: None,
+                })
+                .mode(Mode::Arrivals {
+                    offsets: offsets.clone(),
+                    max_batch: 8,
+                })
+                .build()
+                .unwrap()
+                .serve()
+                .unwrap();
+            black_box(outcome.front_end.unwrap().batches);
         });
     }
 

@@ -57,7 +57,7 @@ pub fn fmt_time(s: f64) -> String {
 /// benchmark appends a `"name": ns_per_op,` line to
 /// `$BENCH_JSON_DIR/<bench-binary>.lines`; `make bench-json` merges the
 /// per-binary fragments into the current `BENCH_PR<N>.json` snapshot
-/// (flat name → ns/op map, `BENCH_PR3.json` as of this PR) so the repo's
+/// (flat name → ns/op map, `BENCH_PR7.json` as of this PR) so the repo's
 /// bench trajectory is machine-diffable across PRs.
 fn json_append(name: &str, median_secs: f64) {
     let Ok(dir) = std::env::var("BENCH_JSON_DIR") else {
@@ -81,8 +81,29 @@ fn json_append(name: &str, median_secs: f64) {
     }
 }
 
+/// When the `BENCH_LIST` environment variable is set, benches emit one
+/// `bench: <name>` line per benchmark instead of measuring anything —
+/// `scripts/check_bench_schema` diffs that list against the keys of the
+/// current `BENCH_PR<N>.json` snapshot so the schema can never drift
+/// from the harness.
+fn list_only(name: &str) -> Option<BenchResult> {
+    std::env::var_os("BENCH_LIST")?;
+    println!("bench: {name}");
+    Some(BenchResult {
+        name: name.to_string(),
+        iters: 0,
+        median: 0.0,
+        min: 0.0,
+        p95: 0.0,
+        mean: 0.0,
+    })
+}
+
 /// Benchmark `f`, auto-calibrating iterations to ~`target` of measurement.
 pub fn run_with_target<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    if let Some(listed) = list_only(name) {
+        return listed;
+    }
     // Warm-up & calibration: time one call, derive iteration count.
     let t0 = Instant::now();
     f();

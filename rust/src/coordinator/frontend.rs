@@ -1,0 +1,482 @@
+//! The live sharded admission front end for arrivals-mode serving.
+//!
+//! [`serve_arrivals_front_impl`] is the wall-clock twin of the model-time
+//! simulator in [`crate::workload::admission`]: arrivals land in per-shard
+//! [`DrrQueue`]s (tenant-keyed, `shard = tenant % shards`), a
+//! round-robin-rotating drain visits the shards work-conservingly (an
+//! empty home shard never idles the drain while another shard has
+//! backlog — the live analogue of the simulator's work stealing), and
+//! each dispatched batch runs on the session's [`PreparedJob`] — whose
+//! encode/decode kernels execute on the persistent
+//! [`crate::runtime::pool::WorkPool`] resolved at session build. Batch
+//! sizing is either the fixed `max_batch` of [`Mode::Arrivals`] or a
+//! [`BatchController`] steering the limit against a wall-clock sojourn
+//! SLO ([`BatchPolicy::Adaptive`]).
+//!
+//! # Determinism and parity
+//!
+//! The drain is one coordinator loop, not racing threads, so dispatch
+//! order is a pure function of arrival order and queue state:
+//!
+//! - **Degenerate config** ([`FrontEndConfig::fifo_parity`]: 1 shard,
+//!   1 tenant, no explicit batch policy): the DRR queue collapses to the
+//!   FIFO the legacy drain walks, batches are the same contiguous index
+//!   ranges, and each batch `b` draws its straggle realization from the
+//!   same seed (`derive_stream_seed(cfg.seed, b) ^ STRAGGLE_SEED_TAG`)
+//!   through the same [`ScenarioState`] staging — so decoded outputs,
+//!   collected row sets, and encode counts are **bit-identical** to
+//!   [`Mode::Arrivals`] without a front end (pinned by
+//!   `rust/tests/admission.rs`).
+//! - **Sharded config**: request→tenant (`i % tenants`) and tenant→shard
+//!   (`t % shards`) maps are fixed, per-request reports are emitted
+//!   index-ordered regardless of dispatch interleaving (the
+//!   [`crate::runtime::pool::WorkPool`] merge pattern), and batch seeds
+//!   depend only on the batch counter. Wall-clock timing decides batch
+//!   *composition*, so latency metrics vary run to run like any live
+//!   serve, but every request's decode remains exact.
+//!
+//! [`Mode::Arrivals`]: crate::coordinator::Mode::Arrivals
+//! [`PreparedJob`]: crate::coordinator::PreparedJob
+
+use crate::allocation::Allocation;
+use crate::coding::Matrix;
+use crate::coordinator::failures::{FailureScenario, ScenarioState};
+use crate::coordinator::master::{
+    derive_stream_seed, fold_worst_error, JobConfig, JobReport, ServeReport,
+    STRAGGLE_SEED_TAG,
+};
+use crate::coordinator::{Compute, LatencyRecorder, PreparedJob};
+use crate::model::ClusterSpec;
+use crate::workload::{BatchController, BatchPolicy, DrrQueue};
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration of the live admission front end
+/// ([`crate::coordinator::SessionBuilder::front_end`]).
+#[derive(Clone, Debug)]
+pub struct FrontEndConfig {
+    /// Admission queues; request `i` belongs to tenant `i % tenants`,
+    /// tenant `t` is keyed onto shard `t % shards`.
+    pub shards: usize,
+    /// Tenant count (round-robin request assignment).
+    pub tenants: usize,
+    /// Per-tenant DRR weights. Empty means unit weights; otherwise must
+    /// have exactly `tenants` positive finite entries.
+    pub weights: Vec<f64>,
+    /// Batch sizing. `None` uses the arrivals mode's `max_batch` as a
+    /// fixed limit (the parity default); `Some(BatchPolicy::Adaptive(..))`
+    /// steers the limit against a wall-clock sojourn SLO (seconds).
+    pub batch: Option<BatchPolicy>,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> Self {
+        FrontEndConfig {
+            shards: 1,
+            tenants: 1,
+            weights: Vec::new(),
+            batch: None,
+        }
+    }
+}
+
+impl FrontEndConfig {
+    /// The degenerate configuration pinned bit-identical to the plain
+    /// arrivals drain: one shard, one tenant, the mode's own `max_batch`.
+    pub fn fifo_parity() -> FrontEndConfig {
+        FrontEndConfig::default()
+    }
+
+    /// Check the knobs are self-consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 || self.tenants == 0 {
+            return Err(Error::InvalidSpec(
+                "front end needs at least one shard and one tenant".into(),
+            ));
+        }
+        if !self.weights.is_empty() {
+            if self.weights.len() != self.tenants {
+                return Err(Error::InvalidSpec(format!(
+                    "front end has {} tenants but {} weights",
+                    self.tenants,
+                    self.weights.len()
+                )));
+            }
+            if self.weights.iter().any(|w| !(*w > 0.0) || !w.is_finite()) {
+                return Err(Error::InvalidSpec(format!(
+                    "front-end weights must be positive and finite, got {:?}",
+                    self.weights
+                )));
+            }
+        }
+        match self.batch {
+            None => Ok(()),
+            Some(BatchPolicy::Fixed(0)) => Err(Error::InvalidSpec(
+                "front-end fixed batch limit must be positive".into(),
+            )),
+            Some(BatchPolicy::Fixed(_)) => Ok(()),
+            Some(BatchPolicy::Adaptive(slo)) => slo.validate(),
+        }
+    }
+}
+
+/// Front-end counters of one arrivals serve
+/// ([`crate::coordinator::ServeOutcome::front_end`]).
+#[derive(Clone, Debug)]
+pub struct FrontEndReport {
+    /// Shards / tenants the stream ran with.
+    pub shards: usize,
+    /// Tenant count.
+    pub tenants: usize,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Batches drained from a shard other than the rotation's next (the
+    /// work-conserving skips — the live analogue of sim-layer steals).
+    pub cross_shard_batches: u64,
+    /// Mean jobs per batch.
+    pub mean_batch: f64,
+    /// Largest batch actually dispatched.
+    pub max_batch_used: usize,
+    /// The batch limit in force at the end of the stream.
+    pub final_batch_limit: usize,
+    /// Controller grow decisions (0 under a fixed limit).
+    pub batch_grows: u64,
+    /// Controller shrink decisions (0 under a fixed limit).
+    pub batch_shrinks: u64,
+    /// Peak requests admitted-but-undispatched across all shards.
+    pub max_queue_depth: usize,
+    /// Owning tenant of request `i`.
+    pub tenant_of: Vec<usize>,
+    /// Per-tenant nearest-rank p99 sojourn (zero for a tenant that owned
+    /// no requests).
+    pub per_tenant_p99: Vec<Duration>,
+}
+
+/// What [`serve_arrivals_front_impl`] hands back to the session facade.
+pub(crate) struct FrontServeReport {
+    pub serve: ServeReport,
+    pub decode_cache: (u64, u64),
+    pub post_setup_encodes: u64,
+    pub steady_allocs: u64,
+    pub front: FrontEndReport,
+}
+
+/// Nearest-rank p99 over raw samples (order irrelevant).
+fn p99(samples: &mut [Duration]) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    samples.sort_unstable();
+    let rank =
+        ((0.99 * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+    samples[rank - 1]
+}
+
+/// The sharded arrivals drain behind
+/// [`crate::coordinator::Session::serve`] when a [`FrontEndConfig`] is
+/// attached. Mirrors the legacy drain's scenario/seed discipline batch
+/// for batch; see the module docs for the parity argument.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn serve_arrivals_front_impl(
+    spec: &ClusterSpec,
+    alloc: &Allocation,
+    a: &Matrix,
+    requests: &[Vec<f64>],
+    arrival_offsets: &[Duration],
+    max_batch: usize,
+    compute: Arc<dyn Compute>,
+    cfg: &JobConfig,
+    scenario: &FailureScenario,
+    front: &FrontEndConfig,
+) -> Result<FrontServeReport> {
+    if requests.len() != arrival_offsets.len() {
+        return Err(Error::InvalidSpec(format!(
+            "{} requests but {} arrival offsets",
+            requests.len(),
+            arrival_offsets.len()
+        )));
+    }
+    if requests.is_empty() {
+        return Err(Error::InvalidSpec(
+            "front end needs at least one request".into(),
+        ));
+    }
+    if max_batch == 0 {
+        return Err(Error::InvalidSpec("max_batch must be positive".into()));
+    }
+    if arrival_offsets.windows(2).any(|w| w[1] < w[0]) {
+        return Err(Error::InvalidSpec(
+            "arrival offsets must be ascending".into(),
+        ));
+    }
+    front.validate()?;
+    let batch_policy = front.batch.unwrap_or(BatchPolicy::Fixed(max_batch));
+    let mut controller = match batch_policy {
+        BatchPolicy::Fixed(_) => None,
+        BatchPolicy::Adaptive(slo) => Some(BatchController::new(slo)?),
+    };
+    let fixed_limit = match batch_policy {
+        BatchPolicy::Fixed(b) => b,
+        BatchPolicy::Adaptive(_) => 0,
+    };
+    let n = requests.len();
+    let shards = front.shards;
+    let tenants = front.tenants;
+    let weights: Vec<f64> = if front.weights.is_empty() {
+        vec![1.0; tenants]
+    } else {
+        front.weights.clone()
+    };
+    let tenant_of: Vec<usize> = (0..n).map(|i| i % tenants).collect();
+    // Per-shard arrival streams in index (== arrival) order.
+    let mut shard_stream: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    for (i, &t) in tenant_of.iter().enumerate() {
+        shard_stream[t % shards].push(i);
+    }
+    let mut next_arrival = vec![0usize; shards];
+    let mut queues: Vec<DrrQueue> =
+        (0..shards).map(|_| DrrQueue::new(tenants)).collect();
+
+    // Setup once: encode, chunk, decoder state live across batches — the
+    // exact discipline of the legacy drain.
+    let mut prepared = PreparedJob::new(spec, alloc, a, cfg)?;
+    let mut state = ScenarioState::new(spec, &cfg.dead_workers);
+    let mut injector_slot: Option<crate::coordinator::StragglerInjector> = None;
+    let mut grows_baseline: Option<u64> = None;
+
+    let start = Instant::now();
+    let mut recorder = LatencyRecorder::new();
+    let mut worst = 0.0f64;
+    let mut job_slots: Vec<Option<JobReport>> = (0..n).map(|_| None).collect();
+    let mut per_tenant: Vec<Vec<Duration>> = vec![Vec::new(); tenants];
+    let mut batch_buf: Vec<usize> = Vec::new();
+    let mut gather: Vec<Vec<f64>> = Vec::new();
+    let mut served = 0usize;
+    let mut queued = 0usize;
+    let mut batch_idx = 0u64;
+    let (mut batches, mut cross_shard, mut batch_jobs) = (0u64, 0u64, 0u64);
+    let mut max_batch_used = 0usize;
+    let mut max_depth = 0usize;
+    let mut rr = 0usize;
+
+    while served < n {
+        // Admit everything that has arrived by now, on every shard.
+        let now = start.elapsed();
+        for s in 0..shards {
+            let stream = &shard_stream[s];
+            let cur = &mut next_arrival[s];
+            while *cur < stream.len() && arrival_offsets[stream[*cur]] <= now {
+                queues[s].push(tenant_of[stream[*cur]], stream[*cur]);
+                *cur += 1;
+                queued += 1;
+            }
+        }
+        max_depth = max_depth.max(queued);
+        // Work-conserving rotation: serve the first backlogged shard from
+        // the round-robin cursor onward.
+        let mut chosen: Option<(usize, usize)> = None;
+        for off in 0..shards {
+            let s = (rr + off) % shards;
+            if !queues[s].is_empty() {
+                chosen = Some((s, off));
+                break;
+            }
+        }
+        let Some((s, off)) = chosen else {
+            // Nothing admitted anywhere: sleep until the earliest pending
+            // arrival (one exists — served + queued < n).
+            let mut t_next: Option<Duration> = None;
+            for s in 0..shards {
+                if next_arrival[s] < shard_stream[s].len() {
+                    let t = arrival_offsets[shard_stream[s][next_arrival[s]]];
+                    t_next = Some(t_next.map_or(t, |x| x.min(t)));
+                }
+            }
+            let t = t_next.ok_or_else(|| {
+                Error::Runtime(
+                    "front-end drain stalled with no pending arrivals".into(),
+                )
+            })?;
+            let now = start.elapsed();
+            if t > now {
+                std::thread::sleep(t - now);
+            }
+            continue;
+        };
+        if off > 0 {
+            cross_shard += 1;
+        }
+        rr = (s + 1) % shards;
+        let limit =
+            controller.as_ref().map_or(fixed_limit, BatchController::limit);
+        batch_buf.clear();
+        queues[s].drain(&weights, limit, &mut batch_buf);
+        let b = batch_buf.len();
+        queued -= b;
+
+        // Per-batch scenario advance and straggle seed: identical to the
+        // legacy drain, keyed by the batch counter alone.
+        state.advance(scenario, batch_idx)?;
+        let batch_seed =
+            derive_stream_seed(cfg.seed, batch_idx) ^ STRAGGLE_SEED_TAG;
+        if injector_slot.is_none() {
+            injector_slot = Some(state.injector(
+                cfg.model,
+                prepared.per_worker(),
+                cfg.time_scale,
+                batch_seed,
+            )?);
+        } else {
+            let inj = injector_slot.as_mut().expect("slot checked above");
+            state.injector_into(
+                inj,
+                cfg.model,
+                prepared.per_worker(),
+                cfg.time_scale,
+                batch_seed,
+            )?;
+        }
+        let injector = injector_slot.as_ref().expect("injector just staged");
+        // A contiguous run of indices (always, in the degenerate config)
+        // serves straight off the request slice — zero copies, and the
+        // exact slice the legacy drain would pass. Cross-tenant batches
+        // gather into a reused staging buffer (inner capacity survives
+        // via clone_from).
+        let contiguous = batch_buf.windows(2).all(|w| w[1] == w[0] + 1);
+        let (reports, _observed) = if contiguous {
+            let lo = batch_buf[0];
+            prepared.run_batch_injected(
+                &requests[lo..lo + b],
+                Arc::clone(&compute),
+                injector,
+            )?
+        } else {
+            if gather.len() < b {
+                gather.resize_with(b, Vec::new);
+            }
+            for (slot, &ji) in gather.iter_mut().zip(batch_buf.iter()) {
+                slot.clone_from(&requests[ji]);
+            }
+            prepared.run_batch_injected(
+                &gather[..b],
+                Arc::clone(&compute),
+                injector,
+            )?
+        };
+        if grows_baseline.is_none() {
+            // The first batch sizes every arena; steady state is measured
+            // from here.
+            grows_baseline = Some(prepared.scratch_grows());
+        }
+        let done = start.elapsed();
+        for (i, report) in reports.into_iter().enumerate() {
+            let ji = batch_buf[i];
+            let sojourn = done.saturating_sub(arrival_offsets[ji]);
+            recorder.record(sojourn, report.decoded.len());
+            worst = fold_worst_error(worst, report.max_error);
+            per_tenant[tenant_of[ji]].push(sojourn);
+            if let Some(c) = controller.as_mut() {
+                c.observe(sojourn.as_secs_f64());
+            }
+            job_slots[ji] = Some(report);
+        }
+        served += b;
+        batch_idx += 1;
+        batches += 1;
+        batch_jobs += b as u64;
+        max_batch_used = max_batch_used.max(b);
+    }
+
+    // Index-ordered emission: per-request reports in request order no
+    // matter which shard/batch served them.
+    let jobs: Vec<JobReport> = job_slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.ok_or_else(|| {
+                Error::Runtime(format!("request {i} was never dispatched"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let serve = ServeReport {
+        recorder,
+        worst_error: worst,
+        jobs,
+        makespan: Some(start.elapsed()),
+        encodes: prepared.encode_count(),
+    };
+    let front_report = FrontEndReport {
+        shards,
+        tenants,
+        batches,
+        cross_shard_batches: cross_shard,
+        mean_batch: batch_jobs as f64 / batches.max(1) as f64,
+        max_batch_used,
+        final_batch_limit: controller
+            .as_ref()
+            .map_or(fixed_limit, BatchController::limit),
+        batch_grows: controller.as_ref().map_or(0, BatchController::grows),
+        batch_shrinks: controller.as_ref().map_or(0, BatchController::shrinks),
+        max_queue_depth: max_depth,
+        tenant_of,
+        per_tenant_p99: per_tenant.iter_mut().map(|s| p99(s)).collect(),
+    };
+    Ok(FrontServeReport {
+        decode_cache: prepared.decode_cache_stats(),
+        post_setup_encodes: prepared.encode_count().saturating_sub(1),
+        steady_allocs: grows_baseline
+            .map_or(0, |base| prepared.scratch_grows() - base),
+        serve,
+        front: front_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(FrontEndConfig::default().validate().is_ok());
+        let bad_shards = FrontEndConfig { shards: 0, ..Default::default() };
+        assert!(bad_shards.validate().is_err());
+        let bad_tenants = FrontEndConfig { tenants: 0, ..Default::default() };
+        assert!(bad_tenants.validate().is_err());
+        let arity = FrontEndConfig {
+            tenants: 3,
+            weights: vec![1.0, 2.0],
+            ..Default::default()
+        };
+        assert!(arity.validate().is_err(), "weights/tenants arity");
+        let negative = FrontEndConfig {
+            tenants: 2,
+            weights: vec![1.0, -1.0],
+            ..Default::default()
+        };
+        assert!(negative.validate().is_err(), "negative weight");
+        let zero_batch = FrontEndConfig {
+            batch: Some(BatchPolicy::Fixed(0)),
+            ..Default::default()
+        };
+        assert!(zero_batch.validate().is_err(), "zero fixed batch");
+        let weighted = FrontEndConfig {
+            shards: 2,
+            tenants: 4,
+            weights: vec![1.0, 2.0, 1.0, 4.0],
+            batch: Some(BatchPolicy::Fixed(8)),
+        };
+        assert!(weighted.validate().is_ok());
+    }
+
+    #[test]
+    fn p99_is_nearest_rank() {
+        assert_eq!(p99(&mut []), Duration::ZERO);
+        let mut one = vec![Duration::from_millis(5)];
+        assert_eq!(p99(&mut one), Duration::from_millis(5));
+        // 100 samples: nearest-rank p99 is the 99th order statistic.
+        let mut s: Vec<Duration> =
+            (1..=100).rev().map(Duration::from_millis).collect();
+        assert_eq!(p99(&mut s), Duration::from_millis(99));
+    }
+}

@@ -29,6 +29,14 @@
 //! big per-batch buffer reused ([`ServeOutcome`]'s `steady_allocs`
 //! measures that steady-state batches allocate nothing).
 //!
+//! Arrivals-mode sessions can attach the sharded admission front end
+//! ([`frontend`], [`SessionBuilder::front_end`]): tenant-keyed per-shard
+//! deficit-round-robin queues, a work-conserving rotating drain, and
+//! optionally SLO-adaptive batch sizing — with the degenerate
+//! single-shard configuration pinned bit-identical to the plain arrivals
+//! drain. Its model-time twin (work-stealing drainers, ≥1M-arrival scale
+//! proofs) is [`crate::workload::admission`].
+//!
 //! Long-lived streams face failures and drift; the [`failures`] module
 //! scripts them (deaths, machine slowdowns, group drift) and
 //! [`adaptive`] layers the estimator-driven re-allocation loop on top —
@@ -66,6 +74,7 @@
 pub mod adaptive;
 pub mod compute;
 pub mod failures;
+pub mod frontend;
 pub mod master;
 pub mod metrics;
 pub mod prepared;
@@ -79,6 +88,7 @@ pub use compute::{Compute, NativeCompute};
 #[cfg(feature = "xla")]
 pub use compute::XlaService;
 pub use failures::{FailureEvent, FailureKind, FailureScenario, ScenarioState};
+pub use frontend::{FrontEndConfig, FrontEndReport};
 #[allow(deprecated)]
 pub use master::{
     run_job, run_job_batched, serve_arrivals, serve_requests,

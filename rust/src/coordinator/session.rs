@@ -71,6 +71,9 @@ use crate::coding::Matrix;
 use crate::coordinator::adaptive::{
     serve_arrivals_adaptive_impl, AdaptiveServeConfig,
 };
+use crate::coordinator::frontend::{
+    serve_arrivals_front_impl, FrontEndConfig, FrontEndReport,
+};
 use crate::coordinator::master::{
     derive_stream_seed, fold_worst_error, run_job_impl, JobConfig, JobReport,
     ServeReport,
@@ -180,6 +183,10 @@ pub struct ServeOutcome {
     /// The cluster parameters the loop believed at the end (arrivals mode;
     /// differs from the spec only after adaptive re-solves).
     pub assumed_spec: Option<ClusterSpec>,
+    /// Admission front-end counters (batches, cross-shard drains, batch
+    /// controller decisions, queue depth, per-tenant p99) — populated only
+    /// when the session was built with [`SessionBuilder::front_end`].
+    pub front_end: Option<FrontEndReport>,
 }
 
 impl ServeOutcome {
@@ -216,6 +223,7 @@ impl ServeOutcome {
             post_setup_encodes: 0,
             steady_allocs: 0,
             assumed_spec: None,
+            front_end: None,
         }
     }
 }
@@ -231,6 +239,7 @@ pub struct SessionBuilder {
     mode: Mode,
     scenario: FailureScenario,
     adaptive: Option<AdaptiveServeConfig>,
+    front_end: Option<FrontEndConfig>,
     compute: Option<Arc<dyn Compute>>,
     pool: Option<PoolHandle>,
     code: Option<String>,
@@ -316,6 +325,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach the sharded admission front end (arrivals modes only):
+    /// tenant-keyed per-shard DRR queues, a work-conserving rotating
+    /// drain, and optionally SLO-adaptive batch sizing
+    /// ([`FrontEndConfig::batch`]). Mutually exclusive with
+    /// [`SessionBuilder::adaptive`] (the front end owns the drain loop).
+    /// The degenerate [`FrontEndConfig::fifo_parity`] configuration is
+    /// bit-identical to serving without a front end.
+    pub fn front_end(mut self, cfg: FrontEndConfig) -> Self {
+        self.front_end = Some(cfg);
+        self
+    }
+
     /// Compute backend. Defaults to [`NativeCompute`].
     pub fn compute(mut self, compute: Arc<dyn Compute>) -> Self {
         self.compute = Some(compute);
@@ -388,13 +409,27 @@ impl SessionBuilder {
             m => m,
         };
         if !matches!(mode, Mode::Arrivals { .. })
-            && (!self.scenario.is_empty() || self.adaptive.is_some())
+            && (!self.scenario.is_empty()
+                || self.adaptive.is_some()
+                || self.front_end.is_some())
         {
             return Err(Error::InvalidSpec(
-                "failure scenarios and adaptive serving need an arrivals \
-                 mode (Mode::Arrivals / Mode::PoissonArrivals)"
+                "failure scenarios, adaptive serving, and the admission \
+                 front end need an arrivals mode (Mode::Arrivals / \
+                 Mode::PoissonArrivals)"
                     .into(),
             ));
+        }
+        if let Some(front) = &self.front_end {
+            if self.adaptive.is_some() {
+                return Err(Error::InvalidSpec(
+                    "the admission front end and the adaptive re-allocation \
+                     loop both own the drain; pick one (.front_end(..) xor \
+                     .adaptive(..))"
+                        .into(),
+                ));
+            }
+            front.validate()?;
         }
         Ok(Session {
             spec: self.spec,
@@ -406,6 +441,7 @@ impl SessionBuilder {
             mode,
             scenario: self.scenario,
             adaptive: self.adaptive,
+            front_end: self.front_end,
             compute: self.compute.unwrap_or_else(|| Arc::new(NativeCompute)),
         })
     }
@@ -428,6 +464,7 @@ pub struct Session {
     mode: Mode,
     scenario: FailureScenario,
     adaptive: Option<AdaptiveServeConfig>,
+    front_end: Option<FrontEndConfig>,
     compute: Arc<dyn Compute>,
 }
 
@@ -444,6 +481,7 @@ impl Session {
             mode: Mode::Sequential,
             scenario: FailureScenario::none(),
             adaptive: None,
+            front_end: None,
             compute: None,
             pool: None,
             code: None,
@@ -610,6 +648,7 @@ impl Session {
             // One batch: warm-up is the whole serve, nothing after it.
             steady_allocs: 0,
             assumed_spec: None,
+            front_end: None,
         })
     }
 
@@ -618,6 +657,36 @@ impl Session {
         offsets: &[Duration],
         max_batch: usize,
     ) -> Result<ServeOutcome> {
+        if let Some(front) = &self.front_end {
+            let rep = serve_arrivals_front_impl(
+                &self.spec,
+                &self.alloc,
+                &self.a,
+                &self.requests,
+                offsets,
+                max_batch,
+                Arc::clone(&self.compute),
+                &self.cfg,
+                &self.scenario,
+                front,
+            )?;
+            return Ok(ServeOutcome {
+                recorder: rep.serve.recorder,
+                worst_error: rep.serve.worst_error,
+                jobs: rep.serve.jobs,
+                makespan: rep.serve.makespan,
+                encodes: rep.serve.encodes,
+                rechunks: 0,
+                decode_cache_hits: rep.decode_cache.0,
+                decode_cache_misses: rep.decode_cache.1,
+                reallocations: 0,
+                suspected_dead: Vec::new(),
+                post_setup_encodes: rep.post_setup_encodes,
+                steady_allocs: rep.steady_allocs,
+                assumed_spec: None,
+                front_end: Some(rep.front),
+            });
+        }
         let rep = serve_arrivals_adaptive_impl(
             &self.spec,
             &self.alloc,
@@ -645,6 +714,7 @@ impl Session {
             post_setup_encodes: rep.post_setup_encodes,
             steady_allocs: rep.steady_allocs,
             assumed_spec: Some(rep.assumed_spec),
+            front_end: None,
         })
     }
 }
@@ -723,6 +793,34 @@ mod tests {
             .mode(Mode::Batched)
             .build()
             .is_err());
+        // Front end outside arrivals mode.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .front_end(FrontEndConfig::default())
+            .mode(Mode::Batched)
+            .build()
+            .is_err());
+        // Front end and adaptive both claim the drain loop.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .front_end(FrontEndConfig::default())
+            .adaptive(AdaptiveServeConfig::default())
+            .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
+            .build()
+            .is_err());
+        // Invalid front-end config fails at build.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .front_end(FrontEndConfig { shards: 0, ..Default::default() })
+            .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
+            .build()
+            .is_err());
         // Wrong-shaped data matrix.
         let mut rng = Rng::new(1);
         let wrong = Matrix::from_fn(32, 8, |_, _| rng.normal());
@@ -786,6 +884,47 @@ mod tests {
             assert!(outcome.suspected_dead.is_empty(), "{label}");
             assert!(outcome.makespan.is_some(), "{label}");
         }
+    }
+
+    #[test]
+    fn front_end_serves_sharded_multi_tenant() {
+        let spec = small_spec();
+        let (a, reqs) = data(12, 97);
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        // All requests pre-arrived: batch composition is deterministic
+        // (admission order == index order, independent of wall clock).
+        let offsets: Vec<Duration> = vec![Duration::ZERO; 12];
+        let outcome = Session::builder(&spec)
+            .allocation(alloc)
+            .data(a)
+            .requests(reqs)
+            .config(fast_cfg())
+            .front_end(FrontEndConfig {
+                shards: 2,
+                tenants: 4,
+                weights: vec![1.0, 2.0, 1.0, 1.0],
+                batch: None,
+            })
+            .mode(Mode::Arrivals { offsets, max_batch: 3 })
+            .build()
+            .unwrap()
+            .serve()
+            .unwrap();
+        assert_eq!(outcome.jobs.len(), 12);
+        assert!(outcome.worst_error < 1e-8);
+        assert_eq!(outcome.encodes, 1);
+        assert_eq!(outcome.post_setup_encodes, 0);
+        let front = outcome.front_end.expect("front-end counters populated");
+        assert_eq!(front.shards, 2);
+        assert_eq!(front.tenants, 4);
+        assert!(front.batches >= 4, "12 jobs / max 3 per batch");
+        assert!(front.max_batch_used <= 3);
+        assert_eq!(front.max_queue_depth, 12);
+        assert_eq!(
+            front.tenant_of,
+            (0..12).map(|i| i % 4).collect::<Vec<_>>()
+        );
+        assert_eq!(front.per_tenant_p99.len(), 4);
     }
 
     #[test]

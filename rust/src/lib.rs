@@ -76,7 +76,12 @@
 //!   processes, FIFO queueing, and throughput/utilization/sojourn metrics
 //!   on top of the single-job latency law ([`workload`]), plus
 //!   failure/drift schedules and the static-vs-adaptive allocation
-//!   experiment ([`workload::drift`]);
+//!   experiment ([`workload::drift`]), and the **sharded admission front
+//!   end** ([`workload::admission`]): tenant-keyed shard queues, a
+//!   work-stealing drain, deficit-round-robin fairness, and SLO-adaptive
+//!   batching, bit-reproducible at ≥1M arrivals — with a live twin on
+//!   the coordinator ([`coordinator::frontend`],
+//!   [`coordinator::SessionBuilder::front_end`]);
 //! - a **live master/worker coordinator** that executes AOT-compiled XLA
 //!   artifacts via PJRT with injected straggle delays ([`coordinator`],
 //!   [`runtime`]), scripted failure/drift scenarios

@@ -18,17 +18,18 @@ use hetcoded::allocation::policy::{self, Policy, PolicyEntry};
 use hetcoded::cli::Args;
 use hetcoded::coding::{code, Matrix};
 use hetcoded::coordinator::{
-    AdaptiveServeConfig, Compute, FailureScenario, JobConfig, Mode,
-    NativeCompute, Session,
+    AdaptiveServeConfig, Compute, FailureScenario, FrontEndConfig, JobConfig,
+    Mode, NativeCompute, Session,
 };
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
 use hetcoded::model::{ClusterSpec, EstimatorConfig, LatencyModel};
 use hetcoded::sim::{simulate_policy, Scheme, SimConfig};
 use hetcoded::workload::{
-    mean_service, run_workload_drift, run_workload_policy, service_sampler,
-    service_sampler_for, AdaptPolicy, ArrivalProcess, DriftSchedule,
-    DriftWorkloadConfig, WorkloadConfig,
+    mean_service, run_admission, run_workload_drift, run_workload_policy,
+    service_sampler, service_sampler_for, AdaptPolicy, AdmissionConfig,
+    ArrivalProcess, BatchPolicy, DriftSchedule, DriftWorkloadConfig,
+    SloConfig, TenantSpec, WorkloadConfig,
 };
 use hetcoded::{Error, Result};
 use std::sync::Arc;
@@ -86,6 +87,13 @@ const WORKLOAD_FLAGS: &[&str] = &[
     "drift-check-every",
     "rate",
     "group-r",
+    "shards",
+    "drainers",
+    "tenants",
+    "steal",
+    "slo",
+    "amortize",
+    "max-batch",
 ];
 const FIGURES_FLAGS: &[&str] =
     &["fig", "all", "samples", "points", "seed", "out", "threads", "quick"];
@@ -109,6 +117,9 @@ const RUN_FLAGS: &[&str] = &[
     "adaptive",
     "policy",
     "code",
+    "shards",
+    "tenants",
+    "slo",
 ];
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -182,6 +193,8 @@ SUBCOMMANDS
             [--model a|b] [--burst-on T --burst-off T] [--k K] [--q Q]
             [--calib-samples N] [--drift T:G:F[;...]] [--drift-window W]
             [--drift-min-obs R] [--drift-threshold X] [--drift-check-every C]
+            [--shards S] [--drainers D] [--tenants T] [--steal true|false]
+            [--slo P99] [--amortize G] [--max-batch B]
             Event-driven queueing simulation: throughput, utilization and
             sojourn percentiles per policy at each arrival rate. Default
             cluster: the paper's 2-group Fig. 8 cluster. --rho gives
@@ -195,7 +208,16 @@ SUBCOMMANDS
             budget) through the same drifting cluster at the first
             --rho/--rates entry, and post-drift sojourn tails are
             compared; the --drift-* flags are the estimator knobs
-            (defaults 50/100/0.30/10).
+            (defaults 50/100/0.30/10). Any of --shards/--drainers/
+            --tenants/--slo switches to the *admission front end*
+            simulation instead: tenant traffic split over per-shard DRR
+            queues, --drainers work-stealing drain loops (--steal
+            true|false), batches of --max-batch (or SLO-adaptive sizing
+            against a model-time p99 target with --slo), each batch
+            amortized as S*(g + (1-g)*b) with g = --amortize (default
+            0.75). Here --rho is offered load per drainer at single-job
+            batches, so rho > 1 exercises the regime only batching can
+            absorb.
   figures   [--fig N | --all] [--samples S] [--points P] [--seed S]
             [--out DIR] [--quick]
             Regenerate paper figures 2-9 + tail extension 10 (CSV to DIR).
@@ -205,6 +227,7 @@ SUBCOMMANDS
             [--dead i,j,...] [--mode seq|pipelined|batched|arrivals]
             [--rate R] [--max-batch B] [--encode-threads T] [--decode-cache C]
             [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
+            [--shards S] [--tenants T] [--slo P99_SECONDS]
             Here --rate is the *arrivals* rate; parameterized policies
             use the name=param form (e.g. --policy uniform-rate=0.5).
             Live coded matvec jobs through the coordinator's Session
@@ -222,7 +245,12 @@ SUBCOMMANDS
             `encode passes` stays 1 regardless. --code picks the erasure
             code from the CODES registry (default mds-random; the sparse
             code is not MDS — a decode can fail cleanly if an unlucky
-            k-subset of rows arrives first).
+            k-subset of rows arrives first). --shards/--tenants/--slo
+            attach the sharded admission front end to --mode arrivals
+            (requests round-robin over T tenants, tenant-keyed per-shard
+            DRR queues, work-conserving drain); --slo sizes batches
+            online against a wall-clock p99 sojourn target in seconds
+            (mutually exclusive with --adaptive).
   help      This text.
 "
     )
@@ -390,6 +418,16 @@ fn cmd_workload(args: &Args) -> Result<()> {
     if let Some(drift) = args.flag("drift") {
         return cmd_workload_drift(args, &spec, model, drift, jobs, seed, calib);
     }
+    // Any sharding/tenancy/SLO flag switches to the admission-front-end
+    // simulation (per-shard DRR queues, work-stealing drainers, adaptive
+    // batching) instead of the single-queue table.
+    if args.flag("shards").is_some()
+        || args.flag("tenants").is_some()
+        || args.flag("drainers").is_some()
+        || args.flag("slo").is_some()
+    {
+        return cmd_workload_admission(args, &spec, model, jobs, seed, calib);
+    }
     let policy_specs = args.get_list::<String>(
         "policies",
         &["proposed".to_string(), "uniform-nstar".to_string()],
@@ -478,6 +516,134 @@ fn cmd_workload(args: &Args) -> Result<()> {
                 rep.sojourn_percentile(95.0),
                 rep.sojourn_percentile(99.0),
                 rep.max_in_system,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The sharded admission front end at model-time scale: per-policy
+/// saturation rows through [`run_admission`] — throughput, sojourn
+/// tails, peak queue depth, steals, and the batch limit the controller
+/// settled on. `--rho` here is offered load per *drainer* at single-job
+/// batches (`rate = rho * drainers / E[S]`), so rho > 1 exercises the
+/// regime only amortized batching can absorb.
+fn cmd_workload_admission(
+    args: &Args,
+    spec: &ClusterSpec,
+    model: LatencyModel,
+    jobs: usize,
+    seed: u64,
+    calib: usize,
+) -> Result<()> {
+    let shards = args.get::<usize>("shards", 4)?;
+    let tenants_n = args.get::<usize>("tenants", shards)?;
+    let drainers = args.get::<usize>("drainers", shards)?;
+    let steal = args.get::<bool>("steal", true)?;
+    let amortize = args.get::<f64>("amortize", 0.75)?;
+    let max_batch = args.get::<usize>("max-batch", 16)?;
+    // --slo S: adaptive batch sizing against a model-time p99 target (the
+    // limit may grow past --max-batch, up to max(64, --max-batch)).
+    let batch = match args.flag("slo") {
+        Some(_) => BatchPolicy::Adaptive(SloConfig {
+            target_p99: args.require::<f64>("slo")?,
+            max_batch: max_batch.max(64),
+            ..Default::default()
+        }),
+        None => BatchPolicy::Fixed(max_batch),
+    };
+    let policy_specs = args.get_list::<String>(
+        "policies",
+        &["proposed".to_string(), "uniform-nstar".to_string()],
+    )?;
+    if policy_specs.is_empty() {
+        return Err(Error::InvalidSpec("--policies list is empty".into()));
+    }
+    let rhos = args.get_list::<f64>("rho", &[0.5, 0.9, 1.5])?;
+    let abs_rates = match args.flag("rates") {
+        Some(_) => Some(args.get_list::<f64>("rates", &[])?),
+        None => None,
+    };
+    if abs_rates.as_ref().map_or(rhos.is_empty(), Vec::is_empty) {
+        return Err(Error::InvalidSpec("--rho/--rates list is empty".into()));
+    }
+    let arrival_kind = args.flag("arrivals").unwrap_or("poisson").to_string();
+    let batch_desc = match batch {
+        BatchPolicy::Fixed(b) => format!("fixed({b})"),
+        BatchPolicy::Adaptive(s) => format!("slo(p99<={})", s.target_p99),
+    };
+    println!(
+        "admission front end: G={} N={} k={}  model {model:?}  arrivals \
+         {arrival_kind}  jobs {jobs}  shards {shards}  drainers {drainers}  \
+         tenants {tenants_n}  steal {steal}  batch {batch_desc}  amortize \
+         {amortize}  seed {seed}",
+        spec.num_groups(),
+        spec.total_workers(),
+        spec.k,
+    );
+    println!(
+        "{:<22} {:>9} {:>6}  {:>9} {:>10} {:>10} {:>7} {:>7} {:>7} {:>6}",
+        "policy", "rate", "rho", "thruput", "p50", "p99", "maxQ", "steals",
+        "meanB", "limit"
+    );
+    for pname in &policy_specs {
+        let p = resolve_policy_arg(args, pname)?;
+        let (_, mut sampler) = service_sampler_for(spec, &*p, model)?;
+        let es = mean_service(&mut sampler, calib, seed ^ 0xCA11B);
+        let rates: Vec<f64> = match &abs_rates {
+            Some(rs) => rs.clone(),
+            None => rhos.iter().map(|r| r * drainers as f64 / es).collect(),
+        };
+        for &rate in &rates {
+            let per_tenant = rate / tenants_n as f64;
+            let arrivals = match arrival_kind.as_str() {
+                "deterministic" => {
+                    ArrivalProcess::Deterministic { rate: per_tenant }
+                }
+                "poisson" => ArrivalProcess::Poisson { rate: per_tenant },
+                "onoff" => {
+                    let burst_on = args.get::<f64>("burst-on", 20.0 * es)?;
+                    let burst_off = args.get::<f64>("burst-off", 20.0 * es)?;
+                    ArrivalProcess::OnOff {
+                        // Boost the ON rate so each tenant's long-run mean
+                        // rate stays `per_tenant`.
+                        rate_on: per_tenant * (burst_on + burst_off) / burst_on,
+                        mean_on: burst_on,
+                        mean_off: burst_off,
+                    }
+                }
+                other => {
+                    return Err(Error::InvalidSpec(format!(
+                        "unknown arrival process `{other}`"
+                    )))
+                }
+            };
+            let cfg = AdmissionConfig {
+                tenants: (0..tenants_n)
+                    .map(|_| TenantSpec { arrivals, weight: 1.0 })
+                    .collect(),
+                jobs,
+                shards,
+                drainers,
+                steal,
+                batch,
+                amortize,
+                seed,
+            };
+            let rep = run_admission(spec, &*p, model, &cfg)?;
+            println!(
+                "{:<22} {:>9.4} {:>6.2}  {:>9.4} {:>10.4e} {:>10.4e} {:>7} \
+                 {:>7} {:>7.2} {:>6}",
+                rep.policy,
+                rate,
+                rate * es / drainers as f64,
+                rep.throughput,
+                rep.sojourn_percentile(50.0),
+                rep.sojourn_percentile(99.0),
+                rep.max_queue_depth,
+                rep.steals,
+                rep.mean_batch,
+                rep.final_batch_limit,
             );
         }
     }
@@ -745,6 +911,29 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .into(),
         ));
     }
+    // Admission front end: any of --shards/--tenants/--slo attaches the
+    // sharded multi-tenant drain (with --slo: SLO-adaptive batch sizing).
+    let shards = args.get::<usize>("shards", 1)?;
+    let tenants = args.get::<usize>("tenants", 1)?;
+    let slo = match args.flag("slo") {
+        Some(_) => Some(args.require::<f64>("slo")?),
+        None => None,
+    };
+    let use_front = shards != 1 || tenants != 1 || slo.is_some();
+    if use_front && mode_name != "arrivals" {
+        return Err(Error::InvalidSpec(
+            "--shards/--tenants/--slo (the admission front end) need \
+             --mode arrivals"
+                .into(),
+        ));
+    }
+    if use_front && adaptive {
+        return Err(Error::InvalidSpec(
+            "--shards/--tenants/--slo and --adaptive are mutually \
+             exclusive (both own the drain loop)"
+                .into(),
+        ));
+    }
     let mode = match mode_name.as_str() {
         "seq" => Mode::Sequential,
         "pipelined" => Mode::Pipelined,
@@ -782,7 +971,43 @@ fn cmd_run(args: &Args) -> Result<()> {
     if adaptive {
         builder = builder.adaptive(AdaptiveServeConfig::default());
     }
+    if use_front {
+        let cap = args.get::<usize>("max-batch", 8)?;
+        builder = builder.front_end(FrontEndConfig {
+            shards,
+            tenants,
+            weights: Vec::new(),
+            // --slo S: wall-clock p99 sojourn target in seconds; the
+            // controller may grow the limit past --max-batch, up to
+            // max(64, --max-batch). Without --slo the mode's fixed
+            // --max-batch applies.
+            batch: slo.map(|target| {
+                BatchPolicy::Adaptive(SloConfig {
+                    target_p99: target,
+                    max_batch: cap.max(64),
+                    ..Default::default()
+                })
+            }),
+        });
+    }
     let outcome = builder.build()?.serve()?;
+    if let Some(front) = &outcome.front_end {
+        println!(
+            "front end: {} shards, {} tenants, {} batches (mean {:.2}, max \
+             {}), cross-shard {}, final batch limit {} ({} grows / {} \
+             shrinks), peak queue {}",
+            front.shards,
+            front.tenants,
+            front.batches,
+            front.mean_batch,
+            front.max_batch_used,
+            front.cross_shard_batches,
+            front.final_batch_limit,
+            front.batch_grows,
+            front.batch_shrinks,
+            front.max_queue_depth,
+        );
+    }
     if adaptive || scenario_events > 0 {
         println!(
             "scenario events {scenario_events}  reallocations {}  \

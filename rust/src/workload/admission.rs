@@ -1,0 +1,1094 @@
+//! Sharded admission front end: multi-tenant queues, work-stealing drain,
+//! and SLO-aware adaptive batching — the model-time simulator.
+//!
+//! [`simulate_queue`](crate::workload::simulate_queue) models one FIFO
+//! queue in front of the cluster; at millions of arrivals that single
+//! queue is the bottleneck the rest of the stack was optimized around.
+//! This module generalizes it into the admission layer of ROADMAP item 4:
+//!
+//! 1. **Sharded queues** — arrivals are tenant-keyed onto
+//!    [`AdmissionConfig::shards`] independent queues (`shard = tenant %
+//!    shards`), so admission contention splits `shards` ways and every
+//!    tenant's stream stays FIFO within its shard;
+//! 2. **Work-stealing drain** — [`AdmissionConfig::drainers`] drain loops
+//!    (the model-time mirror of threads feeding the persistent
+//!    [`crate::runtime::pool::WorkPool`]) each own a home shard
+//!    (`drainer % shards`) and, with [`AdmissionConfig::steal`] on, scan
+//!    the other shards home-first-rotation when theirs is empty — idle
+//!    capacity follows the backlog;
+//! 3. **Deficit-round-robin fairness** — each shard's queue
+//!    ([`DrrQueue`]) holds per-tenant FIFO subqueues drained by weighted
+//!    deficit round robin, so a bursty tenant can saturate only its own
+//!    weight share, not the whole batch;
+//! 4. **SLO-aware batching** — a [`BatchController`] sizes the batch
+//!    limit online from a sliding window of observed sojourns against a
+//!    p99 target ([`SloConfig`]), with hysteresis: multiplicative growth
+//!    under violation, slow additive shrink well below target.
+//!
+//! Batching pays because a coded batch amortizes its fixed per-dispatch
+//! work (encode reuse, straggle realization, decode factorization — the
+//! PR 2/5 hot path) across members: a `b`-job batch costs `S · (γ + (1-γ)
+//! · b)` where `γ =` [`AdmissionConfig::amortize`] is the fixed fraction,
+//! so per-drainer capacity approaches `1 / ((1-γ)·E[S])` as `b` grows —
+//! the lever that lets adaptive batching absorb a load step that sinks a
+//! fixed single-job drain.
+//!
+//! # Determinism
+//!
+//! The whole simulation is an event loop over a min-heap keyed
+//! `(time_bits, drainer)` — exactly the [`WorkPool`]'s index-ordered
+//! reduction pattern, so results are bit-reproducible from
+//! [`AdmissionConfig::seed`]: tenant arrival streams draw from per-tenant
+//! [`Rng::split`] substreams in tenant order, the merged job list is
+//! sorted `(arrival, tenant, index)`, shard assignment is a pure function
+//! of the tenant, and every tie (equal free times, equal next-arrival
+//! rekeys) breaks on the drainer index. With `shards = 1`, one tenant,
+//! stealing off and single-job batches, the RNG discipline and dispatch
+//! order collapse to [`run_workload_policy`]'s exactly — the
+//! [`AdmissionConfig::fifo_parity`] configuration is **bit-identical** to
+//! the legacy FIFO path (pinned by `rust/tests/admission.rs`).
+//!
+//! [`WorkPool`]: crate::runtime::pool::WorkPool
+//! [`run_workload_policy`]: crate::workload::run_workload_policy
+//!
+//! # Example
+//!
+//! ```no_run
+//! use hetcoded::allocation::policy;
+//! use hetcoded::model::{ClusterSpec, LatencyModel};
+//! use hetcoded::workload::{
+//!     run_admission, AdmissionConfig, ArrivalProcess, BatchPolicy,
+//!     SloConfig, TenantSpec,
+//! };
+//!
+//! let spec = ClusterSpec::paper_two_group(10_000);
+//! let cfg = AdmissionConfig {
+//!     tenants: (0..8)
+//!         .map(|_| TenantSpec {
+//!             arrivals: ArrivalProcess::Poisson { rate: 2.0 },
+//!             weight: 1.0,
+//!         })
+//!         .collect(),
+//!     jobs: 1_000_000,
+//!     shards: 4,
+//!     drainers: 4,
+//!     steal: true,
+//!     batch: BatchPolicy::Adaptive(SloConfig::default()),
+//!     amortize: 0.75,
+//!     seed: 2019,
+//! };
+//! let p = policy::resolve("proposed")?;
+//! let rep = run_admission(&spec, &*p, LatencyModel::A, &cfg)?;
+//! println!(
+//!     "thruput {:.3}  p99 {:.4}  maxQ {}  steals {}",
+//!     rep.throughput,
+//!     rep.sojourn_percentile(99.0),
+//!     rep.max_queue_depth,
+//!     rep.steals,
+//! );
+//! # Ok::<(), hetcoded::Error>(())
+//! ```
+
+use crate::allocation::Policy;
+use crate::math::{Rng, Summary};
+use crate::model::{ClusterSpec, LatencyModel};
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::queue::time_key;
+use crate::workload::service::{service_sampler_for, ServiceSampler};
+use crate::{Error, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// One tenant of the admission layer: its traffic and its fairness weight.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSpec {
+    /// The tenant's own arrival stream (drawn from a dedicated RNG
+    /// substream, so tenants are statistically independent).
+    pub arrivals: ArrivalProcess,
+    /// Deficit-round-robin quantum per visit. Under sustained backlog a
+    /// tenant receives batch slots proportional to its weight.
+    pub weight: f64,
+}
+
+/// How the drain loop sizes its batches.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchPolicy {
+    /// A fixed batch limit (the legacy `max_batch` knob).
+    Fixed(usize),
+    /// A [`BatchController`] sizes the limit online against an SLO.
+    Adaptive(SloConfig),
+}
+
+/// Knobs of the [`BatchController`].
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// The sojourn SLO: keep windowed p99 sojourn at or below this.
+    pub target_p99: f64,
+    /// Smallest batch limit the controller may choose (≥ 1).
+    pub min_batch: usize,
+    /// Largest batch limit the controller may choose.
+    pub max_batch: usize,
+    /// Sliding window of completed-job sojourns the p99 is measured over.
+    pub window: usize,
+    /// Control decisions happen every this many observed completions.
+    pub decide_every: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            target_p99: 1.0,
+            min_batch: 1,
+            max_batch: 64,
+            window: 256,
+            decide_every: 64,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Check the knobs are self-consistent.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.target_p99 > 0.0) || !self.target_p99.is_finite() {
+            return Err(Error::InvalidSpec(format!(
+                "SLO target_p99 must be positive and finite, got {}",
+                self.target_p99
+            )));
+        }
+        if self.min_batch == 0 || self.max_batch < self.min_batch {
+            return Err(Error::InvalidSpec(format!(
+                "SLO batch range [{}, {}] must satisfy 1 <= min <= max",
+                self.min_batch, self.max_batch
+            )));
+        }
+        if self.window < 2 || self.decide_every == 0 {
+            return Err(Error::InvalidSpec(
+                "SLO window must be >= 2 and decide_every >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Online batch-limit controller with hysteresis.
+///
+/// Observed sojourns feed a sliding window; every
+/// [`SloConfig::decide_every`] observations the windowed p99 is compared
+/// against [`SloConfig::target_p99`]:
+///
+/// - **above target** → the limit doubles (clamped to `max_batch`):
+///   violation means the drain is capacity-starved, and batch
+///   amortization buys capacity multiplicatively, so the response is
+///   multiplicative too;
+/// - **below half the target** → the limit shrinks by one: large batches
+///   trade per-job latency for capacity, so idle headroom is returned
+///   slowly, one slot at a time;
+/// - **in between** → hold. The dead band is the hysteresis that keeps
+///   the limit from oscillating around the target.
+#[derive(Clone, Debug)]
+pub struct BatchController {
+    cfg: SloConfig,
+    limit: usize,
+    window: VecDeque<f64>,
+    since_decision: usize,
+    grows: u64,
+    shrinks: u64,
+}
+
+impl BatchController {
+    /// Controller starting at `cfg.min_batch`.
+    pub fn new(cfg: SloConfig) -> Result<BatchController> {
+        cfg.validate()?;
+        Ok(BatchController {
+            cfg,
+            limit: cfg.min_batch,
+            window: VecDeque::with_capacity(cfg.window),
+            since_decision: 0,
+            grows: 0,
+            shrinks: 0,
+        })
+    }
+
+    /// The current batch limit.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Times the limit was grown (doubled) so far.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Times the limit was shrunk so far.
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    /// Feed one completed job's sojourn and run a control decision every
+    /// `decide_every` observations.
+    pub fn observe(&mut self, sojourn: f64) {
+        if self.window.len() == self.cfg.window {
+            self.window.pop_front();
+        }
+        self.window.push_back(sojourn);
+        self.since_decision += 1;
+        if self.since_decision >= self.cfg.decide_every {
+            self.since_decision = 0;
+            self.decide();
+        }
+    }
+
+    /// Windowed nearest-rank p99.
+    fn window_p99(&self) -> f64 {
+        let mut s: Vec<f64> = self.window.iter().copied().collect();
+        s.sort_by(f64::total_cmp);
+        let rank = ((0.99 * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[rank - 1]
+    }
+
+    fn decide(&mut self) {
+        // Don't steer off a nearly-empty window (stream warm-up).
+        if self.window.len() < self.cfg.window / 2 {
+            return;
+        }
+        let p99 = self.window_p99();
+        if p99 > self.cfg.target_p99 {
+            if self.limit < self.cfg.max_batch {
+                self.limit = (self.limit * 2).min(self.cfg.max_batch);
+                self.grows += 1;
+            }
+        } else if p99 < 0.5 * self.cfg.target_p99
+            && self.limit > self.cfg.min_batch
+        {
+            self.limit -= 1;
+            self.shrinks += 1;
+        }
+    }
+}
+
+/// One shard's admission queue: per-tenant FIFO subqueues drained by
+/// weighted deficit round robin.
+///
+/// Classic DRR: a round-robin cursor visits tenants; a visit to a
+/// backlogged tenant adds its weight to that tenant's deficit, and the
+/// tenant dequeues one job per unit of deficit. An emptied tenant's
+/// deficit resets to zero — idle tenants cannot hoard credit and then
+/// burst past their share. Single tenant at weight 1 degenerates to plain
+/// FIFO (every visit drains exactly the head job).
+#[derive(Clone, Debug)]
+pub struct DrrQueue {
+    per_tenant: Vec<VecDeque<usize>>,
+    deficit: Vec<f64>,
+    cursor: usize,
+    len: usize,
+}
+
+impl DrrQueue {
+    /// Empty queue over `tenants` subqueues.
+    pub fn new(tenants: usize) -> DrrQueue {
+        DrrQueue {
+            per_tenant: vec![VecDeque::new(); tenants],
+            deficit: vec![0.0; tenants],
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Enqueue `job` (an opaque index) for `tenant`.
+    pub fn push(&mut self, tenant: usize, job: usize) {
+        self.per_tenant[tenant].push_back(job);
+        self.len += 1;
+    }
+
+    /// Jobs currently queued across all tenants.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no tenant has backlog.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Dequeue up to `limit` jobs by weighted DRR into `out` (appended in
+    /// dequeue order). `weights[t]` is tenant `t`'s quantum; all weights
+    /// must be positive (validated by [`AdmissionConfig::validate`]).
+    pub fn drain(&mut self, weights: &[f64], limit: usize, out: &mut Vec<usize>) {
+        let tenants = self.per_tenant.len();
+        while out.len() < limit && self.len > 0 {
+            let t = self.cursor;
+            self.cursor = (self.cursor + 1) % tenants;
+            if self.per_tenant[t].is_empty() {
+                self.deficit[t] = 0.0;
+                continue;
+            }
+            self.deficit[t] += weights[t];
+            while self.deficit[t] >= 1.0 && out.len() < limit {
+                match self.per_tenant[t].pop_front() {
+                    Some(j) => {
+                        out.push(j);
+                        self.len -= 1;
+                        self.deficit[t] -= 1.0;
+                    }
+                    None => break,
+                }
+            }
+            if self.per_tenant[t].is_empty() {
+                self.deficit[t] = 0.0;
+            }
+        }
+    }
+}
+
+/// Configuration of one admission-front-end run.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// The tenants (at least one). Tenant `t` is keyed onto shard
+    /// `t % shards`.
+    pub tenants: Vec<TenantSpec>,
+    /// Total jobs across all tenants (split evenly, first `jobs % T`
+    /// tenants take the remainder).
+    pub jobs: usize,
+    /// Admission queues.
+    pub shards: usize,
+    /// Concurrent drain loops (service slots). Drainer `d`'s home shard
+    /// is `d % shards`; without stealing, every shard needs a home
+    /// drainer (`drainers >= shards`).
+    pub drainers: usize,
+    /// Work stealing: an idle drainer scans the other shards
+    /// (home-first rotation) instead of sleeping on its own.
+    pub steal: bool,
+    /// Batch sizing: fixed limit or SLO-adaptive controller.
+    pub batch: BatchPolicy,
+    /// Fixed fraction `γ ∈ [0, 1)` of a batch's service time: a `b`-job
+    /// batch takes `S · (γ + (1-γ)·b)` where `S` is one service draw.
+    /// `γ = 0` means no amortization (a batch costs the sum of its
+    /// members); single-job batches always cost exactly `S`.
+    pub amortize: f64,
+    /// Base seed; per-tenant arrivals and the service stream use split
+    /// substreams ([`Rng::split`], in tenant order, service last — with
+    /// one tenant this is bit-identical to
+    /// [`crate::workload::run_workload_policy`]'s discipline).
+    pub seed: u64,
+}
+
+impl AdmissionConfig {
+    /// The degenerate configuration pinned bit-identical to the legacy
+    /// FIFO path ([`crate::workload::run_workload_policy`]): one shard,
+    /// one unit-weight tenant, stealing off, single-job batches (the
+    /// amortization scale never engages), `drainers` = the FIFO sim's
+    /// `servers`.
+    pub fn fifo_parity(
+        arrivals: ArrivalProcess,
+        jobs: usize,
+        servers: usize,
+        seed: u64,
+    ) -> AdmissionConfig {
+        AdmissionConfig {
+            tenants: vec![TenantSpec { arrivals, weight: 1.0 }],
+            jobs,
+            shards: 1,
+            drainers: servers,
+            steal: false,
+            batch: BatchPolicy::Fixed(1),
+            amortize: 0.0,
+            seed,
+        }
+    }
+
+    /// Check the whole configuration is self-consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(Error::InvalidSpec(
+                "admission needs at least one tenant".into(),
+            ));
+        }
+        for (t, spec) in self.tenants.iter().enumerate() {
+            spec.arrivals.validate()?;
+            if !(spec.weight > 0.0) || !spec.weight.is_finite() {
+                return Err(Error::InvalidSpec(format!(
+                    "tenant {t} weight must be positive and finite, got {}",
+                    spec.weight
+                )));
+            }
+        }
+        if self.jobs == 0 {
+            return Err(Error::InvalidSpec(
+                "admission needs at least one job".into(),
+            ));
+        }
+        if self.shards == 0 || self.drainers == 0 {
+            return Err(Error::InvalidSpec(
+                "shards and drainers must be positive".into(),
+            ));
+        }
+        if !self.steal && self.drainers < self.shards {
+            return Err(Error::InvalidSpec(format!(
+                "{} shards but only {} drainers: with stealing off every \
+                 shard needs a home drainer (enable steal or add drainers)",
+                self.shards, self.drainers
+            )));
+        }
+        if !(0.0..1.0).contains(&self.amortize) {
+            return Err(Error::InvalidSpec(format!(
+                "amortize must be in [0, 1), got {}",
+                self.amortize
+            )));
+        }
+        match self.batch {
+            BatchPolicy::Fixed(b) if b == 0 => Err(Error::InvalidSpec(
+                "fixed batch limit must be positive".into(),
+            )),
+            BatchPolicy::Fixed(_) => Ok(()),
+            BatchPolicy::Adaptive(slo) => slo.validate(),
+        }
+    }
+}
+
+/// One admitted request in the merged, index-ordered arrival stream.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionJob {
+    /// Arrival time (model units).
+    pub arrival: f64,
+    /// Owning tenant (indexes [`AdmissionConfig::tenants`]).
+    pub tenant: usize,
+}
+
+/// Draw every tenant's arrival stream and merge them into one ascending,
+/// index-ordered job list (ties break on tenant, then per-tenant index —
+/// the fixed merge order that makes multi-tenant runs reproducible).
+/// Returns the job list and the service-stream RNG (split from the same
+/// root *after* the tenant streams, preserving the legacy discipline).
+pub fn generate_jobs(cfg: &AdmissionConfig) -> Result<(Vec<AdmissionJob>, Rng)> {
+    cfg.validate()?;
+    let mut root = Rng::new(cfg.seed);
+    let mut arrival_rngs: Vec<Rng> =
+        cfg.tenants.iter().map(|_| root.split()).collect();
+    let service_rng = root.split();
+    let t_count = cfg.tenants.len();
+    let base = cfg.jobs / t_count;
+    let extra = cfg.jobs % t_count;
+    let mut tagged: Vec<(f64, usize, usize)> = Vec::with_capacity(cfg.jobs);
+    for (t, spec) in cfg.tenants.iter().enumerate() {
+        let count = base + usize::from(t < extra);
+        let times = spec.arrivals.times(count, &mut arrival_rngs[t])?;
+        for (i, at) in times.into_iter().enumerate() {
+            tagged.push((at, t, i));
+        }
+    }
+    tagged.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    let jobs = tagged
+        .into_iter()
+        .map(|(arrival, tenant, _)| AdmissionJob { arrival, tenant })
+        .collect();
+    Ok((jobs, service_rng))
+}
+
+/// Aggregate metrics of one admission-front-end run.
+#[derive(Clone, Debug)]
+pub struct AdmissionReport {
+    /// Policy display name (`"explicit"` for [`simulate_admission`] runs
+    /// over a hand-built job list).
+    pub policy: String,
+    /// Jobs completed (== jobs admitted; the queues are lossless).
+    pub jobs: usize,
+    /// Shards / drainers / tenants of the run.
+    pub shards: usize,
+    /// Drain loops.
+    pub drainers: usize,
+    /// Tenant count.
+    pub tenants: usize,
+    /// First arrival to last completion (model units).
+    pub makespan: f64,
+    /// Completed jobs per unit model time.
+    pub throughput: f64,
+    /// Sojourn times (arrival → completion); retains samples.
+    pub sojourn: Summary,
+    /// Waiting times (arrival → batch start); retains samples.
+    pub wait: Summary,
+    /// Per-tenant sojourn summaries (retain samples) — the isolation
+    /// metric: a bursty tenant shows up here, not in its neighbours.
+    pub per_tenant_sojourn: Vec<Summary>,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Batches a drainer drained from a non-home shard.
+    pub steals: u64,
+    /// Mean jobs per batch.
+    pub mean_batch: f64,
+    /// Largest batch actually dispatched.
+    pub max_batch_used: usize,
+    /// The batch limit in force at the end ([`BatchController::limit`];
+    /// the fixed limit under [`BatchPolicy::Fixed`]).
+    pub final_batch_limit: usize,
+    /// Controller grow decisions (0 under a fixed policy).
+    pub batch_grows: u64,
+    /// Controller shrink decisions (0 under a fixed policy).
+    pub batch_shrinks: u64,
+    /// Peak jobs waiting (admitted, not yet dispatched) across all shards.
+    pub max_queue_depth: usize,
+    /// Time-average jobs waiting across all shards.
+    pub mean_queue_depth: f64,
+    /// Arrival time of job `i` (ascending; the merged stream order).
+    pub arrivals: Vec<f64>,
+    /// Batch-start time of job `i`.
+    pub starts: Vec<f64>,
+    /// Completion time of job `i`.
+    pub finishes: Vec<f64>,
+    /// Owning tenant of job `i`.
+    pub tenant_of: Vec<usize>,
+    /// Drainer that served job `i`.
+    pub drainer_of: Vec<usize>,
+}
+
+impl AdmissionReport {
+    /// Sojourn-time percentile (`p` in `[0, 100]`).
+    pub fn sojourn_percentile(&self, p: f64) -> f64 {
+        self.sojourn.percentile(p)
+    }
+
+    /// One tenant's sojourn percentile.
+    pub fn tenant_percentile(&self, tenant: usize, p: f64) -> f64 {
+        self.per_tenant_sojourn[tenant].percentile(p)
+    }
+}
+
+/// Run the event-driven admission simulation over an explicit job list.
+///
+/// `jobs` must be ascending in arrival time with tenant indices inside
+/// `cfg.tenants`; `rng` is the service stream (one draw per batch). This
+/// is the test- and load-step-facing entry point; [`run_admission`]
+/// wraps it with tenant-stream generation and a policy-derived sampler.
+pub fn simulate_admission(
+    jobs: &[AdmissionJob],
+    sampler: &mut ServiceSampler,
+    cfg: &AdmissionConfig,
+    rng: &mut Rng,
+) -> Result<AdmissionReport> {
+    cfg.validate()?;
+    if jobs.is_empty() {
+        return Err(Error::InvalidSpec(
+            "admission needs at least one job".into(),
+        ));
+    }
+    let t_count = cfg.tenants.len();
+    if jobs
+        .iter()
+        .any(|j| !j.arrival.is_finite() || j.arrival < 0.0 || j.tenant >= t_count)
+    {
+        return Err(Error::InvalidSpec(
+            "admission jobs must have finite nonnegative arrivals and \
+             in-range tenants"
+                .into(),
+        ));
+    }
+    if jobs.windows(2).any(|w| w[1].arrival < w[0].arrival) {
+        return Err(Error::InvalidSpec(
+            "admission jobs must be ascending in arrival time".into(),
+        ));
+    }
+    let shards = cfg.shards;
+    let weights: Vec<f64> = cfg.tenants.iter().map(|t| t.weight).collect();
+    // Tenant-keyed shard streams: global job indices in arrival order.
+    let mut shard_jobs: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    for (i, j) in jobs.iter().enumerate() {
+        shard_jobs[j.tenant % shards].push(i);
+    }
+    let mut next_arrival = vec![0usize; shards];
+    let mut queues: Vec<DrrQueue> =
+        (0..shards).map(|_| DrrQueue::new(t_count)).collect();
+    let mut controller = match cfg.batch {
+        BatchPolicy::Fixed(_) => None,
+        BatchPolicy::Adaptive(slo) => Some(BatchController::new(slo)?),
+    };
+    let fixed_limit = match cfg.batch {
+        BatchPolicy::Fixed(b) => b,
+        BatchPolicy::Adaptive(_) => 0,
+    };
+    let gamma = cfg.amortize;
+
+    // Drainer min-heap keyed `(free_time_bits, drainer)` — the same
+    // order-isomorphic keying as `simulate_queue`, ties on drainer index.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..cfg.drainers).map(|d| Reverse((time_key(0.0), d))).collect();
+    let n = jobs.len();
+    let mut starts = vec![0.0f64; n];
+    let mut finishes = vec![0.0f64; n];
+    let mut drainer_of = vec![0usize; n];
+    let mut remaining = n;
+    let mut batch_buf: Vec<usize> = Vec::new();
+    let (mut batches, mut steals, mut batch_jobs) = (0u64, 0u64, 0u64);
+    let mut max_batch_used = 0usize;
+
+    while remaining > 0 {
+        let Some(Reverse((bits, d))) = heap.pop() else {
+            // Unreachable under `validate` (every shard is reachable by a
+            // live drainer), kept as a loud failure rather than a hang.
+            return Err(Error::Runtime(format!(
+                "admission deadlock: {remaining} jobs unserved with no \
+                 runnable drainer"
+            )));
+        };
+        let t_free = f64::from_bits(bits);
+        let home = d % shards;
+        let span = if cfg.steal { shards } else { 1 };
+        // Admit everything arrived by now shard-by-shard (home first,
+        // then rotation when stealing) and stop at the first backlog.
+        let mut chosen: Option<(usize, bool)> = None;
+        for off in 0..span {
+            let s = (home + off) % shards;
+            let stream = &shard_jobs[s];
+            let cur = &mut next_arrival[s];
+            while *cur < stream.len() && jobs[stream[*cur]].arrival <= t_free {
+                queues[s].push(jobs[stream[*cur]].tenant, stream[*cur]);
+                *cur += 1;
+            }
+            if !queues[s].is_empty() {
+                chosen = Some((s, off > 0));
+                break;
+            }
+        }
+        match chosen {
+            Some((s, stolen)) => {
+                let limit =
+                    controller.as_ref().map_or(fixed_limit, BatchController::limit);
+                batch_buf.clear();
+                queues[s].drain(&weights, limit, &mut batch_buf);
+                let b = batch_buf.len();
+                let raw = sampler.sample(rng);
+                // Amortized batch service; b == 1 short-circuits to the
+                // raw draw so single-job batches are bit-identical to the
+                // FIFO path (γ + (1-γ)·1 need not round to exactly 1.0).
+                let svc = if b == 1 {
+                    raw
+                } else {
+                    raw * (gamma + (1.0 - gamma) * b as f64)
+                };
+                let start = t_free;
+                let finish = start + svc;
+                for &ji in &batch_buf {
+                    starts[ji] = start;
+                    finishes[ji] = finish;
+                    drainer_of[ji] = d;
+                }
+                if let Some(c) = controller.as_mut() {
+                    // Batch members complete together, so their sojourns
+                    // are final at dispatch — feed them now (the signal
+                    // lags by one batch either way).
+                    for &ji in &batch_buf {
+                        c.observe(finish - jobs[ji].arrival);
+                    }
+                }
+                remaining -= b;
+                batches += 1;
+                batch_jobs += b as u64;
+                max_batch_used = max_batch_used.max(b);
+                if stolen {
+                    steals += 1;
+                }
+                heap.push(Reverse((time_key(finish), d)));
+            }
+            None => {
+                // Nothing pending anywhere this drainer may serve: sleep
+                // until the next arrival it could take, or retire.
+                let mut t_next = f64::INFINITY;
+                for off in 0..span {
+                    let s = (home + off) % shards;
+                    if next_arrival[s] < shard_jobs[s].len() {
+                        t_next = t_next
+                            .min(jobs[shard_jobs[s][next_arrival[s]]].arrival);
+                    }
+                }
+                if t_next.is_finite() {
+                    heap.push(Reverse((time_key(t_next), d)));
+                }
+            }
+        }
+    }
+
+    // Post-pass metrics over the completed trace.
+    let first_arrival = jobs[0].arrival;
+    let last_finish =
+        finishes.iter().fold(f64::NEG_INFINITY, |acc, &f| acc.max(f));
+    let makespan = last_finish - first_arrival;
+    let mut sojourn = Summary::keeping_samples();
+    let mut wait = Summary::keeping_samples();
+    let mut per_tenant: Vec<Summary> =
+        (0..t_count).map(|_| Summary::keeping_samples()).collect();
+    for (i, j) in jobs.iter().enumerate() {
+        sojourn.add(finishes[i] - j.arrival);
+        wait.add(starts[i] - j.arrival);
+        per_tenant[j.tenant].add(finishes[i] - j.arrival);
+    }
+    // Waiting-count sweep: +1 at arrival, -1 at batch start; arrivals
+    // first at ties so a zero-wait job contributes a zero-width spike.
+    let mut events: Vec<(f64, i64)> = Vec::with_capacity(2 * n);
+    for j in jobs {
+        events.push((j.arrival, 1));
+    }
+    for &s in &starts {
+        events.push((s, -1));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+    let (mut depth, mut max_depth) = (0i64, 0i64);
+    let mut last_t = first_arrival;
+    let mut area = 0.0;
+    for (t, e) in events {
+        area += depth as f64 * (t - last_t);
+        last_t = t;
+        depth += e;
+        max_depth = max_depth.max(depth);
+    }
+    Ok(AdmissionReport {
+        policy: "explicit".into(),
+        jobs: n,
+        shards,
+        drainers: cfg.drainers,
+        tenants: t_count,
+        makespan,
+        throughput: if makespan > 0.0 { n as f64 / makespan } else { 0.0 },
+        sojourn,
+        wait,
+        per_tenant_sojourn: per_tenant,
+        batches,
+        steals,
+        mean_batch: batch_jobs as f64 / batches.max(1) as f64,
+        max_batch_used,
+        final_batch_limit: controller
+            .as_ref()
+            .map_or(fixed_limit, BatchController::limit),
+        batch_grows: controller.as_ref().map_or(0, BatchController::grows),
+        batch_shrinks: controller.as_ref().map_or(0, BatchController::shrinks),
+        max_queue_depth: max_depth as usize,
+        mean_queue_depth: if makespan > 0.0 { area / makespan } else { 0.0 },
+        arrivals: jobs.iter().map(|j| j.arrival).collect(),
+        starts,
+        finishes,
+        tenant_of: jobs.iter().map(|j| j.tenant).collect(),
+        drainer_of,
+    })
+}
+
+/// Run one complete admission-front-end experiment for any [`Policy`]:
+/// draw every tenant's arrivals, build the policy's service sampler on
+/// `spec`, run the sharded event loop, and summarize. Bit-reproducible
+/// from `cfg.seed`; the [`AdmissionConfig::fifo_parity`] configuration is
+/// bit-identical to [`crate::workload::run_workload_policy`].
+pub fn run_admission(
+    spec: &ClusterSpec,
+    policy: &dyn Policy,
+    model: LatencyModel,
+    cfg: &AdmissionConfig,
+) -> Result<AdmissionReport> {
+    let (_, mut sampler) = service_sampler_for(spec, policy, model)?;
+    let (jobs, mut service_rng) = generate_jobs(cfg)?;
+    let mut rep = simulate_admission(&jobs, &mut sampler, cfg, &mut service_rng)?;
+    rep.policy = policy.name();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+    use crate::sim::Scheme;
+    use crate::workload::queue::simulate_queue;
+    use crate::workload::service::service_sampler;
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 4, mu: 8.0, alpha: 1.0 },
+                Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap()
+    }
+
+    fn uniform_tenants(t: usize, rate_each: f64) -> Vec<TenantSpec> {
+        (0..t)
+            .map(|_| TenantSpec {
+                arrivals: ArrivalProcess::Poisson { rate: rate_each },
+                weight: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fifo_parity_matches_simulate_queue_bit_for_bit() {
+        // The degenerate config against the legacy path's exact internals
+        // (same splits, same sampler, same trace) — starts and finishes
+        // must be bit-equal for 1 and for 3 service slots.
+        let spec = small_spec();
+        for servers in [1usize, 3] {
+            let cfg = AdmissionConfig::fifo_parity(
+                ArrivalProcess::Poisson { rate: 3.0 },
+                600,
+                servers,
+                0x90_1D,
+            );
+            let (_, mut sampler) =
+                service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+            let mut root = Rng::new(cfg.seed);
+            let mut arrival_rng = root.split();
+            let mut service_rng = root.split();
+            let arrivals = ArrivalProcess::Poisson { rate: 3.0 }
+                .times(600, &mut arrival_rng)
+                .unwrap();
+            let legacy =
+                simulate_queue(&arrivals, &mut sampler, servers, &mut service_rng)
+                    .unwrap();
+            let p = crate::allocation::policy::resolve("proposed").unwrap();
+            let adm = run_admission(&spec, &*p, LatencyModel::A, &cfg).unwrap();
+            assert_eq!(adm.arrivals, legacy.arrivals, "servers {servers}");
+            assert_eq!(adm.starts, legacy.starts, "servers {servers}");
+            assert_eq!(adm.finishes, legacy.finishes, "servers {servers}");
+            assert_eq!(adm.batches as usize, 600);
+            assert_eq!(adm.steals, 0);
+        }
+    }
+
+    #[test]
+    fn multi_shard_run_is_deterministic() {
+        let spec = small_spec();
+        let cfg = AdmissionConfig {
+            tenants: uniform_tenants(8, 1.5),
+            jobs: 3_000,
+            shards: 4,
+            drainers: 4,
+            steal: true,
+            batch: BatchPolicy::Adaptive(SloConfig {
+                target_p99: 2.0,
+                ..Default::default()
+            }),
+            amortize: 0.75,
+            seed: 0xD15C,
+        };
+        let p = crate::allocation::policy::resolve("proposed").unwrap();
+        let a = run_admission(&spec, &*p, LatencyModel::A, &cfg).unwrap();
+        let b = run_admission(&spec, &*p, LatencyModel::A, &cfg).unwrap();
+        assert_eq!(a.starts, b.starts);
+        assert_eq!(a.finishes, b.finishes);
+        assert_eq!(a.drainer_of, b.drainer_of);
+        assert_eq!(a.steals, b.steals);
+        assert_eq!(a.max_queue_depth, b.max_queue_depth);
+        assert_eq!(a.jobs, 3_000);
+    }
+
+    #[test]
+    fn per_tenant_streams_stay_fifo() {
+        // Tenant-keyed sharding + per-tenant FIFO subqueues: each
+        // tenant's jobs start in its own arrival order even with
+        // stealing and adaptive batches in play.
+        let spec = small_spec();
+        let cfg = AdmissionConfig {
+            tenants: uniform_tenants(5, 2.0),
+            jobs: 2_000,
+            shards: 2,
+            drainers: 3,
+            steal: true,
+            batch: BatchPolicy::Fixed(4),
+            amortize: 0.5,
+            seed: 7,
+        };
+        let p = crate::allocation::policy::resolve("proposed").unwrap();
+        let rep = run_admission(&spec, &*p, LatencyModel::A, &cfg).unwrap();
+        let mut last_start = vec![0.0f64; 5];
+        for i in 0..rep.jobs {
+            let t = rep.tenant_of[i];
+            assert!(rep.starts[i] >= rep.arrivals[i], "job {i} started early");
+            assert!(rep.finishes[i] > rep.starts[i]);
+            assert!(
+                rep.starts[i] >= last_start[t],
+                "tenant {t} starts must be monotone"
+            );
+            last_start[t] = rep.starts[i];
+        }
+    }
+
+    #[test]
+    fn drr_splits_batch_slots_by_weight() {
+        let mut q = DrrQueue::new(2);
+        for i in 0..10 {
+            q.push(0, i);
+        }
+        for i in 10..20 {
+            q.push(1, i);
+        }
+        let mut out = Vec::new();
+        q.drain(&[3.0, 1.0], 8, &mut out);
+        assert_eq!(out.len(), 8);
+        let t0 = out.iter().filter(|&&j| j < 10).count();
+        assert_eq!(t0, 6, "weight 3:1 over 8 slots is a 6:2 split, got {out:?}");
+        // Within-tenant order is FIFO.
+        let t0_jobs: Vec<usize> = out.iter().copied().filter(|&j| j < 10).collect();
+        assert_eq!(t0_jobs, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn drr_single_tenant_is_fifo() {
+        let mut q = DrrQueue::new(1);
+        for i in 0..6 {
+            q.push(0, i);
+        }
+        let mut out = Vec::new();
+        q.drain(&[1.0], 4, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn controller_grows_on_violation_and_shrinks_when_idle() {
+        let slo = SloConfig {
+            target_p99: 1.0,
+            min_batch: 1,
+            max_batch: 16,
+            window: 8,
+            decide_every: 4,
+        };
+        let mut c = BatchController::new(slo).unwrap();
+        assert_eq!(c.limit(), 1);
+        for _ in 0..8 {
+            c.observe(5.0); // far above target
+        }
+        assert!(c.limit() >= 4, "violations must double the limit, got {}", c.limit());
+        assert!(c.grows() >= 2);
+        let peak = c.limit();
+        for _ in 0..40 {
+            c.observe(0.01); // far below half-target
+        }
+        assert!(c.limit() < peak, "idle stream must shrink the limit");
+        assert!(c.shrinks() >= 1);
+        // Inside the dead band: hold.
+        let held = c.limit();
+        for _ in 0..8 {
+            c.observe(0.8);
+        }
+        assert_eq!(c.limit(), held, "hysteresis dead band must hold the limit");
+    }
+
+    #[test]
+    fn stealing_is_work_conserving_under_skew() {
+        // All traffic on tenant 0 (shard 0); tenant 1 idle-ish. With
+        // stealing, drainer 1 serves shard 0's backlog: batches get
+        // stolen and the run finishes no later.
+        let spec = small_spec();
+        let mk = |steal| AdmissionConfig {
+            tenants: vec![
+                TenantSpec {
+                    arrivals: ArrivalProcess::Poisson { rate: 6.0 },
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    arrivals: ArrivalProcess::Poisson { rate: 0.05 },
+                    weight: 1.0,
+                },
+            ],
+            jobs: 1_200,
+            shards: 2,
+            drainers: 2,
+            steal,
+            batch: BatchPolicy::Fixed(1),
+            amortize: 0.0,
+            seed: 0x5EA1,
+        };
+        let p = crate::allocation::policy::resolve("proposed").unwrap();
+        let with = run_admission(&spec, &*p, LatencyModel::A, &mk(true)).unwrap();
+        let without =
+            run_admission(&spec, &*p, LatencyModel::A, &mk(false)).unwrap();
+        assert!(with.steals > 0, "skewed load must trigger steals");
+        assert!(
+            with.makespan <= without.makespan,
+            "stealing is work-conserving: {} vs {}",
+            with.makespan,
+            without.makespan
+        );
+    }
+
+    #[test]
+    fn amortized_batches_raise_capacity() {
+        // Deterministic overload: single-job batches can't keep up, wide
+        // amortized batches (γ = 0.75 → 16-job batch ≈ 4.75 S, not 16 S)
+        // can.
+        let spec = small_spec();
+        let (_, sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es =
+            crate::workload::service::mean_service(&mut sampler.clone(), 2_000, 1);
+        let jobs: Vec<AdmissionJob> = (0..2_000)
+            .map(|i| AdmissionJob { arrival: i as f64 * es / 2.5, tenant: 0 })
+            .collect();
+        let mk = |b| AdmissionConfig {
+            tenants: uniform_tenants(1, 1.0),
+            jobs: jobs.len(),
+            shards: 1,
+            drainers: 1,
+            steal: false,
+            batch: BatchPolicy::Fixed(b),
+            amortize: 0.75,
+            seed: 1,
+        };
+        let run = |b| {
+            let mut s = sampler.clone();
+            let mut rng = Rng::new(99);
+            simulate_admission(&jobs, &mut s, &mk(b), &mut rng).unwrap()
+        };
+        let narrow = run(1);
+        let wide = run(16);
+        assert!(
+            wide.makespan < 0.6 * narrow.makespan,
+            "amortized batches must absorb a 2.5x overload: wide {} vs \
+             narrow {}",
+            wide.makespan,
+            narrow.makespan
+        );
+        assert!(wide.mean_batch > 4.0, "mean batch {}", wide.mean_batch);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let ok = AdmissionConfig {
+            tenants: uniform_tenants(2, 1.0),
+            jobs: 10,
+            shards: 2,
+            drainers: 2,
+            steal: false,
+            batch: BatchPolicy::Fixed(4),
+            amortize: 0.5,
+            seed: 1,
+        };
+        assert!(ok.validate().is_ok());
+        let mut c = ok.clone();
+        c.tenants.clear();
+        assert!(c.validate().is_err(), "no tenants");
+        let mut c = ok.clone();
+        c.tenants[0].weight = 0.0;
+        assert!(c.validate().is_err(), "zero weight");
+        let mut c = ok.clone();
+        c.jobs = 0;
+        assert!(c.validate().is_err(), "no jobs");
+        let mut c = ok.clone();
+        c.shards = 0;
+        assert!(c.validate().is_err(), "zero shards");
+        let mut c = ok.clone();
+        c.drainers = 1; // 2 shards, steal off: shard 1 unreachable
+        assert!(c.validate().is_err(), "orphan shard without steal");
+        c.steal = true;
+        assert!(c.validate().is_ok(), "steal makes every shard reachable");
+        let mut c = ok.clone();
+        c.amortize = 1.0;
+        assert!(c.validate().is_err(), "gamma = 1 means free batches");
+        let mut c = ok.clone();
+        c.batch = BatchPolicy::Fixed(0);
+        assert!(c.validate().is_err(), "empty batches");
+        let mut c = ok;
+        c.batch = BatchPolicy::Adaptive(SloConfig {
+            min_batch: 8,
+            max_batch: 4,
+            ..Default::default()
+        });
+        assert!(c.validate().is_err(), "inverted batch range");
+    }
+}

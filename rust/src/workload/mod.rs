@@ -33,6 +33,14 @@
 //! replays an arrival trace against the thread coordinator with batched
 //! dispatch (the `MatvecBatched` artifacts on the XLA backend).
 //!
+//! At million-request scale the single FIFO queue is itself the
+//! bottleneck; the [`admission`] module generalizes it into a sharded,
+//! multi-tenant front end — tenant-keyed shard queues, a work-stealing
+//! drain, deficit-round-robin fairness ([`DrrQueue`]), and an SLO-aware
+//! adaptive batch controller ([`BatchController`]) — that stays
+//! bit-identical to [`simulate_queue`] in its degenerate one-shard,
+//! one-tenant configuration ([`AdmissionConfig::fifo_parity`]).
+//!
 //! When the cluster itself is the moving part — workers dying, machines
 //! slowing, group parameters drifting — the [`drift`] module scripts the
 //! truth over model time and [`run_workload_drift`] compares the paper's
@@ -63,11 +71,17 @@
 //! # Ok::<(), hetcoded::Error>(())
 //! ```
 
+pub mod admission;
 pub mod arrivals;
 pub mod drift;
 pub mod queue;
 pub mod service;
 
+pub use admission::{
+    generate_jobs, run_admission, simulate_admission, AdmissionConfig,
+    AdmissionJob, AdmissionReport, BatchController, BatchPolicy, DrrQueue,
+    SloConfig, TenantSpec,
+};
 pub use arrivals::ArrivalProcess;
 pub use drift::{
     run_workload_drift, AdaptPolicy, DriftEvent, DriftKind, DriftReport,

@@ -9,8 +9,13 @@
 //! this is an M/G/1 queue whose service law is the paper's `T_{r:N}`.
 //!
 //! Because arrivals are generated up front and service times are i.i.d.,
-//! the simulation is a single O(n · servers) pass — no event heap — and is
-//! bit-reproducible from a seed.
+//! the simulation is a single O(n · log servers) pass (earliest-free-slot
+//! selection via a min-heap) and is bit-reproducible from a seed.
+//!
+//! The multi-queue generalization of this simulator — per-tenant sharded
+//! admission, work stealing, adaptive batching — lives in
+//! [`crate::workload::admission`]; with one shard and one tenant it
+//! reproduces this FIFO path bit-for-bit.
 
 use crate::allocation::Policy;
 use crate::math::{Rng, Summary};
@@ -19,6 +24,21 @@ use crate::sim::Scheme;
 use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::service::{service_sampler_for, ServiceSampler};
 use crate::{Error, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Order-preserving integer key for a nonnegative finite model time: the
+/// IEEE-754 bit pattern of a nonnegative `f64` compares exactly like the
+/// value, so `(time_key(t), index)` tuples are totally ordered heap keys
+/// with no `PartialOrd` wrapper types. `-0.0` (whose bit pattern would
+/// otherwise sort above every positive time) normalizes to `+0.0`.
+pub(crate) fn time_key(t: f64) -> u64 {
+    if t <= 0.0 {
+        0
+    } else {
+        t.to_bits()
+    }
+}
 
 /// Configuration of one throughput-under-load run.
 #[derive(Clone, Copy, Debug)]
@@ -81,23 +101,22 @@ pub fn simulate_queue(
         ));
     }
     let n = arrival_times.len();
-    let mut free = vec![0.0f64; servers];
+    // Earliest-free slot via a min-heap keyed `(free_time_bits, slot)`.
+    // `time_key` is order-isomorphic to the time, so the heap minimum is
+    // exactly the linear scan's first strict minimum: equal free times
+    // tie-break on the lower slot index, bit-for-bit the old behaviour,
+    // at O(log servers) per arrival instead of O(servers).
+    let mut free: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..servers).map(|i| Reverse((time_key(0.0), i))).collect();
     let mut starts = Vec::with_capacity(n);
     let mut finishes = Vec::with_capacity(n);
     let mut server_of = Vec::with_capacity(n);
     for &t in arrival_times {
-        // Earliest-free slot (linear scan; `servers` is small).
-        let mut idx = 0usize;
-        let mut ft = free[0];
-        for (i, &x) in free.iter().enumerate().skip(1) {
-            if x < ft {
-                ft = x;
-                idx = i;
-            }
-        }
+        let Reverse((bits, idx)) = free.pop().expect("one heap entry per slot");
+        let ft = f64::from_bits(bits);
         let start = t.max(ft);
         let finish = start + service.sample(rng);
-        free[idx] = finish;
+        free.push(Reverse((time_key(finish), idx)));
         starts.push(start);
         finishes.push(finish);
         server_of.push(idx);
@@ -128,7 +147,9 @@ pub struct WorkloadReport {
     pub throughput: f64,
     /// Busy time / (makespan · servers), in `[0, 1]`.
     pub utilization: f64,
-    /// Empirical mean service time `E[S]`.
+    /// Empirical mean service time `E[S]`. An empty trace has no service
+    /// draws to average, so the report is explicitly all-zero (see
+    /// [`WorkloadReport::from_trace`]) rather than a `0/1` artifact.
     pub mean_service: f64,
     /// Sojourn times (arrival → completion); retains samples, so
     /// percentiles are available.
@@ -148,6 +169,12 @@ impl WorkloadReport {
     }
 
     /// Build the report from a raw trace.
+    ///
+    /// An **empty trace** (zero jobs) yields an explicitly all-zero report
+    /// — zero makespan/throughput/utilization/`mean_service` and empty
+    /// sojourn/wait summaries — rather than metrics fabricated from
+    /// clamped denominators: there is no observation window and no service
+    /// draw to average, so every "mean" is undefined and reported as 0.
     pub fn from_trace(
         policy: String,
         arrivals: &ArrivalProcess,
@@ -155,6 +182,23 @@ impl WorkloadReport {
         trace: &QueueTrace,
     ) -> WorkloadReport {
         let n = trace.arrivals.len();
+        if n == 0 {
+            return WorkloadReport {
+                policy,
+                arrival_process: arrivals.name().to_string(),
+                offered_rate: arrivals.mean_rate(),
+                jobs: 0,
+                servers,
+                makespan: 0.0,
+                throughput: 0.0,
+                utilization: 0.0,
+                mean_service: 0.0,
+                sojourn: Summary::keeping_samples(),
+                wait: Summary::keeping_samples(),
+                mean_in_system: 0.0,
+                max_in_system: 0,
+            };
+        }
         // Window = [first arrival, last completion]: the system is
         // trivially empty before traffic starts, so counting that stretch
         // in the denominator under-reports throughput and utilization.
@@ -163,7 +207,7 @@ impl WorkloadReport {
             .finishes
             .iter()
             .fold(f64::NEG_INFINITY, |acc, &f| acc.max(f));
-        let makespan = if n == 0 { 0.0 } else { last_finish - first_arrival };
+        let makespan = last_finish - first_arrival;
         let mut sojourn = Summary::keeping_samples();
         let mut wait = Summary::keeping_samples();
         let mut busy = 0.0;
@@ -195,7 +239,6 @@ impl WorkloadReport {
             depth += d;
             max_depth = max_depth.max(depth);
         }
-        let jobs_f = n.max(1) as f64;
         WorkloadReport {
             policy,
             arrival_process: arrivals.name().to_string(),
@@ -209,7 +252,7 @@ impl WorkloadReport {
             } else {
                 0.0
             },
-            mean_service: busy / jobs_f,
+            mean_service: busy / n as f64,
             sojourn,
             wait,
             mean_in_system: if makespan > 0.0 { area / makespan } else { 0.0 },
@@ -302,6 +345,150 @@ mod tests {
                 last_finish[s] = t.finishes[i];
             }
         }
+    }
+
+    /// Reference copy of the pre-heap earliest-free-slot selection (linear
+    /// scan, first strict minimum ⇒ lowest index at ties); the heap path
+    /// must reproduce it bit-for-bit, `server_of` included.
+    fn simulate_queue_linear(
+        arrival_times: &[f64],
+        service: &mut ServiceSampler,
+        servers: usize,
+        rng: &mut Rng,
+    ) -> QueueTrace {
+        let mut free = vec![0.0f64; servers];
+        let mut starts = Vec::new();
+        let mut finishes = Vec::new();
+        let mut server_of = Vec::new();
+        for &t in arrival_times {
+            let mut idx = 0usize;
+            let mut ft = free[0];
+            for (i, &x) in free.iter().enumerate().skip(1) {
+                if x < ft {
+                    ft = x;
+                    idx = i;
+                }
+            }
+            let start = t.max(ft);
+            let finish = start + service.sample(rng);
+            free[idx] = finish;
+            starts.push(start);
+            finishes.push(finish);
+            server_of.push(idx);
+        }
+        QueueTrace { arrivals: arrival_times.to_vec(), starts, finishes, server_of }
+    }
+
+    #[test]
+    fn heap_slot_selection_matches_linear_scan_bit_for_bit() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        for servers in [1usize, 2, 3, 7] {
+            let mut arr_rng = Rng::new(41 + servers as u64);
+            let arrivals = ArrivalProcess::Poisson { rate: 30.0 }
+                .times(400, &mut arr_rng)
+                .unwrap();
+            let mut s1 = sampler.clone();
+            let mut s2 = sampler.clone();
+            let mut r1 = Rng::new(17);
+            let mut r2 = Rng::new(17);
+            let heap = simulate_queue(&arrivals, &mut s1, servers, &mut r1)
+                .unwrap();
+            let lin =
+                simulate_queue_linear(&arrivals, &mut s2, servers, &mut r2);
+            assert_eq!(heap.starts, lin.starts, "servers {servers}");
+            assert_eq!(heap.finishes, lin.finishes, "servers {servers}");
+            assert_eq!(heap.server_of, lin.server_of, "servers {servers}");
+        }
+    }
+
+    #[test]
+    fn equal_free_times_tie_break_on_lowest_slot() {
+        // Four simultaneous arrivals on four all-idle slots: every slot is
+        // free at exactly 0.0, so the tie-break alone decides placement —
+        // slots 0, 1, 2, 3 in arrival order, the linear scan's rule.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let mut rng = Rng::new(3);
+        let arrivals = [0.0, 0.0, 0.0, 0.0, 5.0, 5.0];
+        let t = simulate_queue(&arrivals, &mut sampler, 4, &mut rng).unwrap();
+        assert_eq!(&t.server_of[..4], &[0, 1, 2, 3]);
+        assert_eq!(&t.starts[..4], &[0.0, 0.0, 0.0, 0.0]);
+        // The two t = 5 arrivals land on the two earliest-freed slots, in
+        // freed order (or lowest index if still tied at 5.0).
+        assert!(t.starts[4] >= 5.0 && t.starts[5] >= t.starts[4]);
+    }
+
+    #[test]
+    fn empty_trace_reports_all_zero() {
+        let trace = QueueTrace {
+            arrivals: vec![],
+            starts: vec![],
+            finishes: vec![],
+            server_of: vec![],
+        };
+        let rep = WorkloadReport::from_trace(
+            "test".into(),
+            &ArrivalProcess::Poisson { rate: 1.0 },
+            2,
+            &trace,
+        );
+        assert_eq!(rep.jobs, 0);
+        assert_eq!(rep.makespan, 0.0);
+        assert_eq!(rep.throughput, 0.0);
+        assert_eq!(rep.utilization, 0.0);
+        assert_eq!(rep.mean_service, 0.0, "no service draws, no mean");
+        assert_eq!(rep.mean_in_system, 0.0);
+        assert_eq!(rep.max_in_system, 0);
+        assert_eq!(rep.sojourn.count(), 0);
+        assert_eq!(rep.wait.count(), 0);
+    }
+
+    #[test]
+    fn bursty_arrivals_keep_fifo_and_raise_peak_depth() {
+        // ON/OFF traffic at the same long-run mean rate as a Poisson
+        // stream: the queue invariants (monotone FIFO starts, start ≥
+        // arrival, finish > start) must survive the bursts, and the burst
+        // peak backlog must exceed the Poisson baseline's.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut sampler) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let es = crate::workload::service::mean_service(&mut sampler, 2_000, 1);
+        let rate = 0.7 / es;
+        let (on, off) = (50.0 * es, 50.0 * es);
+        let onoff = ArrivalProcess::OnOff {
+            // ON rate boosted so the long-run mean rate stays `rate`.
+            rate_on: rate * (on + off) / on,
+            mean_on: on,
+            mean_off: off,
+        };
+        let mut arr_rng = Rng::new(23);
+        let times = onoff.times(2_000, &mut arr_rng).unwrap();
+        let mut svc_rng = Rng::new(29);
+        let t = simulate_queue(&times, &mut sampler, 1, &mut svc_rng).unwrap();
+        assert!(t.starts.windows(2).all(|w| w[1] >= w[0]), "FIFO under burst");
+        for i in 0..times.len() {
+            assert!(t.starts[i] >= t.arrivals[i]);
+            assert!(t.finishes[i] > t.starts[i]);
+        }
+        let mk = |arrivals| WorkloadConfig { arrivals, jobs: 2_000, servers: 1, seed: 23 };
+        let burst = run_workload(&spec, Scheme::Proposed, LatencyModel::A, &mk(onoff))
+            .unwrap();
+        let pois = run_workload(
+            &spec,
+            Scheme::Proposed,
+            LatencyModel::A,
+            &mk(ArrivalProcess::Poisson { rate }),
+        )
+        .unwrap();
+        assert!(
+            burst.max_in_system > pois.max_in_system,
+            "burst peak {} must exceed Poisson baseline {}",
+            burst.max_in_system,
+            pois.max_in_system
+        );
     }
 
     #[test]
