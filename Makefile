@@ -2,7 +2,7 @@
 # tier-1 verification; everything XLA/PJRT additionally needs `make
 # artifacts` (Python + JAX) and a build with `--features xla`.
 
-.PHONY: build test artifacts figures bench bench-json bench-schema lint doc
+.PHONY: build test artifacts figures bench bench-json bench-schema lint lint-invariants doc
 
 build:
 	cargo build --release
@@ -24,10 +24,11 @@ bench:
 # Machine-readable bench snapshot: run the perf benches with JSON capture
 # (the in-repo harness appends `"name": ns_per_op,` fragments when
 # BENCH_JSON_DIR is set) and merge them into BENCH_PR7.json so the bench
-# trajectory is diffable across PRs (BENCH_PR2/PR3/PR5/PR6.json are the
-# previous snapshots' schemas; PR 7 adds the sharded admission front-end
-# rows). Bench names must be unique across the two binaries (they are
-# today, and `scripts/check_bench_schema` fails on a collision); after
+# trajectory is diffable across PRs (BENCH_PR2/PR3/PR5/PR6/PR7.json are
+# the previous snapshots' schemas; PR 8 carries the PR 7 rows forward —
+# no new bench binaries, the linter is dev-only). Bench names must be
+# unique across the two binaries (they are today, and
+# `scripts/check_bench_schema` fails on a collision); after
 # regenerating, run `make bench-schema` to confirm the snapshot matches
 # the harness.
 bench-json:
@@ -38,8 +39,8 @@ bench-json:
 	  { echo "error: benches emitted no JSON fragments (BENCH_JSON_DIR plumbing broken?)"; exit 1; }
 	{ echo '{'; \
 	  echo '  "_meta": "flat map: benchmark name -> median ns/op from the in-repo bench harness; regenerate with make bench-json",'; \
-	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR7.json
-	@echo "wrote BENCH_PR7.json"
+	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR8.json
+	@echo "wrote BENCH_PR8.json"
 
 # Validate every BENCH_PR*.json snapshot (flat name -> ns/op-or-null map,
 # no duplicate keys) and, where cargo exists, diff the newest snapshot's
@@ -50,6 +51,13 @@ bench-schema:
 lint:
 	cargo fmt --all --check
 	cargo clippy --all-targets -- -D warnings
+
+# The repo invariant linter (rules D1-D5/S1-S2 over rust/src, allowlist
+# in rust/xtask/lint_allow.toml) plus its own fixture/unit suite; see
+# DESIGN.md "Static analysis & enforced invariants".
+lint-invariants:
+	cargo test -q -p xtask
+	cargo xtask lint
 
 doc:
 	RUSTDOCFLAGS="-D rustdoc::broken_intra_doc_links" cargo doc --no-deps

@@ -80,7 +80,7 @@ fn main() -> hetcoded::Result<()> {
             gpad[(i, j)] = gen.matrix()[(i, j)];
         }
     }
-    let t0 = std::time::Instant::now();
+    let t0 = hetcoded::runtime::wall_now();
     let coded = svc.encode(&gpad, &a)?;
     let native = gpad.matmul(&a);
     let mut enc_err = 0.0f64;
@@ -134,7 +134,7 @@ fn main() -> hetcoded::Result<()> {
     // compute, dominates — the regime the paper models).
     let native: Arc<dyn hetcoded::coordinator::Compute> =
         Arc::new(hetcoded::coordinator::NativeCompute);
-    let t_seq = std::time::Instant::now();
+    let t_seq = hetcoded::runtime::wall_now();
     let seq = Session::builder(&spec)
         .allocation(proposed.clone())
         .data(a.clone())
@@ -170,7 +170,7 @@ fn main() -> hetcoded::Result<()> {
     // straggle penalty is paid once for the whole batch and each worker's
     // contraction is the MXU-shaped (l_i × d)·(d × 8) batched artifact.
     let batch: Vec<Vec<f64>> = requests[..8].to_vec();
-    let t0 = std::time::Instant::now();
+    let t0 = hetcoded::runtime::wall_now();
     let reports = Session::builder(&spec)
         .allocation(proposed.clone())
         .data(a.clone())

@@ -29,7 +29,7 @@ pub fn run_figure_bench(n: u8) {
         "figure {n} (samples={}, points={})",
         opts.samples, opts.points
     ));
-    let t0 = std::time::Instant::now();
+    let t0 = hetcoded::runtime::wall_now();
     let fig: Figure = generate(n, &opts).expect("figure generation failed");
     let elapsed = t0.elapsed();
     println!("{}", fig.ascii_plot());

@@ -40,6 +40,10 @@ fn main() {
     // persistent pool one channel push per helper + an atomic claim per
     // task. This gap is what the >=2x serving/sweep headline comes from
     // at small per-batch work sizes.
+    // The spawn here is the measured baseline itself, not a shortcut
+    // around the pool — the one bench where raw thread creation is the
+    // point.
+    #[allow(clippy::disallowed_methods)]
     run("spawn 8 scoped threads (noop, per-call baseline)", || {
         std::thread::scope(|s| {
             for _ in 0..8 {

@@ -94,7 +94,9 @@ pub fn integer_group_r(spec: &ClusterSpec, r: f64) -> Result<(Vec<usize>, bool)>
     order.sort_by(|&a, &b| {
         let fa = (rs[a] - rs[a].round()).abs();
         let fb = (rs[b] - rs[b].round()).abs();
-        fb.partial_cmp(&fa).unwrap()
+        // total_cmp, descending: slacks are |x - round(x)| of finite
+        // loads, so never NaN; keeps the exact order the solver pinned.
+        fb.total_cmp(&fa)
     });
     let mut oi = 0;
     while diff != 0 && !order.is_empty() {

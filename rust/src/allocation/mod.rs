@@ -20,6 +20,8 @@
 //! harness. New schemes implement [`Policy`] in one module and add one
 //! [`policy::PolicyEntry`] line.
 
+#![forbid(unsafe_code)]
+
 pub mod group_code;
 pub mod integerize;
 pub mod policy;

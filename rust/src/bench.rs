@@ -6,8 +6,11 @@
 //! auto-calibrates the iteration count to a target measurement window and
 //! reports min / median / p95 wall time plus derived throughput.
 
+#![forbid(unsafe_code)]
+
 use crate::math::Summary;
-use std::time::{Duration, Instant};
+use crate::runtime::wall_now;
+use std::time::Duration;
 
 /// One benchmark's measurements.
 #[derive(Clone, Debug)]
@@ -105,13 +108,13 @@ pub fn run_with_target<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Be
         return listed;
     }
     // Warm-up & calibration: time one call, derive iteration count.
-    let t0 = Instant::now();
+    let t0 = wall_now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
     let iters = ((target.as_secs_f64() / once).ceil() as u64).clamp(3, 10_000);
     let mut s = Summary::keeping_samples();
     for _ in 0..iters {
-        let t = Instant::now();
+        let t = wall_now();
         f();
         s.add(t.elapsed().as_secs_f64());
     }

@@ -2,6 +2,8 @@
 //!
 //! Grammar: `hetcoded <subcommand> [--flag value | --switch] [positional...]`.
 
+#![forbid(unsafe_code)]
+
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -31,12 +33,7 @@ impl Args {
                 // `--key=value` or `--key value` or bare switch.
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.flags.insert(name.to_string(), v);
                 } else {
                     out.switches.push(name.to_string());

@@ -26,7 +26,7 @@ use crate::coding::linalg::Lu;
 use crate::coding::{Generator, Matrix};
 use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Default number of cached decode factorizations. Under group
@@ -97,10 +97,14 @@ struct CacheEntry {
 /// under group heterogeneity, where thread scheduling jitters the arrival
 /// order within a straggle pattern — share one cache entry and produce
 /// bit-identical results.
+/// BTreeMap rather than HashMap: the LRU eviction scan iterates the map,
+/// and rule D2 keeps iteration out of hash containers in `coding/`. The
+/// scan was already deterministic (stamps are unique), but ordered keys
+/// make that a structural property instead of an argument.
 struct FactorCache {
     cap: usize,
     stamp: u64,
-    map: HashMap<Vec<usize>, CacheEntry>,
+    map: BTreeMap<Vec<usize>, CacheEntry>,
     /// Holding slot when caching is disabled (`cap == 0`).
     uncached: Option<Factor>,
     hits: u64,
@@ -112,7 +116,7 @@ impl FactorCache {
         FactorCache {
             cap,
             stamp: 0,
-            map: HashMap::new(),
+            map: BTreeMap::new(),
             uncached: None,
             hits: 0,
             misses: 0,

@@ -26,6 +26,8 @@
 //! implemented in [`linalg`] from scratch, alongside the [`CsrMatrix`]
 //! sparse type and its pool-parallel SpMM kernel.
 
+#![forbid(unsafe_code)]
+
 pub mod bjorck_pereyra;
 pub mod code;
 pub mod decoder;

@@ -20,6 +20,8 @@
 //! and repeated `[[table]]` sections. Single `[table]` sections are also
 //! accepted.
 
+#![forbid(unsafe_code)]
+
 mod parser;
 
 pub use parser::{parse, Table, Value};

@@ -48,7 +48,8 @@ use crate::model::{ClusterSpec, EstimatorConfig, SpeedEstimator};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use crate::runtime::wall_now;
+use std::time::Duration;
 
 /// Knobs of the live adaptive loop.
 #[derive(Clone, Copy, Debug)]
@@ -238,7 +239,7 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     let mut suspected: Vec<bool> = vec![false; total_workers];
     let mut reallocations = 0u64;
 
-    let start = Instant::now();
+    let start = wall_now();
     let mut recorder = LatencyRecorder::new();
     let mut jobs = Vec::with_capacity(requests.len());
     let mut worst = 0.0f64;

@@ -91,6 +91,10 @@ pub struct XlaService {
 impl XlaService {
     /// Spawn the service thread, loading artifacts from `dir` in-thread.
     /// Fails fast if the artifacts cannot be loaded/compiled.
+    // Allowlisted thread-creation site (lint rule D3): the PJRT client
+    // is not Sync, so XLA work cannot ride the shared WorkPool — it
+    // lives on one dedicated service thread behind a channel.
+    #[allow(clippy::disallowed_methods)]
     pub fn new(dir: std::path::PathBuf) -> Result<XlaService> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();

@@ -50,7 +50,8 @@ use crate::model::ClusterSpec;
 use crate::workload::{BatchController, BatchPolicy, DrrQueue};
 use crate::{Error, Result};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use crate::runtime::wall_now;
+use std::time::Duration;
 
 /// Configuration of the live admission front end
 /// ([`crate::coordinator::SessionBuilder::front_end`]).
@@ -245,7 +246,7 @@ pub(crate) fn serve_arrivals_front_impl(
     let mut injector_slot: Option<crate::coordinator::StragglerInjector> = None;
     let mut grows_baseline: Option<u64> = None;
 
-    let start = Instant::now();
+    let start = wall_now();
     let mut recorder = LatencyRecorder::new();
     let mut worst = 0.0f64;
     let mut job_slots: Vec<Option<JobReport>> = (0..n).map(|_| None).collect();

@@ -1,6 +1,7 @@
 //! Latency metrics for the serving path.
 
 use crate::math::Summary;
+use crate::runtime::wall_now;
 use std::time::{Duration, Instant};
 
 /// Records per-request latencies and exposes percentiles/throughput.
@@ -48,7 +49,7 @@ impl LatencyRecorder {
     /// request *completion* (every serving loop does): the wall span is
     /// anchored on completion instants.
     pub fn record(&mut self, latency: Duration, rows: usize) {
-        let now = Instant::now();
+        let now = wall_now();
         if self.first.is_none() {
             self.first = Some((now, latency.as_secs_f64()));
         }

@@ -71,6 +71,8 @@
 //! `serve_arrivals_adaptive`) are `#[deprecated]` shims over `Session`,
 //! bit-identical under fixed seeds (`rust/tests/session_parity.rs`).
 
+#![forbid(unsafe_code)]
+
 pub mod adaptive;
 pub mod compute;
 pub mod failures;

@@ -38,7 +38,7 @@ use crate::model::ClusterSpec;
 use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use crate::runtime::wall_now;
 
 /// One worker's reply for a whole request batch.
 struct BatchReply {
@@ -366,7 +366,7 @@ impl PreparedJob {
 
         let xs_arc = self.stage_requests(requests);
         let (tx, rx) = mpsc::channel::<BatchReply>();
-        let start = Instant::now();
+        let start = wall_now();
         for chunk in &self.chunks {
             let w = chunk.worker;
             if injector.is_dead(w) {
@@ -377,6 +377,10 @@ impl PreparedJob {
             let xs = Arc::clone(&xs_arc);
             let cmp = Arc::clone(&compute);
             let sender = tx.clone();
+            // Allowlisted thread-creation site (lint rule D3): worker
+            // emulation blocks in `sleep` for the injected wall delay,
+            // so it cannot occupy a WorkPool worker.
+            #[allow(clippy::disallowed_methods)]
             std::thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || {

@@ -87,7 +87,8 @@ use crate::runtime::pool::PoolHandle;
 use crate::workload::ArrivalProcess;
 use crate::{Error, Result};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use crate::runtime::wall_now;
+use std::time::Duration;
 
 /// Domain-separation tag for the arrival-trace RNG stream of
 /// [`Mode::PoissonArrivals`] (kept identical to the historical `run
@@ -544,7 +545,7 @@ impl Session {
     }
 
     fn serve_sequential(&self) -> Result<ServeOutcome> {
-        let start = Instant::now();
+        let start = wall_now();
         let mut recorder = LatencyRecorder::new();
         let mut jobs = Vec::with_capacity(self.requests.len());
         let mut worst = 0.0f64;
@@ -574,7 +575,7 @@ impl Session {
     }
 
     fn serve_pipelined(&self) -> Result<ServeOutcome> {
-        let start = Instant::now();
+        let start = wall_now();
         let mut handles = Vec::with_capacity(self.requests.len());
         for (i, x) in self.requests.iter().enumerate() {
             let mut jcfg = self.cfg.clone();
@@ -584,6 +585,11 @@ impl Session {
             let a = self.a.clone();
             let x = x.clone();
             let cmp = Arc::clone(&self.compute);
+            // Allowlisted thread-creation site (lint rule D3): each
+            // request thread blocks end-to-end on a full job (including
+            // emulated worker sleeps), which would deadlock a
+            // fixed-size pool at high concurrency.
+            #[allow(clippy::disallowed_methods)]
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("request-{i}"))
@@ -618,7 +624,7 @@ impl Session {
         if self.requests.is_empty() {
             return Err(Error::InvalidSpec("empty request batch".into()));
         }
-        let start = Instant::now();
+        let start = wall_now();
         let mut prepared =
             PreparedJob::new(&self.spec, &self.alloc, &self.a, &self.cfg)?;
         let reports = prepared.run_batch(

@@ -104,10 +104,7 @@ mod tests {
             .iter()
             .enumerate()
             .min_by(|a, b| {
-                (a.1 .0 - 1.0)
-                    .abs()
-                    .partial_cmp(&(b.1 .0 - 1.0).abs())
-                    .unwrap()
+                (a.1 .0 - 1.0).abs().total_cmp(&(b.1 .0 - 1.0).abs())
             })
             .unwrap()
             .0;

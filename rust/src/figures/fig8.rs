@@ -50,7 +50,7 @@ pub fn best_uniform_rate(fig: &Figure) -> (f64, f64) {
         .points
         .iter()
         .copied()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .expect("non-empty sweep")
 }
 

@@ -5,6 +5,8 @@
 //! exposes. The CLI (`hetcoded figures`) writes CSVs and renders ASCII
 //! plots; EXPERIMENTS.md records the paper-vs-measured comparison.
 
+#![forbid(unsafe_code)]
+
 pub mod ext_tail;
 pub mod fig2;
 pub mod fig3;
@@ -109,7 +111,9 @@ impl Figure {
             .iter()
             .flat_map(|s| s.points.iter().map(|p| p.0))
             .collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: sweep points are finite by construction; identical
+        // order to the old partial_cmp sort, without the NaN panic.
+        xs.sort_by(f64::total_cmp);
         xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12 * a.abs().max(1e-300));
         let mut out = String::new();
         out.push_str("x");

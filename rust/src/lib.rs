@@ -100,6 +100,9 @@
 //! See `DESIGN.md` for the system inventory (and its "Public API map")
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// `unsafe` is confined to `runtime/pool.rs` (lint rule S1); every
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod allocation;
 pub mod bench;
 pub mod cli;

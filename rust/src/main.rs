@@ -14,6 +14,8 @@
 //! through the [`Session`] facade. Unknown flags are rejected with a
 //! did-you-mean hint ([`Args::reject_unknown`]).
 
+#![forbid(unsafe_code)]
+
 use hetcoded::allocation::policy::{self, Policy, PolicyEntry};
 use hetcoded::cli::Args;
 use hetcoded::coding::{code, Matrix};
@@ -797,7 +799,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         vec![args.require::<u8>("fig")?]
     };
     for f in figs {
-        let t0 = std::time::Instant::now();
+        let t0 = hetcoded::runtime::wall_now();
         let fig = figures::generate(f, &opts)?;
         let path = fig.write_csv(&out_dir)?;
         println!("{}", fig.ascii_plot());

@@ -3,6 +3,8 @@
 //! Everything here is implemented from scratch (the build environment vendors
 //! no numerics crates) and unit-tested against published reference values.
 
+#![forbid(unsafe_code)]
+
 pub mod harmonic;
 pub mod lambertw;
 pub mod rng;

@@ -275,7 +275,7 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
             let emp = xs[(q * n as f64) as usize];
             let exact = -(1.0f64 - q).ln();

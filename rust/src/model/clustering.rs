@@ -92,13 +92,14 @@ pub fn cluster_workers(
     for _ in 0..100 {
         let mut changed = false;
         for (i, p) in pts.iter().enumerate() {
+            // total_cmp: distances are finite (inputs are finite mus),
+            // so this is the same order partial_cmp gave, minus the
+            // NaN panic path; ties keep the lowest index either way.
             let best = (0..centers.len())
                 .min_by(|&a, &b| {
-                    dist2(p, &centers[a])
-                        .partial_cmp(&dist2(p, &centers[b]))
-                        .unwrap()
+                    dist2(p, &centers[a]).total_cmp(&dist2(p, &centers[b]))
                 })
-                .unwrap();
+                .unwrap_or(0);
             if assign[i] != best {
                 assign[i] = best;
                 changed = true;
@@ -176,7 +177,7 @@ mod tests {
         assert_eq!(sizes, vec![30, 40, 50]);
         // Centroid mus should approximate the true centers.
         let mut mus: Vec<f64> = groups.iter().map(|g| g.mu).collect();
-        mus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mus.sort_by(f64::total_cmp);
         assert!((mus[0] - 1.0).abs() < 0.2);
         assert!((mus[1] - 8.0).abs() < 0.8);
         assert!((mus[2] - 16.0).abs() < 1.6);

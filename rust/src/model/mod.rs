@@ -5,6 +5,8 @@
 //! `α_(j)`; workers in a group receive the same number of coded rows
 //! `l_(j)`.
 
+#![forbid(unsafe_code)]
+
 pub mod analytic;
 pub mod clustering;
 pub mod estimator;

@@ -132,7 +132,7 @@ mod tests {
             for t in ts.iter_mut() {
                 *t = dist.sample(&mut rng);
             }
-            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ts.sort_by(f64::total_cmp);
             acc += ts[r - 1];
         }
         let mc = acc / trials as f64;

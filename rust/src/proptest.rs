@@ -13,6 +13,8 @@
 //! });
 //! ```
 
+#![forbid(unsafe_code)]
+
 use crate::math::Rng;
 
 /// Default number of cases used by the repo's property tests.

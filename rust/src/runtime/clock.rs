@@ -1,0 +1,21 @@
+//! The one sanctioned wall-clock read.
+//!
+//! Live serving code measures real elapsed time (SLO windows, bench
+//! timing, liveness deadlines) through [`wall_now`] so there is exactly
+//! one `Instant::now` call site in the crate. The point is not
+//! abstraction — it is enforcement: clippy's `disallowed-methods` bans
+//! `Instant::now`/`SystemTime::now` everywhere else, and lint rule D4
+//! additionally bans `wall_now` itself inside `sim/` and `model/`,
+//! where only virtual time is allowed. A wall read in live coordinator
+//! code is legitimate; one in the simulator silently destroys run
+//! reproducibility, which is why the two are separated at the lint
+//! layer rather than by convention.
+
+use std::time::Instant;
+
+/// Current wall-clock instant. Live-path code only; sim/model code uses
+/// the virtual clock carried by the event loop.
+#[allow(clippy::disallowed_methods)]
+pub fn wall_now() -> Instant {
+    Instant::now()
+}

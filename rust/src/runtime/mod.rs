@@ -23,8 +23,10 @@
 //! encode, multi-RHS decode, Monte-Carlo sweeps) runs on instead of
 //! spawning threads per call.
 
+pub mod clock;
 pub mod pool;
 
+pub use clock::wall_now;
 pub use pool::{PoolHandle, WorkPool};
 
 #[cfg(feature = "xla")]

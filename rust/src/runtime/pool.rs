@@ -98,6 +98,8 @@ impl std::fmt::Debug for WorkPool {
 /// pointer is fine — it is never dereferenced).
 struct ScopeState {
     data: *const (),
+    // SAFETY: `call` is only invoked through `run_scope_tasks` under the
+    // latch discipline above, with `data` as its first argument.
     call: unsafe fn(*const (), usize),
     tasks: usize,
     next: AtomicUsize,
@@ -117,7 +119,9 @@ unsafe impl Sync for ScopeState {}
 /// # Safety
 /// `p` must point to a live `F` (guaranteed by the `ScopeState` latch).
 unsafe fn call_closure<F: Fn(usize) + Sync>(p: *const (), i: usize) {
-    (*(p as *const F))(i)
+    // SAFETY: the caller's contract above — `p` points to a live `F`
+    // for the duration of this call.
+    unsafe { (*(p as *const F))(i) }
 }
 
 /// Claim-and-run loop shared by the calling thread and helper jobs.
@@ -156,6 +160,9 @@ impl WorkPool {
     /// parallelism). Spawns `threads - 1` background workers; the thread
     /// that opens a parallel region is always the remaining context, so
     /// `WorkPool::new(1)` spawns nothing and runs everything inline.
+    // This is the one sanctioned thread-creation site (lint rule D3 and
+    // clippy disallowed-methods both point here).
+    #[allow(clippy::disallowed_methods)]
     pub fn new(threads: usize) -> WorkPool {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)

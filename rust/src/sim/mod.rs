@@ -9,6 +9,8 @@
 //! byte-identical at any pool size) — because the paper's figures need
 //! `10^4` samples across dozens of sweep points.
 
+#![forbid(unsafe_code)]
+
 pub mod montecarlo;
 pub mod schemes;
 

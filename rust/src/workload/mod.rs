@@ -71,6 +71,8 @@
 //! # Ok::<(), hetcoded::Error>(())
 //! ```
 
+#![forbid(unsafe_code)]
+
 pub mod admission;
 pub mod arrivals;
 pub mod drift;

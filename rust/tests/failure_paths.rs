@@ -100,7 +100,7 @@ fn sub_k_survivors_error_instead_of_hanging() {
     let mut cfg = fast_cfg();
     cfg.dead_workers = (0..9).collect(); // one survivor: ~13 rows < 64
     let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
-    let started = std::time::Instant::now();
+    let started = hetcoded::runtime::wall_now();
     let res = prepared.run_batch(&reqs, Arc::new(NativeCompute), 5);
     assert!(res.is_err(), "sub-k survivors must fail");
     assert!(

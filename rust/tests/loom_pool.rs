@@ -1,0 +1,171 @@
+//! Loom model of the `WorkPool` scope lifecycle (`runtime/pool.rs`).
+//!
+//! The pool's soundness argument (see the `ScopeState` doc comment)
+//! rests on orderings the type system cannot check: the lifetime-erased
+//! closure pointer is only dereferenced by a task claimed *before* the
+//! completion latch fires, the caller's wake-up happens-after every
+//! task's `done` increment, a stale helper dequeued after completion
+//! never touches the scope, and a task panic is latched exactly once
+//! and surfaced after the drain. This file re-implements that exact
+//! synchronization skeleton — same atomics, same orderings (`Relaxed`
+//! claim cursor, `AcqRel` completion counter, `Mutex` + `Condvar`
+//! latch, `Mutex<Option<_>>` panic slot) — on loom's primitives, so
+//! loom exhausts every interleaving and its race detector (via
+//! `loom::cell::UnsafeCell` standing in for the erased closure memory)
+//! proves the happens-before edges the comment claims.
+//!
+//! Only compiled under `RUSTFLAGS="--cfg loom"` (the CI `loom` job);
+//! a plain `cargo test` builds this file as an empty binary.
+
+#![cfg(loom)]
+
+use loom::cell::UnsafeCell;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+/// The modeled scope: `cell` stands in for the caller's stack-held
+/// closure environment that `ScopeState::data` points at. Reads of it
+/// model calls through the trampoline; the caller's post-latch write
+/// models the stack frame being reused after `scope_run` returns.
+struct ScopeModel {
+    tasks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panic: Mutex<Option<&'static str>>,
+    finished: Mutex<bool>,
+    cv: Condvar,
+    cell: UnsafeCell<u64>,
+}
+
+// SAFETY (model): exactly the pool's own argument — the cell is read
+// only by tasks claimed before the latch and written only after it;
+// loom's race detector is the proof obligation for this impl.
+unsafe impl Sync for ScopeModel {}
+
+impl ScopeModel {
+    fn new(tasks: usize) -> Self {
+        ScopeModel {
+            tasks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            finished: Mutex::new(false),
+            cv: Condvar::new(),
+            cell: UnsafeCell::new(7),
+        }
+    }
+
+    /// `run_scope_tasks` verbatim: Relaxed claim, scope access, panic
+    /// latch, AcqRel completion count, latch + notify on the last task.
+    /// Returns the number of tasks this participant executed.
+    fn drain(&self, poison: bool) -> usize {
+        let mut ran = 0;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                return ran;
+            }
+            ran += 1;
+            // The trampoline call: a read of the closure environment.
+            let v = self.cell.with(|p| unsafe { *p });
+            assert_eq!(v, 7, "scope read after caller reclaimed the frame");
+            if poison {
+                let mut slot = self.panic.lock().unwrap();
+                slot.get_or_insert("task panicked");
+            }
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.tasks {
+                let mut fin = self.finished.lock().unwrap();
+                *fin = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// The tail of `scope_run`: drain, block on the latch, then reclaim
+    /// the closure memory (the caller's stack frame outliving the
+    /// region is exactly what this write + loom's race check proves).
+    fn finish(&self) -> Option<&'static str> {
+        self.drain(false);
+        let mut fin = self.finished.lock().unwrap();
+        while !*fin {
+            fin = self.cv.wait(fin).unwrap();
+        }
+        drop(fin);
+        self.cell.with_mut(|p| unsafe { *p = 0 });
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// Every task runs exactly once, the caller's wake-up happens-after all
+/// of them, and reclaiming the closure memory after the latch does not
+/// race any helper's scope access.
+#[test]
+fn scope_completion_latch_is_sound() {
+    loom::model(|| {
+        let st = Arc::new(ScopeModel::new(3));
+        let helper = {
+            let st = Arc::clone(&st);
+            thread::spawn(move || st.drain(false))
+        };
+        assert!(st.finish().is_none());
+        let helper_ran = helper.join().unwrap();
+        assert_eq!(st.done.load(Ordering::Relaxed), 3);
+        assert!(helper_ran <= 3);
+    });
+}
+
+/// A helper dequeued after the region completed claims an index >=
+/// tasks and exits without touching the scope: with one task and two
+/// helpers, at most one of them can ever read the cell, in every
+/// interleaving — including those where the caller has already
+/// reclaimed the frame before the late helper runs at all.
+#[test]
+fn stale_helper_exits_without_touching_scope() {
+    loom::model(|| {
+        let st = Arc::new(ScopeModel::new(1));
+        let helpers: Vec<_> = (0..2)
+            .map(|_| {
+                let st = Arc::clone(&st);
+                thread::spawn(move || st.drain(false))
+            })
+            .collect();
+        st.finish();
+        let ran: usize = helpers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(ran <= 1, "a stale helper re-ran a claimed task");
+        assert_eq!(st.done.load(Ordering::Relaxed), 1);
+    });
+}
+
+/// A panicking task still counts toward the latch (no hang), the first
+/// payload is latched, and the caller observes it only after the drain
+/// completes — the latch-and-rethrow path of `scope_run`.
+#[test]
+fn task_panic_is_latched_and_surfaced() {
+    loom::model(|| {
+        let st = Arc::new(ScopeModel::new(2));
+        let helper = {
+            let st = Arc::clone(&st);
+            thread::spawn(move || st.drain(true))
+        };
+        let payload = st.finish_poisoned();
+        helper.join().unwrap();
+        assert_eq!(st.done.load(Ordering::Relaxed), 2);
+        assert_eq!(payload, Some("task panicked"));
+    });
+}
+
+impl ScopeModel {
+    /// Caller variant whose own tasks also poison — so the payload is
+    /// latched no matter which participant claims which task.
+    fn finish_poisoned(&self) -> Option<&'static str> {
+        self.drain(true);
+        let mut fin = self.finished.lock().unwrap();
+        while !*fin {
+            fin = self.cv.wait(fin).unwrap();
+        }
+        drop(fin);
+        self.cell.with_mut(|p| unsafe { *p = 0 });
+        self.panic.lock().unwrap().take()
+    }
+}

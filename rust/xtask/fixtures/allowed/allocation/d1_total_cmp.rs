@@ -1,0 +1,9 @@
+//! D1 counterpart: the sanctioned float ordering — must pass.
+
+pub fn sort_loads(xs: &mut Vec<f64>) {
+    xs.sort_by(f64::total_cmp);
+}
+
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    (0..xs.len()).min_by(|&a, &b| xs[a].total_cmp(&xs[b]))
+}

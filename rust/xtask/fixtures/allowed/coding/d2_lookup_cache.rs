@@ -1,0 +1,15 @@
+//! D2 allowlisted case: a HashMap used strictly as a point-lookup cache
+//! (never iterated) — passes only because fixtures/allow.toml carries a
+//! justified entry for this file.
+
+use std::collections::HashMap;
+
+pub struct LookupCache {
+    map: HashMap<u64, Vec<f64>>,
+}
+
+impl LookupCache {
+    pub fn get(&self, key: u64) -> Option<&Vec<f64>> {
+        self.map.get(&key)
+    }
+}

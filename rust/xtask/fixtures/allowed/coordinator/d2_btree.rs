@@ -1,0 +1,12 @@
+//! D2 counterpart: ordered containers in an order-sensitive tree — must
+//! pass without any allowlist entry.
+
+use std::collections::BTreeMap;
+
+pub struct Registry {
+    pub workers: BTreeMap<String, f64>,
+}
+
+pub fn total(r: &Registry) -> f64 {
+    r.workers.values().sum()
+}

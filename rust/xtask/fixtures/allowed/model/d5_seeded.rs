@@ -1,0 +1,15 @@
+//! D5 counterpart: randomness flows from the seed-derivation helpers —
+//! must pass. (`Rng::new` / `split` construction is fine anywhere; only
+//! raw struct construction and ambient entropy are banned.)
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed)
+    }
+}
+
+pub fn stream(seed: u64, stream_id: u64) -> Rng {
+    Rng::new(seed ^ stream_id.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}

@@ -1,0 +1,19 @@
+//! S2 test exemption: unwraps inside #[cfg(test)] items never trip —
+//! must pass with no allowlist entry at all.
+
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwraps_are_fine_here() {
+        let v: Option<u64> = Some(double(2));
+        assert_eq!(v.unwrap(), 4);
+        let parsed: u64 = "7".parse().expect("literal parses");
+        assert_eq!(parsed, 7);
+    }
+}

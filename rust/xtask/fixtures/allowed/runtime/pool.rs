@@ -1,0 +1,12 @@
+//! S1/D3 counterpart: the one module allowed to own threads and unsafe
+//! code, with every unsafe block annotated — must pass.
+
+pub fn spawn_helper() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}
+
+pub fn read_raw(p: *const u64) -> u64 {
+    // SAFETY: callers pass a pointer derived from a live &u64; the
+    // pointee outlives this call by construction.
+    unsafe { *p }
+}

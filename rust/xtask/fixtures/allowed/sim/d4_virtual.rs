@@ -1,0 +1,13 @@
+//! D4 counterpart: the simulator advances its own virtual clock — must
+//! pass.
+
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        self.now += dt;
+        self.now
+    }
+}

@@ -1,0 +1,10 @@
+//! S2 allowlisted case: an expect whose invariant is established two
+//! lines above — passes only because fixtures/allow.toml carries a
+//! justified entry for this file.
+
+pub fn head(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    *xs.first().expect("non-empty checked above")
+}

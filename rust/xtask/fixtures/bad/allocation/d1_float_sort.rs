@@ -1,0 +1,5 @@
+//! D1 fixture: float sort via partial_cmp — must trip.
+
+pub fn sort_loads(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}

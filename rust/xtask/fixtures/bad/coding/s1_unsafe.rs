@@ -1,0 +1,7 @@
+//! S1 fixture: unsafe outside runtime/pool.rs — must trip even with an
+//! adjacent SAFETY note, because location is the first half of the rule.
+
+pub fn first_byte(xs: &[u8]) -> u8 {
+    // SAFETY: caller guarantees xs is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,11 @@
+//! D2 fixture: hash-map state in an order-sensitive tree — must trip.
+
+use std::collections::HashMap;
+
+pub struct Registry {
+    pub workers: HashMap<String, f64>,
+}
+
+pub fn total(r: &Registry) -> f64 {
+    r.workers.values().sum()
+}

@@ -1,0 +1,8 @@
+//! D5 fixture: ambient-entropy randomness in model code — must trip.
+
+use std::collections::hash_map::RandomState;
+use std::hash::BuildHasher;
+
+pub fn ambient_seed() -> u64 {
+    RandomState::new().hash_one(0u64)
+}

@@ -1,0 +1,7 @@
+//! S1 fixture: the pool module itself with an unannotated unsafe block —
+//! must trip. In-pool unsafe is allowed only when the lines just above it
+//! document the invariant the block relies on; this one says nothing.
+
+pub fn read_raw(p: *const u64) -> u64 {
+    unsafe { *p }
+}

@@ -1,0 +1,8 @@
+//! D4 fixture: wall-clock read inside the simulator — must trip.
+
+use std::time::Instant;
+
+pub fn stamp_event() -> std::time::Duration {
+    let t0 = Instant::now();
+    t0.elapsed()
+}

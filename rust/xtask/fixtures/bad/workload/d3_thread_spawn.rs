@@ -1,0 +1,9 @@
+//! D3 fixture: ad-hoc thread creation outside runtime/pool.rs — must trip.
+
+pub fn fan_out(n: usize) {
+    let handles: Vec<_> =
+        (0..n).map(|i| std::thread::spawn(move || i * 2)).collect();
+    for h in handles {
+        let _ = h.join();
+    }
+}

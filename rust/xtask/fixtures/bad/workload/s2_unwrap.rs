@@ -1,0 +1,9 @@
+//! S2 fixture: unwrap and panic in non-test library code — must trip.
+
+pub fn head(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+pub fn reject(msg: &str) -> ! {
+    panic!("rejected: {msg}");
+}

@@ -1,0 +1,295 @@
+//! The lint allowlist: `xtask/lint_allow.toml`.
+//!
+//! Format — an array of `[[allow]]` tables, each with:
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "S2"                    # required: D1..D5, S1, S2
+//! path = "runtime/pool.rs"       # required: repo-relative or suffix
+//! contains = "expect"            # optional: snippet substring filter
+//! justification = "lock poison is unrecoverable; aborting is correct"
+//! ```
+//!
+//! `justification` is mandatory and must be a real sentence (≥ 15
+//! chars) — an allowlist entry is a reviewed decision, not an escape
+//! hatch. Parsed with a hand-rolled TOML subset (same no-dependency
+//! constraint as the lexer); unknown keys are an error so typos like
+//! `justfication` cannot silently disarm the requirement.
+
+use crate::rules::Violation;
+
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub contains: Option<String>,
+    pub justification: String,
+    /// Source line in the TOML file (for diagnostics).
+    pub toml_line: usize,
+}
+
+impl AllowEntry {
+    /// Does this entry suppress `v`? Path matches exactly or as a
+    /// `/`-separated suffix, so entries stay stable if the lint root
+    /// ever gains a prefix.
+    pub fn matches(&self, v: &Violation) -> bool {
+        if self.rule != v.rule {
+            return false;
+        }
+        let path_ok = v.path == self.path
+            || v.path.ends_with(&format!("/{}", self.path));
+        if !path_ok {
+            return false;
+        }
+        match &self.contains {
+            Some(sub) => v.snippet.contains(sub.as_str()),
+            None => true,
+        }
+    }
+}
+
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Self {
+        Allowlist { entries: Vec::new() }
+    }
+
+    /// Load from a file path; a missing file is an empty allowlist
+    /// (the fixtures lint without one), a malformed file is an error.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text)
+                .map_err(|e| format!("{}: {e}", path.display())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(Self::empty())
+            }
+            Err(e) => Err(format!("{}: {e}", path.display())),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries: Vec<AllowEntry> = Vec::new();
+        let mut current: Option<PartialEntry> = None;
+
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" {
+                if let Some(p) = current.take() {
+                    entries.push(p.finish()?);
+                }
+                current = Some(PartialEntry::new(lineno));
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(format!(
+                    "line {lineno}: unexpected table `{line}` — only \
+                     [[allow]] entries are supported"
+                ));
+            }
+            let Some((key, value)) = parse_kv(&line) else {
+                return Err(format!(
+                    "line {lineno}: expected `key = \"value\"`, got `{line}`"
+                ));
+            };
+            let Some(entry) = current.as_mut() else {
+                return Err(format!(
+                    "line {lineno}: `{key}` outside an [[allow]] entry"
+                ));
+            };
+            match key.as_str() {
+                "rule" => entry.rule = Some(value),
+                "path" => entry.path = Some(value),
+                "contains" => entry.contains = Some(value),
+                "justification" => entry.justification = Some(value),
+                other => {
+                    return Err(format!(
+                        "line {lineno}: unknown key `{other}` (allowed: \
+                         rule, path, contains, justification)"
+                    ));
+                }
+            }
+        }
+        if let Some(p) = current.take() {
+            entries.push(p.finish()?);
+        }
+        Ok(Allowlist { entries })
+    }
+}
+
+struct PartialEntry {
+    toml_line: usize,
+    rule: Option<String>,
+    path: Option<String>,
+    contains: Option<String>,
+    justification: Option<String>,
+}
+
+const RULES: [&str; 7] = ["D1", "D2", "D3", "D4", "D5", "S1", "S2"];
+
+impl PartialEntry {
+    fn new(toml_line: usize) -> Self {
+        PartialEntry {
+            toml_line,
+            rule: None,
+            path: None,
+            contains: None,
+            justification: None,
+        }
+    }
+
+    fn finish(self) -> Result<AllowEntry, String> {
+        let at = format!("[[allow]] at line {}", self.toml_line);
+        let rule = self.rule.ok_or(format!("{at}: missing `rule`"))?;
+        if !RULES.contains(&rule.as_str()) {
+            return Err(format!(
+                "{at}: unknown rule `{rule}` (expected one of {RULES:?})"
+            ));
+        }
+        let path = self.path.ok_or(format!("{at}: missing `path`"))?;
+        let justification = self
+            .justification
+            .ok_or(format!("{at}: missing `justification`"))?;
+        if justification.trim().len() < 15 {
+            return Err(format!(
+                "{at}: justification `{justification}` is too short — \
+                 state *why* this site cannot violate the invariant"
+            ));
+        }
+        Ok(AllowEntry {
+            rule,
+            path,
+            contains: self.contains,
+            justification,
+            toml_line: self.toml_line,
+        })
+    }
+}
+
+/// Drop a `#` comment, respecting quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+/// Parse `key = "value"`. Only string values are supported.
+fn parse_kv(line: &str) -> Option<(String, String)> {
+    let (key, rest) = line.split_once('=')?;
+    let key = key.trim();
+    if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    {
+        return None;
+    }
+    let rest = rest.trim();
+    let inner = rest.strip_prefix('"')?.strip_suffix('"')?;
+    let mut value = String::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next()? {
+                'n' => value.push('\n'),
+                't' => value.push('\t'),
+                '"' => value.push('"'),
+                '\\' => value.push('\\'),
+                other => {
+                    value.push('\\');
+                    value.push(other);
+                }
+            }
+        } else if c == '"' {
+            return None; // unescaped quote mid-value: malformed
+        } else {
+            value.push(c);
+        }
+    }
+    Some((key.to_string(), value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violation(rule: &'static str, path: &str, snippet: &str) -> Violation {
+        Violation {
+            rule,
+            path: path.to_string(),
+            line: 1,
+            snippet: snippet.to_string(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn parses_entries_and_matches() {
+        let toml = r#"
+# repo allowlist
+[[allow]]
+rule = "S2"
+path = "runtime/pool.rs"
+contains = "expect"
+justification = "lock poison means a worker panicked; aborting is correct"
+"#;
+        let allow = Allowlist::parse(toml).expect("parses");
+        assert_eq!(allow.entries.len(), 1);
+        let e = &allow.entries[0];
+        assert!(e.matches(&violation("S2", "runtime/pool.rs", ".expect(")));
+        assert!(e.matches(&violation("S2", "src/runtime/pool.rs", ".expect(")));
+        assert!(!e.matches(&violation("S2", "runtime/pool.rs", ".unwrap(")));
+        assert!(!e.matches(&violation("S1", "runtime/pool.rs", ".expect(")));
+        assert!(!e.matches(&violation("S2", "my_runtime/pool.rs", ".expect(")));
+    }
+
+    #[test]
+    fn missing_justification_is_rejected() {
+        let toml = "[[allow]]\nrule = \"S2\"\npath = \"a.rs\"\n";
+        let err = Allowlist::parse(toml).unwrap_err();
+        assert!(err.contains("justification"), "{err}");
+    }
+
+    #[test]
+    fn short_justification_is_rejected() {
+        let toml = "[[allow]]\nrule = \"S2\"\npath = \"a.rs\"\n\
+                    justification = \"ok\"\n";
+        let err = Allowlist::parse(toml).unwrap_err();
+        assert!(err.contains("too short"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_is_rejected() {
+        let toml = "[[allow]]\nrule = \"S2\"\npath = \"a.rs\"\n\
+                    justfication = \"typo should not disarm the check\"\n";
+        let err = Allowlist::parse(toml).unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn unknown_rule_is_rejected() {
+        let toml = "[[allow]]\nrule = \"Z9\"\npath = \"a.rs\"\n\
+                    justification = \"this rule does not exist at all\"\n";
+        let err = Allowlist::parse(toml).unwrap_err();
+        assert!(err.contains("unknown rule"), "{err}");
+    }
+
+    #[test]
+    fn comments_respect_quotes() {
+        let toml = "[[allow]]\nrule = \"D2\"\npath = \"a.rs\"\n\
+                    justification = \"the # here is not a comment marker\"\n";
+        let allow = Allowlist::parse(toml).expect("parses");
+        assert!(allow.entries[0].justification.contains('#'));
+    }
+}

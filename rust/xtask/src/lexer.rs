@@ -1,0 +1,503 @@
+//! Minimal Rust lexer for the invariant rule engine.
+//!
+//! Emits identifier and punctuation tokens with 1-based line numbers and
+//! records which lines carry a safety comment (`// SAFETY:` or a
+//! `/// # Safety` doc section). Comments, strings (including raw and
+//! byte strings), char literals, lifetimes, and numeric literals are
+//! consumed and dropped: the rules only pattern-match identifiers and
+//! structure, so a token the rules cannot name must not be able to hide
+//! one they can (a `partial_cmp` inside a string or comment is not a
+//! finding; one split across lines by rustfmt is).
+
+/// One significant token.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    pub kind: TokenKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokenKind {
+    Ident(String),
+    Punct(char),
+}
+
+impl Token {
+    /// The identifier text, if this token is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokenKind::Ident(s) => Some(s.as_str()),
+            TokenKind::Punct(_) => None,
+        }
+    }
+
+    /// True when this token is exactly the punctuation `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct(c)
+    }
+}
+
+/// Lexer output: the token stream plus comment metadata.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    /// Lines (1-based) on which a comment mentioning a safety contract
+    /// starts or continues (used by rule S1).
+    pub safety_lines: Vec<usize>,
+}
+
+fn is_safety_comment(text: &str) -> bool {
+    text.contains("SAFETY") || text.contains("# Safety")
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens. Never fails: unterminated constructs consume
+/// to end of input (the linter runs on code the compiler may not have
+/// seen yet; it must degrade, not abort).
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        tokens: Vec::new(),
+        safety_lines: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    tokens: Vec<Token>,
+    safety_lines: Vec<usize>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) {
+        if self.peek(0) == Some('\n') {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.bump();
+                self.string_body();
+            } else if c == '\'' {
+                self.quote();
+            } else if (c == 'r' || c == 'b') && self.string_prefix() {
+                // consumed by string_prefix
+            } else if is_ident_start(c) {
+                self.ident();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else {
+                self.tokens.push(Token {
+                    line: self.line,
+                    kind: TokenKind::Punct(c),
+                });
+                self.bump();
+            }
+        }
+        Lexed { tokens: self.tokens, safety_lines: self.safety_lines }
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        let line = self.line;
+        while self.peek(0).is_some_and(|c| c != '\n') {
+            self.bump();
+        }
+        let text: String = self.chars[start..self.i].iter().collect();
+        if is_safety_comment(&text) {
+            self.safety_lines.push(line);
+        }
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.i;
+        let start_line = self.line;
+        let mut depth = 0usize;
+        while self.peek(0).is_some() {
+            if self.peek(0) == Some('/') && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.peek(0) == Some('*') && self.peek(1) == Some('/') {
+                self.bump();
+                self.bump();
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                self.bump();
+            }
+        }
+        let text: String =
+            self.chars[start..self.i.min(self.chars.len())].iter().collect();
+        if is_safety_comment(&text) {
+            for l in start_line..=self.line {
+                self.safety_lines.push(l);
+            }
+        }
+    }
+
+    /// Body of a `"…"` string; the opening quote is already consumed.
+    fn string_body(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump();
+                self.bump(); // escaped char (line counted by bump)
+            } else if c == '"' {
+                self.bump();
+                return;
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// Raw string with `hashes` number of `#`s; positioned just past the
+    /// opening quote.
+    fn raw_string_body(&mut self, hashes: usize) {
+        while self.peek(0).is_some() {
+            if self.peek(0) == Some('"') {
+                let closed =
+                    (1..=hashes).all(|k| self.peek(k) == Some('#'));
+                self.bump();
+                if closed {
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    return;
+                }
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// Try to consume an `r"…"`, `r#"…"#`, `b"…"`, `br"…"`, or `b'…'`
+    /// prefix starting at the current `r`/`b`. Returns false (consuming
+    /// nothing) when this is an ordinary identifier or raw identifier.
+    fn string_prefix(&mut self) -> bool {
+        let c = self.peek(0).unwrap_or(' ');
+        let mut j = 1usize;
+        let mut raw = c == 'r';
+        if c == 'b' && self.peek(1) == Some('r') {
+            raw = true;
+            j = 2;
+        }
+        if c == 'b' && self.peek(1) == Some('\'') {
+            // byte char literal b'x'
+            self.bump(); // b
+            self.quote();
+            return true;
+        }
+        if raw {
+            let mut hashes = 0usize;
+            while self.peek(j) == Some('#') {
+                hashes += 1;
+                j += 1;
+            }
+            if self.peek(j) == Some('"') {
+                for _ in 0..=j {
+                    self.bump(); // prefix + opening quote
+                }
+                self.raw_string_body(hashes);
+                return true;
+            }
+            if c == 'r' && hashes == 1 && self.peek(j).is_some_and(is_ident_start)
+            {
+                // raw identifier r#ident: drop the prefix, lex the name
+                self.bump();
+                self.bump();
+                self.ident();
+                return true;
+            }
+            return false;
+        }
+        if self.peek(j) == Some('"') {
+            for _ in 0..=j {
+                self.bump();
+            }
+            self.string_body();
+            return true;
+        }
+        false
+    }
+
+    /// A `'`: lifetime, loop label, or char literal.
+    fn quote(&mut self) {
+        match self.peek(1) {
+            Some('\\') => {
+                // '\x' / '\u{..}' / '\'' — consume quote, backslash and
+                // the escaped char, then scan to the closing quote.
+                self.bump();
+                self.bump();
+                self.bump();
+                while self.peek(0).is_some_and(|c| c != '\'') {
+                    self.bump();
+                }
+                self.bump();
+            }
+            Some(c2) => {
+                if self.peek(2) == Some('\'') {
+                    // 'x'
+                    self.bump();
+                    self.bump();
+                    self.bump();
+                } else if is_ident_continue(c2) {
+                    // lifetime or loop label: 'a, 'static, 'outer
+                    self.bump();
+                    while self.peek(0).is_some_and(is_ident_continue) {
+                        self.bump();
+                    }
+                } else {
+                    // odd char literal (e.g. multi-byte): scan to quote
+                    self.bump();
+                    self.bump();
+                    while self.peek(0).is_some_and(|c| c != '\'') {
+                        self.bump();
+                    }
+                    self.bump();
+                }
+            }
+            None => self.bump(),
+        }
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        let text: String = self.chars[start..self.i].iter().collect();
+        self.tokens.push(Token { line, kind: TokenKind::Ident(text) });
+    }
+
+    /// Numeric literal: digits/alnum run, one fractional part. Exponent
+    /// signs (`1e-3`) fall out as separate punctuation — harmless, no
+    /// rule matches numbers. The `0..n` range form is preserved because
+    /// `.` is only folded in when followed by a digit.
+    fn number(&mut self) {
+        while self.peek(0).is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            self.bump();
+        }
+        if self.peek(0) == Some('.')
+            && self.peek(1).is_some_and(|c| c.is_ascii_digit())
+        {
+            self.bump();
+            while self
+                .peek(0)
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+            {
+                self.bump();
+            }
+        }
+    }
+}
+
+/// Mark which tokens belong to test-only items: any item annotated with
+/// an attribute containing the bare identifier `test` (`#[test]`,
+/// `#[cfg(test)]`, `#[cfg(all(test, …))]`) and every token through the
+/// end of that item (its brace-matched body or terminating semicolon).
+/// Attributes containing `not` are conservatively treated as non-test —
+/// `#[cfg(not(test))]` code is production code.
+pub fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !tokens[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        // Inner attribute #![…]: structural, never a test marker.
+        if tokens.get(i + 1).is_some_and(|t| t.is_punct('!')) {
+            if let Some(close) = match_delim(tokens, i + 2, '[', ']') {
+                i = close + 1;
+                continue;
+            }
+        }
+        if !tokens.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let Some(close) = match_delim(tokens, i + 1, '[', ']') else {
+            break;
+        };
+        let attr = &tokens[i + 2..close];
+        let has = |name: &str| attr.iter().any(|t| t.ident() == Some(name));
+        if !has("test") || has("not") {
+            i = close + 1;
+            continue;
+        }
+        // Test item: consume any further attributes, then skip to the
+        // end of the item (first top-level `{`…`}` or `;`).
+        let mut k = close + 1;
+        while tokens.get(k).is_some_and(|t| t.is_punct('#'))
+            && tokens.get(k + 1).is_some_and(|t| t.is_punct('['))
+        {
+            match match_delim(tokens, k + 1, '[', ']') {
+                Some(c) => k = c + 1,
+                None => break,
+            }
+        }
+        let mut paren = 0i64;
+        let mut bracket = 0i64;
+        let mut end = tokens.len() - 1;
+        while k < tokens.len() {
+            let t = &tokens[k];
+            if t.is_punct('(') {
+                paren += 1;
+            } else if t.is_punct(')') {
+                paren -= 1;
+            } else if t.is_punct('[') {
+                bracket += 1;
+            } else if t.is_punct(']') {
+                bracket -= 1;
+            } else if t.is_punct('{') && paren == 0 && bracket == 0 {
+                end = match_delim(tokens, k, '{', '}')
+                    .unwrap_or(tokens.len() - 1);
+                break;
+            } else if t.is_punct(';') && paren == 0 && bracket == 0 {
+                end = k;
+                break;
+            }
+            k += 1;
+        }
+        for m in i..=end {
+            mask[m] = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Index of the delimiter matching `open` at `start` (which must hold
+/// the opening delimiter), or None when unbalanced.
+fn match_delim(
+    tokens: &[Token],
+    start: usize,
+    open: char,
+    close: char,
+) -> Option<usize> {
+    if !tokens.get(start).is_some_and(|t| t.is_punct(open)) {
+        return None;
+    }
+    let mut depth = 0i64;
+    for (j, t) in tokens.iter().enumerate().skip(start) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_identifiers() {
+        let src = r##"
+            // partial_cmp in a comment
+            /* nested /* partial_cmp */ still comment */
+            let s = "partial_cmp";
+            let r = r#"partial_cmp "quoted" inside"#;
+            let real = a.total_cmp(&b);
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "partial_cmp"));
+        assert!(ids.iter().any(|s| s == "total_cmp"));
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; \
+                   let q = '\\''; let n = '\\n'; loop { break; } c }";
+        let ids = idents(src);
+        assert!(ids.contains(&"loop".to_string()));
+        // The quote handling must not swallow the `break` keyword.
+        assert!(ids.contains(&"break".to_string()));
+    }
+
+    #[test]
+    fn safety_comment_lines_recorded() {
+        let src = "fn f() {\n    // SAFETY: fine\n    g();\n}\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.safety_lines, vec![2]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let a = \"two\nlines\";\nlet marker = 1;\n";
+        let lexed = lex(src);
+        let marker = lexed
+            .tokens
+            .iter()
+            .find(|t| t.ident() == Some("marker"))
+            .expect("marker token");
+        assert_eq!(marker.line, 3);
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { y.unwrap(); }\n}\n";
+        let lexed = lex(src);
+        let mask = test_mask(&lexed.tokens);
+        let unwraps: Vec<bool> = lexed
+            .tokens
+            .iter()
+            .zip(&mask)
+            .filter(|(t, _)| t.ident() == Some("unwrap"))
+            .map(|(_, m)| *m)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_masked() {
+        let src = "#[cfg(not(test))]\nfn live() { x.unwrap(); }\n";
+        let lexed = lex(src);
+        let mask = test_mask(&lexed.tokens);
+        assert!(mask.iter().all(|m| !m));
+    }
+}

@@ -1,0 +1,95 @@
+//! Repo invariant linter (`cargo xtask lint`).
+//!
+//! Walks a tree of `.rs` files, runs the rule engine from
+//! [`rules`] over each, and partitions findings by the allowlist. The
+//! binary in `main.rs` is a thin CLI over [`lint_tree`]; the fixture
+//! integration tests call it directly.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use allowlist::Allowlist;
+use rules::Violation;
+
+/// Result of linting one tree.
+pub struct LintOutcome {
+    /// Findings not covered by any allowlist entry — these fail the run.
+    pub violations: Vec<Violation>,
+    /// Findings covered by an allowlist entry, paired with the entry's
+    /// justification (reported, never fatal).
+    pub suppressed: Vec<(Violation, String)>,
+    /// Allowlist entries that matched nothing, as `(toml_line, rule,
+    /// path)` — stale entries are a sign the code moved on and the
+    /// exemption should be retired.
+    pub unused_entries: Vec<(usize, String, String)>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted traversal
+/// so output order is deterministic) against `allow`.
+pub fn lint_tree(root: &Path, allow: &Allowlist) -> Result<LintOutcome, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .map_err(|e| format!("walking {}: {e}", root.display()))?;
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut suppressed = Vec::new();
+    let mut hits = vec![0usize; allow.entries.len()];
+
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        for v in rules::check_file(&rel, &src) {
+            match allow
+                .entries
+                .iter()
+                .enumerate()
+                .find(|(_, e)| e.matches(&v))
+            {
+                Some((idx, entry)) => {
+                    hits[idx] += 1;
+                    suppressed.push((v, entry.justification.clone()));
+                }
+                None => violations.push(v),
+            }
+        }
+    }
+
+    let unused_entries = allow
+        .entries
+        .iter()
+        .zip(&hits)
+        .filter(|(_, &h)| h == 0)
+        .map(|(e, _)| (e.toml_line, e.rule.clone(), e.path.clone()))
+        .collect();
+
+    Ok(LintOutcome {
+        violations,
+        suppressed,
+        unused_entries,
+        files: files.len(),
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

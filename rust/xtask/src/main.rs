@@ -1,0 +1,97 @@
+//! `cargo xtask lint` — enforce the repo's determinism/safety
+//! invariants (rules D1–D5, S1–S2; see DESIGN.md "Static analysis &
+//! enforced invariants").
+//!
+//! Usage:
+//!   cargo xtask lint [--root DIR] [--allowlist FILE]
+//!
+//! Defaults lint `rust/src` against `rust/xtask/lint_allow.toml`.
+//! Exit code 1 on any non-allowlisted violation or a malformed
+//! allowlist; 0 otherwise (unused allowlist entries warn but do not
+//! fail — the fixture suite asserts the repo run has none).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::allowlist::Allowlist;
+use xtask::lint_tree;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else {
+        eprintln!("usage: cargo xtask lint [--root DIR] [--allowlist FILE]");
+        return ExitCode::FAILURE;
+    };
+    if cmd != "lint" {
+        eprintln!("unknown xtask command `{cmd}` (supported: lint)");
+        return ExitCode::FAILURE;
+    }
+
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut root = manifest.join("../src");
+    let mut allow_path = manifest.join("lint_allow.toml");
+    while let Some(flag) = args.next() {
+        match flag.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("--root requires a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--allowlist" => match args.next() {
+                Some(v) => allow_path = PathBuf::from(v),
+                None => {
+                    eprintln!("--allowlist requires a file argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("unknown flag `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let allow = match Allowlist::load(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: malformed allowlist: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let outcome = match lint_tree(&root, &allow) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    for v in &outcome.violations {
+        eprintln!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.message);
+        eprintln!("    near: {}", v.snippet);
+    }
+    for (line, rule, path) in &outcome.unused_entries {
+        eprintln!(
+            "warning: unused allowlist entry at lint_allow.toml:{line} \
+             ({rule} {path}) — retire it"
+        );
+    }
+
+    eprintln!(
+        "xtask lint: {} files, {} violation(s), {} suppressed by \
+         allowlist, {} unused allowlist entr(y/ies)",
+        outcome.files,
+        outcome.violations.len(),
+        outcome.suppressed.len(),
+        outcome.unused_entries.len(),
+    );
+
+    if outcome.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,344 @@
+//! The invariant rules (D1–D5, S1–S2).
+//!
+//! Each rule is a token-pattern over the lexed stream of one file,
+//! scoped by the file's repo-relative path. Rules that guard *runtime*
+//! determinism (D2, S2) exempt test code — tests may unwrap and may
+//! iterate hash maps because their output never feeds decoded bytes;
+//! rules that guard *source* hygiene (D1, D3, D4, D5, S1) apply
+//! everywhere, tests included, so a pattern can't incubate in a test
+//! and get copy-pasted into a hot path.
+
+use crate::lexer::{lex, test_mask, Token};
+
+/// One rule finding.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Rule identifier: "D1".."D5", "S1", "S2".
+    pub rule: &'static str,
+    /// Repo-relative path of the offending file.
+    pub path: String,
+    /// 1-based line of the triggering token.
+    pub line: usize,
+    /// Short token-level snippet around the trigger (used for
+    /// allowlist `contains` matching and for display).
+    pub snippet: String,
+    /// Human explanation of what the rule protects.
+    pub message: String,
+}
+
+/// Directories whose iteration order feeds decoded bytes or scheduling
+/// decisions (rule D2).
+const D2_DIRS: [&str; 4] = ["coordinator/", "workload/", "sim/", "coding/"];
+
+/// The single module allowed to own threads and unsafe code.
+const POOL: &str = "runtime/pool.rs";
+
+/// Run every rule over one file. `relpath` uses `/` separators and is
+/// relative to the lint root (e.g. `coordinator/master.rs`).
+pub fn check_file(relpath: &str, src: &str) -> Vec<Violation> {
+    let lexed = lex(src);
+    let tokens = &lexed.tokens;
+    let mask = test_mask(tokens);
+    let mut out = Vec::new();
+
+    let snippet = |i: usize| -> String {
+        let lo = i.saturating_sub(4);
+        let hi = (i + 5).min(tokens.len());
+        let mut s = String::new();
+        for t in &tokens[lo..hi] {
+            match &t.kind {
+                crate::lexer::TokenKind::Ident(id) => {
+                    if !s.is_empty() {
+                        s.push(' ');
+                    }
+                    s.push_str(id);
+                }
+                crate::lexer::TokenKind::Punct(c) => s.push(*c),
+            }
+        }
+        s
+    };
+
+    let in_d2_dir = D2_DIRS.iter().any(|d| relpath.starts_with(d));
+    let is_pool = relpath == POOL || relpath.ends_with(&format!("/{POOL}"));
+    let in_sim_or_model =
+        relpath.starts_with("sim/") || relpath.starts_with("model/");
+    let in_math = relpath.starts_with("math/");
+
+    for (i, tok) in tokens.iter().enumerate() {
+        let Some(id) = tok.ident() else { continue };
+        let next_is =
+            |k: usize, c: char| tokens.get(i + k).is_some_and(|t| t.is_punct(c));
+        let next_ident = |k: usize| tokens.get(i + k).and_then(|t| t.ident());
+
+        // D1 — float comparator hygiene: any partial_cmp is banned in
+        // favor of total_cmp. The method only exists to be combined
+        // with unwrap/unwrap_or in comparator closures, and every such
+        // combination either panics on NaN or silently reorders.
+        if id == "partial_cmp" {
+            out.push(Violation {
+                rule: "D1",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: "float comparison via partial_cmp — use \
+                          f64::total_cmp (NaN-total, panic-free, and the \
+                          ordering the bit-identity suites pin)"
+                    .to_string(),
+            });
+        }
+
+        // D2 — no hash containers in order-sensitive trees. Iteration
+        // order of HashMap/HashSet is seeded per-process; any use in
+        // coordinator/workload/sim/coding risks order-dependent bytes.
+        if in_d2_dir
+            && !mask[i]
+            && (id == "HashMap" || id == "HashSet")
+        {
+            out.push(Violation {
+                rule: "D2",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: format!(
+                    "{id} in an order-sensitive tree — iteration order is \
+                     per-process random; use BTreeMap/BTreeSet or a sorted \
+                     Vec so decoded bytes and schedules stay deterministic"
+                ),
+            });
+        }
+
+        // D3 — thread creation only in runtime/pool.rs. Everything
+        // else borrows the persistent WorkPool; ad-hoc spawns reintroduce
+        // the per-call spawn cost PR 5 removed and escape the pool's
+        // deterministic reduction.
+        if !is_pool
+            && id == "thread"
+            && next_is(1, ':')
+            && next_is(2, ':')
+            && matches!(next_ident(3), Some("spawn" | "scope" | "Builder"))
+        {
+            out.push(Violation {
+                rule: "D3",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: "thread creation outside runtime/pool.rs — \
+                          route the work through the shared WorkPool"
+                    .to_string(),
+            });
+        }
+
+        // D4 — virtual time only in sim/ and model/. A wall-clock read
+        // in the simulator or the latency model makes runs
+        // irreproducible; `wall_now` (the sanctioned runtime wrapper)
+        // is equally banned here.
+        if in_sim_or_model
+            && matches!(id, "Instant" | "SystemTime" | "wall_now")
+        {
+            out.push(Violation {
+                rule: "D4",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: format!(
+                    "{id} in sim/model code — these trees run on virtual \
+                     time; wall-clock reads make runs irreproducible"
+                ),
+            });
+        }
+
+        // D5 — RNG construction only via math/rng seed derivation.
+        // Ambient-entropy constructors break replay; direct struct
+        // construction of Rng outside math/ bypasses the stream-seed
+        // discipline.
+        if matches!(
+            id,
+            "RandomState" | "DefaultHasher" | "thread_rng" | "from_entropy"
+        ) {
+            out.push(Violation {
+                rule: "D5",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: format!(
+                    "{id} draws ambient entropy — all randomness must flow \
+                     from math/rng seed-derivation helpers"
+                ),
+            });
+        }
+        if !in_math
+            && id == "Rng"
+            && next_is(1, '{')
+            && next_ident(2) == Some("s")
+            && next_is(3, ':')
+        {
+            out.push(Violation {
+                rule: "D5",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: "direct Rng struct construction outside math/ — \
+                          use Rng::new / Rng::split so stream seeds stay \
+                          derived, not invented"
+                    .to_string(),
+            });
+        }
+
+        // S1 — unsafe confined to runtime/pool.rs, and there each
+        // occurrence must sit within a few lines of a SAFETY comment
+        // stating the invariant it relies on.
+        if id == "unsafe" {
+            if !is_pool {
+                out.push(Violation {
+                    rule: "S1",
+                    path: relpath.to_string(),
+                    line: tok.line,
+                    snippet: snippet(i),
+                    message: "unsafe outside runtime/pool.rs — the pool is \
+                              the only module allowed to carry unsafe code"
+                        .to_string(),
+                });
+            } else {
+                let annotated = lexed.safety_lines.iter().any(|&l| {
+                    l <= tok.line && tok.line - l <= 8
+                });
+                if !annotated {
+                    out.push(Violation {
+                        rule: "S1",
+                        path: relpath.to_string(),
+                        line: tok.line,
+                        snippet: snippet(i),
+                        message: "unsafe without a nearby SAFETY comment — \
+                                  state the invariant this block relies on \
+                                  within the 8 lines above it"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+
+        // S2 — no unwrap/expect/panic in non-test library code outside
+        // the allowlist. Every allowed site must carry a justification
+        // in lint_allow.toml.
+        if !mask[i] {
+            let is_call_unwrap = matches!(id, "unwrap" | "expect")
+                && i > 0
+                && tokens[i - 1].is_punct('.')
+                && next_is(1, '(');
+            let is_panic_macro = matches!(
+                id,
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            ) && next_is(1, '!');
+            if is_call_unwrap || is_panic_macro {
+                out.push(Violation {
+                    rule: "S2",
+                    path: relpath.to_string(),
+                    line: tok.line,
+                    snippet: snippet(i),
+                    message: format!(
+                        "{id} in non-test library code — return a Result, \
+                         or allowlist this site with a justification for \
+                         why it cannot fire"
+                    ),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(relpath: &str, src: &str) -> Vec<&'static str> {
+        let mut r: Vec<&'static str> =
+            check_file(relpath, src).into_iter().map(|v| v.rule).collect();
+        r.dedup();
+        r
+    }
+
+    #[test]
+    fn d1_fires_anywhere() {
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+        assert_eq!(rules_hit("math/stats.rs", src), vec!["D1"]);
+    }
+
+    #[test]
+    fn d2_scoped_to_order_sensitive_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_hit("coordinator/master.rs", src), vec!["D2"]);
+        assert!(rules_hit("figures/fig7.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_exempts_tests() {
+        let src = "#[cfg(test)]\nmod tests { use std::collections::HashMap; }";
+        assert!(rules_hit("coding/decoder.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_spots_spawn_scope_builder() {
+        for call in ["spawn", "scope", "Builder::new"] {
+            let src = format!("fn f() {{ std::thread::{call}(|| ()); }}");
+            assert_eq!(
+                rules_hit("coordinator/master.rs", &src),
+                vec!["D3"],
+                "{call}"
+            );
+        }
+        let src = "fn f() { std::thread::spawn(|| ()); }";
+        assert!(rules_hit("runtime/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d4_bans_wall_clock_in_sim_and_model() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_hit("sim/queue.rs", src), vec!["D4"]);
+        assert_eq!(rules_hit("model/latency.rs", src), vec!["D4"]);
+        assert!(rules_hit("coordinator/metrics.rs", src).is_empty());
+        let src2 = "fn f() { let t = wall_now(); }";
+        assert_eq!(rules_hit("sim/queue.rs", src2), vec!["D4"]);
+    }
+
+    #[test]
+    fn d5_bans_ambient_entropy_and_raw_construction() {
+        let src = "fn f() { let h = RandomState::new(); }";
+        assert_eq!(rules_hit("model/latency.rs", src), vec!["D5"]);
+        let src2 = "fn f(seed: u64) -> Rng { Rng { s: seed } }";
+        assert_eq!(rules_hit("workload/arrivals.rs", src2), vec!["D5"]);
+        // math/rng itself constructs the struct — that is the helper.
+        assert!(rules_hit("math/rng.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn s1_unsafe_needs_location_and_annotation() {
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_hit("coding/encoder.rs", src), vec!["S1"]);
+        assert_eq!(rules_hit("runtime/pool.rs", src), vec!["S1"]);
+        let annotated =
+            "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller passes a \
+             valid pointer\n    unsafe { *p }\n}";
+        assert!(rules_hit("runtime/pool.rs", annotated).is_empty());
+        assert_eq!(rules_hit("coding/encoder.rs", annotated), vec!["S1"]);
+    }
+
+    #[test]
+    fn s2_spots_unwrap_expect_and_panics_outside_tests() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        assert_eq!(rules_hit("workload/queue.rs", src), vec!["S2"]);
+        let src2 = "fn f() { panic!(\"boom\"); }";
+        assert_eq!(rules_hit("workload/queue.rs", src2), vec!["S2"]);
+        let test_src = "#[test]\nfn t() { Some(1).unwrap(); }";
+        assert!(rules_hit("workload/queue.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn s2_ignores_non_call_idents() {
+        // An fn named `expect_len` or a struct field `unwrap` must not trip.
+        let src = "fn expect_len() -> usize { 3 }\nstruct S { unwrap: u8 }";
+        assert!(rules_hit("workload/queue.rs", src).is_empty());
+    }
+}

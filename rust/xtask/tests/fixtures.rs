@@ -1,0 +1,110 @@
+//! Linter-on-the-linter: the fixture corpus pins the rule engine's
+//! behavior (each rule has a bad snippet that must trip and an allowed
+//! counterpart that must pass), and the repo tree itself must lint
+//! clean against the real allowlist with no stale entries.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use xtask::allowlist::Allowlist;
+use xtask::lint_tree;
+
+fn fixtures(sub: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(sub)
+}
+
+#[test]
+fn every_rule_trips_on_its_bad_fixture() {
+    let outcome = lint_tree(&fixtures("bad"), &Allowlist::empty())
+        .expect("bad corpus lints");
+
+    let mut by_file: BTreeMap<String, Vec<&str>> = BTreeMap::new();
+    for v in &outcome.violations {
+        let rules = by_file.entry(v.path.clone()).or_default();
+        if !rules.contains(&v.rule) {
+            rules.push(v.rule);
+        }
+    }
+
+    let expected: [(&str, &[&str]); 8] = [
+        ("allocation/d1_float_sort.rs", &["D1"]),
+        ("coordinator/d2_hash_iter.rs", &["D2"]),
+        ("workload/d3_thread_spawn.rs", &["D3"]),
+        ("sim/d4_wall_clock.rs", &["D4"]),
+        ("model/d5_adhoc_rng.rs", &["D5"]),
+        ("coding/s1_unsafe.rs", &["S1"]),
+        ("runtime/pool.rs", &["S1"]),
+        ("workload/s2_unwrap.rs", &["S2"]),
+    ];
+
+    for (path, rules) in expected {
+        assert_eq!(
+            by_file.get(path).map(Vec::as_slice),
+            Some(&rules[..]),
+            "rules tripped by {path}"
+        );
+    }
+    assert_eq!(
+        by_file.len(),
+        expected.len(),
+        "unexpected extra findings: {by_file:?}"
+    );
+    assert!(outcome.suppressed.is_empty());
+}
+
+#[test]
+fn allowed_fixtures_lint_clean() {
+    let allow =
+        Allowlist::load(&fixtures("allow.toml")).expect("fixture allowlist parses");
+    let outcome =
+        lint_tree(&fixtures("allowed"), &allow).expect("allowed corpus lints");
+
+    assert!(
+        outcome.violations.is_empty(),
+        "allowed corpus must be clean, got: {:?}",
+        outcome.violations
+    );
+    // Two HashMap mentions in the lookup-cache fixture plus one expect
+    // in the allowlisted unwrap fixture.
+    assert_eq!(outcome.suppressed.len(), 3, "suppressed findings");
+    assert!(
+        outcome.unused_entries.is_empty(),
+        "every fixture allowlist entry must be exercised: {:?}",
+        outcome.unused_entries
+    );
+}
+
+#[test]
+fn repo_tree_lints_clean_with_no_stale_allowlist_entries() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.join("../src");
+    let allow = Allowlist::load(&manifest.join("lint_allow.toml"))
+        .expect("repo allowlist parses");
+    let outcome = lint_tree(&root, &allow).expect("repo tree lints");
+
+    assert!(outcome.files > 50, "expected the full src tree, scanned {}", outcome.files);
+    assert!(
+        outcome.violations.is_empty(),
+        "rust/src must lint clean:\n{}",
+        outcome
+            .violations
+            .iter()
+            .map(|v| format!("{}:{}: [{}] near `{}`", v.path, v.line, v.rule, v.snippet))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        outcome.unused_entries.is_empty(),
+        "stale allowlist entries must be retired: {:?}",
+        outcome.unused_entries
+    );
+}
+
+#[test]
+fn missing_justification_is_rejected() {
+    let err = Allowlist::parse(
+        "[[allow]]\nrule = \"S2\"\npath = \"runtime/pool.rs\"\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("justification"), "{err}");
+}
