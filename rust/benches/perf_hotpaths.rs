@@ -16,10 +16,13 @@
 //!   now allocation-free and pool-backed in steady state);
 //! - sparse-vs-dense encode ablation: the CSR O(nnz·d) kernel behind the
 //!   `sparse-parity` code against the dense register-blocked kernel on
-//!   the same generator matrix, single-stream and pooled.
+//!   the same generator matrix, single-stream and pooled;
+//! - the rateless fountain: fresh-range `encode_rows` extension (the
+//!   streaming loop's mint pattern) and streamed serving on clean vs
+//!   10%-lossy links.
 //!
 //! Set `BENCH_JSON_DIR` (or run `make bench-json`) to capture `name →
-//! ns/op` into `BENCH_PR6.json`.
+//! ns/op` into the current PR's `BENCH_PR<N>.json`.
 
 use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
@@ -296,4 +299,64 @@ fn main() {
                 .unwrap(),
         );
     });
+
+    section("rateless fountain: extension encode and streamed serving");
+    // The fountain's extra cost vs a fixed-n code: per-range row
+    // derivation (seeded Gaussians, no cached generator prefix) and the
+    // streamed round loop. Packet-fate draws are the per-packet overhead
+    // the lossy path pays on every reply.
+    {
+        use hetcoded::coding::code;
+        let rl = code::resolve("rateless-rlc").unwrap();
+        let (n, k, d) = (384usize, 256usize, 64usize);
+        let ra = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let gen = rl.setup(n, k, 21).unwrap();
+        let encoder = Encoder::new(gen);
+        let pool = WorkPool::new(8);
+        let mut at = 0usize;
+        run("rateless encode_rows 384-row extension (k=256, d=64)", || {
+            // Fresh ranges forever: the monotone mint pattern of the
+            // streaming loop, never a re-encode.
+            let got = rl
+                .encode_rows(&encoder, &ra, at..at + n, &pool, 8)
+                .unwrap();
+            at += n;
+            black_box(got);
+        });
+        let rl_cfg = JobConfig {
+            time_scale: 0.001,
+            code: Some("rateless-rlc".into()),
+            verify_decode: false,
+            ..Default::default()
+        };
+        let mut rl_prepared =
+            PreparedJob::new(&live_spec, &live_alloc, &a, &rl_cfg).unwrap();
+        run_quick("serve batch streamed rateless (clean links)", || {
+            batch_seed += 1;
+            black_box(
+                rl_prepared
+                    .run_batch_streamed(
+                        &requests,
+                        Arc::new(NativeCompute),
+                        batch_seed,
+                        &[],
+                    )
+                    .unwrap(),
+            );
+        });
+        let loss = vec![0.1f64; live_spec.total_workers()];
+        run_quick("serve batch streamed rateless (10% packet loss)", || {
+            batch_seed += 1;
+            black_box(
+                rl_prepared
+                    .run_batch_streamed(
+                        &requests,
+                        Arc::new(NativeCompute),
+                        batch_seed,
+                        &loss,
+                    )
+                    .unwrap(),
+            );
+        });
+    }
 }

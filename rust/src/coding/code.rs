@@ -75,6 +75,25 @@ pub trait Code: Send + Sync + std::fmt::Debug {
         encoder.encode_capped(a, pool, max_streams)
     }
 
+    /// Encode only the coded rows in `range` — the extend-`n` surface the
+    /// rateless family added to the trait. The default delegates to
+    /// [`Encoder::encode_rows`], which derives out-of-prefix coefficient
+    /// rows on demand for the rateless family (split-invariant: many
+    /// range calls are byte-identical to one) and bounds finite families
+    /// to their fixed `[0, n)`. Row-granular work is accounted by
+    /// [`Encoder::rows_encoded`] / [`Encoder::re_encoded_rows`], never by
+    /// the full-call counter.
+    fn encode_rows(
+        &self,
+        encoder: &Encoder,
+        a: &Matrix,
+        range: std::ops::Range<usize>,
+        pool: &WorkPool,
+        max_streams: usize,
+    ) -> Result<Matrix> {
+        encoder.encode_rows(a, range, pool, max_streams)
+    }
+
     /// Recover every request column from the aggregated coded rows
     /// (`rows` are global coded-row indices; `columns[c]` holds request
     /// `c`'s inner products at those rows). The default delegates to
@@ -148,6 +167,9 @@ pub fn for_kind(kind: GeneratorKind) -> Box<dyn Code> {
         GeneratorKind::SystematicRandom => Box::new(MdsCode::random()),
         GeneratorKind::Vandermonde => Box::new(MdsCode::vandermonde()),
         GeneratorKind::SparseParity => Box::new(SparseParityCode),
+        GeneratorKind::RatelessRlc => {
+            Box::new(crate::coding::rateless::RatelessCode)
+        }
     }
 }
 
@@ -193,6 +215,12 @@ pub static REGISTRY: &[CodeEntry] = &[
         name: "sparse-parity",
         summary: "LDPC-style weight-8 sparse parity, O(nnz) encode (not MDS)",
         builder: || Box::new(SparseParityCode),
+    },
+    CodeEntry {
+        name: "rateless-rlc",
+        summary: "rateless random-linear fountain, infinite row stream \
+                  (stream until any-k)",
+        builder: || Box::new(crate::coding::rateless::RatelessCode),
     },
 ];
 
@@ -252,6 +280,7 @@ mod tests {
             (GeneratorKind::SystematicRandom, "mds-random"),
             (GeneratorKind::Vandermonde, "mds-vandermonde"),
             (GeneratorKind::SparseParity, "sparse-parity"),
+            (GeneratorKind::RatelessRlc, "rateless-rlc"),
         ] {
             let c = for_kind(kind);
             assert_eq!(c.name(), name);

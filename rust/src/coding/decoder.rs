@@ -23,7 +23,7 @@
 
 use crate::coding::bjorck_pereyra::VandermondeFactor;
 use crate::coding::linalg::Lu;
-use crate::coding::{Generator, Matrix};
+use crate::coding::{Generator, GeneratorKind, Matrix};
 use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -105,11 +105,25 @@ struct FactorCache {
     cap: usize,
     stamp: u64,
     map: BTreeMap<Vec<usize>, CacheEntry>,
-    /// Holding slot when caching is disabled (`cap == 0`).
+    /// Holding slot when caching is disabled (`cap == 0`) or when the
+    /// thrash guard bypasses insertion.
     uncached: Option<Factor>,
     hits: u64,
     misses: u64,
+    /// Consecutive misses since the last hit — the thrash signal.
+    miss_streak: u64,
+    /// Misses served without inserting (thrash-guard bypasses).
+    bypassed: u64,
 }
+
+/// Thrash guard: once a full cache has missed `2·cap` times in a row, the
+/// working set clearly exceeds the cache (rateless receipt sets rarely
+/// repeat — every insert would evict an entry that might still recur) and
+/// new factorizations bypass insertion until a hit proves patterns repeat
+/// again. The multiplier trades how fast a genuine working-set shift
+/// repopulates the cache against how much an adversarial non-repeating
+/// stream can churn it.
+const CACHE_BYPASS_STREAK_FACTOR: u64 = 2;
 
 impl FactorCache {
     fn new(cap: usize) -> Self {
@@ -120,12 +134,18 @@ impl FactorCache {
             uncached: None,
             hits: 0,
             misses: 0,
+            miss_streak: 0,
+            bypassed: 0,
         }
     }
 
     /// Fetch the factorization for `rows`, building it on a miss. At
     /// capacity the least-recently-used entry is evicted (O(cap) scan —
-    /// the cache is small by design). Build failures are not cached.
+    /// the cache is small by design), unless the thrash guard
+    /// ([`CACHE_BYPASS_STREAK_FACTOR`]) is tripped, in which case the
+    /// fresh factorization is served from the holding slot and the
+    /// resident entries — and their LRU order — are left untouched.
+    /// Build failures are not cached.
     ///
     /// The hit path hashes the key twice (`get_mut` + the final `get`):
     /// returning the reference out of the `get_mut` borrow would extend
@@ -143,10 +163,19 @@ impl FactorCache {
         }
         if let Some(e) = self.map.get_mut(rows) {
             self.hits += 1;
+            self.miss_streak = 0;
             e.last_used = self.stamp;
         } else {
             self.misses += 1;
+            self.miss_streak += 1;
             let factor = build()?;
+            if self.map.len() >= self.cap
+                && self.miss_streak >= CACHE_BYPASS_STREAK_FACTOR * self.cap as u64
+            {
+                self.bypassed += 1;
+                self.uncached = Some(factor);
+                return Ok(self.uncached.as_ref().expect("just stored"));
+            }
             if self.map.len() >= self.cap {
                 if let Some(victim) = self
                     .map
@@ -314,9 +343,36 @@ impl Decoder {
         (self.cache.hits, self.cache.misses)
     }
 
+    /// Misses the thrash guard served without inserting (and so without
+    /// evicting a resident entry). Nonzero means the received-row working
+    /// set exceeded the cache — the expected regime for rateless receipt
+    /// sets, which rarely repeat.
+    pub fn cache_bypasses(&self) -> u64 {
+        self.cache.bypassed
+    }
+
     /// Number of factorizations currently cached.
     pub fn cache_len(&self) -> usize {
         self.cache.map.len()
+    }
+
+    /// Upper bound for row-index validation: finite families bound by
+    /// their fixed `n`; the rateless stream has no ceiling — any index it
+    /// could ever issue is legal (the generator derives the coefficient
+    /// row on demand), so only duplicates are rejected.
+    fn index_bound(
+        generator: &Generator,
+        indices: impl Iterator<Item = usize>,
+    ) -> usize {
+        if generator.kind() == GeneratorKind::RatelessRlc {
+            indices
+                .map(|i| i.saturating_add(1))
+                .max()
+                .unwrap_or(0)
+                .max(generator.n())
+        } else {
+            generator.n()
+        }
     }
 
     /// Reject duplicate / out-of-range indices using the reusable bitset.
@@ -358,9 +414,11 @@ impl Decoder {
                 received.len()
             )));
         }
+        let bound =
+            Self::index_bound(generator, received.iter().map(|(idx, _)| *idx));
         Self::check_indices(
             &mut scratch.seen,
-            generator.n(),
+            bound,
             received.iter().map(|(idx, _)| idx),
         )?;
         scratch.rows.clear();
@@ -436,7 +494,8 @@ impl Decoder {
                 grows,
             } = &mut *self;
             let mut grew = scratch.rows.capacity() < k;
-            Self::check_indices(&mut scratch.seen, generator.n(), rows.iter())?;
+            let bound = Self::index_bound(generator, rows.iter().copied());
+            Self::check_indices(&mut scratch.seen, bound, rows.iter())?;
             // Sort the shared first-`k` support once; permute each
             // request's values to match.
             scratch.rows.clear();
@@ -754,6 +813,117 @@ mod tests {
         let (hits, misses) = dec.cache_stats();
         assert_eq!((hits, misses), (1, 4));
         assert_eq!(dec.cache_len(), 2);
+    }
+
+    #[test]
+    fn thrash_guard_bypasses_without_evicting_resident_entries() {
+        // cap=2, bypass streak threshold = 2·cap = 4 consecutive misses.
+        let gen = Generator::new(GeneratorKind::SystematicRandom, 24, 4, 5).unwrap();
+        let mut dec = Decoder::with_cache_capacity(gen, 2);
+        let pat = |s: usize| -> Vec<(usize, f64)> {
+            (s..s + 4).map(|i| (i, i as f64 + 0.5)).collect()
+        };
+        let warm0 = dec.decode(&pat(0)).unwrap(); // miss → {0}
+        let warm1 = dec.decode(&pat(4)).unwrap(); // miss → {0,4}
+        dec.decode(&pat(0)).unwrap(); // hit — streak resets
+        // Four fresh patterns: the first three evict/insert (streaks 1..3
+        // stay under the threshold at full cap), then the guard trips.
+        dec.decode(&pat(8)).unwrap(); // miss, insert → {4 evicted}
+        dec.decode(&pat(12)).unwrap(); // miss, insert
+        dec.decode(&pat(16)).unwrap(); // miss, streak 3 → still inserts
+        assert_eq!(dec.cache_bypasses(), 0);
+        dec.decode(&pat(20)).unwrap(); // miss, streak 4 → bypass
+        assert_eq!(dec.cache_bypasses(), 1);
+        assert_eq!(dec.cache_len(), 2);
+        // Bypassed decodes leave the resident set untouched: the two most
+        // recently inserted patterns still hit, and re-decoding a bypassed
+        // pattern misses again (it was never inserted).
+        let (_, m_before) = dec.cache_stats();
+        dec.decode(&pat(12)).unwrap();
+        dec.decode(&pat(16)).unwrap();
+        let (h, m) = dec.cache_stats();
+        assert_eq!(m, m_before, "resident entries must still hit");
+        assert!(h >= 3);
+        // A hit reset the streak, so fresh patterns insert again.
+        dec.decode(&pat(20)).unwrap();
+        assert_eq!(dec.cache_bypasses(), 1, "post-hit miss inserts normally");
+        // Bit-identity: bypassed results equal cached results.
+        assert_eq!(dec.decode(&pat(0)).unwrap(), warm0);
+        assert_eq!(dec.decode(&pat(4)).unwrap(), warm1);
+    }
+
+    #[test]
+    fn eviction_order_is_unchanged_by_bypassed_decodes() {
+        // Regression for the guard: bypassed traffic must not perturb the
+        // LRU stamps of resident entries, so the next real insert evicts
+        // the same victim it would have without the bypass burst.
+        let gen = Generator::new(GeneratorKind::SystematicRandom, 60, 4, 7).unwrap();
+        let mut dec = Decoder::with_cache_capacity(gen, 2);
+        let pat = |s: usize| -> Vec<(usize, f64)> {
+            (s..s + 4).map(|i| (i, i as f64 - 1.5)).collect()
+        };
+        // Burst of 7 fresh patterns, no hits: streaks 1..3 insert (pat(8)
+        // evicts pat(0) at full cap), streak 4 trips the guard and every
+        // later miss bypasses. Residents after the burst: pat(4) (older
+        // stamp) and pat(8) (newer).
+        for s in (0..28).step_by(4) {
+            dec.decode(&pat(s)).unwrap();
+        }
+        assert_eq!(dec.cache_bypasses(), 4, "streaks 4..7 must all bypass");
+        assert_eq!(dec.cache_len(), 2);
+        // More bypassed traffic — resident stamps must not move.
+        dec.decode(&pat(32)).unwrap();
+        dec.decode(&pat(36)).unwrap();
+        assert_eq!(dec.cache_bypasses(), 6);
+        // Refresh pat(4): now pat(8) is the true LRU.
+        dec.decode(&pat(4)).unwrap(); // hit — resets the streak too
+        // Next insert evicts pat(8), not the refreshed pat(4).
+        dec.decode(&pat(40)).unwrap(); // miss, streak 1 → real insert
+        let (_, m0) = dec.cache_stats();
+        dec.decode(&pat(4)).unwrap(); // survived → hit
+        let (_, m1) = dec.cache_stats();
+        assert_eq!(m1, m0, "refreshed resident must survive the eviction");
+        dec.decode(&pat(8)).unwrap(); // evicted → miss
+        let (_, m2) = dec.cache_stats();
+        assert_eq!(m2, m1 + 1, "true LRU resident must have been evicted");
+    }
+
+    #[test]
+    fn rateless_decode_accepts_rows_beyond_the_materialized_prefix() {
+        // The decoder's generator clone keeps the setup-time prefix; rows
+        // the stream issued later are derived on demand and must decode.
+        let (n, k) = (6usize, 4usize);
+        let gen = Generator::new(GeneratorKind::RatelessRlc, n, k, 19).unwrap();
+        let a = random_matrix(k, 3, 20);
+        let x = vec![1.0, -0.5, 2.0];
+        let truth = a.matvec(&x);
+        let rows = vec![2usize, 5, 9, 13]; // 9, 13 beyond n=6
+        let mut big = gen.clone();
+        big.extend_to(16).unwrap();
+        let coded = big.matrix().matmul(&a);
+        let received: Vec<(usize, f64)> = rows
+            .iter()
+            .map(|&i| {
+                let acc: f64 =
+                    coded.row(i).iter().zip(&x).map(|(a, b)| a * b).sum();
+                (i, acc)
+            })
+            .collect();
+        let mut dec = Decoder::new(gen);
+        let z = dec.decode(&received).unwrap();
+        for (got, want) in z.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // Batch path too, and duplicates beyond n are still rejected.
+        let col: Vec<f64> = received.iter().map(|&(_, v)| v).collect();
+        let batch = dec.decode_batch(&rows, &[col.clone()]).unwrap();
+        assert_eq!(batch[0], z);
+        assert!(dec.decode_batch(&[2, 9, 9, 13], &[vec![0.0; 4]]).is_err());
+        // Finite families keep the hard n bound.
+        let fixed =
+            Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
+        let mut fdec = Decoder::new(fixed);
+        assert!(fdec.decode_batch(&[0, 1, 2, 10], &[vec![0.0; 4]]).is_err());
     }
 
     #[test]

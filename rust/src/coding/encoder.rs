@@ -1,6 +1,6 @@
 //! Row encoder: `Ã = G·A` and per-worker chunking.
 
-use crate::coding::{Generator, Matrix};
+use crate::coding::{Generator, GeneratorKind, Matrix};
 use crate::runtime::pool::WorkPool;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -10,11 +10,23 @@ use std::sync::atomic::{AtomicU64, Ordering};
 ///
 /// The encoder counts its own `encode` invocations
 /// ([`Encoder::encode_calls`]) so serving paths can *measure* — not merely
-/// declare — that steady-state batches perform no encode work.
+/// declare — that steady-state batches perform no encode work. Row-level
+/// accounting rides alongside: [`Encoder::rows_encoded`] counts every
+/// coded row produced, and [`Encoder::re_encoded_rows`] counts rows whose
+/// global index had already been encoded through this instance — the
+/// counter the rateless elasticity contract pins to zero (extending the
+/// stream mints *fresh* ranges, it never recomputes issued rows).
 #[derive(Debug)]
 pub struct Encoder {
     generator: Generator,
     encodes: AtomicU64,
+    /// Total coded rows produced (full encodes and range encodes alike).
+    rows_encoded: AtomicU64,
+    /// Rows produced whose global index overlapped the high-watermark of
+    /// previously encoded rows — i.e. redundant encode work.
+    re_encoded_rows: AtomicU64,
+    /// One past the highest global row index ever encoded here.
+    watermark: AtomicU64,
 }
 
 impl Clone for Encoder {
@@ -39,7 +51,13 @@ pub struct WorkerChunk {
 impl Encoder {
     /// Wrap a generator.
     pub fn new(generator: Generator) -> Self {
-        Encoder { generator, encodes: AtomicU64::new(0) }
+        Encoder {
+            generator,
+            encodes: AtomicU64::new(0),
+            rows_encoded: AtomicU64::new(0),
+            re_encoded_rows: AtomicU64::new(0),
+            watermark: AtomicU64::new(0),
+        }
     }
 
     /// The underlying generator.
@@ -51,6 +69,46 @@ impl Encoder {
     /// encoder instance.
     pub fn encode_calls(&self) -> u64 {
         self.encodes.load(Ordering::Relaxed)
+    }
+
+    /// Total coded rows produced through this instance (full and range
+    /// encodes combined).
+    pub fn rows_encoded(&self) -> u64 {
+        self.rows_encoded.load(Ordering::Relaxed)
+    }
+
+    /// Rows whose global index had already been encoded through this
+    /// instance when they were encoded again. The rateless scale-out path
+    /// asserts this stays 0 — fresh ranges only, no recompute of issued
+    /// rows.
+    pub fn re_encoded_rows(&self) -> u64 {
+        self.re_encoded_rows.load(Ordering::Relaxed)
+    }
+
+    /// One past the highest global row index encoded so far (0 if no
+    /// encode has happened).
+    pub fn encode_watermark(&self) -> u64 {
+        self.watermark.load(Ordering::Relaxed)
+    }
+
+    /// Extend the underlying generator's materialized prefix (rateless
+    /// family only — delegates to [`Generator::extend_to`]). Performs no
+    /// encode work itself; pair with [`Encoder::encode_rows`] on the
+    /// fresh range so [`Encoder::chunk`]/[`Encoder::rechunk`] validation
+    /// sees the new `n`.
+    pub fn extend_to(&mut self, new_n: usize) -> Result<()> {
+        self.generator.extend_to(new_n)
+    }
+
+    /// Account `range` against the row-level counters: bump the total,
+    /// charge the overlap with the previously-encoded watermark as
+    /// re-encoded work, and advance the watermark.
+    fn count_rows(&self, range: &std::ops::Range<usize>) {
+        let (start, end) = (range.start as u64, range.end as u64);
+        self.rows_encoded.fetch_add(end - start, Ordering::Relaxed);
+        let prev = self.watermark.fetch_max(end, Ordering::Relaxed);
+        let overlap = prev.min(end).saturating_sub(start);
+        self.re_encoded_rows.fetch_add(overlap, Ordering::Relaxed);
     }
 
     /// Encode: `Ã = G·A`, where `A ∈ R^{k×d}`, on the shared global
@@ -90,10 +148,57 @@ impl Encoder {
     ) -> Result<Matrix> {
         self.check_shape(a)?;
         self.encodes.fetch_add(1, Ordering::Relaxed);
+        self.count_rows(&(0..self.generator.n()));
         Ok(match self.generator.sparse() {
             Some(csr) => csr.matmul_streams(a, pool, max_streams),
             None => self.generator.matrix().matmul_streams(a, pool, max_streams),
         })
+    }
+
+    /// Encode only the coded rows in `range`: `Ã[range] = G[range]·A` —
+    /// the extend-`n` surface of the rateless stream. For the rateless
+    /// family the range may lie (partly) beyond the materialized prefix:
+    /// the coefficient rows are derived on demand from `(seed, i)`
+    /// ([`Generator::submatrix`]), so splitting one range into several
+    /// calls is byte-identical to a single call (pinned by
+    /// `code_golden.rs`). Finite families may range-encode too, but only
+    /// within their fixed `[0, n)`.
+    ///
+    /// Does **not** bump [`Encoder::encode_calls`] — that counter means
+    /// "full setup encodes" to the serving invariants
+    /// (`post_setup_encodes == 0`); range encodes are accounted at row
+    /// granularity by [`Encoder::rows_encoded`] /
+    /// [`Encoder::re_encoded_rows`] instead.
+    pub fn encode_rows(
+        &self,
+        a: &Matrix,
+        range: std::ops::Range<usize>,
+        pool: &WorkPool,
+        max_streams: usize,
+    ) -> Result<Matrix> {
+        self.check_shape(a)?;
+        if range.start > range.end {
+            return Err(Error::InvalidSpec(format!(
+                "encode_rows range {}..{} is inverted",
+                range.start, range.end
+            )));
+        }
+        if self.generator.kind() != GeneratorKind::RatelessRlc
+            && range.end > self.generator.n()
+        {
+            return Err(Error::InvalidSpec(format!(
+                "encode_rows range {}..{} exceeds n={} and {:?} is not \
+                 rateless",
+                range.start,
+                range.end,
+                self.generator.n(),
+                self.generator.kind()
+            )));
+        }
+        self.count_rows(&range);
+        let idx: Vec<usize> = range.collect();
+        let g_rows = self.generator.submatrix(&idx);
+        Ok(g_rows.matmul_streams(a, pool, max_streams))
     }
 
     /// Pre-pool compatibility shim: `threads` now only caps the task
@@ -111,6 +216,7 @@ impl Encoder {
     pub fn encode_with_threads(&self, a: &Matrix, threads: usize) -> Result<Matrix> {
         self.check_shape(a)?;
         self.encodes.fetch_add(1, Ordering::Relaxed);
+        self.count_rows(&(0..self.generator.n()));
         #[allow(deprecated)]
         let coded = self.generator.matrix().matmul_blocked(a, threads);
         Ok(coded)
@@ -334,6 +440,81 @@ mod tests {
         // Wrong coded matrix shape still rejected.
         let wrong = random_matrix(11, 3, 4);
         assert!(enc.rechunk(&wrong, &[4, 4]).is_err());
+    }
+
+    #[test]
+    fn encode_rows_splits_are_byte_identical_and_counted() {
+        let g = Generator::new(GeneratorKind::RatelessRlc, 8, 4, 21).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 6, 2);
+        let pool = crate::runtime::pool::WorkPool::new(2);
+        // One call over [0, 14) vs. three incremental extends.
+        let whole = enc.encode_rows(&a, 0..14, &pool, 2).unwrap();
+        let enc2 = enc.clone();
+        let parts = [0..5usize, 5..8, 8..14]
+            .into_iter()
+            .map(|r| enc2.encode_rows(&a, r, &pool, 2).unwrap())
+            .collect::<Vec<_>>();
+        let split: Vec<u64> = parts
+            .iter()
+            .flat_map(|m| m.data().iter().map(|v| v.to_bits()))
+            .collect();
+        let whole_bits: Vec<u64> =
+            whole.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(whole_bits, split, "call splits must be byte-identical");
+        // Row accounting: fresh ranges never count as re-encodes; the
+        // full-call counter is untouched by range encodes.
+        assert_eq!(enc2.rows_encoded(), 14);
+        assert_eq!(enc2.re_encoded_rows(), 0);
+        assert_eq!(enc2.encode_watermark(), 14);
+        assert_eq!(enc2.encode_calls(), 0);
+        // Overlapping range is charged as re-encoded work.
+        enc2.encode_rows(&a, 10..16, &pool, 2).unwrap();
+        assert_eq!(enc2.re_encoded_rows(), 4);
+        assert_eq!(enc2.encode_watermark(), 16);
+    }
+
+    #[test]
+    fn encode_rows_bounds_and_full_encode_accounting() {
+        let g = Generator::new(GeneratorKind::SystematicRandom, 10, 4, 1).unwrap();
+        let enc = Encoder::new(g);
+        let a = random_matrix(4, 3, 3);
+        let pool = crate::runtime::pool::WorkPool::new(1);
+        // Finite families may range-encode inside [0, n)…
+        let sub = enc.encode_rows(&a, 2..7, &pool, 1).unwrap();
+        assert_eq!(sub.rows(), 5);
+        // …but not beyond it.
+        assert!(enc.encode_rows(&a, 8..12, &pool, 1).is_err());
+        // A full encode counts all n rows and advances the watermark; a
+        // second full encode is pure re-encode work.
+        let coded = enc.encode(&a).unwrap();
+        assert_eq!(sub.row(0), coded.row(2), "range slice matches full");
+        assert_eq!(enc.rows_encoded(), 15);
+        assert_eq!(enc.re_encoded_rows(), 5);
+        enc.encode(&a).unwrap();
+        assert_eq!(enc.re_encoded_rows(), 15);
+        // Clone resets row accounting along with the call counter.
+        assert_eq!(enc.clone().rows_encoded(), 0);
+    }
+
+    #[test]
+    fn extend_to_grows_rateless_n_for_chunk_validation() {
+        let g = Generator::new(GeneratorKind::RatelessRlc, 6, 3, 4).unwrap();
+        let mut enc = Encoder::new(g);
+        let a = random_matrix(3, 2, 5);
+        let pool = crate::runtime::pool::WorkPool::new(1);
+        let mut coded = enc.encode_rows(&a, 0..6, &pool, 1).unwrap();
+        let more = enc.encode_rows(&a, 6..9, &pool, 1).unwrap();
+        // Before extension, chunking to 9 rows fails the n check.
+        assert!(enc.rechunk(&coded, &[3, 3]).is_ok());
+        enc.extend_to(9).unwrap();
+        for r in 0..more.rows() {
+            coded.push_row(more.row(r)).unwrap();
+        }
+        let chunks = enc.chunk(&coded, &[3, 3, 3]).unwrap();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[2].row_range, 6..9);
+        assert_eq!(enc.re_encoded_rows(), 0, "extension mints fresh rows");
     }
 
     #[test]

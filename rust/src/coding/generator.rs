@@ -1,5 +1,6 @@
-//! Generator matrices over the reals: two MDS families plus an
-//! LDPC-style sparse-parity family.
+//! Generator matrices over the reals: two MDS families, an LDPC-style
+//! sparse-parity family, and a rateless random-linear fountain family
+//! whose row stream is infinite ([`GeneratorKind::RatelessRlc`]).
 
 use crate::coding::{CsrMatrix, Matrix};
 use crate::math::Rng;
@@ -10,6 +11,14 @@ use crate::{Error, Result};
 /// while leaving random k-subsets overwhelmingly likely to be invertible
 /// at serving-scale `k`.
 const SPARSE_PARITY_WEIGHT: usize = 8;
+
+/// Per-row stream separation constant for the rateless derivation
+/// (the 64-bit golden ratio, as in
+/// [`crate::coordinator::derive_stream_seed`]). Row `i` of a
+/// [`GeneratorKind::RatelessRlc`] generator seeds its own [`Rng`] with
+/// `seed ^ (i+1)·φ64`, so every row is a pure function of `(seed, i)` —
+/// independent of how much of the stream has been materialized.
+const RATELESS_ROW_TAG: u64 = 0x9e37_79b9_7f4a_7c15;
 
 /// Which generator construction to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +38,27 @@ pub enum GeneratorKind {
     /// case decode reports a clean error ([`Generator::rows_invertible`]
     /// returns `false`) rather than an answer.
     SparseParity,
+    /// Rateless random-linear fountain code: an **infinite** row stream
+    /// where row `i ∈ [0, ∞)` is `k` Gaussians scaled by `1/√k`, derived
+    /// purely from `(seed, i)` — so the generator has no intrinsic `n`.
+    /// The `n` passed to [`Generator::new`] is merely the materialized
+    /// *prefix*; [`Generator::extend_to`] mints more rows without touching
+    /// existing ones, and [`Generator::submatrix`] derives rows beyond the
+    /// prefix on demand (decode never needs the horizon extended). Any
+    /// k-subset of rows is invertible with probability 1. Non-systematic.
+    RatelessRlc,
+}
+
+/// Coefficient row `i` of the rateless stream: `k` Gaussians scaled by
+/// `1/√k`, from an [`Rng`] seeded by `(seed, i)` alone. This is the
+/// single definition of the infinite generator — prefix materialization,
+/// extension, and on-demand decode rows all call it, which is the whole
+/// determinism argument: there is nothing else they *could* disagree on.
+fn rateless_row(seed: u64, k: usize, i: usize) -> Vec<f64> {
+    let mut rng =
+        Rng::new(seed ^ (i as u64 + 1).wrapping_mul(RATELESS_ROW_TAG));
+    let scale = 1.0 / (k as f64).sqrt();
+    (0..k).map(|_| rng.normal() * scale).collect()
 }
 
 /// An `(n, k)` generator matrix with construction metadata.
@@ -37,6 +67,11 @@ pub struct Generator {
     kind: GeneratorKind,
     n: usize,
     k: usize,
+    /// Construction seed — retained so the rateless family can derive
+    /// rows beyond the materialized prefix ([`Generator::extend_to`],
+    /// on-demand [`Generator::submatrix`]). The finite families never
+    /// read it after construction.
+    seed: u64,
     g: Matrix,
     /// Evaluation nodes (Vandermonde construction only) — lets the decoder
     /// use the O(k²) Björck–Pereyra solver instead of LU.
@@ -119,8 +154,60 @@ impl Generator {
                 let csr = CsrMatrix::from_dense(&g);
                 (g, None, Some(csr))
             }
+            GeneratorKind::RatelessRlc => {
+                (Self::rateless_prefix(seed, n, k), None, None)
+            }
         };
-        Ok(Generator { kind, n, k, g, nodes, sparse })
+        Ok(Generator { kind, n, k, seed, g, nodes, sparse })
+    }
+
+    /// Materialize rateless rows `[0, n)` — each row derived independently
+    /// by [`rateless_row`], so the prefix is byte-identical no matter how
+    /// it was reached (one shot here or incremental
+    /// [`Generator::extend_to`] calls).
+    fn rateless_prefix(seed: u64, n: usize, k: usize) -> Matrix {
+        let mut g = Matrix::zeros(n, k);
+        for i in 0..n {
+            let row = rateless_row(seed, k, i);
+            for (j, v) in row.iter().enumerate() {
+                g[(i, j)] = *v;
+            }
+        }
+        g
+    }
+
+    /// Extend the materialized prefix of a rateless generator to
+    /// `new_n` rows. Idempotent (`new_n <= n` is a no-op), and existing
+    /// rows are never recomputed differently — every row is a pure
+    /// function of `(seed, i)`, so the extended matrix is byte-identical
+    /// to constructing at `new_n` directly (pinned by tests). Errors for
+    /// the finite families, whose `n` is fixed at construction.
+    pub fn extend_to(&mut self, new_n: usize) -> Result<()> {
+        if self.kind != GeneratorKind::RatelessRlc {
+            return Err(Error::InvalidSpec(format!(
+                "extend_to is only defined for the rateless family, \
+                 not {:?} (finite n fixed at construction)",
+                self.kind
+            )));
+        }
+        if new_n <= self.n {
+            return Ok(());
+        }
+        let mut g = Matrix::zeros(new_n, self.k);
+        for i in 0..self.n {
+            for j in 0..self.k {
+                g[(i, j)] = self.g[(i, j)];
+            }
+        }
+        for i in self.n..new_n {
+            let row = rateless_row(self.seed, self.k, i);
+            for (j, v) in row.iter().enumerate() {
+                g[(i, j)] = *v;
+            }
+        }
+        self.g = g;
+        self.n = new_n;
+        Ok(())
     }
 
     /// CSR mirror of the generator (sparse constructions only) — the
@@ -161,7 +248,31 @@ impl Generator {
     }
 
     /// The `|B|×k` submatrix of `G` on rows `B` (decode system matrix).
+    ///
+    /// For the rateless family, row indices beyond the materialized
+    /// prefix are derived on demand from `(seed, i)` — byte-identical to
+    /// what [`Generator::extend_to`] would materialize — so decode works
+    /// for any row index the stream ever issued without the decoder's
+    /// generator clone having to track the encoder's horizon.
     pub fn submatrix(&self, rows: &[usize]) -> Matrix {
+        if self.kind == GeneratorKind::RatelessRlc
+            && rows.iter().any(|&r| r >= self.n)
+        {
+            let mut m = Matrix::zeros(rows.len(), self.k);
+            for (out, &r) in rows.iter().enumerate() {
+                if r < self.n {
+                    for j in 0..self.k {
+                        m[(out, j)] = self.g[(r, j)];
+                    }
+                } else {
+                    let row = rateless_row(self.seed, self.k, r);
+                    for (j, v) in row.iter().enumerate() {
+                        m[(out, j)] = *v;
+                    }
+                }
+            }
+            return m;
+        }
         self.g.select_rows(rows)
     }
 
@@ -288,6 +399,65 @@ mod tests {
         let tiny = Generator::new(GeneratorKind::SparseParity, 7, 3, 5).unwrap();
         let (cols, _) = tiny.sparse().unwrap().row_entries(5);
         assert_eq!(cols, &[0, 1, 2]);
+    }
+
+    #[test]
+    fn rateless_extension_is_byte_identical_to_direct_construction() {
+        // Rows are pure functions of (seed, i): growing 8 → 20 in two
+        // extends must reproduce, bit for bit, the generator built at 20
+        // directly — and never perturb the rows that already existed.
+        let direct = Generator::new(GeneratorKind::RatelessRlc, 20, 5, 77).unwrap();
+        let mut grown = Generator::new(GeneratorKind::RatelessRlc, 8, 5, 77).unwrap();
+        let prefix_bits: Vec<u64> =
+            grown.matrix().data().iter().map(|v| v.to_bits()).collect();
+        grown.extend_to(13).unwrap();
+        grown.extend_to(20).unwrap();
+        assert_eq!(grown.n(), 20);
+        assert_eq!(grown.matrix(), direct.matrix());
+        assert!(grown
+            .matrix()
+            .data()
+            .iter()
+            .take(prefix_bits.len())
+            .map(|v| v.to_bits())
+            .eq(prefix_bits.iter().copied()));
+        // Idempotent: shrinking requests are no-ops.
+        grown.extend_to(4).unwrap();
+        assert_eq!(grown.n(), 20);
+    }
+
+    #[test]
+    fn rateless_submatrix_derives_rows_beyond_the_prefix() {
+        // The decoder's generator clone may lag the encoder's horizon:
+        // submatrix must derive out-of-prefix rows on demand, equal to
+        // what extension would materialize.
+        let g = Generator::new(GeneratorKind::RatelessRlc, 6, 4, 3).unwrap();
+        let rows = [1usize, 5, 9, 40];
+        let sub = g.submatrix(&rows);
+        let mut big = g.clone();
+        big.extend_to(41).unwrap();
+        assert_eq!(sub, big.submatrix(&rows));
+        assert!(g.rows_invertible(&rows), "any k-subset invertible w.p. 1");
+        assert!(!g.rows_invertible(&rows[..3]), "sub-k honest");
+    }
+
+    #[test]
+    fn rateless_rows_deterministic_and_extend_rejected_for_finite_kinds() {
+        let a = Generator::new(GeneratorKind::RatelessRlc, 10, 4, 9).unwrap();
+        let b = Generator::new(GeneratorKind::RatelessRlc, 10, 4, 9).unwrap();
+        assert_eq!(a.matrix(), b.matrix());
+        let c = Generator::new(GeneratorKind::RatelessRlc, 10, 4, 10).unwrap();
+        assert_ne!(a.matrix(), c.matrix());
+        assert!(a.sparse().is_none());
+        assert!(a.nodes().is_none());
+        for kind in [
+            GeneratorKind::Vandermonde,
+            GeneratorKind::SystematicRandom,
+            GeneratorKind::SparseParity,
+        ] {
+            let mut g = Generator::new(kind, 10, 4, 1).unwrap();
+            assert!(g.extend_to(12).is_err(), "{kind:?} must not extend");
+        }
     }
 
     #[test]

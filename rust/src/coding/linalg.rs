@@ -67,6 +67,22 @@ impl Matrix {
         &self.data
     }
 
+    /// Append one row (bitwise copy). The rateless stream grows the coded
+    /// matrix this way — existing rows are never moved relative to each
+    /// other, only the backing vec extends. Errors on width mismatch.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.cols {
+            return Err(Error::InvalidSpec(format!(
+                "push_row width {} on a {}-column matrix",
+                row.len(),
+                self.cols
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+
     /// Extract the submatrix made of the given rows (in order).
     pub fn select_rows(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(idx.len(), self.cols);
@@ -1041,6 +1057,22 @@ mod tests {
         let a = Matrix::from_vec(2, 2, vec![1.0, -7.0, 3.0, 2.0]);
         assert_eq!(a.max_abs(), 7.0);
         assert_eq!(a.norm_inf(), 8.0);
+    }
+
+    #[test]
+    fn push_row_appends_without_disturbing_existing_rows() {
+        let mut a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let before: Vec<u64> = a.data().iter().map(|v| v.to_bits()).collect();
+        a.push_row(&[7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.row(2), &[7.0, 8.0, 9.0]);
+        assert!(a
+            .data()
+            .iter()
+            .take(before.len())
+            .map(|v| v.to_bits())
+            .eq(before.iter().copied()));
+        assert!(a.push_row(&[1.0]).is_err(), "width mismatch rejected");
     }
 
     /// Sparse test patterns shared by the CSR unit tests: each returns a

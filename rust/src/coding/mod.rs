@@ -5,7 +5,7 @@
 //! independent. The master recovers `A·x` from any `k` coded inner products
 //! by solving `G_B · z = y_B`.
 //!
-//! Three generator families are provided:
+//! Four generator families are provided:
 //!
 //! - [`GeneratorKind::Vandermonde`]: rows `[1, x_i, …, x_i^{k-1}]` on distinct
 //!   Chebyshev nodes — *provably* MDS over the reals, but the decode system's
@@ -16,11 +16,16 @@
 //! - [`GeneratorKind::SparseParity`]: `G = [I_k; S]` with sparse `±1/√w`
 //!   parity rows — the LDPC-style analogue; *not* MDS, but encodes in
 //!   O(nnz·d) through the CSR kernel instead of dense FLOPs.
+//! - [`GeneratorKind::RatelessRlc`]: a rateless random-linear fountain —
+//!   an *infinite* row stream where row `i` derives purely from
+//!   `(seed, i)`, so `n` is just a materialized prefix that
+//!   [`Generator::extend_to`] grows without re-encoding ([`rateless`]).
 //!
 //! Codes are pluggable: the [`code::Code`] trait bundles generator
 //! construction, encode, and decode behind one object, and the registry in
 //! [`code`] (mirroring the policy registry) maps CLI names — `mds-random`,
-//! `mds-vandermonde`, `sparse-parity` — to implementations.
+//! `mds-vandermonde`, `sparse-parity`, `rateless-rlc` — to
+//! implementations.
 //!
 //! The dense linear algebra (LU with partial pivoting, matmul, matvec) is
 //! implemented in [`linalg`] from scratch, alongside the [`CsrMatrix`]
@@ -34,9 +39,11 @@ pub mod decoder;
 pub mod encoder;
 pub mod generator;
 pub mod linalg;
+pub mod rateless;
 
 pub use bjorck_pereyra::VandermondeFactor;
 pub use code::{Code, CodeEntry, MdsCode, SparseParityCode};
+pub use rateless::RatelessCode;
 pub use decoder::{Decoder, DEFAULT_FACTOR_CACHE};
 pub use encoder::Encoder;
 pub use generator::{Generator, GeneratorKind};

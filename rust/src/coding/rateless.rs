@@ -1,0 +1,99 @@
+//! The rateless random-linear fountain code (`rateless-rlc`) — the
+//! registry's fourth entry, and the first whose generator is an
+//! **infinite row stream**.
+//!
+//! # Why rateless
+//!
+//! The paper's MDS construction fixes `n` at encode time, so adaptation
+//! can only re-slice the rows that exist: growing the fleet past `n` or
+//! riding out per-packet loss costs a full re-encode. A random-linear
+//! fountain removes the ceiling — row `i ∈ [0, ∞)` is `k` Gaussians
+//! scaled by `1/√k`, derived purely from `(seed, i)`
+//! ([`GeneratorKind::RatelessRlc`]), and the master decodes the moment it
+//! holds *any* invertible `k`-set. Workers simply stream rows until that
+//! threshold; fresh workers get fresh row ranges with zero re-encode work
+//! (measured by [`crate::coding::Encoder::re_encoded_rows`], not
+//! declared).
+//!
+//! # Determinism argument
+//!
+//! Every coefficient row is a pure function of `(seed, i)` through
+//! `math::rng` — there is no shared stream cursor, so materializing the
+//! prefix in one shot, extending it incrementally, or deriving a row on
+//! demand inside [`crate::coding::Generator::submatrix`] all read the
+//! same bits. That is what makes the serving results reproducible from
+//! the seed at any pool size, any extension schedule, and any packet
+//! arrival order (the collection loop sorts receipts deterministically;
+//! see `coordinator::rateless`).
+//!
+//! # Decode
+//!
+//! Decode is unchanged: the received global row indices select a `k×k`
+//! system that goes through the cached-LU any-k path
+//! ([`crate::coding::Decoder::decode_batch`]). A random Gaussian `k`-set
+//! is invertible with probability 1, so unlike `sparse-parity` there is
+//! no structural singularity class — but the decoder still surfaces a
+//! numerically singular set as a clean `Err` instead of garbage.
+
+use crate::coding::code::Code;
+use crate::coding::GeneratorKind;
+
+/// The rateless random-linear fountain code. Non-systematic; any-k
+/// decode through the shared cached-LU path; the only registry entry
+/// whose `n` can grow after setup ([`crate::coding::Encoder::extend_to`]
+/// + [`Code::encode_rows`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RatelessCode;
+
+impl Code for RatelessCode {
+    fn name(&self) -> &'static str {
+        "rateless-rlc"
+    }
+
+    fn generator(&self) -> GeneratorKind {
+        GeneratorKind::RatelessRlc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{Decoder, Encoder, Matrix};
+    use crate::math::Rng;
+    use crate::runtime::pool::WorkPool;
+
+    #[test]
+    fn streamed_rows_decode_from_any_k_receipt_set() {
+        let code = RatelessCode;
+        let (n, k, d) = (6usize, 4usize, 3usize);
+        let mut rng = Rng::new(31);
+        let a = Matrix::from_fn(k, d, |_, _| rng.normal());
+        let gen = code.setup(n, k, 8).unwrap();
+        let encoder = Encoder::new(gen.clone());
+        let pool = WorkPool::new(2);
+        // Stream far past the setup prefix, as the serving loop would
+        // under loss: rows [0, 6) at setup, [6, 12) minted later.
+        let head = code.encode_rows(&encoder, &a, 0..n, &pool, 2).unwrap();
+        let tail = code.encode_rows(&encoder, &a, n..2 * n, &pool, 2).unwrap();
+        assert_eq!(encoder.re_encoded_rows(), 0);
+        let x: Vec<f64> = (0..d).map(|i| 0.5 - i as f64).collect();
+        let truth = a.matvec(&x);
+        let y_head = head.matvec(&x);
+        let y_tail = tail.matvec(&x);
+        // A receipt set straddling the extension boundary decodes.
+        let rows = [1usize, 4, 7, 11];
+        let col: Vec<f64> = rows
+            .iter()
+            .map(|&r| if r < n { y_head[r] } else { y_tail[r - n] })
+            .collect();
+        let mut decoder = Decoder::new(gen);
+        let decoded = code.decode_rows(&mut decoder, &rows, &[col]).unwrap();
+        for (got, want) in decoded[0].iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // Sub-k receipt sets fail fast and clean.
+        assert!(code
+            .decode_rows(&mut decoder, &rows[..3], &[vec![0.0; 3]])
+            .is_err());
+    }
+}

@@ -36,10 +36,13 @@
 //! The model-time mirror of this loop for the queueing layer is
 //! [`crate::workload::drift::run_workload_drift`].
 
-use crate::allocation::{proposed_allocation_capped, Allocation, Policy};
+use crate::allocation::{
+    proposed_allocation, proposed_allocation_capped, Allocation, Policy,
+};
 use crate::coding::Matrix;
 use crate::coordinator::failures::{FailureScenario, ScenarioState};
 use crate::coordinator::master::{derive_stream_seed, STRAGGLE_SEED_TAG};
+use crate::coordinator::rateless::RatelessSummary;
 use crate::coordinator::{
     Compute, JobConfig, LatencyRecorder, PreparedJob, ServeReport,
     WorkerObservation,
@@ -109,6 +112,12 @@ pub struct AdaptiveServeReport {
     pub assumed_spec: ClusterSpec,
     /// Decode factorization-cache `(hits, misses)` over the stream.
     pub decode_cache: (u64, u64),
+    /// Decode factorizations served around the cache by the thrash-bypass
+    /// guard.
+    pub decode_cache_bypasses: u64,
+    /// Streaming-collection accounting — `Some` iff the job served with
+    /// the rateless code.
+    pub rateless: Option<RatelessSummary>,
 }
 
 /// Serve an arrival stream under a failure/drift scenario, optionally
@@ -174,6 +183,8 @@ pub fn serve_arrivals_adaptive(
         steady_allocs: outcome.steady_allocs,
         assumed_spec,
         decode_cache: (outcome.decode_cache_hits, outcome.decode_cache_misses),
+        decode_cache_bypasses: outcome.decode_cache_bypasses,
+        rateless: outcome.rateless,
     })
 }
 
@@ -227,6 +238,13 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     // Setup once: encode, chunk, decoder state live across batches and
     // across re-allocations.
     let mut prepared = PreparedJob::new(spec, alloc, a, cfg)?;
+    // Serving style is a property of the code: the rateless fountain
+    // streams (solicitation rounds until any k rows survive), everything
+    // else dispatches fixed chunks — over lossy links via the
+    // packet-filtered collection, which can fail sub-k.
+    let streaming = prepared.is_rateless();
+    let mut rl_summary = streaming.then(RatelessSummary::default);
+    let lossy_scenario = scenario.has_loss();
     let mut state = ScenarioState::new(spec, &cfg.dead_workers);
     let window = adapt.map_or(1, |ad| ad.est.window);
     let mut estimator =
@@ -249,6 +267,9 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     // post-first-batch baseline for the steady-allocation invariant.
     let mut injector_slot: Option<crate::coordinator::StragglerInjector> = None;
     let mut grows_baseline: Option<u64> = None;
+    // Per-batch per-worker drop probabilities under lossy-link scenarios
+    // (refilled in place each batch; burst windows change it over time).
+    let mut loss_buf = vec![0.0f64; total_workers];
     while next < requests.len() {
         // Block until the head-of-line request has arrived.
         let now = start.elapsed();
@@ -265,7 +286,12 @@ pub(crate) fn serve_arrivals_adaptive_impl(
             end += 1;
         }
         state.advance(scenario, batch_idx)?;
-        let batch_seed = derive_stream_seed(cfg.seed, batch_idx) ^ STRAGGLE_SEED_TAG;
+        // One base stream per batch, split into independent substreams:
+        // the straggler injector draws under `^ STRAGGLE_SEED_TAG`, packet
+        // fates under `^ LOSS_SEED_TAG` (inside `packet_dropped`). Sharing
+        // the raw stream would correlate slowness with loss.
+        let stream_seed = derive_stream_seed(cfg.seed, batch_idx);
+        let batch_seed = stream_seed ^ STRAGGLE_SEED_TAG;
         if injector_slot.is_none() {
             injector_slot = Some(state.injector(
                 cfg.model,
@@ -284,11 +310,39 @@ pub(crate) fn serve_arrivals_adaptive_impl(
             )?;
         }
         let injector = injector_slot.as_ref().expect("injector just staged");
-        let (reports, observed) = prepared.run_batch_injected(
-            &requests[next..end],
-            Arc::clone(&compute),
-            injector,
-        )?;
+        if lossy_scenario {
+            for (w, p) in loss_buf.iter_mut().enumerate() {
+                *p = state.loss_probability(state.group_of(w), batch_idx);
+            }
+        }
+        let (reports, observed) = if streaming {
+            let loss: &[f64] = if lossy_scenario { &loss_buf } else { &[] };
+            let (reports, observed, stats) = prepared.run_batch_rateless_injected(
+                &requests[next..end],
+                Arc::clone(&compute),
+                injector,
+                loss,
+                stream_seed,
+            )?;
+            if let Some(s) = rl_summary.as_mut() {
+                s.absorb(stats);
+            }
+            (reports, observed)
+        } else if lossy_scenario {
+            prepared.run_batch_lossy(
+                &requests[next..end],
+                Arc::clone(&compute),
+                injector,
+                &loss_buf,
+                stream_seed,
+            )?
+        } else {
+            prepared.run_batch_injected(
+                &requests[next..end],
+                Arc::clone(&compute),
+                injector,
+            )?
+        };
         if grows_baseline.is_none() {
             // The first batch sizes every arena; steady state is measured
             // from here.
@@ -314,6 +368,12 @@ pub(crate) fn serve_arrivals_adaptive_impl(
                 &observed,
                 &mut estimator,
                 &mut consecutive_miss,
+                // Rateless rounds split shares proportionally and can
+                // legitimately hand a worker zero rows, and lossy links
+                // erase whole replies — silence is not death evidence
+                // there, so only the loss-free fixed-chunk path counts
+                // misses. Speed observations still feed the estimator.
+                !streaming && !lossy_scenario,
             );
             if batch_idx % ad.est.check_every as u64 == 0 {
                 let mut new_suspects = Vec::new();
@@ -339,30 +399,59 @@ pub(crate) fn serve_arrivals_adaptive_impl(
                             &alive_counts,
                             ad.est.min_obs,
                         )?;
-                        let realloc = match resolve_policy {
-                            Some(p) => p.allocate_capped(
-                                cfg.model,
-                                &est_spec,
-                                prepared.n() as f64,
-                            )?,
-                            None => proposed_allocation_capped(
-                                cfg.model,
-                                &est_spec,
-                                prepared.n() as f64,
-                            )?,
+                        // Finite codes answer to the coded-row ceiling
+                        // (`n` rows exist, period); the rateless fountain
+                        // does not — solve unconstrained and let
+                        // `extend_rechunk` mint whatever the optimum asks
+                        // for (slack of one bump per group so the Hamilton
+                        // rounding never hits its own budget).
+                        let (realloc, cap) = if streaming {
+                            let r = match resolve_policy {
+                                Some(p) => p.allocate(cfg.model, &est_spec)?,
+                                None => {
+                                    proposed_allocation(cfg.model, &est_spec)?
+                                }
+                            };
+                            let target: f64 = r
+                                .loads
+                                .iter()
+                                .zip(&alive_counts)
+                                .map(|(&l, &n)| l * n as f64)
+                                .sum();
+                            let cap = (target.ceil() as usize
+                                + est_spec.num_groups())
+                            .max(spec.k);
+                            (r, cap)
+                        } else {
+                            let r = match resolve_policy {
+                                Some(p) => p.allocate_capped(
+                                    cfg.model,
+                                    &est_spec,
+                                    prepared.n() as f64,
+                                )?,
+                                None => proposed_allocation_capped(
+                                    cfg.model,
+                                    &est_spec,
+                                    prepared.n() as f64,
+                                )?,
+                            };
+                            (r, prepared.n())
                         };
                         let per_worker = integer_per_worker_capped(
                             &state,
                             &suspected,
                             &realloc.loads,
-                            prepared.n(),
+                            cap,
                             spec.k,
                         )?;
                         Ok((est_spec, per_worker))
                     })();
                     match attempt {
                         Ok((est_spec, per_worker)) => {
-                            prepared.rechunk(&per_worker)?;
+                            // Identical to `rechunk` for finite codes;
+                            // grows the coded horizon first when a
+                            // rateless split overshoots the current `n`.
+                            prepared.extend_rechunk(&per_worker)?;
                             assumed = est_spec;
                             estimator.flush();
                             consecutive_miss.fill(0);
@@ -392,6 +481,10 @@ pub(crate) fn serve_arrivals_adaptive_impl(
         makespan: Some(start.elapsed()),
         encodes: prepared.encode_count(),
     };
+    let rateless = rl_summary.map(|mut s| {
+        s.finalize(spec.k, prepared.re_encoded_rows());
+        s
+    });
     Ok(AdaptiveServeReport {
         serve,
         reallocations,
@@ -406,20 +499,24 @@ pub(crate) fn serve_arrivals_adaptive_impl(
             .map_or(0, |base| prepared.scratch_grows() - base),
         assumed_spec: assumed,
         decode_cache: prepared.decode_cache_stats(),
+        decode_cache_bypasses: prepared.decode_cache_bypasses(),
+        rateless,
     })
 }
 
 /// Feed one batch's consumed replies into the estimator (bucketed into
 /// per-`(group, load)` censored samples — the tight-budget integerization
 /// can split a group across two adjacent loads, and workers racing under
-/// different loads have different distributions) and bump the miss
-/// counters of dispatched workers that stayed silent.
+/// different loads have different distributions) and, when `count_misses`,
+/// bump the miss counters of dispatched workers that stayed silent —
+/// silence only implies death on the loss-free fixed-chunk path.
 fn digest_batch(
     state: &ScenarioState,
     per_worker: &[usize],
     observed: &[WorkerObservation],
     estimator: &mut SpeedEstimator,
     consecutive_miss: &mut [usize],
+    count_misses: bool,
 ) {
     // The master's observation horizon: the batch completed (and it
     // stopped listening) at the last consumed reply's model time; every
@@ -440,7 +537,7 @@ fn digest_batch(
             *dispatched.entry((state.group_of(w), l)).or_default() += 1;
             if seen[w] {
                 consecutive_miss[w] = 0;
-            } else {
+            } else if count_misses {
                 consecutive_miss[w] += 1;
             }
         }
@@ -733,5 +830,147 @@ mod tests {
         let max = *pw[..4].iter().max().unwrap();
         let min = *pw[..4].iter().min().unwrap();
         assert!(max - min <= 1, "within-group split must stay adjacent");
+    }
+
+    #[test]
+    fn fixed_code_rides_out_burst_loss_within_redundancy() {
+        // A burst window blacks out group 0's links entirely (all packets
+        // dropped, deterministically). Group 0 carries ~52 of 128 rows at
+        // rate 1/2, so the surviving ~76 still cover k = 64 and the MDS
+        // stream serves every job through the packet-filtered collection.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let (a, reqs, offsets) = stream(8, 4, 91);
+        let cfg = JobConfig { time_scale: 0.002, ..Default::default() };
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 2,
+            kind: FailureKind::BurstDrop { group: 0, batches: 3 },
+        }])
+        .unwrap();
+        let rep = serve_arrivals_adaptive(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &offsets,
+            1,
+            Arc::new(NativeCompute),
+            &cfg,
+            &scenario,
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.serve.recorder.count(), 8);
+        assert!(rep.serve.worst_error < 1e-8, "err {}", rep.serve.worst_error);
+        assert_eq!(rep.serve.encodes, 1);
+        // Finite codes never populate the streaming summary.
+        assert!(rep.rateless.is_none());
+    }
+
+    #[test]
+    fn rateless_streams_through_loss_and_reports_overhead() {
+        // 20% i.i.d. packet loss on both groups from batch 1: the fixed-n
+        // collection would gamble on ≥ k survivors per batch, the fountain
+        // just keeps soliciting. Every job must complete, and the summary
+        // must carry measured (not declared) accounting.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let (a, reqs, offsets) = stream(6, 4, 92);
+        let cfg = JobConfig {
+            time_scale: 0.002,
+            code: Some("rateless-rlc".into()),
+            ..Default::default()
+        };
+        let scenario = FailureScenario::new(vec![
+            FailureEvent {
+                at_batch: 1,
+                kind: FailureKind::LossyGroup { group: 0, p: 0.2 },
+            },
+            FailureEvent {
+                at_batch: 1,
+                kind: FailureKind::LossyGroup { group: 1, p: 0.2 },
+            },
+        ])
+        .unwrap();
+        let rep = serve_arrivals_adaptive(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &offsets,
+            2,
+            Arc::new(NativeCompute),
+            &cfg,
+            &scenario,
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.serve.recorder.count(), 6);
+        assert!(rep.serve.worst_error < 1e-6, "err {}", rep.serve.worst_error);
+        let summary = rep.rateless.expect("rateless jobs populate the summary");
+        assert!(summary.batches >= 1);
+        assert!(summary.rows_received >= summary.batches * spec.k as u64);
+        assert!(summary.rows_issued >= summary.rows_received);
+        assert!(summary.overhead >= 1.0, "overhead {}", summary.overhead);
+        // The elasticity invariant, measured: soliciting extra rows under
+        // loss minted fresh row ids only.
+        assert_eq!(summary.re_encoded_rows, 0);
+        assert_eq!(rep.post_setup_encodes, 0);
+        assert_eq!(rep.serve.encodes, 1);
+    }
+
+    #[test]
+    fn rateless_drift_resolve_extends_instead_of_capping() {
+        // Start at the elastic worst case — a rate-1 allocation, n == k ==
+        // 64, zero slack — and slow group 0 by 4× so the estimator's
+        // re-solve wants real redundancy. A finite code would be pinned at
+        // the n-row ceiling; the fountain's re-solve runs uncapped and
+        // `extend_rechunk` mints the difference with zero re-encodes.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 64.0).unwrap();
+        let (a, reqs, offsets) = stream(16, 4, 93);
+        let cfg = JobConfig {
+            time_scale: 0.002,
+            code: Some("rateless-rlc".into()),
+            ..Default::default()
+        };
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 2,
+            kind: FailureKind::SlowGroup { group: 0, factor: 4.0 },
+        }])
+        .unwrap();
+        let adapt = AdaptiveServeConfig {
+            est: EstimatorConfig {
+                min_obs: 4,
+                check_every: 2,
+                threshold: 0.5,
+                ..Default::default()
+            },
+            death_after: 3,
+        };
+        let rep = serve_arrivals_adaptive(
+            &spec,
+            &alloc,
+            &a,
+            &reqs,
+            &offsets,
+            1,
+            Arc::new(NativeCompute),
+            &cfg,
+            &scenario,
+            Some(&adapt),
+        )
+        .unwrap();
+        assert_eq!(rep.serve.recorder.count(), 16);
+        assert!(rep.serve.worst_error < 1e-6, "err {}", rep.serve.worst_error);
+        assert!(rep.reallocations >= 1, "drift must trigger a re-solve");
+        let summary = rep.rateless.expect("rateless jobs populate the summary");
+        // Scale-out is free: no previously issued row was re-encoded, and
+        // the single setup encode is still the only encode pass.
+        assert_eq!(summary.re_encoded_rows, 0);
+        assert_eq!(rep.post_setup_encodes, 0);
+        assert_eq!(rep.serve.encodes, 1);
+        // Streaming silence is not death evidence: nobody was buried.
+        assert!(rep.suspected_dead.is_empty());
     }
 }

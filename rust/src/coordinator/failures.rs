@@ -51,6 +51,27 @@ pub enum FailureKind {
         /// Multiplicative μ factor (`< 1` = heavier straggling).
         factor: f64,
     },
+    /// Lossy links: from this batch on, every packet a worker in `group`
+    /// sends is dropped i.i.d. with probability `p` (Bernoulli per
+    /// packet, deterministic given the batch seed). Repeated events
+    /// *replace* the group's loss rate — loss is a link property, not a
+    /// compounding multiplier. `p = 0` heals the link.
+    LossyGroup {
+        /// Group index.
+        group: usize,
+        /// Per-packet drop probability in `[0, 1]`.
+        p: f64,
+    },
+    /// Burst drop: every packet from `group` is dropped for `batches`
+    /// serving batches starting at the event batch, then the link heals
+    /// back to the group's Bernoulli rate (if any). Composable with
+    /// kill/slow/drift events at the same batches.
+    BurstDrop {
+        /// Group index.
+        group: usize,
+        /// Number of batches the burst lasts (`>= 1`).
+        batches: u64,
+    },
 }
 
 /// A [`FailureKind`] that fires before serving batch `at_batch` (0-based).
@@ -93,6 +114,20 @@ impl FailureScenario {
                 | FailureKind::ScaleGroupMu { factor, .. } => {
                     validate_factor(*factor)?;
                 }
+                FailureKind::LossyGroup { p, .. } => {
+                    if !(*p >= 0.0 && *p <= 1.0) {
+                        return Err(Error::InvalidSpec(format!(
+                            "loss probability must be in [0, 1], got {p}"
+                        )));
+                    }
+                }
+                FailureKind::BurstDrop { batches, .. } => {
+                    if *batches == 0 {
+                        return Err(Error::InvalidSpec(
+                            "BurstDrop must last at least one batch".into(),
+                        ));
+                    }
+                }
             }
         }
         events.sort_by_key(|e| e.at_batch);
@@ -114,13 +149,69 @@ impl FailureScenario {
         &self.events
     }
 
+    /// Does the script contain any lossy-link event
+    /// ([`FailureKind::LossyGroup`] / [`FailureKind::BurstDrop`])? The
+    /// session uses this to route fixed-`n` MDS serving onto the
+    /// loss-aware collection path up front rather than discovering loss
+    /// mid-stream.
+    pub fn has_loss(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(
+                e.kind,
+                FailureKind::LossyGroup { .. } | FailureKind::BurstDrop { .. }
+            )
+        })
+    }
+
     /// Parse the CLI mini-syntax:
     ///
     /// - `failures`: `BATCH:w1,w2[;BATCH:w3...]` — kill workers at a batch;
     /// - `drift`: `BATCH:GROUP:FACTOR[;...]` — dilate a group `FACTOR`×
     ///   (i.e. [`FailureKind::SlowGroup`]) at a batch.
     pub fn parse(failures: Option<&str>, drift: Option<&str>) -> Result<FailureScenario> {
+        FailureScenario::parse_with_loss(failures, drift, None)
+    }
+
+    /// [`FailureScenario::parse`] plus the lossy-link dialect:
+    ///
+    /// - `loss`: `BATCH:GROUP:P[;...]` — Bernoulli per-packet drop with
+    ///   probability `P` on group `GROUP`'s links from batch `BATCH`
+    ///   ([`FailureKind::LossyGroup`]); or
+    ///   `BATCH:GROUP:burst:BATCHES` — drop *everything* from the group
+    ///   for `BATCHES` batches ([`FailureKind::BurstDrop`]).
+    pub fn parse_with_loss(
+        failures: Option<&str>,
+        drift: Option<&str>,
+        loss: Option<&str>,
+    ) -> Result<FailureScenario> {
         let mut events = Vec::new();
+        if let Some(spec) = loss {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let fields: Vec<&str> = part.split(':').collect();
+                let kind = match fields.as_slice() {
+                    [_, group, p] => FailureKind::LossyGroup {
+                        group: parse_num::<usize>("loss group", group)?,
+                        p: parse_num::<f64>("loss probability", p)?,
+                    },
+                    [_, group, burst, batches] if burst.trim() == "burst" => {
+                        FailureKind::BurstDrop {
+                            group: parse_num::<usize>("loss group", group)?,
+                            batches: parse_num::<u64>("burst batches", batches)?,
+                        }
+                    }
+                    _ => {
+                        return Err(Error::InvalidSpec(format!(
+                            "--loss entry `{part}` is not BATCH:GROUP:P or \
+                             BATCH:GROUP:burst:BATCHES"
+                        )))
+                    }
+                };
+                events.push(FailureEvent {
+                    at_batch: parse_num::<u64>("loss batch", fields[0])?,
+                    kind,
+                });
+            }
+        }
         if let Some(spec) = failures {
             for part in spec.split(';').filter(|s| !s.is_empty()) {
                 let (batch, list) = part.split_once(':').ok_or_else(|| {
@@ -189,6 +280,11 @@ pub struct ScenarioState {
     pub dead: BTreeSet<usize>,
     /// Per-worker delay multipliers (machine-level slowdowns).
     pub slow: Vec<f64>,
+    /// Per-group Bernoulli packet-loss probability (0 = clean link).
+    loss: Vec<f64>,
+    /// Per-group burst window: packets drop entirely while
+    /// `batch < burst_until[g]`.
+    burst_until: Vec<u64>,
     applied: usize,
 }
 
@@ -200,6 +296,8 @@ impl ScenarioState {
             spec: spec.clone(),
             dead: initial_dead.iter().copied().collect(),
             slow: vec![1.0; spec.total_workers()],
+            loss: vec![0.0; spec.num_groups()],
+            burst_until: vec![0; spec.num_groups()],
             applied: 0,
         }
     }
@@ -214,14 +312,29 @@ impl ScenarioState {
             if e.at_batch > batch {
                 break;
             }
-            self.apply(&e.kind)?;
+            self.apply(&e.kind, e.at_batch)?;
             self.applied += 1;
             changed = true;
         }
         Ok(changed)
     }
 
-    fn apply(&mut self, kind: &FailureKind) -> Result<()> {
+    /// Effective per-packet drop probability for `group`'s links at
+    /// `batch`: 1 inside a burst window, the Bernoulli rate otherwise.
+    pub fn loss_probability(&self, group: usize, batch: u64) -> f64 {
+        if batch < *self.burst_until.get(group).unwrap_or(&0) {
+            return 1.0;
+        }
+        *self.loss.get(group).unwrap_or(&0.0)
+    }
+
+    /// Is any link lossy at `batch` (Bernoulli rate set or burst window
+    /// open)?
+    pub fn any_loss(&self, batch: u64) -> bool {
+        (0..self.loss.len()).any(|g| self.loss_probability(g, batch) > 0.0)
+    }
+
+    fn apply(&mut self, kind: &FailureKind, at_batch: u64) -> Result<()> {
         let nw = self.spec.total_workers();
         let ng = self.spec.num_groups();
         match kind {
@@ -262,6 +375,24 @@ impl ScenarioState {
                     )));
                 }
                 self.spec.groups[*group].mu *= factor;
+            }
+            FailureKind::LossyGroup { group, p } => {
+                if *group >= ng {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario degrades group {group}, cluster has {ng}"
+                    )));
+                }
+                self.loss[*group] = *p;
+            }
+            FailureKind::BurstDrop { group, batches } => {
+                if *group >= ng {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario bursts group {group}, cluster has {ng}"
+                    )));
+                }
+                let until = at_batch.saturating_add(*batches);
+                let slot = &mut self.burst_until[*group];
+                *slot = (*slot).max(until);
             }
         }
         Ok(())
@@ -423,6 +554,93 @@ mod tests {
         .unwrap();
         let mut st = ScenarioState::new(&spec(), &[]);
         assert!(st.advance(&scenario, 0).is_err());
+    }
+
+    #[test]
+    fn lossy_links_replace_and_burst_windows_heal() {
+        let scenario = FailureScenario::new(vec![
+            FailureEvent {
+                at_batch: 2,
+                kind: FailureKind::LossyGroup { group: 1, p: 0.1 },
+            },
+            FailureEvent {
+                at_batch: 4,
+                kind: FailureKind::BurstDrop { group: 0, batches: 3 },
+            },
+            FailureEvent {
+                at_batch: 8,
+                kind: FailureKind::LossyGroup { group: 1, p: 0.0 },
+            },
+        ])
+        .unwrap();
+        assert!(scenario.has_loss());
+        let mut st = ScenarioState::new(&spec(), &[]);
+        assert!(!st.any_loss(0));
+        st.advance(&scenario, 2).unwrap();
+        assert_eq!(st.loss_probability(1, 2), 0.1);
+        assert_eq!(st.loss_probability(0, 2), 0.0);
+        assert!(st.any_loss(2));
+        st.advance(&scenario, 4).unwrap();
+        // Burst drops everything on group 0 for batches 4..7, then heals.
+        assert_eq!(st.loss_probability(0, 4), 1.0);
+        assert_eq!(st.loss_probability(0, 6), 1.0);
+        assert_eq!(st.loss_probability(0, 7), 0.0);
+        // Loss replaces rather than composes: healing resets group 1.
+        st.advance(&scenario, 8).unwrap();
+        assert_eq!(st.loss_probability(1, 8), 0.0);
+        assert!(!st.any_loss(8));
+        // Kill/slow scripts without loss events report has_loss = false.
+        assert!(!FailureScenario::parse(Some("3:0"), None).unwrap().has_loss());
+    }
+
+    #[test]
+    fn loss_validation_rejects_bad_probabilities_and_groups() {
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 0, p: 1.5 },
+        }])
+        .is_err());
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 0, p: f64::NAN },
+        }])
+        .is_err());
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::BurstDrop { group: 0, batches: 0 },
+        }])
+        .is_err());
+        let scenario = FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 9, p: 0.5 },
+        }])
+        .unwrap();
+        let mut st = ScenarioState::new(&spec(), &[]);
+        assert!(st.advance(&scenario, 0).is_err());
+    }
+
+    #[test]
+    fn parses_loss_dialect() {
+        let s = FailureScenario::parse_with_loss(
+            Some("3:0"),
+            None,
+            Some("1:1:0.25;5:0:burst:2"),
+        )
+        .unwrap();
+        assert_eq!(s.events().len(), 3);
+        assert!(s.has_loss());
+        assert_eq!(
+            s.events()[0].kind,
+            FailureKind::LossyGroup { group: 1, p: 0.25 }
+        );
+        assert_eq!(s.events()[0].at_batch, 1);
+        assert_eq!(
+            s.events()[2].kind,
+            FailureKind::BurstDrop { group: 0, batches: 2 }
+        );
+        assert!(FailureScenario::parse_with_loss(None, None, Some("1:2")).is_err());
+        assert!(FailureScenario::parse_with_loss(None, None, Some("1:2:x:3"))
+            .is_err());
     }
 
     #[test]

@@ -158,6 +158,7 @@ pub struct FrontEndReport {
 pub(crate) struct FrontServeReport {
     pub serve: ServeReport,
     pub decode_cache: (u64, u64),
+    pub decode_cache_bypasses: u64,
     pub post_setup_encodes: u64,
     pub steady_allocs: u64,
     pub front: FrontEndReport,
@@ -425,6 +426,7 @@ pub(crate) fn serve_arrivals_front_impl(
     };
     Ok(FrontServeReport {
         decode_cache: prepared.decode_cache_stats(),
+        decode_cache_bypasses: prepared.decode_cache_bypasses(),
         post_setup_encodes: prepared.encode_count().saturating_sub(1),
         steady_allocs: grows_baseline
             .map_or(0, |base| prepared.scratch_grows() - base),

@@ -38,11 +38,21 @@
 //! proofs) is [`crate::workload::admission`].
 //!
 //! Long-lived streams face failures and drift; the [`failures`] module
-//! scripts them (deaths, machine slowdowns, group drift) and
+//! scripts them (deaths, machine slowdowns, group drift, and lossy
+//! links — per-packet Bernoulli drops and burst windows) and
 //! [`adaptive`] layers the estimator-driven re-allocation loop on top —
 //! re-solving the paper's allocation on the estimated surviving cluster
 //! and re-slicing the already-encoded rows ([`PreparedJob::rechunk`])
 //! with zero additional encode work.
+//!
+//! With the rateless fountain (`--code rateless-rlc`) serving switches
+//! to the **streaming** collection loop ([`rateless`],
+//! [`PreparedJob::run_batch_streamed`]): solicitation rounds of fresh
+//! coded rows until any `k` survive the links, with the measured
+//! reception overhead surfaced as [`ServeOutcome::rateless`]. The row
+//! horizon grows in place when loss or elastic scale-out
+//! ([`PreparedJob::extend_rechunk`]) wants more rows than exist — fresh
+//! indices only, so the encoder's re-encode counter stays 0.
 //!
 //! **Entry point**: the [`Session`] facade. Policy × mode × scenario ×
 //! adaptivity are orthogonal builder knobs, and every serve returns one
@@ -80,6 +90,7 @@ pub mod frontend;
 pub mod master;
 pub mod metrics;
 pub mod prepared;
+pub mod rateless;
 pub mod session;
 pub mod straggler;
 
@@ -99,5 +110,6 @@ pub use master::{
 pub use master::{derive_stream_seed, JobConfig, JobReport, ServeReport};
 pub use metrics::LatencyRecorder;
 pub use prepared::{PreparedJob, WorkerObservation};
+pub use rateless::{RatelessBatchStats, RatelessSummary, RATELESS_PACKET_ROWS};
 pub use session::{Mode, ServeOutcome, Session, SessionBuilder};
 pub use straggler::StragglerInjector;

@@ -29,9 +29,13 @@
 use crate::allocation::Allocation;
 use crate::coding::code::Code;
 use crate::coding::encoder::WorkerChunk;
-use crate::coding::{Decoder, Encoder, Matrix};
+use crate::coding::{Decoder, Encoder, GeneratorKind, Matrix};
 use crate::coordinator::master::{
     JobConfig, JobReport, GENERATOR_SEED_TAG, STRAGGLE_SEED_TAG,
+};
+use crate::coordinator::rateless::{
+    packet_dropped, proportional_shares, RatelessBatchStats,
+    RATELESS_MAX_ROUNDS, RATELESS_PACKET_ROWS,
 };
 use crate::coordinator::{Compute, StragglerInjector};
 use crate::model::ClusterSpec;
@@ -77,8 +81,11 @@ pub struct PreparedJob {
     /// dense MDS codes the trait's default methods delegate to the exact
     /// pre-trait call chain, so prepared serving is bit-identical.
     code: Box<dyn Code>,
-    /// The uncoded data matrix — kept only when `cfg.verify_decode`, for
-    /// ground-truth error reporting (`None` drops the O(k·d) copy).
+    /// The uncoded data matrix — kept when `cfg.verify_decode` (for
+    /// ground-truth error reporting) and always for the rateless code
+    /// (the master mints fresh coded rows from it when the stream
+    /// extends past the materialized prefix); `None` otherwise, dropping
+    /// the O(k·d) copy.
     a: Option<Matrix>,
     /// The encoder that produced `chunks`; its call counter is the live
     /// measurement behind [`PreparedJob::encode_count`] — any future code
@@ -157,13 +164,14 @@ impl PreparedJob {
             .collect();
         let mut decoder = Decoder::with_cache_capacity(gen, cfg.decode_cache);
         decoder.set_pool(Some(Arc::clone(&pool)));
+        let rateless = code.generator() == GeneratorKind::RatelessRlc;
         Ok(PreparedJob {
             spec: spec.clone(),
             cfg: cfg.clone(),
             per_worker,
             n,
             code,
-            a: cfg.verify_decode.then(|| a.clone()),
+            a: (cfg.verify_decode || rateless).then(|| a.clone()),
             encoder,
             coded,
             chunks,
@@ -242,12 +250,82 @@ impl PreparedJob {
         Ok(())
     }
 
+    /// Whether this job serves with the rateless fountain — the only
+    /// code whose row horizon can grow after setup.
+    pub fn is_rateless(&self) -> bool {
+        self.code.generator() == GeneratorKind::RatelessRlc
+    }
+
+    /// Grow the rateless row horizon to `new_n`: mint coefficient rows
+    /// `[n, new_n)` (pure functions of `(seed, index)` — no existing row
+    /// is touched), extend the generator prefix, and append the fresh
+    /// coded rows. No-op if `new_n ≤ n`. The zero-re-encode claim is
+    /// *measured* by [`PreparedJob::re_encoded_rows`]: every extension
+    /// starts at the encoder's watermark, so the overlap counter stays 0.
+    fn extend_horizon(&mut self, new_n: usize) -> Result<()> {
+        if new_n <= self.n {
+            return Ok(());
+        }
+        let a = self.a.as_ref().ok_or_else(|| {
+            Error::Runtime("rateless job lost its data matrix".into())
+        })?;
+        let fresh = self.code.encode_rows(
+            &self.encoder,
+            a,
+            self.n..new_n,
+            &self.pool,
+            self.pool.threads(),
+        )?;
+        self.encoder.extend_to(new_n)?;
+        for r in 0..fresh.rows() {
+            self.coded.push_row(fresh.row(r))?;
+        }
+        self.n = new_n;
+        Ok(())
+    }
+
+    /// Elastic scale-out: re-allocate like [`PreparedJob::rechunk`], but
+    /// when the new loads want more rows than exist (`Σ l_i > n`) and the
+    /// code is rateless, mint exactly the missing tail first. Newly
+    /// arriving capacity therefore gets **fresh** row ranges — the
+    /// previously issued rows are never re-encoded, and
+    /// [`PreparedJob::re_encoded_rows`] measures that rather than
+    /// declaring it. Finite codes keep the hard `n` ceiling (the rechunk
+    /// error explains that re-encoding is their only way out).
+    pub fn extend_rechunk(&mut self, per_worker: &[usize]) -> Result<()> {
+        let total: usize = per_worker.iter().sum();
+        if total > self.n && self.is_rateless() {
+            self.extend_horizon(total)?;
+        }
+        self.rechunk(per_worker)
+    }
+
     /// Encode passes performed through this job's encoder since
     /// construction — a live measurement (the encoder's own call counter),
     /// not a declared constant. The steady-state serving invariant is that
     /// this stays 1 no matter how many batches run.
     pub fn encode_count(&self) -> u64 {
         self.encoder.encode_calls()
+    }
+
+    /// Coded rows produced by this job's encoder (row-level counter; the
+    /// setup encode contributes `n`).
+    pub fn rows_encoded(&self) -> u64 {
+        self.encoder.rows_encoded()
+    }
+
+    /// Rows encoded *again* — ranges overlapping the encoder's
+    /// high-water mark. The rateless elasticity invariant is that this
+    /// stays 0 across any schedule of streaming extensions and
+    /// scale-outs.
+    pub fn re_encoded_rows(&self) -> u64 {
+        self.encoder.re_encoded_rows()
+    }
+
+    /// Decode factorizations served *around* the LRU cache by the
+    /// thrash-bypass guard.
+    pub fn decode_cache_bypasses(&self) -> u64 {
+        self.decoder.cache_bypasses()
     }
 
     /// Decode factorization-cache `(hits, misses)` counters.
@@ -346,6 +424,27 @@ impl PreparedJob {
         compute: Arc<dyn Compute>,
         injector: &StragglerInjector,
     ) -> Result<(Vec<JobReport>, Vec<WorkerObservation>)> {
+        self.run_batch_lossy(requests, compute, injector, &[], 0)
+    }
+
+    /// [`PreparedJob::run_batch_injected`] over lossy links: each reply
+    /// is split into packets of [`RATELESS_PACKET_ROWS`] rows and each
+    /// packet survives its worker's Bernoulli draw
+    /// ([`crate::coordinator::rateless::packet_dropped`], keyed by
+    /// `batch_seed` and the packet's first global row) or vanishes.
+    /// `loss` is the per-worker delivery loss probability (empty = none,
+    /// which is the bit-identical legacy path). The fixed-`n` MDS code
+    /// has no recourse when the surviving support falls below `k`: the
+    /// batch fails with a clean sub-`k` decode error — exactly the
+    /// ceiling the rateless path removes.
+    pub fn run_batch_lossy(
+        &mut self,
+        requests: &[Vec<f64>],
+        compute: Arc<dyn Compute>,
+        injector: &StragglerInjector,
+        loss: &[f64],
+        batch_seed: u64,
+    ) -> Result<(Vec<JobReport>, Vec<WorkerObservation>)> {
         if requests.is_empty() {
             return Err(Error::InvalidSpec("empty request batch".into()));
         }
@@ -430,16 +529,28 @@ impl PreparedJob {
                         load: reply.range.len(),
                         model_time: injector.model_delay(reply.worker),
                     });
-                    self.rows_buf.extend(reply.range.clone());
-                    for (col, y) in self.cols_buf.iter_mut().zip(&reply.ys) {
-                        col.extend_from_slice(y);
+                    let p = loss.get(reply.worker).copied().unwrap_or(0.0);
+                    if p <= 0.0 {
+                        self.rows_buf.extend(reply.range.clone());
+                        for (col, y) in self.cols_buf.iter_mut().zip(&reply.ys)
+                        {
+                            col.extend_from_slice(y);
+                        }
+                    } else {
+                        self.absorb_lossy_reply(&reply, p, batch_seed);
                     }
                 }
                 Err(_) => {
                     return Err(Error::Decode(format!(
-                        "only {} of {} rows arrived (too many dead workers?)",
+                        "only {} of {} rows arrived ({})",
                         self.rows_buf.len(),
-                        k
+                        k,
+                        if loss.is_empty() {
+                            "too many dead workers?"
+                        } else {
+                            "dead workers or lossy links; the fixed-n code \
+                             cannot solicit more rows"
+                        }
                     )))
                 }
             }
@@ -456,8 +567,14 @@ impl PreparedJob {
         for (decoded, request) in decoded_all.into_iter().zip(requests) {
             // Ground-truth verification is O(k·d) master-side work per
             // request — real serving disables it (`cfg.verify_decode`).
-            let max_error = if let Some(a) = &self.a {
-                let truth = a.matvec(request);
+            // Gated on the flag, not on `a`: rateless jobs keep the data
+            // matrix around for row minting even when not verifying.
+            let max_error = if self.cfg.verify_decode {
+                let truth = self
+                    .a
+                    .as_ref()
+                    .expect("verify_decode keeps the data matrix")
+                    .matvec(request);
                 decoded
                     .iter()
                     .zip(&truth)
@@ -478,6 +595,296 @@ impl PreparedJob {
             });
         }
         Ok((reports, observed))
+    }
+
+    /// Append the surviving packets of one reply to the collection
+    /// arenas; returns the number of rows that made it. Packet fate is a
+    /// pure function of `(batch_seed, first global row, p)` — see
+    /// [`crate::coordinator::rateless::packet_dropped`].
+    fn absorb_lossy_reply(
+        &mut self,
+        reply: &BatchReply,
+        p: f64,
+        batch_seed: u64,
+    ) -> u64 {
+        let start = reply.range.start;
+        let len = reply.range.len();
+        let mut survivors = 0u64;
+        let mut off = 0usize;
+        while off < len {
+            let pk = RATELESS_PACKET_ROWS.min(len - off);
+            if !packet_dropped(batch_seed, start + off, p) {
+                self.rows_buf.extend(start + off..start + off + pk);
+                for (col, y) in self.cols_buf.iter_mut().zip(&reply.ys) {
+                    col.extend_from_slice(&y[off..off + pk]);
+                }
+                survivors += pk as u64;
+            }
+            off += pk;
+        }
+        survivors
+    }
+
+    /// [`PreparedJob::run_batch_rateless_injected`] with the straggle
+    /// realization derived from `batch_seed` — the streaming analogue of
+    /// [`PreparedJob::run_batch`]. Returns the per-batch streaming
+    /// tallies alongside the reports.
+    pub fn run_batch_streamed(
+        &mut self,
+        requests: &[Vec<f64>],
+        compute: Arc<dyn Compute>,
+        batch_seed: u64,
+        loss: &[f64],
+    ) -> Result<(Vec<JobReport>, RatelessBatchStats)> {
+        let mut injector = match self.injector_scratch.take() {
+            Some(inj) => inj,
+            None => {
+                self.grows += 1;
+                StragglerInjector::sample(
+                    &self.spec,
+                    self.cfg.model,
+                    &self.per_worker,
+                    self.cfg.time_scale,
+                    batch_seed ^ STRAGGLE_SEED_TAG,
+                )?
+            }
+        };
+        injector.resample(
+            &self.spec,
+            self.cfg.model,
+            &self.per_worker,
+            self.cfg.time_scale,
+            batch_seed ^ STRAGGLE_SEED_TAG,
+        )?;
+        injector.set_dead(self.cfg.dead_workers.iter().copied());
+        let result = self.run_batch_rateless_injected(
+            requests,
+            compute,
+            &injector,
+            loss,
+            batch_seed,
+        );
+        self.injector_scratch = Some(injector);
+        result.map(|(reports, _, stats)| (reports, stats))
+    }
+
+    /// Serve one batch by **streaming**: instead of dispatching fixed
+    /// chunks and stopping at `k`, the master runs solicitation rounds —
+    /// each round issues just enough *fresh* coded rows to cover its
+    /// deficit (inflated by ≈12.5% plus one packet when links are
+    /// lossy), split over live workers proportionally to their loads,
+    /// and the round's surviving packets join the decode support. Rows
+    /// come first from the already-encoded prefix; when a round needs
+    /// more, the horizon grows in place ([`PreparedJob::extend_horizon`])
+    /// by minting rows at fresh indices — never re-encoding, which
+    /// [`PreparedJob::re_encoded_rows`] measures.
+    ///
+    /// The result is bit-reproducible from the seed at any pool size:
+    /// row coefficients, packet fates, and the processing order (a
+    /// per-round barrier sorted by global row) are all arrival-order
+    /// independent.
+    pub fn run_batch_rateless_injected(
+        &mut self,
+        requests: &[Vec<f64>],
+        compute: Arc<dyn Compute>,
+        injector: &StragglerInjector,
+        loss: &[f64],
+        batch_seed: u64,
+    ) -> Result<(Vec<JobReport>, Vec<WorkerObservation>, RatelessBatchStats)>
+    {
+        if requests.is_empty() {
+            return Err(Error::InvalidSpec("empty request batch".into()));
+        }
+        if injector.len() != self.spec.total_workers() {
+            return Err(Error::InvalidSpec(format!(
+                "injector covers {} workers, cluster has {}",
+                injector.len(),
+                self.spec.total_workers()
+            )));
+        }
+        if !self.is_rateless() {
+            return Err(Error::InvalidSpec(format!(
+                "streamed serving needs the rateless code, job uses {}",
+                self.code.name()
+            )));
+        }
+        let b = requests.len();
+        let k = self.spec.k;
+        let model_latency = injector.analytic_completion_with(
+            &self.per_worker,
+            k,
+            &mut self.completion_order,
+        );
+        // Issuance weights: live workers whose link can deliver at all
+        // (a fully dark link — burst window, p = 1 — earns no rows this
+        // batch; Bernoulli-lossy links stay in and the inflation covers
+        // their expected shortfall).
+        let mut weights: Vec<(usize, usize)> = Vec::new();
+        for (w, &l) in self.per_worker.iter().enumerate() {
+            if injector.is_dead(w) {
+                continue;
+            }
+            if loss.get(w).copied().unwrap_or(0.0) >= 1.0 {
+                continue;
+            }
+            weights.push((w, l));
+        }
+        if weights.is_empty() {
+            return Err(Error::Decode(
+                "no worker can deliver rows (all dead or fully lossy)".into(),
+            ));
+        }
+        let lossy = weights
+            .iter()
+            .any(|&(w, _)| loss.get(w).copied().unwrap_or(0.0) > 0.0);
+
+        let xs_arc = self.stage_requests(requests);
+        let start = wall_now();
+        let mut grew = self.rows_buf.capacity() < self.n;
+        self.rows_buf.clear();
+        self.rows_buf.reserve(self.n);
+        while self.cols_buf.len() > b {
+            self.cols_spare
+                .push(self.cols_buf.pop().expect("len checked"));
+        }
+        while self.cols_buf.len() < b {
+            self.cols_buf.push(self.cols_spare.pop().unwrap_or_default());
+        }
+        for col in self.cols_buf.iter_mut() {
+            grew |= col.capacity() < self.n;
+            col.clear();
+            col.reserve(self.n);
+        }
+        self.grows += u64::from(grew);
+
+        let mut stats = RatelessBatchStats::default();
+        let mut observed = Vec::new();
+        let mut contributed = vec![false; self.spec.total_workers()];
+        let mut cursor = 0usize; // next unissued global row this batch
+        let mut rounds = 0u64;
+        while self.rows_buf.len() < k {
+            if rounds >= RATELESS_MAX_ROUNDS {
+                return Err(Error::Decode(format!(
+                    "streamed collection stalled after {rounds} rounds \
+                     with {} of {k} rows (links too lossy?)",
+                    self.rows_buf.len()
+                )));
+            }
+            let deficit = k - self.rows_buf.len();
+            let inflation = if lossy {
+                deficit.div_ceil(8) + RATELESS_PACKET_ROWS
+            } else {
+                0
+            };
+            let issue = deficit + inflation;
+            if cursor + issue > self.n {
+                self.extend_horizon(cursor + issue)?;
+            }
+            let shares = proportional_shares(issue, &weights);
+            let (tx, rx) = mpsc::channel::<BatchReply>();
+            let mut next_row = cursor;
+            for &(w, cnt) in &shares {
+                if cnt == 0 {
+                    continue;
+                }
+                let range = next_row..next_row + cnt;
+                next_row = range.end;
+                let idx: Vec<usize> = range.clone().collect();
+                let chunk = Arc::new(WorkerChunk {
+                    worker: w,
+                    row_range: range,
+                    rows: self.coded.select_rows(&idx),
+                });
+                let delay = injector.wall_delay(w);
+                let xs = Arc::clone(&xs_arc);
+                let cmp = Arc::clone(&compute);
+                let sender = tx.clone();
+                // Allowlisted thread-creation site (lint rule D3): same
+                // sleep-then-compute emulation as the fixed-chunk path.
+                #[allow(clippy::disallowed_methods)]
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || {
+                        std::thread::sleep(delay);
+                        if let Ok(ys) = cmp.matvec_batch(&chunk.rows, &xs) {
+                            let _ = sender.send(BatchReply {
+                                worker: w,
+                                range: chunk.row_range.clone(),
+                                ys,
+                            });
+                        }
+                    })
+                    .map_err(|e| {
+                        Error::Runtime(format!("spawn worker {w}: {e}"))
+                    })?;
+            }
+            drop(tx);
+            cursor += issue;
+            stats.rows_issued += issue as u64;
+            // Round barrier: gather every reply, then process in global
+            // row order so the decode support never depends on arrival
+            // timing.
+            let mut replies: Vec<BatchReply> = rx.iter().collect();
+            replies.sort_by_key(|r| r.range.start);
+            for reply in &replies {
+                contributed[reply.worker] = true;
+                observed.push(WorkerObservation {
+                    worker: reply.worker,
+                    load: reply.range.len(),
+                    model_time: injector.model_delay(reply.worker),
+                });
+                let p = loss.get(reply.worker).copied().unwrap_or(0.0);
+                let got = if p <= 0.0 {
+                    self.rows_buf.extend(reply.range.clone());
+                    for (col, y) in self.cols_buf.iter_mut().zip(&reply.ys) {
+                        col.extend_from_slice(y);
+                    }
+                    reply.range.len() as u64
+                } else {
+                    self.absorb_lossy_reply(reply, p, batch_seed)
+                };
+                stats.rows_received += got;
+            }
+            rounds += 1;
+        }
+        stats.extend_rounds = rounds.saturating_sub(1);
+
+        let rows_collected = self.rows_buf.len();
+        let decoded_all = self.code.decode_rows(
+            &mut self.decoder,
+            &self.rows_buf,
+            &self.cols_buf[..b],
+        )?;
+        let wall_latency = start.elapsed();
+        let workers_used = contributed.iter().filter(|&&c| c).count();
+        let mut reports = Vec::with_capacity(b);
+        for (decoded, request) in decoded_all.into_iter().zip(requests) {
+            let max_error = if self.cfg.verify_decode {
+                let truth = self
+                    .a
+                    .as_ref()
+                    .expect("verify_decode keeps the data matrix")
+                    .matvec(request);
+                decoded
+                    .iter()
+                    .zip(&truth)
+                    .map(|(d, t)| (d - t).abs())
+                    .fold(0.0f64, f64::max)
+            } else {
+                f64::NAN
+            };
+            reports.push(JobReport {
+                wall_latency,
+                model_latency,
+                decoded,
+                max_error,
+                workers_used,
+                rows_collected,
+                n: self.n,
+                backend: compute.name(),
+            });
+        }
+        Ok((reports, observed, stats))
     }
 }
 
@@ -650,6 +1057,176 @@ mod tests {
             "steady-state batches allocated big buffers"
         );
         assert_eq!(prepared.encode_count(), 1);
+    }
+
+    #[test]
+    fn streamed_batches_issue_exactly_k_rows_when_links_are_clean() {
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(80);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut cfg = fast_cfg();
+        cfg.code = Some("rateless-rlc".into());
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let reqs: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let (reports, stats) = prepared
+            .run_batch_streamed(&reqs, Arc::new(NativeCompute), 11, &[])
+            .unwrap();
+        // Clean links: one round, exactly k rows solicited and received
+        // — the fountain ideal (overhead 1.0).
+        assert_eq!(stats.rows_issued, 64);
+        assert_eq!(stats.rows_received, 64);
+        assert_eq!(stats.extend_rounds, 0);
+        assert!(reports.iter().all(|r| r.max_error < 1e-6));
+        assert_eq!(prepared.re_encoded_rows(), 0);
+        // Streaming never re-runs the full encode pass.
+        assert_eq!(prepared.encode_count(), 1);
+    }
+
+    #[test]
+    fn streamed_batches_ride_out_per_packet_loss() {
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(81);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut cfg = fast_cfg();
+        cfg.code = Some("rateless-rlc".into());
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let reqs: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        // 30% per-packet loss on every worker; the stream keeps
+        // soliciting until k rows survive.
+        let loss = vec![0.3; spec.total_workers()];
+        for seed in 0..3u64 {
+            let (reports, stats) = prepared
+                .run_batch_streamed(&reqs, Arc::new(NativeCompute), seed, &loss)
+                .unwrap();
+            assert!(reports.iter().all(|r| r.max_error < 1e-6));
+            assert!(stats.rows_received >= 64);
+            assert!(stats.rows_issued >= stats.rows_received);
+        }
+        // Lost packets forced extensions, but never a re-encode.
+        assert_eq!(prepared.re_encoded_rows(), 0);
+        assert_eq!(prepared.encode_count(), 1);
+        // Fully dark links on every worker: clean refusal, not a hang.
+        let dark = vec![1.0; spec.total_workers()];
+        assert!(prepared
+            .run_batch_streamed(&reqs, Arc::new(NativeCompute), 9, &dark)
+            .is_err());
+    }
+
+    #[test]
+    fn streamed_results_are_bit_identical_across_loss_free_reruns() {
+        // The determinism pillar: same seeds → byte-identical decode,
+        // regardless of thread interleavings across reruns.
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(82);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut cfg = fast_cfg();
+        cfg.code = Some("rateless-rlc".into());
+        let reqs: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let loss = vec![0.25; spec.total_workers()];
+        let run = |cfg: &JobConfig| {
+            let mut prepared = PreparedJob::new(&spec, &alloc, &a, cfg).unwrap();
+            let (reports, stats) = prepared
+                .run_batch_streamed(&reqs, Arc::new(NativeCompute), 5, &loss)
+                .unwrap();
+            let bits: Vec<Vec<u64>> = reports
+                .iter()
+                .map(|r| r.decoded.iter().map(|v| v.to_bits()).collect())
+                .collect();
+            (bits, stats.rows_received, stats.rows_issued)
+        };
+        let first = run(&cfg);
+        let second = run(&cfg);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn lossy_fixed_n_fails_sub_k_once_losses_exceed_redundancy() {
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(83);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let cfg = fast_cfg();
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let reqs: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let injector = StragglerInjector::sample(
+            &spec,
+            cfg.model,
+            prepared.per_worker(),
+            cfg.time_scale,
+            7,
+        )
+        .unwrap();
+        // Dark links on group 1 (workers 4..10): they carry more than
+        // the n - k redundancy, so the fixed-n code cannot reach k.
+        let mut loss = vec![0.0; spec.total_workers()];
+        for p in loss.iter_mut().skip(4) {
+            *p = 1.0;
+        }
+        let err = prepared
+            .run_batch_lossy(&reqs, Arc::new(NativeCompute), &injector, &loss, 3)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("lossy"),
+            "unexpected error: {err}"
+        );
+        // Mild loss within the redundancy budget still decodes.
+        let mild = vec![0.0; spec.total_workers()];
+        let (reports, _) = prepared
+            .run_batch_lossy(&reqs, Arc::new(NativeCompute), &injector, &mild, 3)
+            .unwrap();
+        assert!(reports.iter().all(|r| r.max_error < 1e-8));
+    }
+
+    #[test]
+    fn extend_rechunk_scales_out_past_n_without_re_encoding() {
+        let spec = small_spec();
+        let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+        let mut rng = Rng::new(84);
+        let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+        let mut cfg = fast_cfg();
+        cfg.code = Some("rateless-rlc".into());
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let n0 = prepared.n();
+        let reqs: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        prepared.run_batch(&reqs, Arc::new(NativeCompute), 1).unwrap();
+
+        // Scale out: every worker takes 3 more rows than it had — the
+        // loads now want more rows than were ever encoded.
+        let grown: Vec<usize> =
+            prepared.per_worker().iter().map(|&l| l + 3).collect();
+        let total: usize = grown.iter().sum();
+        assert!(total > n0);
+        prepared.extend_rechunk(&grown).unwrap();
+        assert_eq!(prepared.n(), total);
+        assert_eq!(prepared.rechunk_count(), 1);
+        // Measured, not declared: the extension minted only fresh rows.
+        assert_eq!(prepared.re_encoded_rows(), 0);
+        assert_eq!(prepared.encode_count(), 1);
+
+        // Both serving styles still decode over the grown horizon.
+        let reports =
+            prepared.run_batch(&reqs, Arc::new(NativeCompute), 2).unwrap();
+        assert!(reports.iter().all(|r| r.max_error < 1e-6));
+        let (reports, _) = prepared
+            .run_batch_streamed(&reqs, Arc::new(NativeCompute), 3, &[])
+            .unwrap();
+        assert!(reports.iter().all(|r| r.max_error < 1e-6));
+        assert_eq!(prepared.re_encoded_rows(), 0);
+
+        // Finite codes keep the hard ceiling.
+        let mut mds = PreparedJob::new(&spec, &alloc, &a, &fast_cfg()).unwrap();
+        let grown: Vec<usize> =
+            mds.per_worker().iter().map(|&l| l + 3).collect();
+        assert!(mds.extend_rechunk(&grown).is_err());
+        assert!(!mds.is_rateless());
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Streaming (rateless) collection primitives for the serving loop.
+//!
+//! The MDS fast path fixes the issuance up front: every worker computes
+//! its whole chunk, the master stops at `k` rows. With the rateless
+//! fountain ([`crate::coding::RatelessCode`]) the issuance itself becomes
+//! the control variable: each *round* the master solicits just enough
+//! fresh coded rows to cover its deficit (inflated when links are lossy),
+//! workers reply, per-packet loss thins the replies, and the loop repeats
+//! until **any** `k` rows are in hand. The measured figure of merit is
+//! the *overhead* — rows actually received divided by `k` — which this
+//! module accumulates into [`RatelessSummary`] for
+//! [`crate::coordinator::ServeOutcome`].
+//!
+//! # Determinism
+//!
+//! Bit-reproducibility from the seed — at any pool size, and under any
+//! thread interleaving — rests on three pillars, all in this module or
+//! its callers:
+//!
+//! 1. **Row identity.** A coded row's coefficients derive purely from
+//!    `(generator seed, global row index)`; the rows a round mints depend
+//!    only on the deficit schedule.
+//! 2. **Packet fate.** Whether a packet survives is a pure function of
+//!    `(batch seed, first global row of the packet, loss probability)`
+//!    ([`packet_dropped`]) — never of arrival timing.
+//! 3. **Receipt order.** The collection loop is a per-round barrier: all
+//!    replies of a round are gathered, then processed in global-row
+//!    order, so the decode support is independent of `mpsc` arrival
+//!    order.
+//!
+//! Loss probabilities come from the failure-scenario layer
+//! ([`crate::coordinator::ScenarioState::loss_probability`]); this module
+//! only consumes a per-worker `&[f64]`.
+
+use crate::math::Rng;
+
+/// Rows per loss "packet": the unit the lossy-link model drops. A
+/// worker's reply is split into consecutive packets of (at most) this
+/// many rows, each surviving or dying independently.
+pub const RATELESS_PACKET_ROWS: usize = 4;
+
+/// Hard cap on solicitation rounds per batch — a backstop against a
+/// scenario whose links never deliver (`p = 1` everywhere, forever).
+pub(crate) const RATELESS_MAX_ROUNDS: u64 = 64;
+
+/// Domain-separation tag for the per-packet loss draws (keeps them
+/// independent of the straggle and generator streams derived from the
+/// same batch seed).
+pub(crate) const LOSS_SEED_TAG: u64 = 0x10C5_10C5_10C5_10C5;
+
+/// Mixing constant spreading consecutive packet-start rows across the
+/// seed space (same role as the rateless row tag in `coding::generator`).
+const LOSS_MIX: u64 = 0xD6E8_FEB8_6659_FD93;
+
+/// Deterministic per-packet Bernoulli drop. The draw is a pure function
+/// of `(batch_seed, packet_row, p)` where `packet_row` is the *global*
+/// index of the packet's first row — so the same packet meets the same
+/// fate regardless of pool size, chunk split, or arrival order.
+pub(crate) fn packet_dropped(batch_seed: u64, packet_row: usize, p: f64) -> bool {
+    if p <= 0.0 {
+        return false;
+    }
+    if p >= 1.0 {
+        return true;
+    }
+    let mut rng = Rng::new(
+        (batch_seed ^ LOSS_SEED_TAG)
+            .wrapping_add((packet_row as u64 + 1).wrapping_mul(LOSS_MIX)),
+    );
+    rng.next_f64() < p
+}
+
+/// Split `issue` rows over eligible workers proportionally to their
+/// weights, deterministically. `weights` is `(worker, weight)` in worker
+/// id order; floors are assigned first, then the remainder is dealt
+/// round-robin from the front. All-zero weights degrade to a uniform
+/// split. The returned counts sum to exactly `issue`.
+pub(crate) fn proportional_shares(
+    issue: usize,
+    weights: &[(usize, usize)],
+) -> Vec<(usize, usize)> {
+    if weights.is_empty() || issue == 0 {
+        return Vec::new();
+    }
+    let total: usize = weights.iter().map(|&(_, w)| w).sum();
+    let mut out = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for &(worker, w) in weights {
+        let share = if total == 0 {
+            issue / weights.len()
+        } else {
+            issue * w / total
+        };
+        out.push((worker, share));
+        assigned += share;
+    }
+    let mut rem = issue - assigned;
+    let mut i = 0usize;
+    while rem > 0 {
+        out[i % out.len()].1 += 1;
+        rem -= 1;
+        i += 1;
+    }
+    out
+}
+
+/// Per-batch streaming tallies, returned by
+/// [`crate::coordinator::PreparedJob::run_batch_rateless_injected`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RatelessBatchStats {
+    /// Coded rows that survived the lossy links and reached the master.
+    pub rows_received: u64,
+    /// Coded rows solicited from workers (across all rounds).
+    pub rows_issued: u64,
+    /// Extra solicitation rounds beyond the first (0 = the initial
+    /// issuance crossed `k` on its own).
+    pub extend_rounds: u64,
+}
+
+/// Stream-level rateless accounting, surfaced through
+/// [`crate::coordinator::ServeOutcome`]. All counters are *measured* at
+/// the row level by the collection loop and the encoder — none are
+/// declared.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RatelessSummary {
+    /// Total coded rows received across the stream.
+    pub rows_received: u64,
+    /// Total coded rows issued (solicited) across the stream.
+    pub rows_issued: u64,
+    /// Total extra solicitation rounds across the stream.
+    pub extend_rounds: u64,
+    /// Decode jobs (batches) the totals cover.
+    pub batches: u64,
+    /// Reception overhead: `rows_received / (batches · k)`. The fountain
+    /// ideal is 1.0; per-packet loss pushes it up by at most the round
+    /// inflation (≈ 12.5% + one packet per round).
+    pub overhead: f64,
+    /// Rows re-encoded by the encoder over the job's lifetime — the
+    /// elasticity invariant says this stays 0: every extension and
+    /// scale-out mints *fresh* row indices.
+    pub re_encoded_rows: u64,
+}
+
+impl RatelessSummary {
+    /// Fold one batch's tallies into the stream totals.
+    pub fn absorb(&mut self, batch: RatelessBatchStats) {
+        self.rows_received += batch.rows_received;
+        self.rows_issued += batch.rows_issued;
+        self.extend_rounds += batch.extend_rounds;
+        self.batches += 1;
+    }
+
+    /// Close the books: compute the overhead ratio and capture the
+    /// encoder's re-encode counter.
+    pub fn finalize(&mut self, k: usize, re_encoded_rows: u64) {
+        self.re_encoded_rows = re_encoded_rows;
+        let denom = self.batches.saturating_mul(k as u64);
+        self.overhead = if denom == 0 {
+            0.0
+        } else {
+            self.rows_received as f64 / denom as f64
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_fate_is_deterministic_and_rate_accurate() {
+        // Same (seed, row, p) → same fate, every time.
+        for row in [0usize, 3, 64, 1_000_003] {
+            for p in [0.05, 0.5, 0.95] {
+                let a = packet_dropped(42, row, p);
+                let b = packet_dropped(42, row, p);
+                assert_eq!(a, b);
+            }
+        }
+        // Degenerate probabilities never consult the RNG.
+        assert!(!packet_dropped(7, 0, 0.0));
+        assert!(packet_dropped(7, 0, 1.0));
+        // Empirical drop rate over many packets tracks p.
+        let p = 0.1;
+        let drops = (0..10_000)
+            .filter(|&r| packet_dropped(9, r, p))
+            .count() as f64;
+        let rate = drops / 10_000.0;
+        assert!(
+            (rate - p).abs() < 0.02,
+            "empirical drop rate {rate} far from {p}"
+        );
+        // Different seeds decorrelate the pattern.
+        let same = (0..1_000)
+            .filter(|&r| packet_dropped(1, r, 0.5) == packet_dropped(2, r, 0.5))
+            .count();
+        assert!((300..700).contains(&same), "seeds look correlated: {same}");
+    }
+
+    #[test]
+    fn shares_sum_exactly_and_follow_weights() {
+        let shares = proportional_shares(100, &[(0, 30), (1, 10), (3, 60)]);
+        assert_eq!(shares.iter().map(|&(_, c)| c).sum::<usize>(), 100);
+        assert_eq!(shares, vec![(0, 30), (1, 10), (3, 60)]);
+        // Remainder is dealt deterministically from the front.
+        let shares = proportional_shares(10, &[(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(shares.iter().map(|&(_, c)| c).sum::<usize>(), 10);
+        assert_eq!(shares, vec![(0, 4), (1, 3), (2, 3)]);
+        // All-zero weights degrade to a uniform split.
+        let shares = proportional_shares(7, &[(2, 0), (5, 0)]);
+        assert_eq!(shares, vec![(2, 4), (5, 3)]);
+        // Degenerate inputs.
+        assert!(proportional_shares(0, &[(0, 1)]).is_empty());
+        assert!(proportional_shares(5, &[]).is_empty());
+    }
+
+    #[test]
+    fn summary_overhead_is_rows_over_k_per_batch() {
+        let mut s = RatelessSummary::default();
+        s.absorb(RatelessBatchStats {
+            rows_received: 70,
+            rows_issued: 80,
+            extend_rounds: 1,
+        });
+        s.absorb(RatelessBatchStats {
+            rows_received: 64,
+            rows_issued: 64,
+            extend_rounds: 0,
+        });
+        s.finalize(64, 0);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rows_received, 134);
+        assert_eq!(s.rows_issued, 144);
+        assert_eq!(s.extend_rounds, 1);
+        assert!((s.overhead - 134.0 / 128.0).abs() < 1e-12);
+        // Empty stream → overhead 0, not NaN.
+        let mut empty = RatelessSummary::default();
+        empty.finalize(64, 0);
+        assert_eq!(empty.overhead, 0.0);
+    }
+}

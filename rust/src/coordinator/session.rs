@@ -78,6 +78,7 @@ use crate::coordinator::master::{
     derive_stream_seed, fold_worst_error, run_job_impl, JobConfig, JobReport,
     ServeReport,
 };
+use crate::coordinator::rateless::RatelessSummary;
 use crate::coordinator::{
     Compute, FailureScenario, LatencyRecorder, NativeCompute, PreparedJob,
 };
@@ -165,6 +166,11 @@ pub struct ServeOutcome {
     pub decode_cache_hits: u64,
     /// Decode factorization-cache misses (prepared modes).
     pub decode_cache_misses: u64,
+    /// Decode factorizations served *around* the cache by the
+    /// thrash-bypass guard (prepared modes): a full cache taking this
+    /// many consecutive misses stops evicting residents
+    /// ([`crate::coding::Decoder::cache_bypasses`]).
+    pub decode_cache_bypasses: u64,
     /// Estimator-triggered re-solves (adaptive arrivals mode).
     pub reallocations: u64,
     /// Workers suspected dead by the end of the stream (sorted).
@@ -188,6 +194,11 @@ pub struct ServeOutcome {
     /// controller decisions, queue depth, per-tenant p99) — populated only
     /// when the session was built with [`SessionBuilder::front_end`].
     pub front_end: Option<FrontEndReport>,
+    /// Streaming-collection accounting (rows received/issued, extra
+    /// solicitation rounds, reception overhead, re-encoded rows) —
+    /// populated only when the session served with the rateless code
+    /// through a streaming mode ([`Mode::Batched`] / adaptive arrivals).
+    pub rateless: Option<RatelessSummary>,
 }
 
 impl ServeOutcome {
@@ -219,12 +230,14 @@ impl ServeOutcome {
             rechunks: 0,
             decode_cache_hits: 0,
             decode_cache_misses: 0,
+            decode_cache_bypasses: 0,
             reallocations: 0,
             suspected_dead: Vec::new(),
             post_setup_encodes: 0,
             steady_allocs: 0,
             assumed_spec: None,
             front_end: None,
+            rateless: None,
         }
     }
 }
@@ -422,6 +435,14 @@ impl SessionBuilder {
             ));
         }
         if let Some(front) = &self.front_end {
+            if self.scenario.has_loss() {
+                return Err(Error::InvalidSpec(
+                    "lossy-link scenarios go through the streaming-aware \
+                     drain; the admission front end does not support them \
+                     (drop .front_end(..) or the loss events)"
+                        .into(),
+                ));
+            }
             if self.adaptive.is_some() {
                 return Err(Error::InvalidSpec(
                     "the admission front end and the adaptive re-allocation \
@@ -627,11 +648,28 @@ impl Session {
         let start = wall_now();
         let mut prepared =
             PreparedJob::new(&self.spec, &self.alloc, &self.a, &self.cfg)?;
-        let reports = prepared.run_batch(
-            &self.requests,
-            Arc::clone(&self.compute),
-            self.cfg.seed,
-        )?;
+        // The rateless code serves by streaming (solicitation rounds
+        // until any k rows survive); the finite codes dispatch their
+        // fixed chunks and stop at k.
+        let (reports, rateless) = if prepared.is_rateless() {
+            let (reports, stats) = prepared.run_batch_streamed(
+                &self.requests,
+                Arc::clone(&self.compute),
+                self.cfg.seed,
+                &[],
+            )?;
+            let mut summary = RatelessSummary::default();
+            summary.absorb(stats);
+            summary.finalize(self.spec.k, prepared.re_encoded_rows());
+            (reports, Some(summary))
+        } else {
+            let reports = prepared.run_batch(
+                &self.requests,
+                Arc::clone(&self.compute),
+                self.cfg.seed,
+            )?;
+            (reports, None)
+        };
         let mut recorder = LatencyRecorder::new();
         let mut worst = 0.0f64;
         for r in &reports {
@@ -648,6 +686,7 @@ impl Session {
             rechunks: prepared.rechunk_count(),
             decode_cache_hits: hits,
             decode_cache_misses: misses,
+            decode_cache_bypasses: prepared.decode_cache_bypasses(),
             reallocations: 0,
             suspected_dead: Vec::new(),
             post_setup_encodes: prepared.encode_count().saturating_sub(1),
@@ -655,6 +694,7 @@ impl Session {
             steady_allocs: 0,
             assumed_spec: None,
             front_end: None,
+            rateless,
         })
     }
 
@@ -685,12 +725,14 @@ impl Session {
                 rechunks: 0,
                 decode_cache_hits: rep.decode_cache.0,
                 decode_cache_misses: rep.decode_cache.1,
+                decode_cache_bypasses: rep.decode_cache_bypasses,
                 reallocations: 0,
                 suspected_dead: Vec::new(),
                 post_setup_encodes: rep.post_setup_encodes,
                 steady_allocs: rep.steady_allocs,
                 assumed_spec: None,
                 front_end: Some(rep.front),
+                rateless: None,
             });
         }
         let rep = serve_arrivals_adaptive_impl(
@@ -715,12 +757,14 @@ impl Session {
             rechunks: rep.rechunks,
             decode_cache_hits: rep.decode_cache.0,
             decode_cache_misses: rep.decode_cache.1,
+            decode_cache_bypasses: rep.decode_cache_bypasses,
             reallocations: rep.reallocations,
             suspected_dead: rep.suspected_dead,
             post_setup_encodes: rep.post_setup_encodes,
             steady_allocs: rep.steady_allocs,
             assumed_spec: Some(rep.assumed_spec),
             front_end: None,
+            rateless: rep.rateless,
         })
     }
 }

@@ -17,9 +17,13 @@
 //!   line.
 //! - **[`coding::Code`]** — one erasure code (setup / encode /
 //!   decode-rows), with its own registry ([`coding::code`]) mirroring
-//!   the policy one: `mds-random` (default), `mds-vandermonde`, and the
-//!   non-MDS `sparse-parity` with an O(nnz) CSR encode. Policy and code
-//!   are orthogonal axes, resolved independently at session build.
+//!   the policy one: `mds-random` (default), `mds-vandermonde`, the
+//!   non-MDS `sparse-parity` with an O(nnz) CSR encode, and the
+//!   `rateless-rlc` fountain whose generator is an infinite seeded row
+//!   stream — workers stream rows until any `k` survive, so serving
+//!   rides out lossy links and scales past the setup `n` with zero
+//!   re-encodes. Policy and code are orthogonal axes, resolved
+//!   independently at session build.
 //! - **[`coordinator::Session`]** — one live serve. Policy × code ×
 //!   mode × scenario × adaptivity are orthogonal builder knobs; every
 //!   serve returns a unified [`coordinator::ServeOutcome`]:
@@ -63,9 +67,11 @@
 //!   of Reisizadeh et al. [32] (Appendix D) ([`allocation`]), behind the
 //!   [`allocation::Policy`] trait + registry;
 //! - a real-valued **coding layer** behind the pluggable [`coding::Code`]
-//!   trait: systematic-random and Vandermonde MDS plus an LDPC-style
-//!   sparse-parity code, an encoder, an any-k decoder, and its own dense
-//!   (`Matrix`) and sparse (`CsrMatrix`) linear algebra ([`coding`]);
+//!   trait: systematic-random and Vandermonde MDS, an LDPC-style
+//!   sparse-parity code, and a rateless random-linear fountain with an
+//!   extensible generator, plus an encoder, an any-k decoder, and its
+//!   own dense (`Matrix`) and sparse (`CsrMatrix`) linear algebra
+//!   ([`coding`]);
 //! - a **persistent compute pool** ([`runtime::pool`]) every parallel hot
 //!   path (blocked matmul, encode, multi-RHS decode, Monte-Carlo sweeps)
 //!   runs on — fixed worker threads, deterministic index-ordered

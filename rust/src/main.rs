@@ -116,6 +116,7 @@ const RUN_FLAGS: &[&str] = &[
     "decode-cache",
     "failures",
     "drift",
+    "loss",
     "adaptive",
     "policy",
     "code",
@@ -229,6 +230,7 @@ SUBCOMMANDS
             [--dead i,j,...] [--mode seq|pipelined|batched|arrivals]
             [--rate R] [--max-batch B] [--encode-threads T] [--decode-cache C]
             [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
+            [--loss B:G:P[;...] | B:G:burst:N[;...]]
             [--shards S] [--tenants T] [--slo P99_SECONDS]
             Here --rate is the *arrivals* rate; parameterized policies
             use the name=param form (e.g. --policy uniform-rate=0.5).
@@ -241,13 +243,17 @@ SUBCOMMANDS
             modes (seq/pipelined draw a fresh generator per request, so
             factorizations cannot recur across requests). --failures
             kills workers at a batch index, --drift dilates group G by
-            factor F at a batch index, and --adaptive turns on the online
-            estimator + re-allocation loop (all three need --mode
-            arrivals); re-allocation re-slices the encoded rows, so
-            `encode passes` stays 1 regardless. --code picks the erasure
-            code from the CODES registry (default mds-random; the sparse
-            code is not MDS — a decode can fail cleanly if an unlucky
-            k-subset of rows arrives first). --shards/--tenants/--slo
+            factor F at a batch index, --loss drops group G's packets
+            i.i.d. with probability P from a batch index (or everything
+            for N batches with the burst form), and --adaptive turns on
+            the online estimator + re-allocation loop (all four need
+            --mode arrivals); re-allocation re-slices the encoded rows,
+            so `encode passes` stays 1 regardless. --code picks the
+            erasure code from the CODES registry (default mds-random; the
+            sparse code is not MDS — a decode can fail cleanly if an
+            unlucky k-subset of rows arrives first; rateless-rlc streams
+            rows until any k survive, so it rides out --loss and reports
+            the measured overhead rows/k). --shards/--tenants/--slo
             attach the sharded admission front end to --mode arrivals
             (requests round-robin over T tenants, tenant-keyed per-shard
             DRR queues, work-conserving drain); --slo sizes batches
@@ -902,13 +908,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     let mode_name = args.flag("mode").unwrap_or("seq").to_string();
-    let scenario =
-        FailureScenario::parse(args.flag("failures"), args.flag("drift"))?;
+    let scenario = FailureScenario::parse_with_loss(
+        args.flag("failures"),
+        args.flag("drift"),
+        args.flag("loss"),
+    )?;
     let scenario_events = scenario.events().len();
     let adaptive = args.switch("adaptive");
     if (!scenario.is_empty() || adaptive) && mode_name != "arrivals" {
         return Err(Error::InvalidSpec(
-            "--failures/--drift/--adaptive need --mode arrivals (the \
+            "--failures/--drift/--loss/--adaptive need --mode arrivals (the \
              prepared serving stream)"
                 .into(),
         ));
@@ -1017,6 +1026,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             outcome.reallocations,
             outcome.post_setup_encodes,
             outcome.suspected_dead,
+        );
+    }
+    if let Some(rl) = &outcome.rateless {
+        println!(
+            "rateless: {} rows received / {} issued over {} batches \
+             (overhead {:.3}x k, {} extend rounds, {} rows re-encoded)",
+            rl.rows_received,
+            rl.rows_issued,
+            rl.batches,
+            rl.overhead,
+            rl.extend_rounds,
+            rl.re_encoded_rows,
         );
     }
     println!("{}", outcome.recorder.report());

@@ -47,6 +47,15 @@
 //! static allocation against the estimator-driven adaptive policy (the
 //! live mirror is [`crate::coordinator::serve_arrivals_adaptive`]).
 //!
+//! When the *links* rather than the workers are unreliable, the fixed-`n`
+//! service laws above stop applying — a dropped packet erases rows, not
+//! workers — and the rateless fountain (`rateless-rlc`) streams extra
+//! rows until any `k` survive. [`lossy_service_sampler`] is that path's
+//! queueing mirror: the any-`k` law scaled by the expected row inflation
+//! `1/(1-p)` under uniform per-packet loss `p`. The live counterpart is
+//! the streamed collection loop behind `run --code rateless-rlc --loss`
+//! (per-group loss scenarios live in [`crate::coordinator::failures`]).
+//!
 //! # Example
 //!
 //! ```no_run
@@ -94,6 +103,6 @@ pub use queue::{
     WorkloadConfig, WorkloadReport,
 };
 pub use service::{
-    mean_service, saturation_rate, service_sampler, service_sampler_for,
-    ServiceSampler,
+    lossy_service_sampler, mean_service, saturation_rate, service_sampler,
+    service_sampler_for, ServiceSampler,
 };

@@ -11,7 +11,7 @@ use crate::allocation::{Allocation, DecodeRule, Policy};
 use crate::math::Rng;
 use crate::model::{ClusterSpec, LatencyModel};
 use crate::sim::{AnyKSampler, GroupMaxSampler, Scheme};
-use crate::Result;
+use crate::{Error, Result};
 
 /// A policy-specific sampler of i.i.d. single-job service times.
 #[derive(Clone, Debug)]
@@ -22,6 +22,19 @@ pub enum ServiceSampler {
     /// Group-wise decode of the fixed-`r` group code of [33]: the job
     /// completes when *every* group has returned its `r_j` results.
     GroupMax(GroupMaxSampler),
+    /// Rateless (any-`k` fountain) serving over a uniformly lossy fabric:
+    /// landing one useful row over a link that drops each packet i.i.d.
+    /// with probability `p` costs `1/(1-p)` streamed rows in expectation,
+    /// and because both the shift and the scale of every worker's latency
+    /// law are linear in its load, inflating all loads by that factor
+    /// scales every finish time — and hence the whole any-`k` completion
+    /// law — by exactly `inflation`.
+    LossyAnyK {
+        /// The loss-free any-`k` sampler over the policy's allocation.
+        inner: AnyKSampler,
+        /// Expected streamed-rows-per-useful-row factor `1/(1-p)`.
+        inflation: f64,
+    },
 }
 
 impl ServiceSampler {
@@ -30,6 +43,9 @@ impl ServiceSampler {
         match self {
             ServiceSampler::AnyK(s) => s.sample(rng),
             ServiceSampler::GroupMax(s) => s.sample(rng),
+            ServiceSampler::LossyAnyK { inner, inflation } => {
+                *inflation * inner.sample(rng)
+            }
         }
     }
 }
@@ -66,6 +82,46 @@ pub fn service_sampler(
     model: LatencyModel,
 ) -> Result<(Allocation, ServiceSampler)> {
     service_sampler_for(spec, &*scheme.policy(), model)
+}
+
+/// Build a policy's allocation together with its service-time law under
+/// rateless serving over a uniformly lossy fabric — the queueing-layer
+/// mirror of the live streamed collection (`run --code rateless-rlc
+/// --loss`). Per-packet loss with probability `loss` inflates the
+/// expected streamed rows per useful row by `1/(1-loss)`, and the any-`k`
+/// completion law scales by exactly that factor (see
+/// [`ServiceSampler::LossyAnyK`]); the solicitation rounds of the live
+/// collection loop are folded into that expectation rather than simulated
+/// round by round. Heterogeneous per-group loss belongs to the live
+/// scenario layer ([`crate::coordinator::failures`]) — a single scaling
+/// factor cannot represent it, so this mirror takes one fabric-wide `p`.
+///
+/// The fountain decodes any-`k` by construction, so group-decode policies
+/// have no lossy mirror and are rejected.
+pub fn lossy_service_sampler(
+    spec: &ClusterSpec,
+    policy: &dyn Policy,
+    model: LatencyModel,
+    loss: f64,
+) -> Result<(Allocation, ServiceSampler)> {
+    if !(0.0..1.0).contains(&loss) {
+        return Err(Error::InvalidSpec(format!(
+            "per-packet loss probability must be in [0, 1), got {loss}"
+        )));
+    }
+    let (alloc, base) = service_sampler_for(spec, policy, model)?;
+    let inner = match base {
+        ServiceSampler::AnyK(s) => s,
+        _ => {
+            return Err(Error::InvalidSpec(
+                "group-decode policies have no rateless mirror: the \
+                 fountain decodes any-k"
+                    .into(),
+            ))
+        }
+    };
+    let inflation = 1.0 / (1.0 - loss);
+    Ok((alloc, ServiceSampler::LossyAnyK { inner, inflation }))
 }
 
 /// Estimate the mean service time `E[S]` with `samples` deterministic
@@ -112,6 +168,54 @@ mod tests {
             let mut rng = Rng::new(9);
             let s = sampler.sample(&mut rng);
             assert!(s.is_finite() && s > 0.0, "{}: sample {s}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn lossy_sampler_scales_the_clean_law_by_the_row_inflation() {
+        // Same seed drives both samplers, so every lossy draw must be the
+        // clean draw times 1/(1-p) bit-for-bit — the model is a pure
+        // rescaling of the any-k law, not a different stochastic process.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut clean) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let (_, mut lossy) = lossy_service_sampler(
+            &spec,
+            &*Scheme::Proposed.policy(),
+            LatencyModel::A,
+            0.2,
+        )
+        .unwrap();
+        let inflation = 1.0 / (1.0 - 0.2);
+        let (mut a, mut b) = (Rng::new(41), Rng::new(41));
+        for _ in 0..200 {
+            let c = clean.sample(&mut a);
+            assert_eq!(lossy.sample(&mut b), inflation * c);
+        }
+    }
+
+    #[test]
+    fn lossy_sampler_rejects_group_decode_and_bad_probabilities() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let err = lossy_service_sampler(
+            &spec,
+            &*Scheme::GroupCode(100.0).policy(),
+            LatencyModel::A,
+            0.1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("any-k"), "{err}");
+        for bad in [-0.1, 1.0, 1.5] {
+            assert!(
+                lossy_service_sampler(
+                    &spec,
+                    &*Scheme::Proposed.policy(),
+                    LatencyModel::A,
+                    bad,
+                )
+                .is_err(),
+                "loss {bad} must be rejected"
+            );
         }
     }
 

@@ -179,6 +179,67 @@ fn systematic_prefix_is_the_input_matrix_bit_for_bit() {
 }
 
 #[test]
+fn rateless_digest_invariant_across_extension_schedules_and_pools() {
+    // The fountain's bit-identity fixture: coded row `i` depends only on
+    // `(seed, i)`, so materializing [0, 2n) in one `encode_rows` call,
+    // splitting at the setup boundary, or dribbling 4-row packets (the
+    // streaming loop's mint pattern) must produce byte-identical rows —
+    // at every pool size the suites pin elsewhere.
+    let (n, k, d) = (48usize, 32usize, 6usize);
+    let a = random_matrix(k, d, 0xD17);
+    let code = code::resolve("rateless-rlc").unwrap();
+    let gen = code.setup(n, k, 17).unwrap();
+    let reference = {
+        let encoder = Encoder::new(gen.clone());
+        let m = code
+            .encode_rows(&encoder, &a, 0..2 * n, &WorkPool::new(1), 1)
+            .unwrap();
+        digest(&m)
+    };
+    for threads in [1usize, 2, 7, 16] {
+        let pool = WorkPool::new(threads);
+        // Split at the setup boundary.
+        let encoder = Encoder::new(gen.clone());
+        let head = code.encode_rows(&encoder, &a, 0..n, &pool, 2).unwrap();
+        let tail =
+            code.encode_rows(&encoder, &a, n..2 * n, &pool, 2).unwrap();
+        let mut stitched = head.clone();
+        for r in 0..tail.rows() {
+            stitched.push_row(tail.row(r)).unwrap();
+        }
+        assert_eq!(
+            digest(&stitched),
+            reference,
+            "boundary split forked at pool={threads}"
+        );
+        // Packet-sized dribble, the streaming loop's worst case.
+        let encoder = Encoder::new(gen.clone());
+        let mut dribble: Option<Matrix> = None;
+        let mut at = 0usize;
+        while at < 2 * n {
+            let end = (at + 4).min(2 * n);
+            let piece =
+                code.encode_rows(&encoder, &a, at..end, &pool, 2).unwrap();
+            match dribble.as_mut() {
+                None => dribble = Some(piece),
+                Some(m) => {
+                    for r in 0..piece.rows() {
+                        m.push_row(piece.row(r)).unwrap();
+                    }
+                }
+            }
+            at = end;
+        }
+        assert_eq!(
+            digest(&dribble.unwrap()),
+            reference,
+            "packet dribble forked at pool={threads}"
+        );
+        assert_eq!(encoder.re_encoded_rows(), 0);
+    }
+}
+
+#[test]
 fn coded_digest_invariant_across_pool_sizes_and_repeats() {
     // The digest fixture: one number per registered code that moves if any
     // bit of the coded matrix moves — across pool sizes, stream caps, and

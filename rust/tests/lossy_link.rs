@@ -1,0 +1,222 @@
+//! Lossy-link scenario coverage: the `--loss` CLI grammar, the
+//! packet-filtered fixed-`n` collection, and composition with the
+//! kill/slow/drift events that already ride [`FailureScenario`].
+//!
+//! The fountain-vs-MDS headline lives in `rateless.rs`; this suite pins
+//! the scenario *plumbing*: parsing, deterministic per-packet fates
+//! keyed by global row id, the redundancy arithmetic of the fixed-`n`
+//! path, and the front-end incompatibility guard.
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::failures::{
+    FailureEvent, FailureKind, FailureScenario,
+};
+use hetcoded::coordinator::{
+    FrontEndConfig, JobConfig, Mode, NativeCompute, Session,
+};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn two_group_spec() -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap()
+}
+
+fn serve(
+    code: &str,
+    scenario: FailureScenario,
+    jobs: usize,
+    seed: u64,
+) -> hetcoded::Result<hetcoded::coordinator::ServeOutcome> {
+    let spec = two_group_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0)?;
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+    let reqs: Vec<Vec<f64>> = (0..jobs)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    let offsets: Vec<Duration> =
+        (0..jobs).map(|i| Duration::from_millis(4 * i as u64)).collect();
+    let cfg = JobConfig { time_scale: 0.002, seed, ..Default::default() };
+    Session::builder(&spec)
+        .allocation(alloc)
+        .code(code)
+        .data(a)
+        .requests(reqs)
+        .config(cfg)
+        .compute(Arc::new(NativeCompute))
+        .scenario(scenario)
+        .mode(Mode::Arrivals { offsets, max_batch: 2 })
+        .build()?
+        .serve()
+}
+
+#[test]
+fn loss_grammar_parses_both_dialects_and_rejects_garbage() {
+    // Bernoulli form: BATCH:GROUP:P.
+    let s = FailureScenario::parse_with_loss(None, None, Some("2:0:0.25"))
+        .unwrap();
+    assert!(s.has_loss());
+    assert_eq!(s.events().len(), 1);
+    assert!(matches!(
+        s.events()[0].kind,
+        FailureKind::LossyGroup { group: 0, p } if (p - 0.25).abs() < 1e-12
+    ));
+    assert_eq!(s.events()[0].at_batch, 2);
+
+    // Burst form: BATCH:GROUP:burst:BATCHES, composed with kills and
+    // drift in one script.
+    let s = FailureScenario::parse_with_loss(
+        Some("3:1,2"),
+        Some("4:0:2.0"),
+        Some("1:1:burst:5;6:0:0.1"),
+    )
+    .unwrap();
+    assert!(s.has_loss());
+    assert_eq!(s.events().len(), 4);
+    assert!(s
+        .events()
+        .iter()
+        .any(|e| matches!(
+            e.kind,
+            FailureKind::BurstDrop { group: 1, batches: 5 }
+        )));
+
+    // Loss-free scripts answer has_loss() = false.
+    let s = FailureScenario::parse_with_loss(Some("3:1,2"), None, None)
+        .unwrap();
+    assert!(!s.has_loss());
+
+    for bad in ["1:0", "1:0:burst", "1:0:burst:x", "a:0:0.5", "1:0:p"] {
+        assert!(
+            FailureScenario::parse_with_loss(None, None, Some(bad)).is_err(),
+            "`{bad}` should be rejected"
+        );
+    }
+}
+
+#[test]
+fn fixed_n_mds_rides_out_loss_inside_its_redundancy() {
+    // Group 0 carries ~52 of 128 rows; even losing every one of its
+    // packets leaves ~76 >= k = 64 from group 1, so a 30% Bernoulli drop
+    // on group 0 alone can never push the collection sub-k. The MDS path
+    // must serve every job exactly, no fountain required.
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 0,
+        kind: FailureKind::LossyGroup { group: 0, p: 0.3 },
+    }])
+    .unwrap();
+    let outcome = serve("mds-random", scenario, 6, 31).unwrap();
+    assert_eq!(outcome.recorder.count(), 6);
+    assert!(outcome.worst_error < 1e-8, "err {}", outcome.worst_error);
+    assert_eq!(outcome.encodes, 1);
+    assert!(outcome.rateless.is_none(), "MDS never reports a summary");
+}
+
+#[test]
+fn loss_composes_with_kills_and_drift_under_the_fountain() {
+    // The full scenario algebra in one script: a kill, a group slowdown,
+    // a Bernoulli-lossy link, and a burst window. The fountain absorbs
+    // all four (the kill and the burst both just redirect issuance).
+    let scenario = FailureScenario::new(vec![
+        FailureEvent {
+            at_batch: 1,
+            kind: FailureKind::KillWorkers(vec![5]),
+        },
+        FailureEvent {
+            at_batch: 1,
+            kind: FailureKind::SlowGroup { group: 1, factor: 2.0 },
+        },
+        FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 0, p: 0.2 },
+        },
+        FailureEvent {
+            at_batch: 2,
+            kind: FailureKind::BurstDrop { group: 0, batches: 1 },
+        },
+    ])
+    .unwrap();
+    let outcome = serve("rateless-rlc", scenario, 8, 32).unwrap();
+    assert_eq!(outcome.recorder.count(), 8);
+    assert!(outcome.worst_error < 1e-6, "err {}", outcome.worst_error);
+    let rl = outcome.rateless.expect("fountain summary");
+    assert!(rl.rows_received >= rl.batches * 64);
+    assert_eq!(rl.re_encoded_rows, 0);
+    assert_eq!(outcome.post_setup_encodes, 0);
+}
+
+#[test]
+fn lossy_serving_is_bit_reproducible_from_the_seed() {
+    // Packet fates are keyed by (stream seed, global row id), and the
+    // round barrier sorts receipts by global row — so two fresh sessions
+    // under the same lossy script decode bit-identical results.
+    let scenario = || {
+        FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 0, p: 0.25 },
+        }])
+        .unwrap()
+    };
+    let run = || serve("rateless-rlc", scenario(), 5, 33).unwrap();
+    let (first, second) = (run(), run());
+    assert_eq!(first.jobs.len(), second.jobs.len());
+    for (i, (x, y)) in first.jobs.iter().zip(&second.jobs).enumerate() {
+        let same = x
+            .decoded
+            .iter()
+            .zip(&y.decoded)
+            .all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(same, "job {i} decoded forked across reruns");
+    }
+    let (a, b) = (first.rateless.unwrap(), second.rateless.unwrap());
+    assert_eq!(a, b, "streaming accounting forked across reruns");
+}
+
+#[test]
+fn front_end_refuses_lossy_scenarios_up_front() {
+    let spec = two_group_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let mut rng = Rng::new(34);
+    let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+    let reqs: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    let offsets: Vec<Duration> =
+        (0..4).map(|i| Duration::from_millis(4 * i as u64)).collect();
+    let scenario = FailureScenario::new(vec![FailureEvent {
+        at_batch: 0,
+        kind: FailureKind::LossyGroup { group: 0, p: 0.1 },
+    }])
+    .unwrap();
+    let err = Session::builder(&spec)
+        .allocation(alloc)
+        .data(a)
+        .requests(reqs)
+        .config(JobConfig { time_scale: 0.002, ..Default::default() })
+        .compute(Arc::new(NativeCompute))
+        .scenario(scenario)
+        .front_end(FrontEndConfig {
+            shards: 2,
+            tenants: 2,
+            weights: Vec::new(),
+            batch: None,
+        })
+        .mode(Mode::Arrivals { offsets, max_batch: 2 })
+        .build()
+        .err()
+        .expect("front end + loss must be refused at build time");
+    assert!(
+        err.to_string().contains("front end"),
+        "unexpected error: {err}"
+    );
+}

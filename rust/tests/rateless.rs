@@ -1,0 +1,195 @@
+//! The rateless-serving headline suite: what the fountain buys over a
+//! fixed-`n` code, measured — not declared — through the public
+//! `Session` / `PreparedJob` surface.
+//!
+//! Two claims are pinned:
+//!
+//! 1. **Loss tolerance with bounded overhead.** Under a drop script that
+//!    blacks out the redundancy-carrying group and Bernoulli-drops 10% of
+//!    the remaining packets, `rateless-rlc` completes *every* job and the
+//!    measured overhead (rows received ÷ k, per batch) stays ≤ 1.25×k —
+//!    the round-inflation arithmetic guarantees ≤ (9/8)·k + 5 rows
+//!    deterministically. The MDS code under the *same* script fails
+//!    sub-k: its `n` rows are all that exist, and the surviving links
+//!    cannot carry k of them.
+//! 2. **Elastic scale-out with zero re-encodes.** Growing the chunking
+//!    past the setup `n` mints fresh rows only
+//!    ([`Encoder::re_encoded_rows`] stays 0, encode passes stay 1), and
+//!    the scaled run is bit-reproducible from the seed at any pool size.
+//!
+//! [`Encoder::re_encoded_rows`]: hetcoded::coding::Encoder::re_encoded_rows
+
+use hetcoded::allocation::uniform_allocation;
+use hetcoded::coding::Matrix;
+use hetcoded::coordinator::failures::{
+    FailureEvent, FailureKind, FailureScenario,
+};
+use hetcoded::coordinator::{
+    JobConfig, Mode, NativeCompute, PreparedJob, ServeOutcome, Session,
+};
+use hetcoded::math::Rng;
+use hetcoded::model::{ClusterSpec, Group, LatencyModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn two_group_spec() -> ClusterSpec {
+    ClusterSpec::new(
+        vec![
+            Group { n: 4, mu: 8.0, alpha: 1.0 },
+            Group { n: 6, mu: 2.0, alpha: 1.0 },
+        ],
+        64,
+    )
+    .unwrap()
+}
+
+fn workload(jobs: usize, seed: u64) -> (Matrix, Vec<Vec<f64>>, Vec<Duration>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(64, 8, |_, _| rng.normal());
+    let reqs: Vec<Vec<f64>> = (0..jobs)
+        .map(|_| (0..8).map(|_| rng.normal()).collect())
+        .collect();
+    let offsets = (0..jobs)
+        .map(|i| Duration::from_millis(4 * i as u64))
+        .collect();
+    (a, reqs, offsets)
+}
+
+/// The shared drop script: from batch 0, group 1 (six workers carrying
+/// ~76 of the 128 coded rows — more than the n − k = 64 redundancy) goes
+/// completely dark, and group 0's links drop packets i.i.d. at 10%.
+fn drop_script() -> FailureScenario {
+    FailureScenario::new(vec![
+        FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::BurstDrop { group: 1, batches: 1_000 },
+        },
+        FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyGroup { group: 0, p: 0.1 },
+        },
+    ])
+    .unwrap()
+}
+
+fn serve_with_code(code: &str, seed: u64) -> hetcoded::Result<ServeOutcome> {
+    let spec = two_group_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0)?;
+    let (a, reqs, offsets) = workload(6, 0xBEAD ^ seed);
+    let cfg = JobConfig { time_scale: 0.002, seed, ..Default::default() };
+    Session::builder(&spec)
+        .allocation(alloc)
+        .code(code)
+        .data(a)
+        .requests(reqs)
+        .config(cfg)
+        .compute(Arc::new(NativeCompute))
+        .scenario(drop_script())
+        .mode(Mode::Arrivals { offsets, max_batch: 2 })
+        .build()?
+        .serve()
+}
+
+#[test]
+fn rateless_completes_under_loss_within_the_overhead_budget() {
+    let outcome = serve_with_code("rateless-rlc", 11).expect(
+        "the fountain must ride out the drop script the MDS code cannot",
+    );
+    assert_eq!(outcome.recorder.count(), 6, "every job completes");
+    assert!(
+        outcome.worst_error < 1e-6,
+        "decodes stay exact: {}",
+        outcome.worst_error
+    );
+    let rl = outcome.rateless.expect("rateless serving reports its summary");
+    assert!(rl.batches >= 3, "6 jobs at max_batch 2: {} batches", rl.batches);
+    // The headline number: measured rows-over-k, hard-bounded by the
+    // issuance inflation (deficit + ceil(deficit/8) + packet), never a
+    // declared constant.
+    assert!(
+        rl.overhead <= 1.25,
+        "overhead {} blew the 1.25x budget",
+        rl.overhead
+    );
+    assert!(rl.overhead >= 1.0, "overhead {} below 1 is a miscount", rl.overhead);
+    assert!(rl.rows_received >= rl.batches * 64);
+    assert!(rl.rows_issued >= rl.rows_received);
+    // Loss is served by minting fresh rows, never by re-encoding old ones.
+    assert_eq!(rl.re_encoded_rows, 0);
+    assert_eq!(outcome.encodes, 1);
+    assert_eq!(outcome.post_setup_encodes, 0);
+}
+
+#[test]
+fn fixed_n_mds_fails_sub_k_under_the_same_drop_script() {
+    let err = match serve_with_code("mds-random", 11) {
+        Err(e) => e.to_string(),
+        Ok(outcome) => panic!(
+            "128 fixed rows minus group 1's ~76 cannot cover k = 64, yet \
+             the MDS serve returned {} jobs",
+            outcome.recorder.count()
+        ),
+    };
+    assert!(
+        err.contains("cannot solicit"),
+        "expected the sub-k lossy-collection error, got: {err}"
+    );
+}
+
+#[test]
+fn scale_out_past_n_re_encodes_nothing_and_reproduces_at_any_pool_size() {
+    let spec = two_group_spec();
+    let alloc = uniform_allocation(LatencyModel::A, &spec, 128.0).unwrap();
+    let (a, reqs, _) = workload(3, 0xE1A5);
+
+    let mut runs: Vec<(usize, Vec<Vec<u64>>, Vec<Vec<u64>>)> = Vec::new();
+    for threads in [1usize, 2, 7, 16] {
+        let cfg = JobConfig {
+            time_scale: 0.002,
+            seed: 23,
+            code: Some("rateless-rlc".into()),
+            encode_threads: threads,
+            ..Default::default()
+        };
+        let mut prepared = PreparedJob::new(&spec, &alloc, &a, &cfg).unwrap();
+        let n0 = prepared.n();
+        let (before, _) = prepared
+            .run_batch_streamed(&reqs, Arc::new(NativeCompute), 5, &[])
+            .unwrap();
+
+        // Scale out: every worker gains three rows, pushing the chunking
+        // past the setup horizon. A finite code would need a re-encode
+        // (its `rechunk` refuses outright); the fountain mints the tail.
+        let grown: Vec<usize> =
+            prepared.per_worker().iter().map(|&l| l + 3).collect();
+        let total: usize = grown.iter().sum();
+        assert!(total > n0, "scale-out must exceed the setup horizon");
+        prepared.extend_rechunk(&grown).unwrap();
+        assert_eq!(prepared.n(), total, "horizon grew to the new chunking");
+        let (after, _) = prepared
+            .run_batch_streamed(&reqs, Arc::new(NativeCompute), 6, &[])
+            .unwrap();
+
+        // Measured, not declared: the scale-out minted rows [n0, total)
+        // exactly once and re-encoded none of [0, n0).
+        assert_eq!(prepared.re_encoded_rows(), 0);
+        assert_eq!(prepared.encode_count(), 1);
+        for r in before.iter().chain(&after) {
+            assert!(r.max_error < 1e-6, "err {}", r.max_error);
+        }
+        let bits = |reports: &[hetcoded::coordinator::JobReport]| {
+            reports
+                .iter()
+                .map(|r| r.decoded.iter().map(|v| v.to_bits()).collect())
+                .collect::<Vec<Vec<u64>>>()
+        };
+        runs.push((threads, bits(&before), bits(&after)));
+    }
+    // Bit-reproducible from the seed at every pool size, before and
+    // after the scale-out.
+    let (_, ref_before, ref_after) = &runs[0];
+    for (threads, before, after) in &runs[1..] {
+        assert_eq!(before, ref_before, "pre-scale-out forked at pool={threads}");
+        assert_eq!(after, ref_after, "post-scale-out forked at pool={threads}");
+    }
+}

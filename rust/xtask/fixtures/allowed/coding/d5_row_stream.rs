@@ -1,0 +1,34 @@
+//! D5 counterpart: the generator-extension idiom — must pass. Every
+//! coefficient row derives its own stream from `(seed, row)` through the
+//! documented splitmix-style mix, so materializing a prefix, extending
+//! it later, or deriving one row on demand all read identical bits.
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.0 = self.0.wrapping_add(1);
+        self.0 as f64
+    }
+}
+
+const ROW_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// One coefficient row of the infinite stream: pure in `(seed, row)`,
+/// independent of any shared cursor — the property that makes fountain
+/// extension free of re-encodes.
+pub fn derive_row(seed: u64, row: u64, k: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ (row + 1).wrapping_mul(ROW_MIX));
+    let scale = 1.0 / (k as f64).sqrt();
+    (0..k).map(|_| rng.normal() * scale).collect()
+}
+
+/// Extending the horizon replays the same per-row derivation for fresh
+/// indices only; rows below the watermark are never touched.
+pub fn extend(seed: u64, watermark: u64, new_n: u64, k: usize) -> Vec<Vec<f64>> {
+    (watermark..new_n).map(|r| derive_row(seed, r, k)).collect()
+}

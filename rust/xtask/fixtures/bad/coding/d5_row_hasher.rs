@@ -1,0 +1,13 @@
+//! D5 fixture: ad-hoc per-row coefficient hashing in coding code — must
+//! trip. Deriving row randomness from `DefaultHasher` invents a private
+//! mixing function: the hash is not covered by the seed-derivation
+//! discipline, silently changes across std versions, and can never be
+//! replayed from a recorded stream seed.
+
+use std::hash::{DefaultHasher, Hash, Hasher};
+
+pub fn row_coefficient(seed: u64, row: usize, col: usize) -> f64 {
+    let mut h = DefaultHasher::new();
+    (seed, row, col).hash(&mut h);
+    (h.finish() as f64) / (u64::MAX as f64)
+}

@@ -26,8 +26,9 @@ fn every_rule_trips_on_its_bad_fixture() {
         }
     }
 
-    let expected: [(&str, &[&str]); 8] = [
+    let expected: [(&str, &[&str]); 9] = [
         ("allocation/d1_float_sort.rs", &["D1"]),
+        ("coding/d5_row_hasher.rs", &["D5"]),
         ("coordinator/d2_hash_iter.rs", &["D2"]),
         ("workload/d3_thread_spawn.rs", &["D3"]),
         ("sim/d4_wall_clock.rs", &["D4"]),
