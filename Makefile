@@ -23,10 +23,11 @@ bench:
 
 # Machine-readable bench snapshot: run the perf benches with JSON capture
 # (the in-repo harness appends `"name": ns_per_op,` fragments when
-# BENCH_JSON_DIR is set) and merge them into BENCH_PR9.json so the bench
+# BENCH_JSON_DIR is set) and merge them into BENCH_PR10.json so the bench
 # trajectory is diffable across PRs (the earlier BENCH_PR*.json files are
-# the previous snapshots' schemas; PR 9 adds the rateless encode/stream
-# rows). Bench names must be unique across the two binaries (they are
+# the previous snapshots' schemas; PR 10 adds the hedged-serving and
+# deadline-staging rows). Bench names must be unique across the two
+# binaries (they are
 # today, and `scripts/check_bench_schema` fails on a collision); after
 # regenerating, run `make bench-schema` to confirm the snapshot matches
 # the harness — the check pins the *highest-numbered* snapshot, so bump
@@ -39,8 +40,8 @@ bench-json:
 	  { echo "error: benches emitted no JSON fragments (BENCH_JSON_DIR plumbing broken?)"; exit 1; }
 	{ echo '{'; \
 	  echo '  "_meta": "flat map: benchmark name -> median ns/op from the in-repo bench harness; regenerate with make bench-json",'; \
-	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR9.json
-	@echo "wrote BENCH_PR9.json"
+	  cat target/bench-json/*.lines | sed '$$ s/,$$//'; echo '}'; } > BENCH_PR10.json
+	@echo "wrote BENCH_PR10.json"
 
 # Validate every BENCH_PR*.json snapshot (flat name -> ns/op-or-null map,
 # no duplicate keys) and, where cargo exists, diff the newest snapshot's

@@ -19,7 +19,11 @@
 //!   the same generator matrix, single-stream and pooled;
 //! - the rateless fountain: fresh-range `encode_rows` extension (the
 //!   streaming loop's mint pattern) and streamed serving on clean vs
-//!   10%-lossy links.
+//!   10%-lossy links;
+//! - the recovery layer: hedged serving with no failures (the deadline
+//!   bookkeeping tax over plain prepared serving), hedged serving
+//!   through a stalled group (blown deadlines re-issued as MDS spare
+//!   rows), and the per-batch deadline staging pass itself.
 //!
 //! Set `BENCH_JSON_DIR` (or run `make bench-json`) to capture `name →
 //! ns/op` into the current PR's `BENCH_PR<N>.json`.
@@ -28,7 +32,8 @@ use hetcoded::allocation::proposed_allocation;
 use hetcoded::bench::{black_box, run, run_quick, section};
 use hetcoded::coding::{Decoder, Encoder, Generator, GeneratorKind, Matrix};
 use hetcoded::coordinator::{
-    JobConfig, Mode, NativeCompute, PreparedJob, Session,
+    JobConfig, Mode, NativeCompute, PreparedJob, RecoveryConfig,
+    RecoveryEngine, Session, StragglerInjector,
 };
 use hetcoded::math::{wm1_neg_exp, Rng};
 use hetcoded::model::{ClusterSpec, LatencyModel};
@@ -357,6 +362,98 @@ fn main() {
                     )
                     .unwrap(),
             );
+        });
+    }
+
+    section("recovery: hedged serving and deadline staging");
+    // The hedging tax when nothing fails (deadline staging + per-reply
+    // bookkeeping over plain prepared serving), and the stalled-group
+    // shape where blown deadlines actually fire re-issues: every hedge
+    // is an MDS spare row the executor computes fresh — never a
+    // re-encode. The bench mirrors the serving loop's per-batch
+    // sequence: stage deadlines, run hedged, finish_batch.
+    {
+        let nw = live_spec.total_workers();
+        let mut hedged =
+            PreparedJob::new(&live_spec, &live_alloc, &a, &jcfg).unwrap();
+        let injector = StragglerInjector::sample(
+            &live_spec,
+            LatencyModel::A,
+            hedged.per_worker(),
+            jcfg.time_scale,
+            33,
+        )
+        .unwrap();
+        let mut engine =
+            RecoveryEngine::new(RecoveryConfig::default(), nw).unwrap();
+        let clean = vec![false; nw];
+        run_quick("serve batch hedged (no failures)", || {
+            batch_seed += 1;
+            engine
+                .stage(LatencyModel::A, &live_spec, hedged.per_worker())
+                .unwrap();
+            let (reports, _obs, degraded) = hedged
+                .run_batch_hedged(
+                    &requests,
+                    Arc::new(NativeCompute),
+                    &injector,
+                    &[],
+                    batch_seed,
+                    &clean,
+                    &mut engine,
+                )
+                .unwrap();
+            assert!(degraded.is_none());
+            engine.finish_batch();
+            black_box(reports);
+        });
+        // Stall the fast group (workers 0..6): short deadlines blow
+        // quickly, their rows re-dispatch to idle survivors, and after
+        // `quarantine_after` iterations the steady state is the
+        // quarantine ring's canary-plus-cover-hedge path.
+        let mut stalled = vec![false; nw];
+        for s in stalled.iter_mut().take(6) {
+            *s = true;
+        }
+        let mut engine_stall =
+            RecoveryEngine::new(RecoveryConfig::default(), nw).unwrap();
+        run_quick("serve batch hedged (stalled group, mds spare rows)", || {
+            batch_seed += 1;
+            engine_stall
+                .stage(LatencyModel::A, &live_spec, hedged.per_worker())
+                .unwrap();
+            let (reports, _obs, degraded) = hedged
+                .run_batch_hedged(
+                    &requests,
+                    Arc::new(NativeCompute),
+                    &injector,
+                    &[],
+                    batch_seed,
+                    &stalled,
+                    &mut engine_stall,
+                )
+                .unwrap();
+            assert!(degraded.is_none());
+            engine_stall.finish_batch();
+            black_box(reports);
+        });
+        // The analytic staging pass alone: one quantile evaluation per
+        // worker per batch — the fixed cost every hedged batch pays
+        // before any work is dispatched.
+        let spec10 = ClusterSpec::new(
+            vec![
+                hetcoded::model::Group { n: 4, mu: 8.0, alpha: 1.0 },
+                hetcoded::model::Group { n: 6, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .unwrap();
+        let loads10 = vec![12usize; 10];
+        let mut eng10 =
+            RecoveryEngine::new(RecoveryConfig::default(), 10).unwrap();
+        run("recovery stage deadlines (10 workers)", || {
+            eng10.stage(LatencyModel::A, &spec10, &loads10).unwrap();
+            black_box(eng10.deadline_model(9));
         });
     }
 }

@@ -43,6 +43,9 @@ use crate::coding::Matrix;
 use crate::coordinator::failures::{FailureScenario, ScenarioState};
 use crate::coordinator::master::{derive_stream_seed, STRAGGLE_SEED_TAG};
 use crate::coordinator::rateless::RatelessSummary;
+use crate::coordinator::recovery::{
+    RecoveryConfig, RecoveryEngine, RecoveryReport,
+};
 use crate::coordinator::{
     Compute, JobConfig, LatencyRecorder, PreparedJob, ServeReport,
     WorkerObservation,
@@ -118,6 +121,9 @@ pub struct AdaptiveServeReport {
     /// Streaming-collection accounting — `Some` iff the job served with
     /// the rateless code.
     pub rateless: Option<RatelessSummary>,
+    /// Hedge/quarantine/degrade accounting — `Some` iff a
+    /// [`RecoveryConfig`] was attached to the run.
+    pub recovery: Option<RecoveryReport>,
 }
 
 /// Serve an arrival stream under a failure/drift scenario, optionally
@@ -185,6 +191,7 @@ pub fn serve_arrivals_adaptive(
         decode_cache: (outcome.decode_cache_hits, outcome.decode_cache_misses),
         decode_cache_bypasses: outcome.decode_cache_bypasses,
         rateless: outcome.rateless,
+        recovery: outcome.recovery,
     })
 }
 
@@ -212,6 +219,7 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     scenario: &FailureScenario,
     adapt: Option<&AdaptiveServeConfig>,
     resolve_policy: Option<&dyn Policy>,
+    recovery: Option<&RecoveryConfig>,
 ) -> Result<AdaptiveServeReport> {
     if requests.len() != arrival_offsets.len() {
         return Err(Error::InvalidSpec(format!(
@@ -256,6 +264,15 @@ pub(crate) fn serve_arrivals_adaptive_impl(
     let mut consecutive_miss = vec![0usize; total_workers];
     let mut suspected: Vec<bool> = vec![false; total_workers];
     let mut reallocations = 0u64;
+    // In-batch recovery layer (hedged re-dispatch, quarantine, graceful
+    // degradation). When attached, every batch — streaming or not — serves
+    // through the deadline-driven hedged collection, and the engine's
+    // quarantine ring subsumes the consecutive-miss death suspicion below.
+    let mut engine = match recovery {
+        Some(rc) => Some(RecoveryEngine::new(*rc, total_workers)?),
+        None => None,
+    };
+    let mut stall_buf = vec![false; total_workers];
 
     let start = wall_now();
     let mut recorder = LatencyRecorder::new();
@@ -312,10 +329,34 @@ pub(crate) fn serve_arrivals_adaptive_impl(
         let injector = injector_slot.as_ref().expect("injector just staged");
         if lossy_scenario {
             for (w, p) in loss_buf.iter_mut().enumerate() {
-                *p = state.loss_probability(state.group_of(w), batch_idx);
+                // Per-worker link loss composed with the group scripting
+                // (reduces to the group probability when no LossyWorker
+                // events are scripted — bit-parity with older scenarios).
+                *p = state.worker_loss_probability(w, batch_idx);
             }
         }
-        let (reports, observed) = if streaming {
+        let (reports, observed) = if let Some(eng) = engine.as_mut() {
+            for (w, s) in stall_buf.iter_mut().enumerate() {
+                *s = state.is_stalled(w, batch_idx);
+            }
+            eng.stage(cfg.model, &assumed, prepared.per_worker())?;
+            let loss: &[f64] = if lossy_scenario { &loss_buf } else { &[] };
+            let (reports, observed, degraded) = prepared.run_batch_hedged(
+                &requests[next..end],
+                Arc::clone(&compute),
+                injector,
+                loss,
+                stream_seed,
+                &stall_buf,
+                eng,
+            )?;
+            if let Some(mut d) = degraded {
+                d.batch = batch_idx;
+                eng.note_degraded(d);
+            }
+            eng.finish_batch();
+            (reports, observed)
+        } else if streaming {
             let loss: &[f64] = if lossy_scenario { &loss_buf } else { &[] };
             let (reports, observed, stats) = prepared.run_batch_rateless_injected(
                 &requests[next..end],
@@ -373,7 +414,9 @@ pub(crate) fn serve_arrivals_adaptive_impl(
                 // erase whole replies — silence is not death evidence
                 // there, so only the loss-free fixed-chunk path counts
                 // misses. Speed observations still feed the estimator.
-                !streaming && !lossy_scenario,
+                // With a recovery engine attached the quarantine ring
+                // subsumes miss-based death suspicion entirely.
+                !streaming && !lossy_scenario && engine.is_none(),
             );
             if batch_idx % ad.est.check_every as u64 == 0 {
                 let mut new_suspects = Vec::new();
@@ -501,6 +544,7 @@ pub(crate) fn serve_arrivals_adaptive_impl(
         decode_cache: prepared.decode_cache_stats(),
         decode_cache_bypasses: prepared.decode_cache_bypasses(),
         rateless,
+        recovery: engine.map(RecoveryEngine::into_report),
     })
 }
 

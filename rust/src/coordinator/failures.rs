@@ -72,6 +72,36 @@ pub enum FailureKind {
         /// Number of batches the burst lasts (`>= 1`).
         batches: u64,
     },
+    /// Stall: from this batch on the worker is *alive but dark* — it
+    /// accepts its dispatch and never replies. Unlike
+    /// [`FailureKind::KillWorkers`] the coordinator cannot tell up front;
+    /// only a blown deadline (the recovery layer) reveals it. Serving a
+    /// stall script requires [`crate::coordinator::SessionBuilder::recovery`]
+    /// — the legacy collection loop would block forever.
+    StallWorker {
+        /// Global worker id (group-major order).
+        worker: usize,
+    },
+    /// Flap: starting at this batch the worker alternates `period` dark
+    /// batches and `period` healthy batches, dark phase first. The
+    /// periodic stall/recover pattern exercises quarantine re-admission.
+    FlappyWorker {
+        /// Global worker id (group-major order).
+        worker: usize,
+        /// Batches per phase (`>= 1`).
+        period: u64,
+    },
+    /// Per-*worker* lossy link: from this batch on, every packet this
+    /// worker sends is additionally dropped i.i.d. with probability `p`,
+    /// composing with any group-level loss (independent channels:
+    /// `p = 1 - (1-p_group)(1-p_worker)`). Repeated events replace the
+    /// worker's own rate; `p = 0` heals it. Composable with stall/flap.
+    LossyWorker {
+        /// Global worker id (group-major order).
+        worker: usize,
+        /// Per-packet drop probability in `[0, 1]`.
+        p: f64,
+    },
 }
 
 /// A [`FailureKind`] that fires before serving batch `at_batch` (0-based).
@@ -128,6 +158,22 @@ impl FailureScenario {
                         ));
                     }
                 }
+                FailureKind::StallWorker { .. } => {}
+                FailureKind::FlappyWorker { period, .. } => {
+                    if *period == 0 {
+                        return Err(Error::InvalidSpec(
+                            "FlappyWorker phase must last at least one batch"
+                                .into(),
+                        ));
+                    }
+                }
+                FailureKind::LossyWorker { p, .. } => {
+                    if !(*p >= 0.0 && *p <= 1.0) {
+                        return Err(Error::InvalidSpec(format!(
+                            "worker loss probability must be in [0, 1], got {p}"
+                        )));
+                    }
+                }
             }
         }
         events.sort_by_key(|e| e.at_batch);
@@ -158,7 +204,23 @@ impl FailureScenario {
         self.events.iter().any(|e| {
             matches!(
                 e.kind,
-                FailureKind::LossyGroup { .. } | FailureKind::BurstDrop { .. }
+                FailureKind::LossyGroup { .. }
+                    | FailureKind::BurstDrop { .. }
+                    | FailureKind::LossyWorker { .. }
+            )
+        })
+    }
+
+    /// Does the script contain any stall/flap event? The session refuses
+    /// such scripts without a recovery config attached: a stalled worker
+    /// holds its rows forever, so the legacy blocking collection loop
+    /// would hang waiting for a reply that never comes.
+    pub fn has_stall(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(
+                e.kind,
+                FailureKind::StallWorker { .. }
+                    | FailureKind::FlappyWorker { .. }
             )
         })
     }
@@ -184,7 +246,85 @@ impl FailureScenario {
         drift: Option<&str>,
         loss: Option<&str>,
     ) -> Result<FailureScenario> {
+        FailureScenario::parse_compound(failures, drift, loss, None, None, None)
+    }
+
+    /// The full CLI dialect: [`FailureScenario::parse_with_loss`] plus the
+    /// recovery-layer scenarios:
+    ///
+    /// - `stall`: `BATCH:w1,w2[;...]` — the listed workers go dark
+    ///   (alive, never reply) from that batch on
+    ///   ([`FailureKind::StallWorker`]);
+    /// - `flap`: `BATCH:WORKER:PERIOD[;...]` — the worker alternates
+    ///   `PERIOD` dark and `PERIOD` healthy batches
+    ///   ([`FailureKind::FlappyWorker`]);
+    /// - `worker_loss`: `BATCH:WORKER:P[;...]` — per-worker Bernoulli
+    ///   packet drop composing with group loss
+    ///   ([`FailureKind::LossyWorker`]).
+    pub fn parse_compound(
+        failures: Option<&str>,
+        drift: Option<&str>,
+        loss: Option<&str>,
+        stall: Option<&str>,
+        flap: Option<&str>,
+        worker_loss: Option<&str>,
+    ) -> Result<FailureScenario> {
         let mut events = Vec::new();
+        if let Some(spec) = stall {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let (batch, list) = part.split_once(':').ok_or_else(|| {
+                    Error::InvalidSpec(format!(
+                        "--stall entry `{part}` is not BATCH:w1,w2"
+                    ))
+                })?;
+                let at_batch = parse_num::<u64>("stall batch", batch)?;
+                for w in list.split(',').filter(|s| !s.is_empty()) {
+                    events.push(FailureEvent {
+                        at_batch,
+                        kind: FailureKind::StallWorker {
+                            worker: parse_num::<usize>("stall worker", w)?,
+                        },
+                    });
+                }
+            }
+        }
+        if let Some(spec) = flap {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let fields: Vec<&str> = part.split(':').collect();
+                if fields.len() != 3 {
+                    return Err(Error::InvalidSpec(format!(
+                        "--flap entry `{part}` is not BATCH:WORKER:PERIOD"
+                    )));
+                }
+                events.push(FailureEvent {
+                    at_batch: parse_num::<u64>("flap batch", fields[0])?,
+                    kind: FailureKind::FlappyWorker {
+                        worker: parse_num::<usize>("flap worker", fields[1])?,
+                        period: parse_num::<u64>("flap period", fields[2])?,
+                    },
+                });
+            }
+        }
+        if let Some(spec) = worker_loss {
+            for part in spec.split(';').filter(|s| !s.is_empty()) {
+                let fields: Vec<&str> = part.split(':').collect();
+                if fields.len() != 3 {
+                    return Err(Error::InvalidSpec(format!(
+                        "--worker-loss entry `{part}` is not BATCH:WORKER:P"
+                    )));
+                }
+                events.push(FailureEvent {
+                    at_batch: parse_num::<u64>("worker-loss batch", fields[0])?,
+                    kind: FailureKind::LossyWorker {
+                        worker: parse_num::<usize>(
+                            "worker-loss worker",
+                            fields[1],
+                        )?,
+                        p: parse_num::<f64>("worker-loss probability", fields[2])?,
+                    },
+                });
+            }
+        }
         if let Some(spec) = loss {
             for part in spec.split(';').filter(|s| !s.is_empty()) {
                 let fields: Vec<&str> = part.split(':').collect();
@@ -285,6 +425,14 @@ pub struct ScenarioState {
     /// Per-group burst window: packets drop entirely while
     /// `batch < burst_until[g]`.
     burst_until: Vec<u64>,
+    /// Per-worker Bernoulli packet-loss probability, composing with the
+    /// group rate (0 = no worker-level loss).
+    worker_loss: Vec<f64>,
+    /// Per-worker permanent-stall start batch (`None` = never stalled).
+    stalled_from: Vec<Option<u64>>,
+    /// Per-worker flap schedule `(start, period)`: dark for `period`
+    /// batches from `start`, then alive for `period`, repeating.
+    flap: Vec<Option<(u64, u64)>>,
     applied: usize,
 }
 
@@ -298,6 +446,9 @@ impl ScenarioState {
             slow: vec![1.0; spec.total_workers()],
             loss: vec![0.0; spec.num_groups()],
             burst_until: vec![0; spec.num_groups()],
+            worker_loss: vec![0.0; spec.total_workers()],
+            stalled_from: vec![None; spec.total_workers()],
+            flap: vec![None; spec.total_workers()],
             applied: 0,
         }
     }
@@ -328,10 +479,43 @@ impl ScenarioState {
         *self.loss.get(group).unwrap_or(&0.0)
     }
 
-    /// Is any link lossy at `batch` (Bernoulli rate set or burst window
-    /// open)?
+    /// Is any link lossy at `batch` (group Bernoulli rate set, burst
+    /// window open, or a per-worker rate set)?
     pub fn any_loss(&self, batch: u64) -> bool {
         (0..self.loss.len()).any(|g| self.loss_probability(g, batch) > 0.0)
+            || self.worker_loss.iter().any(|&p| p > 0.0)
+    }
+
+    /// Effective per-packet drop probability on `worker`'s link at
+    /// `batch`: the group rate and the worker's own rate composed as
+    /// independent channels, `1 - (1-p_g)(1-p_w)`.
+    pub fn worker_loss_probability(&self, worker: usize, batch: u64) -> f64 {
+        let pg = self.loss_probability(self.group_of(worker), batch);
+        let pw = *self.worker_loss.get(worker).unwrap_or(&0.0);
+        1.0 - (1.0 - pg) * (1.0 - pw)
+    }
+
+    /// Is `worker` dark (stalled or in a flap dark phase) at `batch`? A
+    /// dark worker accepts its dispatch and never replies — unlike a dead
+    /// worker, the coordinator cannot know until a deadline blows.
+    pub fn is_stalled(&self, worker: usize, batch: u64) -> bool {
+        if let Some(Some(from)) = self.stalled_from.get(worker) {
+            if batch >= *from {
+                return true;
+            }
+        }
+        if let Some(Some((start, period))) = self.flap.get(worker) {
+            if batch >= *start {
+                // Phases alternate dark/alive, dark first.
+                return ((batch - start) / period) % 2 == 0;
+            }
+        }
+        false
+    }
+
+    /// Is any worker dark at `batch`?
+    pub fn any_stalled(&self, batch: u64) -> bool {
+        (0..self.stalled_from.len()).any(|w| self.is_stalled(w, batch))
     }
 
     fn apply(&mut self, kind: &FailureKind, at_batch: u64) -> Result<()> {
@@ -393,6 +577,31 @@ impl ScenarioState {
                 let until = at_batch.saturating_add(*batches);
                 let slot = &mut self.burst_until[*group];
                 *slot = (*slot).max(until);
+            }
+            FailureKind::StallWorker { worker } => {
+                if *worker >= nw {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario stalls worker {worker}, cluster has {nw}"
+                    )));
+                }
+                let slot = &mut self.stalled_from[*worker];
+                *slot = Some(slot.map_or(at_batch, |b| b.min(at_batch)));
+            }
+            FailureKind::FlappyWorker { worker, period } => {
+                if *worker >= nw {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario flaps worker {worker}, cluster has {nw}"
+                    )));
+                }
+                self.flap[*worker] = Some((at_batch, *period));
+            }
+            FailureKind::LossyWorker { worker, p } => {
+                if *worker >= nw {
+                    return Err(Error::InvalidSpec(format!(
+                        "scenario degrades worker {worker}, cluster has {nw}"
+                    )));
+                }
+                self.worker_loss[*worker] = *p;
             }
         }
         Ok(())
@@ -641,6 +850,122 @@ mod tests {
         assert!(FailureScenario::parse_with_loss(None, None, Some("1:2")).is_err());
         assert!(FailureScenario::parse_with_loss(None, None, Some("1:2:x:3"))
             .is_err());
+    }
+
+    #[test]
+    fn stall_and_flap_schedules_compose_with_loss() {
+        let scenario = FailureScenario::new(vec![
+            FailureEvent {
+                at_batch: 2,
+                kind: FailureKind::StallWorker { worker: 1 },
+            },
+            FailureEvent {
+                at_batch: 4,
+                kind: FailureKind::FlappyWorker { worker: 5, period: 3 },
+            },
+            FailureEvent {
+                at_batch: 0,
+                kind: FailureKind::LossyWorker { worker: 6, p: 0.5 },
+            },
+            FailureEvent {
+                at_batch: 0,
+                kind: FailureKind::LossyGroup { group: 1, p: 0.2 },
+            },
+        ])
+        .unwrap();
+        assert!(scenario.has_stall());
+        assert!(scenario.has_loss());
+        let mut st = ScenarioState::new(&spec(), &[]);
+        st.advance(&scenario, 10).unwrap();
+        // Permanent stall from batch 2 on.
+        assert!(st.is_stalled(1, 2));
+        assert!(st.is_stalled(1, 100));
+        assert!(!st.is_stalled(0, 100));
+        // Flap: dark for 3 batches from 4, alive for 3, repeating.
+        for b in [4, 5, 6, 10, 11, 12] {
+            assert!(st.is_stalled(5, b), "batch {b} should be dark");
+        }
+        for b in [7, 8, 9, 13] {
+            assert!(!st.is_stalled(5, b), "batch {b} should be alive");
+        }
+        assert!(st.any_stalled(4));
+        // Worker loss composes with the group rate (worker 6 is in
+        // group 1): 1 - 0.8*0.5 = 0.6; worker 5 gets the group rate only;
+        // group-0 workers stay clean.
+        assert!((st.worker_loss_probability(6, 10) - 0.6).abs() < 1e-12);
+        assert!((st.worker_loss_probability(5, 10) - 0.2).abs() < 1e-12);
+        assert_eq!(st.worker_loss_probability(0, 10), 0.0);
+        assert!(st.any_loss(10));
+        // Stall-only scripts have no loss, loss-only scripts no stall.
+        let stall_only = FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::StallWorker { worker: 0 },
+        }])
+        .unwrap();
+        assert!(stall_only.has_stall() && !stall_only.has_loss());
+    }
+
+    #[test]
+    fn stall_validation_and_parse_dialects() {
+        // Out-of-range ids rejected at apply time.
+        for kind in [
+            FailureKind::StallWorker { worker: 99 },
+            FailureKind::FlappyWorker { worker: 99, period: 2 },
+            FailureKind::LossyWorker { worker: 99, p: 0.5 },
+        ] {
+            let s = FailureScenario::new(vec![FailureEvent {
+                at_batch: 0,
+                kind,
+            }])
+            .unwrap();
+            let mut st = ScenarioState::new(&spec(), &[]);
+            assert!(st.advance(&s, 0).is_err());
+        }
+        // Bad knobs rejected at build time.
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::FlappyWorker { worker: 0, period: 0 },
+        }])
+        .is_err());
+        assert!(FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::LossyWorker { worker: 0, p: 1.5 },
+        }])
+        .is_err());
+        // CLI dialects.
+        let s = FailureScenario::parse_compound(
+            None,
+            None,
+            None,
+            Some("2:1,3"),
+            Some("4:5:3"),
+            Some("0:6:0.5"),
+        )
+        .unwrap();
+        assert_eq!(s.events().len(), 4);
+        assert!(s.has_stall() && s.has_loss());
+        assert_eq!(
+            s.events()[0].kind,
+            FailureKind::LossyWorker { worker: 6, p: 0.5 }
+        );
+        assert_eq!(
+            s.events()[1].kind,
+            FailureKind::StallWorker { worker: 1 }
+        );
+        assert_eq!(
+            s.events()[3].kind,
+            FailureKind::FlappyWorker { worker: 5, period: 3 }
+        );
+        for (stall, flap, wloss) in [
+            (Some("nope"), None, None),
+            (None, Some("1:2"), None),
+            (None, None, Some("1:2:3:4")),
+        ] {
+            assert!(FailureScenario::parse_compound(
+                None, None, None, stall, flap, wloss
+            )
+            .is_err());
+        }
     }
 
     #[test]

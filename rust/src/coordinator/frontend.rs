@@ -135,6 +135,13 @@ pub struct FrontEndReport {
     /// Batches drained from a shard other than the rotation's next (the
     /// work-conserving skips — the live analogue of sim-layer steals).
     pub cross_shard_batches: u64,
+    /// Batches drained from a shard other than batch `b`'s *home* shard
+    /// (`b % shards`) — the exact counterpart of the admission
+    /// simulator's [`crate::workload::admission::AdmissionReport::steals`]
+    /// (home shard `drainer % shards` there): under the degenerate
+    /// [`FrontEndConfig::fifo_parity`] config both are provably 0, pinned
+    /// equal by `rust/tests/admission.rs`.
+    pub steals: u64,
     /// Mean jobs per batch.
     pub mean_batch: f64,
     /// Largest batch actually dispatched.
@@ -258,6 +265,7 @@ pub(crate) fn serve_arrivals_front_impl(
     let mut queued = 0usize;
     let mut batch_idx = 0u64;
     let (mut batches, mut cross_shard, mut batch_jobs) = (0u64, 0u64, 0u64);
+    let mut steals = 0u64;
     let mut max_batch_used = 0usize;
     let mut max_depth = 0usize;
     let mut rr = 0usize;
@@ -308,6 +316,11 @@ pub(crate) fn serve_arrivals_front_impl(
         };
         if off > 0 {
             cross_shard += 1;
+        }
+        // The sim's steal notion, ported: batch `b`'s home shard is
+        // `b % shards`; draining any other shard is a steal.
+        if s != (batch_idx as usize) % shards {
+            steals += 1;
         }
         rr = (s + 1) % shards;
         let limit =
@@ -413,6 +426,7 @@ pub(crate) fn serve_arrivals_front_impl(
         tenants,
         batches,
         cross_shard_batches: cross_shard,
+        steals,
         mean_batch: batch_jobs as f64 / batches.max(1) as f64,
         max_batch_used,
         final_batch_limit: controller

@@ -45,6 +45,16 @@
 //! and re-slicing the already-encoded rows ([`PreparedJob::rechunk`])
 //! with zero additional encode work.
 //!
+//! Adaptation reacts *between* batches; the [`recovery`] layer
+//! ([`SessionBuilder::recovery`]) reacts *inside* one: per-worker hedge
+//! deadlines from the analytic quantile law, deadline-blown row ranges
+//! re-issued to the fastest helpers with capped exponential backoff
+//! (first completion wins, deterministically), a quarantine ring with
+//! canary probes for repeat offenders, and a typed degraded outcome —
+//! never a hang — when the batch deadline expires short of `k`. This is
+//! what lets [`failures`] script outright stalls ([`FailureKind::StallWorker`],
+//! [`FailureKind::FlappyWorker`]) rather than just slowdowns.
+//!
 //! With the rateless fountain (`--code rateless-rlc`) serving switches
 //! to the **streaming** collection loop ([`rateless`],
 //! [`PreparedJob::run_batch_streamed`]): solicitation rounds of fresh
@@ -91,6 +101,7 @@ pub mod master;
 pub mod metrics;
 pub mod prepared;
 pub mod rateless;
+pub mod recovery;
 pub mod session;
 pub mod straggler;
 
@@ -111,5 +122,9 @@ pub use master::{derive_stream_seed, JobConfig, JobReport, ServeReport};
 pub use metrics::LatencyRecorder;
 pub use prepared::{PreparedJob, WorkerObservation};
 pub use rateless::{RatelessBatchStats, RatelessSummary, RATELESS_PACKET_ROWS};
+pub use recovery::{
+    DegradePolicy, DegradedBatch, RecoveryConfig, RecoveryCounters,
+    RecoveryEngine, RecoveryReport,
+};
 pub use session::{Mode, ServeOutcome, Session, SessionBuilder};
 pub use straggler::StragglerInjector;

@@ -37,19 +37,75 @@ use crate::coordinator::rateless::{
     packet_dropped, proportional_shares, RatelessBatchStats,
     RATELESS_MAX_ROUNDS, RATELESS_PACKET_ROWS,
 };
+use crate::coordinator::recovery::{
+    DegradePolicy, DegradedBatch, RecoveryEngine,
+};
 use crate::coordinator::{Compute, StragglerInjector};
 use crate::model::ClusterSpec;
 use crate::runtime::pool::PoolHandle;
 use crate::{Error, Result};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 use crate::runtime::wall_now;
+
+/// Seed mix for hedge-wave packet fates: re-transmissions are independent
+/// Bernoulli trials, so a row dropped on the original delivery (keyed by
+/// `batch_seed` alone) gets a fresh draw on every retry wave.
+const HEDGE_FATE_TAG: u64 = 0x4ED6_0FA7_E4ED_60FA;
 
 /// One worker's reply for a whole request batch.
 struct BatchReply {
     worker: usize,
     range: std::ops::Range<usize>,
+    /// Index into the hedged path's task table (`0` on the legacy paths,
+    /// which identify replies by `range` alone).
+    task: usize,
     /// One result vector per request.
     ys: Vec<Vec<f64>>,
+}
+
+/// Row payload of one hedged-path task: original dispatches carry their
+/// chunk's contiguous range, hedge re-issues and canaries carry explicit
+/// (possibly scattered) row lists.
+enum TaskRows {
+    Contiguous(std::ops::Range<usize>),
+    Scattered(Vec<usize>),
+}
+
+impl TaskRows {
+    fn len(&self) -> usize {
+        match self {
+            TaskRows::Contiguous(r) => r.len(),
+            TaskRows::Scattered(v) => v.len(),
+        }
+    }
+
+    fn at(&self, i: usize) -> usize {
+        match self {
+            TaskRows::Contiguous(r) => r.start + i,
+            TaskRows::Scattered(v) => v[i],
+        }
+    }
+}
+
+/// One in-flight unit of the hedged collection loop. Tasks are never
+/// cancelled — a blown task is only marked non-pending, and a late reply
+/// from it still contributes rows (first-completion-wins is a dedup rule
+/// on the row support, not a kill switch).
+struct HedgeTask {
+    /// Worker executing this task.
+    executor: usize,
+    /// Worker whose deadline blow this task covers (`usize::MAX` for
+    /// pool-wide repair waves with no single lineage).
+    origin: usize,
+    rows: TaskRows,
+    /// Absolute wall offset from batch start; past it the task is blown.
+    deadline: Duration,
+    /// Retry wave: `0` = original dispatch / canary, `>= 1` = hedge.
+    wave: u32,
+    pending: bool,
+    is_hedge: bool,
+    is_canary: bool,
 }
 
 /// One consumed worker reply, as the estimator sees it: which worker, how
@@ -488,6 +544,7 @@ impl PreparedJob {
                         let _ = sender.send(BatchReply {
                             worker: w,
                             range: chunk.row_range.clone(),
+                            task: 0,
                             ys,
                         });
                     }
@@ -810,6 +867,7 @@ impl PreparedJob {
                             let _ = sender.send(BatchReply {
                                 worker: w,
                                 range: chunk.row_range.clone(),
+                                task: 0,
                                 ys,
                             });
                         }
@@ -885,6 +943,583 @@ impl PreparedJob {
             });
         }
         Ok((reports, observed, stats))
+    }
+
+    /// Spawn a worker-emulation thread for an explicit row list (hedge
+    /// re-issues and canary probes): the rows are gathered from the cached
+    /// encoded matrix — `select_rows`, never a re-encode — and the reply
+    /// carries the task id so the master matches it without guessing.
+    fn spawn_scattered(
+        &self,
+        task: usize,
+        w: usize,
+        rows: &[usize],
+        delay: Duration,
+        xs: &Arc<Vec<Vec<f64>>>,
+        compute: &Arc<dyn Compute>,
+        tx: &mpsc::Sender<BatchReply>,
+    ) -> Result<()> {
+        let mat = self.coded.select_rows(rows);
+        let xs = Arc::clone(xs);
+        let cmp = Arc::clone(compute);
+        let sender = tx.clone();
+        // Allowlisted thread-creation site (lint rule D3): same
+        // sleep-then-compute emulation as the fixed-chunk path.
+        #[allow(clippy::disallowed_methods)]
+        std::thread::Builder::new()
+            .name(format!("hedge-{w}"))
+            .spawn(move || {
+                std::thread::sleep(delay);
+                if let Ok(ys) = cmp.matvec_batch(&mat, &xs) {
+                    let _ = sender.send(BatchReply {
+                        worker: w,
+                        range: 0..0,
+                        task,
+                        ys,
+                    });
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn hedge on {w}: {e}")))?;
+        Ok(())
+    }
+
+    /// Issue one hedge task covering `rows` for the blown lineage of
+    /// `origin` at retry wave `wave` (`>= 1`). The executor is picked
+    /// deterministically from the engine's speed-ranked helper list,
+    /// rotated by wave so consecutive retries of one lineage fan out
+    /// across distinct workers; its deadline is its own analytic quantile
+    /// for this load, stretched by `backoff^(wave-1)`. Returns whether a
+    /// task was actually issued (no helpers → `false`).
+    #[allow(clippy::too_many_arguments)]
+    fn issue_hedge(
+        &self,
+        tasks: &mut Vec<HedgeTask>,
+        engine: &mut RecoveryEngine,
+        origin: usize,
+        rows: Vec<usize>,
+        wave: u32,
+        now: Duration,
+        alive: &[bool],
+        stalled: &[bool],
+        injector: &StragglerInjector,
+        xs: &Arc<Vec<Vec<f64>>>,
+        compute: &Arc<dyn Compute>,
+        tx: &mpsc::Sender<BatchReply>,
+    ) -> Result<bool> {
+        if rows.is_empty() {
+            return Ok(false);
+        }
+        let helpers = engine.ranked_helpers(origin, alive);
+        if helpers.is_empty() {
+            return Ok(false);
+        }
+        let executor = helpers[((wave.max(1) - 1) as usize) % helpers.len()];
+        let ts = self.cfg.time_scale;
+        let base = engine.deadline_for_load(executor, rows.len());
+        let backoff = engine.config().backoff.powi(wave.max(1) as i32 - 1);
+        let deadline = now + Duration::from_secs_f64(base * backoff * ts);
+        let task = tasks.len();
+        if !stalled.get(executor).copied().unwrap_or(false) {
+            // The helper's speed this batch is its straggle draw, pro-rated
+            // to the hedge's row count (same machine, same epoch — the
+            // per-row rate of the draw carries over).
+            let load = self.per_worker[executor].max(1) as f64;
+            let delay_model =
+                injector.model_delay(executor) * rows.len() as f64 / load;
+            let delay = Duration::from_secs_f64(delay_model * ts);
+            self.spawn_scattered(task, executor, &rows, delay, xs, compute, tx)?;
+        }
+        tasks.push(HedgeTask {
+            executor,
+            origin,
+            rows: TaskRows::Scattered(rows),
+            deadline,
+            wave,
+            pending: true,
+            is_hedge: true,
+            is_canary: false,
+        });
+        engine.note_hedges_issued(1);
+        Ok(true)
+    }
+
+    /// Mint `cnt` fresh rateless rows past the watermark (zero re-encodes,
+    /// measured by [`PreparedJob::re_encoded_rows`]) and grow the dedup
+    /// bitmap to match; returns the fresh global indices.
+    fn mint_fresh(
+        &mut self,
+        cnt: usize,
+        have: &mut Vec<bool>,
+    ) -> Result<Vec<usize>> {
+        let first = self.n;
+        self.extend_horizon(first + cnt)?;
+        have.resize(self.n, false);
+        Ok((first..first + cnt).collect())
+    }
+
+    /// [`PreparedJob::run_batch_lossy`] under the deadline/hedging engine
+    /// ([`crate::coordinator::recovery`]). Differences from the legacy
+    /// collection loop, none of which change a failure-free batch:
+    ///
+    /// - Every dispatch gets a hedge deadline (its analytic runtime
+    ///   quantile, staged in the engine from the estimator's current
+    ///   specs); a blown deadline re-issues the task's *missing* rows to
+    ///   the fastest ranked helper — spare MDS row copies under `mds-*`
+    ///   codes, fresh minted rows under `rateless-rlc` — with exponential
+    ///   backoff across waves.
+    /// - Replies deduplicate by global row index (`first-completion-wins`):
+    ///   whichever copy lands first contributes, duplicates count as
+    ///   `wasted_rows`. When any hedge fired, the support is sorted by row
+    ///   index before decode, so the decoded bytes are a pure function of
+    ///   the final support *set*, not of arrival order between copies.
+    /// - `stalled[w]` marks workers that are alive but dark this batch
+    ///   (scripted `StallWorker`/`FlappyWorker`): their thread never
+    ///   replies, but the channel stays open — the master's clock, not a
+    ///   hangup, detects them.
+    /// - Quarantined workers are not dispatched: their chunk is hedged to
+    ///   healthy workers at wave 1 immediately, and a single canary row
+    ///   probes them; an in-deadline canary reply re-admits the worker at
+    ///   the batch boundary.
+    /// - If the batch deadline expires short of `k`, the engine degrades
+    ///   per policy: `Fail` is a typed decode error, `Partial` returns the
+    ///   sorted partial support as a [`DegradedBatch`] plus per-request
+    ///   placeholder reports (empty `decoded`, NaN error) — never a hang.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_batch_hedged(
+        &mut self,
+        requests: &[Vec<f64>],
+        compute: Arc<dyn Compute>,
+        injector: &StragglerInjector,
+        loss: &[f64],
+        batch_seed: u64,
+        stalled: &[bool],
+        engine: &mut RecoveryEngine,
+    ) -> Result<(Vec<JobReport>, Vec<WorkerObservation>, Option<DegradedBatch>)>
+    {
+        if requests.is_empty() {
+            return Err(Error::InvalidSpec("empty request batch".into()));
+        }
+        let nw = self.spec.total_workers();
+        if injector.len() != nw {
+            return Err(Error::InvalidSpec(format!(
+                "injector covers {} workers, cluster has {nw}",
+                injector.len()
+            )));
+        }
+        let b = requests.len();
+        let k = self.spec.k;
+        let ts = self.cfg.time_scale;
+        let alive: Vec<bool> = (0..nw).map(|w| !injector.is_dead(w)).collect();
+        let any_stalled_live = (0..nw).any(|w| {
+            alive[w]
+                && self.per_worker[w] > 0
+                && stalled.get(w).copied().unwrap_or(false)
+        });
+        // The analytic completion law does not model stalls or hedges —
+        // only report it when it actually describes the batch.
+        let model_latency = if any_stalled_live {
+            None
+        } else {
+            injector.analytic_completion_with(
+                &self.per_worker,
+                k,
+                &mut self.completion_order,
+            )
+        };
+
+        let xs_arc = self.stage_requests(requests);
+        let (tx, rx) = mpsc::channel::<BatchReply>();
+        let start = wall_now();
+
+        // Original dispatch: skip dead and quarantined workers; stalled
+        // workers get a task (and a deadline) but no thread — alive but
+        // dark. The master keeps `tx` for the whole collection, so a
+        // fully-stalled fleet times out instead of hanging up.
+        let mut tasks: Vec<HedgeTask> = Vec::new();
+        let mut quarantined_chunks: Vec<usize> = Vec::new();
+        for (ci, chunk) in self.chunks.iter().enumerate() {
+            let w = chunk.worker;
+            if injector.is_dead(w) || chunk.row_range.is_empty() {
+                continue;
+            }
+            if engine.is_quarantined(w) {
+                quarantined_chunks.push(ci);
+                continue;
+            }
+            engine.note_dispatched(w);
+            let task = tasks.len();
+            tasks.push(HedgeTask {
+                executor: w,
+                origin: w,
+                rows: TaskRows::Contiguous(chunk.row_range.clone()),
+                deadline: Duration::from_secs_f64(
+                    engine.deadline_model(w) * ts,
+                ),
+                wave: 0,
+                pending: true,
+                is_hedge: false,
+                is_canary: false,
+            });
+            if stalled.get(w).copied().unwrap_or(false) {
+                continue;
+            }
+            let delay = injector.wall_delay(w);
+            let chunk = Arc::clone(chunk);
+            let xs = Arc::clone(&xs_arc);
+            let cmp = Arc::clone(&compute);
+            let sender = tx.clone();
+            // Allowlisted thread-creation site (lint rule D3): worker
+            // emulation blocks in `sleep` for the injected wall delay.
+            #[allow(clippy::disallowed_methods)]
+            std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    std::thread::sleep(delay);
+                    if let Ok(ys) = cmp.matvec_batch(&chunk.rows, &xs) {
+                        let _ = sender.send(BatchReply {
+                            worker: w,
+                            range: chunk.row_range.clone(),
+                            task,
+                            ys,
+                        });
+                    }
+                })
+                .map_err(|e| Error::Runtime(format!("spawn worker {w}: {e}")))?;
+        }
+
+        let batch_wall_deadline = {
+            let dispatchable: Vec<bool> = (0..nw)
+                .map(|w| alive[w] && self.per_worker[w] > 0)
+                .collect();
+            Duration::from_secs_f64(
+                engine.batch_deadline_model(&dispatchable) * ts,
+            )
+        };
+
+        // Collection arenas (same reserve discipline as the legacy path)
+        // plus the first-completion-wins dedup bitmap.
+        let mut grew = self.rows_buf.capacity() < self.n;
+        self.rows_buf.clear();
+        self.rows_buf.reserve(self.n);
+        while self.cols_buf.len() > b {
+            self.cols_spare
+                .push(self.cols_buf.pop().expect("len checked"));
+        }
+        while self.cols_buf.len() < b {
+            self.cols_buf.push(self.cols_spare.pop().unwrap_or_default());
+        }
+        for col in self.cols_buf.iter_mut() {
+            grew |= col.capacity() < self.n;
+            col.clear();
+            col.reserve(self.n);
+        }
+        self.grows += u64::from(grew);
+        let mut have = vec![false; self.n];
+
+        // Quarantine handling: canary probe (one row, its own deadline)
+        // plus an immediate wave-1 cover of the whole chunk — the ring
+        // never holds the batch hostage.
+        let hedge_on = engine.config().hedge;
+        for ci in quarantined_chunks {
+            let (w, range) = {
+                let c = &self.chunks[ci];
+                (c.worker, c.row_range.clone())
+            };
+            let canary_row = range.start;
+            let task = tasks.len();
+            tasks.push(HedgeTask {
+                executor: w,
+                origin: w,
+                rows: TaskRows::Scattered(vec![canary_row]),
+                deadline: Duration::from_secs_f64(
+                    engine.deadline_for_load(w, 1) * ts,
+                ),
+                wave: 0,
+                pending: true,
+                is_hedge: false,
+                is_canary: true,
+            });
+            if !stalled.get(w).copied().unwrap_or(false) {
+                let load = self.per_worker[w].max(1) as f64;
+                let delay = Duration::from_secs_f64(
+                    injector.model_delay(w) / load * ts,
+                );
+                self.spawn_scattered(
+                    task,
+                    w,
+                    &[canary_row],
+                    delay,
+                    &xs_arc,
+                    &compute,
+                    &tx,
+                )?;
+            }
+            if hedge_on {
+                self.issue_hedge(
+                    &mut tasks,
+                    engine,
+                    w,
+                    range.collect(),
+                    1,
+                    Duration::ZERO,
+                    &alive,
+                    stalled,
+                    injector,
+                    &xs_arc,
+                    &compute,
+                    &tx,
+                )?;
+            }
+        }
+
+        let max_waves = engine.config().max_waves;
+        let mut workers_used = 0usize;
+        let mut observed = Vec::new();
+        let mut any_hedge = tasks.iter().any(|t| t.is_hedge);
+        let mut repair_wave = 0u32;
+        while self.rows_buf.len() < k {
+            let now = start.elapsed();
+            if now >= batch_wall_deadline {
+                break; // degrade below
+            }
+            // Blown deadlines: mark, blame originals, re-issue missing
+            // rows at the next wave (capped).
+            let mut to_issue: Vec<(usize, Vec<usize>, u32)> = Vec::new();
+            for t in tasks.iter_mut() {
+                if !t.pending || now < t.deadline {
+                    continue;
+                }
+                t.pending = false;
+                if !t.is_hedge && !t.is_canary {
+                    engine.note_blown(t.origin);
+                }
+                if hedge_on && !t.is_canary && t.wave < max_waves {
+                    let missing: Vec<usize> = (0..t.rows.len())
+                        .map(|i| t.rows.at(i))
+                        .filter(|&r| !have[r])
+                        .collect();
+                    if !missing.is_empty() {
+                        to_issue.push((t.origin, missing, t.wave + 1));
+                    }
+                }
+            }
+            for (origin, rows, wave) in to_issue {
+                let rows = if self.is_rateless() {
+                    self.mint_fresh(rows.len(), &mut have)?
+                } else {
+                    rows
+                };
+                any_hedge |= self.issue_hedge(
+                    &mut tasks, engine, origin, rows, wave, now, &alive,
+                    stalled, injector, &xs_arc, &compute, &tx,
+                )?;
+            }
+            // Everything resolved but the support is short (loss ate
+            // packets, or no helper was available): pool-wide repair
+            // waves re-solicit the deficit from spare redundancy.
+            if self.rows_buf.len() < k && !tasks.iter().any(|t| t.pending) {
+                if hedge_on && repair_wave < max_waves {
+                    repair_wave += 1;
+                    let deficit = k - self.rows_buf.len();
+                    let lossy = loss.iter().any(|&p| p > 0.0);
+                    let inflation = if lossy {
+                        deficit.div_ceil(8) + RATELESS_PACKET_ROWS
+                    } else {
+                        0
+                    };
+                    let want = deficit + inflation;
+                    let rows = if self.is_rateless() {
+                        self.mint_fresh(want, &mut have)?
+                    } else {
+                        (0..self.n).filter(|&r| !have[r]).take(want).collect()
+                    };
+                    let now = start.elapsed();
+                    any_hedge |= self.issue_hedge(
+                        &mut tasks, engine, usize::MAX, rows, repair_wave,
+                        now, &alive, stalled, injector, &xs_arc, &compute,
+                        &tx,
+                    )?;
+                }
+                // else: wait out the batch deadline — a blown straggler
+                // may still land.
+            }
+            let now = start.elapsed();
+            let mut next = batch_wall_deadline;
+            for t in &tasks {
+                if t.pending && t.deadline < next {
+                    next = t.deadline;
+                }
+            }
+            let reply = match rx.recv_timeout(next.saturating_sub(now)) {
+                Ok(reply) => reply,
+                // Timeout: loop back to blow processing. Disconnect is
+                // unreachable (the master holds `tx`), treated the same.
+                Err(_) => continue,
+            };
+            let arrived = start.elapsed();
+            let (cnt, wave, is_hedge, is_canary, in_time) = {
+                let t = &tasks[reply.task];
+                (
+                    t.rows.len(),
+                    t.wave,
+                    t.is_hedge,
+                    t.is_canary,
+                    arrived <= t.deadline,
+                )
+            };
+            workers_used += 1;
+            let load = self.per_worker[reply.worker].max(1);
+            let prorate = if is_hedge || is_canary {
+                cnt as f64 / load as f64
+            } else {
+                1.0
+            };
+            observed.push(WorkerObservation {
+                worker: reply.worker,
+                load: cnt,
+                model_time: injector.model_delay(reply.worker) * prorate,
+            });
+            // Absorb: packetized like the legacy lossy path (original
+            // deliveries keep the exact legacy fate seed — bit-parity),
+            // hedge waves re-draw fates, duplicates are dropped.
+            let p = loss.get(reply.worker).copied().unwrap_or(0.0);
+            let fate_seed = if wave == 0 {
+                batch_seed
+            } else {
+                batch_seed ^ HEDGE_FATE_TAG.wrapping_mul(wave as u64)
+            };
+            let (mut fresh, mut dup) = (0u64, 0u64);
+            let mut off = 0usize;
+            while off < cnt {
+                let pk = RATELESS_PACKET_ROWS.min(cnt - off);
+                let t = &tasks[reply.task];
+                let first = t.rows.at(off);
+                if p <= 0.0 || !packet_dropped(fate_seed, first, p) {
+                    for i in off..off + pk {
+                        let r = t.rows.at(i);
+                        if have[r] {
+                            dup += 1;
+                            continue;
+                        }
+                        have[r] = true;
+                        self.rows_buf.push(r);
+                        for (col, ys) in
+                            self.cols_buf.iter_mut().zip(&reply.ys)
+                        {
+                            col.push(ys[i]);
+                        }
+                        fresh += 1;
+                    }
+                }
+                off += pk;
+            }
+            if dup > 0 {
+                engine.note_wasted_rows(dup);
+            }
+            if is_hedge && fresh > 0 {
+                engine.note_hedge_win();
+            }
+            if is_canary && in_time {
+                engine.note_canary_ok(reply.worker);
+            }
+            tasks[reply.task].pending = false;
+        }
+
+        if self.rows_buf.len() < k {
+            // Batch deadline expired short of k — degrade per policy.
+            let elapsed = start.elapsed();
+            let deficit = k - self.rows_buf.len();
+            match engine.config().degrade {
+                DegradePolicy::Fail => {
+                    return Err(Error::Decode(format!(
+                        "batch deadline expired with {} of {k} rows \
+                         (deficit {deficit}); degrade policy is fail",
+                        self.rows_buf.len()
+                    )));
+                }
+                DegradePolicy::Partial => {
+                    let mut rows = self.rows_buf.clone();
+                    rows.sort_unstable();
+                    let degraded = DegradedBatch {
+                        batch: 0, // caller stamps the run-level index
+                        rows,
+                        deficit,
+                        error_bound: deficit as f64 / k as f64,
+                        elapsed,
+                    };
+                    let reports = (0..b)
+                        .map(|_| JobReport {
+                            wall_latency: elapsed,
+                            model_latency: None,
+                            decoded: Vec::new(),
+                            max_error: f64::NAN,
+                            workers_used,
+                            rows_collected: k - deficit,
+                            n: self.n,
+                            backend: compute.name(),
+                        })
+                        .collect();
+                    return Ok((reports, observed, Some(degraded)));
+                }
+            }
+        }
+
+        // First-completion-wins determinism: once any hedge fired, sort
+        // the support jointly by global row index so the decoded bytes
+        // depend only on the final support set, never on which copy of a
+        // row landed first. Hedge-free batches keep the exact legacy
+        // arrival order (bit-parity with the unhedged path).
+        if any_hedge {
+            let m = self.rows_buf.len();
+            let mut perm: Vec<usize> = (0..m).collect();
+            perm.sort_by_key(|&i| self.rows_buf[i]);
+            let sorted_rows: Vec<usize> =
+                perm.iter().map(|&i| self.rows_buf[i]).collect();
+            self.rows_buf.clear();
+            self.rows_buf.extend_from_slice(&sorted_rows);
+            for col in self.cols_buf.iter_mut().take(b) {
+                let sorted: Vec<f64> =
+                    perm.iter().map(|&i| col[i]).collect();
+                col.clear();
+                col.extend_from_slice(&sorted);
+            }
+        }
+
+        let rows_collected = self.rows_buf.len();
+        let decoded_all = self.code.decode_rows(
+            &mut self.decoder,
+            &self.rows_buf,
+            &self.cols_buf[..b],
+        )?;
+        let wall_latency = start.elapsed();
+        let mut reports = Vec::with_capacity(b);
+        for (decoded, request) in decoded_all.into_iter().zip(requests) {
+            let max_error = if self.cfg.verify_decode {
+                let truth = self
+                    .a
+                    .as_ref()
+                    .expect("verify_decode keeps the data matrix")
+                    .matvec(request);
+                decoded
+                    .iter()
+                    .zip(&truth)
+                    .map(|(d, t)| (d - t).abs())
+                    .fold(0.0f64, f64::max)
+            } else {
+                f64::NAN
+            };
+            reports.push(JobReport {
+                wall_latency,
+                model_latency,
+                decoded,
+                max_error,
+                workers_used,
+                rows_collected,
+                n: self.n,
+                backend: compute.name(),
+            });
+        }
+        Ok((reports, observed, None))
     }
 }
 

@@ -1,0 +1,561 @@
+//! Per-batch deadline / hedging engine (the in-batch recovery layer).
+//!
+//! The adaptive loop reacts to failures *between* batches by re-solving the
+//! allocation; this module reacts *inside* one. Every dispatched worker gets
+//! a hedge deadline — a configurable quantile of its own analytic runtime
+//! law ([`crate::model::order_stats::hedge_deadline`]), derived from the
+//! estimator's current group specs — and a worker that blows its deadline
+//! has its missing rows re-issued to the fastest idle workers: spare MDS
+//! row copies under `mds-*` codes, fresh `encode_rows` extensions above the
+//! watermark under `rateless-rlc` (zero re-encodes either way). Retry waves
+//! back off exponentially (`backoff^wave`) up to `max_waves`; replies
+//! deduplicate by global row index, so whichever copy lands first wins and
+//! the decoded output is a pure function of the final support set.
+//!
+//! Workers that blow their deadline in `quarantine_after` *consecutive*
+//! batches enter a quarantine ring: they are excluded from dispatch, their
+//! chunk is hedged to healthy workers at wave 0, and each batch probes them
+//! with a single canary row. A canary reply before its deadline re-admits
+//! the worker. This subsumes the adaptive loop's cruder consecutive-miss
+//! death suspicion with an in-band probe.
+//!
+//! If the *batch* deadline (`batch_deadline_factor ×` the largest per-worker
+//! deadline) expires with fewer than `k` rows, the engine degrades per
+//! [`DegradePolicy`]: `Fail` surfaces a decode error, `Partial` records a
+//! typed [`DegradedBatch`] carrying the partial row set and an error bound —
+//! the serving loop never hangs and never panics on compound failures.
+//!
+//! Everything here is pure bookkeeping in model time — wall-clock scaling
+//! (`JobConfig::time_scale`) and the actual `recv_timeout` loop live in
+//! `coordinator/prepared.rs`; this module never reads a clock.
+
+use std::time::Duration;
+
+use crate::model::{order_stats, ClusterSpec, LatencyModel};
+use crate::{Error, Result};
+
+/// What to do when the batch deadline expires with fewer than `k` rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradePolicy {
+    /// Surface `Error::Decode` for the batch (strict serving).
+    Fail,
+    /// Record a typed [`DegradedBatch`] (partial support + error bound) and
+    /// keep serving subsequent batches.
+    Partial,
+}
+
+/// Knobs for the deadline/hedging engine.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryConfig {
+    /// Issue hedge re-dispatches when deadlines blow. With `false` the
+    /// engine still enforces the batch deadline (degrade instead of hang),
+    /// but never re-issues rows — the "hedging disabled" baseline arm.
+    pub hedge: bool,
+    /// Quantile of the per-worker analytic runtime law used as the hedge
+    /// deadline (e.g. `0.95` = p95). Must lie in `(0, 1)`.
+    pub hedge_quantile: f64,
+    /// Model-time floor under every deadline, so workers whose load rounds
+    /// to a few rows are not hedged on a degenerate quantile.
+    pub deadline_floor: f64,
+    /// Maximum retry waves per lineage (original dispatch = wave 0).
+    pub max_waves: u32,
+    /// Exponential backoff base across retry waves (`>= 1`): the wave-`w`
+    /// hedge gets `backoff^w ×` its target's base deadline.
+    pub backoff: f64,
+    /// The batch deadline is this factor times the largest per-worker
+    /// deadline of the dispatch (`> 1`).
+    pub batch_deadline_factor: f64,
+    /// Consecutive deadline-blown batches before a worker is quarantined.
+    pub quarantine_after: u32,
+    /// Policy when the batch deadline expires short of `k` rows.
+    pub degrade: DegradePolicy,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            hedge: true,
+            hedge_quantile: 0.95,
+            deadline_floor: 0.05,
+            max_waves: 4,
+            backoff: 1.5,
+            batch_deadline_factor: 16.0,
+            quarantine_after: 3,
+            degrade: DegradePolicy::Partial,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Validate the knob ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.hedge_quantile > 0.0 && self.hedge_quantile < 1.0) {
+            return Err(Error::Config(format!(
+                "hedge quantile must be in (0, 1), got {}",
+                self.hedge_quantile
+            )));
+        }
+        if !self.deadline_floor.is_finite() || self.deadline_floor < 0.0 {
+            return Err(Error::Config(format!(
+                "deadline floor must be finite and >= 0, got {}",
+                self.deadline_floor
+            )));
+        }
+        if self.max_waves == 0 {
+            return Err(Error::Config("max_waves must be >= 1".into()));
+        }
+        if !self.backoff.is_finite() || self.backoff < 1.0 {
+            return Err(Error::Config(format!(
+                "hedge backoff must be finite and >= 1, got {}",
+                self.backoff
+            )));
+        }
+        if !self.batch_deadline_factor.is_finite()
+            || self.batch_deadline_factor <= 1.0
+        {
+            return Err(Error::Config(format!(
+                "batch deadline factor must be finite and > 1, got {}",
+                self.batch_deadline_factor
+            )));
+        }
+        if self.quarantine_after == 0 {
+            return Err(Error::Config("quarantine_after must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Hedge/retry/quarantine/degrade event counters, surfaced through
+/// `ServeOutcome` and the CLI summary line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryCounters {
+    /// Hedge tasks issued (re-dispatches plus quarantine-chunk covers).
+    pub hedges_issued: u64,
+    /// Hedge replies that contributed at least one new row to the support.
+    pub hedge_wins: u64,
+    /// Rows that arrived already present in the support (the price of
+    /// speculation — duplicates are dropped, first completion wins).
+    pub wasted_rows: u64,
+    /// Workers that entered the quarantine ring.
+    pub quarantines: u64,
+    /// Batches that expired short of `k` rows and degraded.
+    pub degraded_batches: u64,
+}
+
+/// A batch that expired short of `k` rows under `DegradePolicy::Partial`.
+#[derive(Clone, Debug)]
+pub struct DegradedBatch {
+    /// Batch index within the serving run.
+    pub batch: u64,
+    /// Sorted global row indices collected before the deadline.
+    pub rows: Vec<usize>,
+    /// Rows still missing toward `k`.
+    pub deficit: usize,
+    /// Fraction of output coordinates the partial support cannot pin down
+    /// (`deficit / k` — the rank shortfall of any decode from this set).
+    pub error_bound: f64,
+    /// Wall time spent before giving up (bounded by the batch deadline).
+    pub elapsed: Duration,
+}
+
+/// Final recovery report attached to `ServeOutcome`.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Event counters for the whole run.
+    pub counters: RecoveryCounters,
+    /// One record per degraded batch (empty under `DegradePolicy::Fail`).
+    pub degraded: Vec<DegradedBatch>,
+}
+
+/// Per-run engine state: deadlines staged per batch, blown-streak and
+/// quarantine bookkeeping carried *across* batches, and the counters.
+#[derive(Clone, Debug)]
+pub struct RecoveryEngine {
+    cfg: RecoveryConfig,
+    workers: usize,
+    /// Consecutive deadline-blown batches per worker.
+    streak: Vec<u32>,
+    /// Quarantine ring membership.
+    quarantined: Vec<bool>,
+    // --- staged per batch by `stage()` ---
+    model: LatencyModel,
+    k: f64,
+    /// Per-worker model-time hedge deadline for the staged loads.
+    deadline: Vec<f64>,
+    /// Per-worker `(mu, alpha)` of the staged (estimator-current) spec.
+    params: Vec<(f64, f64)>,
+    /// Expected model time per row, for ranking hedge targets.
+    unit: Vec<f64>,
+    /// Dispatched this batch (original full-chunk dispatch, not canary).
+    dispatched: Vec<bool>,
+    /// Blew the original-dispatch deadline this batch.
+    blown: Vec<bool>,
+    /// Canary row answered before its deadline this batch.
+    canary_ok: Vec<bool>,
+    counters: RecoveryCounters,
+    degraded: Vec<DegradedBatch>,
+}
+
+impl RecoveryEngine {
+    /// Engine for a fleet of `workers` workers.
+    pub fn new(cfg: RecoveryConfig, workers: usize) -> Result<Self> {
+        cfg.validate()?;
+        if workers == 0 {
+            return Err(Error::Config("recovery needs at least one worker".into()));
+        }
+        Ok(RecoveryEngine {
+            cfg,
+            workers,
+            streak: vec![0; workers],
+            quarantined: vec![false; workers],
+            model: LatencyModel::A,
+            k: 1.0,
+            deadline: vec![0.0; workers],
+            params: vec![(1.0, 1.0); workers],
+            unit: vec![0.0; workers],
+            dispatched: vec![false; workers],
+            blown: vec![false; workers],
+            canary_ok: vec![false; workers],
+            counters: RecoveryCounters::default(),
+            degraded: Vec::new(),
+        })
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &RecoveryConfig {
+        &self.cfg
+    }
+
+    /// Stage deadlines for one batch from the estimator's *current* group
+    /// specs and the live per-worker loads. Resets the per-batch flags;
+    /// streaks and quarantine membership persist.
+    pub fn stage(
+        &mut self,
+        model: LatencyModel,
+        spec: &ClusterSpec,
+        per_worker: &[usize],
+    ) -> Result<()> {
+        if spec.total_workers() != self.workers
+            || per_worker.len() != self.workers
+        {
+            return Err(Error::Config(format!(
+                "recovery engine sized for {} workers, staged {} loads over a \
+                 {}-worker spec",
+                self.workers,
+                per_worker.len(),
+                spec.total_workers()
+            )));
+        }
+        self.model = model;
+        self.k = spec.k as f64;
+        let mut w = 0usize;
+        for g in &spec.groups {
+            for _ in 0..g.n {
+                let load = per_worker[w] as f64;
+                self.params[w] = (g.mu, g.alpha);
+                self.deadline[w] = order_stats::hedge_deadline(
+                    model,
+                    load.max(1.0),
+                    self.k,
+                    self.cfg.hedge_quantile,
+                    g.mu,
+                    g.alpha,
+                    self.cfg.deadline_floor,
+                );
+                // Expected model time per row: E[T]/l = (alpha + 1/mu)
+                // scaled by the model's load term — the ranking key for
+                // "fastest" hedge targets.
+                self.unit[w] = match model {
+                    LatencyModel::A => (g.alpha + 1.0 / g.mu) / self.k,
+                    LatencyModel::B => g.alpha + 1.0 / g.mu,
+                };
+                w += 1;
+            }
+        }
+        self.dispatched.iter_mut().for_each(|d| *d = false);
+        self.blown.iter_mut().for_each(|b| *b = false);
+        self.canary_ok.iter_mut().for_each(|c| *c = false);
+        Ok(())
+    }
+
+    /// Model-time hedge deadline staged for worker `w`'s full chunk.
+    pub fn deadline_model(&self, w: usize) -> f64 {
+        self.deadline[w]
+    }
+
+    /// Model-time deadline for a `rows`-row task on worker `w` (hedge
+    /// re-issues carry only the missing rows, canaries exactly one).
+    pub fn deadline_for_load(&self, w: usize, rows: usize) -> f64 {
+        let (mu, alpha) = self.params[w];
+        order_stats::hedge_deadline(
+            self.model,
+            (rows as f64).max(1.0),
+            self.k,
+            self.cfg.hedge_quantile,
+            mu,
+            alpha,
+            self.cfg.deadline_floor,
+        )
+    }
+
+    /// Model-time batch deadline: `batch_deadline_factor ×` the largest
+    /// staged per-worker deadline among `dispatchable` workers.
+    pub fn batch_deadline_model(&self, dispatchable: &[bool]) -> f64 {
+        let widest = self
+            .deadline
+            .iter()
+            .zip(dispatchable)
+            .filter(|(_, d)| **d)
+            .map(|(dl, _)| *dl)
+            .fold(self.cfg.deadline_floor, f64::max);
+        self.cfg.batch_deadline_factor * widest
+    }
+
+    /// Is worker `w` in the quarantine ring?
+    pub fn is_quarantined(&self, w: usize) -> bool {
+        self.quarantined[w]
+    }
+
+    /// Record that worker `w` received its original full-chunk dispatch.
+    pub fn note_dispatched(&mut self, w: usize) {
+        self.dispatched[w] = true;
+    }
+
+    /// Record that worker `w` blew its original-dispatch deadline.
+    pub fn note_blown(&mut self, w: usize) {
+        if self.dispatched[w] {
+            self.blown[w] = true;
+        }
+    }
+
+    /// Record that quarantined worker `w` answered its canary in time.
+    pub fn note_canary_ok(&mut self, w: usize) {
+        self.canary_ok[w] = true;
+    }
+
+    /// Count `n` issued hedge tasks.
+    pub fn note_hedges_issued(&mut self, n: u64) {
+        self.counters.hedges_issued += n;
+    }
+
+    /// Count a hedge reply that contributed at least one new row.
+    pub fn note_hedge_win(&mut self) {
+        self.counters.hedge_wins += 1;
+    }
+
+    /// Count `n` duplicate rows dropped by first-completion-wins.
+    pub fn note_wasted_rows(&mut self, n: u64) {
+        self.counters.wasted_rows += n;
+    }
+
+    /// Record a degraded batch (policy `Partial`).
+    pub fn note_degraded(&mut self, d: DegradedBatch) {
+        self.counters.degraded_batches += 1;
+        self.degraded.push(d);
+    }
+
+    /// Hedge targets for a blown task of `exclude`, fastest first: live
+    /// dispatched workers outside the quarantine ring, ranked by expected
+    /// per-row model time (ties broken by worker id — deterministic).
+    pub fn ranked_helpers(&self, exclude: usize, alive: &[bool]) -> Vec<usize> {
+        let mut h: Vec<usize> = (0..self.workers)
+            .filter(|&w| {
+                w != exclude
+                    && alive.get(w).copied().unwrap_or(false)
+                    && self.dispatched[w]
+                    && !self.quarantined[w]
+            })
+            .collect();
+        h.sort_by(|&a, &b| {
+            self.unit[a]
+                .total_cmp(&self.unit[b])
+                .then(a.cmp(&b))
+        });
+        h
+    }
+
+    /// Close out the staged batch: advance blown streaks, move workers in
+    /// and out of the quarantine ring. Call once per batch, after the
+    /// collection loop resolves.
+    pub fn finish_batch(&mut self) {
+        for w in 0..self.workers {
+            if self.quarantined[w] {
+                if self.canary_ok[w] {
+                    // Canary answered in time — re-admit, fresh record.
+                    self.quarantined[w] = false;
+                    self.streak[w] = 0;
+                }
+                continue;
+            }
+            if !self.dispatched[w] {
+                continue;
+            }
+            if self.blown[w] {
+                self.streak[w] += 1;
+                // Quarantine only makes sense when hedging can cover the
+                // ringed worker's chunk; the hedging-disabled baseline arm
+                // tracks streaks but never drains anyone.
+                if self.cfg.hedge && self.streak[w] >= self.cfg.quarantine_after
+                {
+                    self.quarantined[w] = true;
+                    self.counters.quarantines += 1;
+                }
+            } else {
+                self.streak[w] = 0;
+            }
+        }
+    }
+
+    /// Current blown streak for worker `w` (test/diagnostic surface).
+    pub fn streak(&self, w: usize) -> u32 {
+        self.streak[w]
+    }
+
+    /// Counters so far.
+    pub fn counters(&self) -> RecoveryCounters {
+        self.counters
+    }
+
+    /// Final report for `ServeOutcome`.
+    pub fn into_report(self) -> RecoveryReport {
+        RecoveryReport { counters: self.counters, degraded: self.degraded }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Group;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![
+                Group { n: 2, mu: 8.0, alpha: 1.0 },
+                Group { n: 3, mu: 2.0, alpha: 1.0 },
+            ],
+            64,
+        )
+        .expect("valid spec")
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        let ok = RecoveryConfig::default();
+        assert!(ok.validate().is_ok());
+        for bad in [
+            RecoveryConfig { hedge_quantile: 0.0, ..ok },
+            RecoveryConfig { hedge_quantile: 1.0, ..ok },
+            RecoveryConfig { deadline_floor: -1.0, ..ok },
+            RecoveryConfig { deadline_floor: f64::NAN, ..ok },
+            RecoveryConfig { max_waves: 0, ..ok },
+            RecoveryConfig { backoff: 0.5, ..ok },
+            RecoveryConfig { batch_deadline_factor: 1.0, ..ok },
+            RecoveryConfig { quarantine_after: 0, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+        assert!(RecoveryEngine::new(ok, 0).is_err());
+    }
+
+    #[test]
+    fn staged_deadlines_follow_the_analytic_quantile() {
+        let cfg = RecoveryConfig { deadline_floor: 0.0, ..Default::default() };
+        let mut eng = RecoveryEngine::new(cfg, 5).expect("engine");
+        let sp = spec();
+        let loads = [10usize, 10, 20, 20, 20];
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        for w in 0..5 {
+            let (mu, alpha) = if w < 2 { (8.0, 1.0) } else { (2.0, 1.0) };
+            let want = order_stats::hedge_deadline(
+                LatencyModel::A,
+                loads[w] as f64,
+                64.0,
+                cfg.hedge_quantile,
+                mu,
+                alpha,
+                0.0,
+            );
+            assert_eq!(eng.deadline_model(w), want, "worker {w}");
+        }
+        // Batch deadline keys off the widest dispatchable deadline.
+        let all = [true; 5];
+        let widest = (0..5).map(|w| eng.deadline_model(w)).fold(0.0, f64::max);
+        assert!(
+            (eng.batch_deadline_model(&all)
+                - cfg.batch_deadline_factor * widest)
+                .abs()
+                < 1e-12
+        );
+        // Helpers rank the fast group (smaller per-row time) first.
+        (0..5).for_each(|w| eng.note_dispatched(w));
+        let ranked = eng.ranked_helpers(0, &all);
+        assert_eq!(ranked, vec![1, 2, 3, 4]);
+        // Mismatched sizes are a config error, not a panic.
+        assert!(eng.stage(LatencyModel::A, &sp, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn quarantine_lifecycle_enter_probe_readmit() {
+        let cfg = RecoveryConfig { quarantine_after: 2, ..Default::default() };
+        let mut eng = RecoveryEngine::new(cfg, 5).expect("engine");
+        let sp = spec();
+        let loads = [10usize, 10, 20, 20, 20];
+        // Batch 1: worker 3 blows — streak 1, not yet quarantined.
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).for_each(|w| eng.note_dispatched(w));
+        eng.note_blown(3);
+        eng.finish_batch();
+        assert_eq!(eng.streak(3), 1);
+        assert!(!eng.is_quarantined(3));
+        // Batch 2: blows again — enters the ring.
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).for_each(|w| eng.note_dispatched(w));
+        eng.note_blown(3);
+        eng.finish_batch();
+        assert!(eng.is_quarantined(3));
+        assert_eq!(eng.counters().quarantines, 1);
+        // Batch 3: quarantined — canary misses, stays in the ring.
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).filter(|&w| w != 3).for_each(|w| eng.note_dispatched(w));
+        eng.finish_batch();
+        assert!(eng.is_quarantined(3));
+        // Quarantined workers never rank as hedge helpers.
+        assert!(!eng.ranked_helpers(0, &[true; 5]).contains(&3));
+        // Batch 4: canary answers — re-admitted with a clean streak.
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).filter(|&w| w != 3).for_each(|w| eng.note_dispatched(w));
+        eng.note_canary_ok(3);
+        eng.finish_batch();
+        assert!(!eng.is_quarantined(3));
+        assert_eq!(eng.streak(3), 0);
+        // A healthy batch resets a partial streak.
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).for_each(|w| eng.note_dispatched(w));
+        eng.note_blown(1);
+        eng.finish_batch();
+        assert_eq!(eng.streak(1), 1);
+        eng.stage(LatencyModel::A, &sp, &loads).expect("stage");
+        (0..5).for_each(|w| eng.note_dispatched(w));
+        eng.finish_batch();
+        assert_eq!(eng.streak(1), 0);
+        // Counters fold into the report.
+        eng.note_hedges_issued(3);
+        eng.note_hedge_win();
+        eng.note_wasted_rows(7);
+        eng.note_degraded(DegradedBatch {
+            batch: 9,
+            rows: vec![0, 1],
+            deficit: 62,
+            error_bound: 62.0 / 64.0,
+            elapsed: Duration::from_millis(5),
+        });
+        let rep = eng.into_report();
+        assert_eq!(rep.counters.hedges_issued, 3);
+        assert_eq!(rep.counters.hedge_wins, 1);
+        assert_eq!(rep.counters.wasted_rows, 7);
+        assert_eq!(rep.counters.quarantines, 1);
+        assert_eq!(rep.counters.degraded_batches, 1);
+        assert_eq!(rep.degraded.len(), 1);
+        assert_eq!(rep.degraded[0].batch, 9);
+    }
+}

@@ -79,6 +79,7 @@ use crate::coordinator::master::{
     ServeReport,
 };
 use crate::coordinator::rateless::RatelessSummary;
+use crate::coordinator::recovery::{RecoveryConfig, RecoveryReport};
 use crate::coordinator::{
     Compute, FailureScenario, LatencyRecorder, NativeCompute, PreparedJob,
 };
@@ -199,6 +200,11 @@ pub struct ServeOutcome {
     /// populated only when the session served with the rateless code
     /// through a streaming mode ([`Mode::Batched`] / adaptive arrivals).
     pub rateless: Option<RatelessSummary>,
+    /// In-batch recovery accounting (hedges issued/won, wasted rows,
+    /// quarantines, degraded batches, one record per degraded batch) —
+    /// populated only when the session was built with
+    /// [`SessionBuilder::recovery`].
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl ServeOutcome {
@@ -238,6 +244,7 @@ impl ServeOutcome {
             assumed_spec: None,
             front_end: None,
             rateless: None,
+            recovery: None,
         }
     }
 }
@@ -254,6 +261,7 @@ pub struct SessionBuilder {
     scenario: FailureScenario,
     adaptive: Option<AdaptiveServeConfig>,
     front_end: Option<FrontEndConfig>,
+    recovery: Option<RecoveryConfig>,
     compute: Option<Arc<dyn Compute>>,
     pool: Option<PoolHandle>,
     code: Option<String>,
@@ -351,6 +359,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach the in-batch recovery layer (arrivals modes only): per-worker
+    /// hedge deadlines from the analytic quantile law, deadline-blown rows
+    /// re-issued to the fastest helpers with capped exponential backoff,
+    /// a quarantine ring with canary probes, and graceful degradation when
+    /// the batch deadline expires short of `k`
+    /// ([`crate::coordinator::recovery`]). Required for scenarios that
+    /// script [`crate::coordinator::FailureKind::StallWorker`] /
+    /// [`crate::coordinator::FailureKind::FlappyWorker`] — without it a
+    /// stalled worker would block the collection until its batch times
+    /// out. Mutually exclusive with [`SessionBuilder::front_end`].
+    pub fn recovery(mut self, cfg: RecoveryConfig) -> Self {
+        self.recovery = Some(cfg);
+        self
+    }
+
     /// Compute backend. Defaults to [`NativeCompute`].
     pub fn compute(mut self, compute: Arc<dyn Compute>) -> Self {
         self.compute = Some(compute);
@@ -425,12 +448,32 @@ impl SessionBuilder {
         if !matches!(mode, Mode::Arrivals { .. })
             && (!self.scenario.is_empty()
                 || self.adaptive.is_some()
-                || self.front_end.is_some())
+                || self.front_end.is_some()
+                || self.recovery.is_some())
         {
             return Err(Error::InvalidSpec(
-                "failure scenarios, adaptive serving, and the admission \
-                 front end need an arrivals mode (Mode::Arrivals / \
-                 Mode::PoissonArrivals)"
+                "failure scenarios, adaptive serving, recovery, and the \
+                 admission front end need an arrivals mode (Mode::Arrivals \
+                 / Mode::PoissonArrivals)"
+                    .into(),
+            ));
+        }
+        if let Some(rc) = &self.recovery {
+            rc.validate()?;
+            if self.front_end.is_some() {
+                return Err(Error::InvalidSpec(
+                    "the admission front end drains through its own \
+                     collection; in-batch recovery is not supported there \
+                     (drop .front_end(..) or .recovery(..))"
+                        .into(),
+                ));
+            }
+        }
+        if self.scenario.has_stall() && self.recovery.is_none() {
+            return Err(Error::InvalidSpec(
+                "StallWorker / FlappyWorker scenarios stall the collection \
+                 indefinitely without the recovery layer; attach \
+                 .recovery(RecoveryConfig { .. })"
                     .into(),
             ));
         }
@@ -464,6 +507,7 @@ impl SessionBuilder {
             scenario: self.scenario,
             adaptive: self.adaptive,
             front_end: self.front_end,
+            recovery: self.recovery,
             compute: self.compute.unwrap_or_else(|| Arc::new(NativeCompute)),
         })
     }
@@ -487,6 +531,7 @@ pub struct Session {
     scenario: FailureScenario,
     adaptive: Option<AdaptiveServeConfig>,
     front_end: Option<FrontEndConfig>,
+    recovery: Option<RecoveryConfig>,
     compute: Arc<dyn Compute>,
 }
 
@@ -504,6 +549,7 @@ impl Session {
             scenario: FailureScenario::none(),
             adaptive: None,
             front_end: None,
+            recovery: None,
             compute: None,
             pool: None,
             code: None,
@@ -695,6 +741,7 @@ impl Session {
             assumed_spec: None,
             front_end: None,
             rateless,
+            recovery: None,
         })
     }
 
@@ -733,6 +780,7 @@ impl Session {
                 assumed_spec: None,
                 front_end: Some(rep.front),
                 rateless: None,
+                recovery: None,
             });
         }
         let rep = serve_arrivals_adaptive_impl(
@@ -747,6 +795,7 @@ impl Session {
             &self.scenario,
             self.adaptive.as_ref(),
             self.policy.as_deref(),
+            self.recovery.as_ref(),
         )?;
         Ok(ServeOutcome {
             recorder: rep.serve.recorder,
@@ -765,6 +814,7 @@ impl Session {
             assumed_spec: Some(rep.assumed_spec),
             front_end: None,
             rateless: rep.rateless,
+            recovery: rep.recovery,
         })
     }
 }
@@ -773,6 +823,7 @@ impl Session {
 mod tests {
     use super::*;
     use crate::allocation::{policy, uniform_allocation};
+    use crate::coordinator::failures::{FailureEvent, FailureKind};
     use crate::model::{Group, LatencyModel};
 
     fn small_spec() -> ClusterSpec {
@@ -868,6 +919,49 @@ mod tests {
             .data(a.clone())
             .requests(reqs.clone())
             .front_end(FrontEndConfig { shards: 0, ..Default::default() })
+            .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
+            .build()
+            .is_err());
+        // Recovery outside arrivals mode.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .recovery(RecoveryConfig::default())
+            .mode(Mode::Batched)
+            .build()
+            .is_err());
+        // Recovery and the front end own different collection loops.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .front_end(FrontEndConfig::default())
+            .recovery(RecoveryConfig::default())
+            .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
+            .build()
+            .is_err());
+        // Invalid recovery knobs fail at build.
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .recovery(RecoveryConfig { max_waves: 0, ..Default::default() })
+            .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
+            .build()
+            .is_err());
+        // Stall scenarios demand the recovery layer (they would otherwise
+        // hold the collection hostage until the straggler tail).
+        let stall = FailureScenario::new(vec![FailureEvent {
+            at_batch: 0,
+            kind: FailureKind::StallWorker { worker: 1 },
+        }])
+        .unwrap();
+        assert!(Session::builder(&spec)
+            .allocation(alloc.clone())
+            .data(a.clone())
+            .requests(reqs.clone())
+            .scenario(stall)
             .mode(Mode::PoissonArrivals { rate: 100.0, max_batch: 2 })
             .build()
             .is_err());

@@ -20,8 +20,8 @@ use hetcoded::allocation::policy::{self, Policy, PolicyEntry};
 use hetcoded::cli::Args;
 use hetcoded::coding::{code, Matrix};
 use hetcoded::coordinator::{
-    AdaptiveServeConfig, Compute, FailureScenario, FrontEndConfig, JobConfig,
-    Mode, NativeCompute, Session,
+    AdaptiveServeConfig, Compute, DegradePolicy, FailureScenario,
+    FrontEndConfig, JobConfig, Mode, NativeCompute, RecoveryConfig, Session,
 };
 use hetcoded::figures::{self, FigureOpts};
 use hetcoded::math::Rng;
@@ -123,6 +123,17 @@ const RUN_FLAGS: &[&str] = &[
     "shards",
     "tenants",
     "slo",
+    "stall",
+    "flap",
+    "worker-loss",
+    "hedge",
+    "hedge-quantile",
+    "hedge-floor",
+    "max-waves",
+    "backoff",
+    "batch-deadline",
+    "quarantine-after",
+    "degrade",
 ];
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -231,6 +242,11 @@ SUBCOMMANDS
             [--rate R] [--max-batch B] [--encode-threads T] [--decode-cache C]
             [--failures B:w1,w2[;...]] [--drift B:G:F[;...]] [--adaptive]
             [--loss B:G:P[;...] | B:G:burst:N[;...]]
+            [--stall B:w1,w2[;...]] [--flap B:W:PERIOD[;...]]
+            [--worker-loss B:W:P[;...]]
+            [--hedge true|false] [--hedge-quantile Q] [--hedge-floor T]
+            [--max-waves W] [--backoff F] [--batch-deadline F]
+            [--quarantine-after Q] [--degrade partial|fail]
             [--shards S] [--tenants T] [--slo P99_SECONDS]
             Here --rate is the *arrivals* rate; parameterized policies
             use the name=param form (e.g. --policy uniform-rate=0.5).
@@ -253,7 +269,23 @@ SUBCOMMANDS
             sparse code is not MDS — a decode can fail cleanly if an
             unlucky k-subset of rows arrives first; rateless-rlc streams
             rows until any k survive, so it rides out --loss and reports
-            the measured overhead rows/k). --shards/--tenants/--slo
+            the measured overhead rows/k). --stall makes workers go dark
+            (alive, never replying) from a batch on, --flap alternates
+            PERIOD dark / PERIOD healthy batches, and --worker-loss adds
+            per-worker packet drop on top of --loss; all three need the
+            recovery layer, which any of them (or any --hedge* knob)
+            attaches: per-worker hedge deadlines at the --hedge-quantile
+            of the analytic completion law (floored at --hedge-floor
+            model time), blown row ranges re-issued to the fastest idle
+            workers with x--backoff deadlines per wave (up to
+            --max-waves), quarantine after --quarantine-after
+            consecutive misses (canary probes re-admit), and at
+            --batch-deadline times the slowest staged deadline the batch
+            degrades per --degrade (partial: typed partial result with
+            an error bound; fail: a decode error) instead of hanging.
+            --hedge false keeps the deadlines/accounting but never
+            re-dispatches (the baseline arm).
+            --shards/--tenants/--slo
             attach the sharded admission front end to --mode arrivals
             (requests round-robin over T tenants, tenant-keyed per-shard
             DRR queues, work-conserving drain); --slo sizes batches
@@ -908,17 +940,64 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     let mode_name = args.flag("mode").unwrap_or("seq").to_string();
-    let scenario = FailureScenario::parse_with_loss(
+    let scenario = FailureScenario::parse_compound(
         args.flag("failures"),
         args.flag("drift"),
         args.flag("loss"),
+        args.flag("stall"),
+        args.flag("flap"),
+        args.flag("worker-loss"),
     )?;
     let scenario_events = scenario.events().len();
     let adaptive = args.switch("adaptive");
-    if (!scenario.is_empty() || adaptive) && mode_name != "arrivals" {
+    // The recovery layer attaches when any of its knobs is given, or when
+    // the scenario scripts stalls (which hang the collection without it).
+    let recovery_knobs = [
+        "hedge",
+        "hedge-quantile",
+        "hedge-floor",
+        "max-waves",
+        "backoff",
+        "batch-deadline",
+        "quarantine-after",
+        "degrade",
+    ];
+    // A bare trailing `--hedge` parses as a switch, not a flag.
+    let use_recovery = scenario.has_stall()
+        || args.switch("hedge")
+        || recovery_knobs.into_iter().any(|f| args.flag(f).is_some());
+    let recovery = if use_recovery {
+        let d = RecoveryConfig::default();
+        Some(RecoveryConfig {
+            hedge: args.get::<bool>("hedge", true)?,
+            hedge_quantile: args.get::<f64>("hedge-quantile", d.hedge_quantile)?,
+            deadline_floor: args.get::<f64>("hedge-floor", d.deadline_floor)?,
+            max_waves: args.get::<u32>("max-waves", d.max_waves)?,
+            backoff: args.get::<f64>("backoff", d.backoff)?,
+            batch_deadline_factor: args
+                .get::<f64>("batch-deadline", d.batch_deadline_factor)?,
+            quarantine_after: args
+                .get::<u32>("quarantine-after", d.quarantine_after)?,
+            degrade: match args.flag("degrade").unwrap_or("partial") {
+                "partial" => DegradePolicy::Partial,
+                "fail" => DegradePolicy::Fail,
+                other => {
+                    return Err(Error::InvalidSpec(format!(
+                        "unknown --degrade policy `{other}` (partial|fail)"
+                    )))
+                }
+            },
+        })
+    } else {
+        None
+    };
+    if (!scenario.is_empty() || adaptive || recovery.is_some())
+        && mode_name != "arrivals"
+    {
         return Err(Error::InvalidSpec(
-            "--failures/--drift/--loss/--adaptive need --mode arrivals (the \
-             prepared serving stream)"
+            "--failures/--drift/--loss/--stall/--flap/--worker-loss/\
+             --adaptive/--hedge* need --mode arrivals (the prepared serving \
+             stream)"
                 .into(),
         ));
     }
@@ -982,6 +1061,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if adaptive {
         builder = builder.adaptive(AdaptiveServeConfig::default());
     }
+    if let Some(rcfg) = recovery {
+        builder = builder.recovery(rcfg);
+    }
     if use_front {
         let cap = args.get::<usize>("max-batch", 8)?;
         builder = builder.front_end(FrontEndConfig {
@@ -1018,6 +1100,29 @@ fn cmd_run(args: &Args) -> Result<()> {
             front.batch_shrinks,
             front.max_queue_depth,
         );
+        println!("front end steals (non-home-shard drains): {}", front.steals);
+    }
+    if let Some(rec) = &outcome.recovery {
+        let c = &rec.counters;
+        println!(
+            "recovery: hedges issued {}  hedge wins {}  wasted rows {}  \
+             quarantines {}  degraded batches {}",
+            c.hedges_issued,
+            c.hedge_wins,
+            c.wasted_rows,
+            c.quarantines,
+            c.degraded_batches,
+        );
+        for d in &rec.degraded {
+            println!(
+                "  degraded batch {}: {} rows short of k (error bound \
+                 {:.3}) after {:.1} ms",
+                d.batch,
+                d.deficit,
+                d.error_bound,
+                d.elapsed.as_secs_f64() * 1e3,
+            );
+        }
     }
     if adaptive || scenario_events > 0 {
         println!(

@@ -68,6 +68,40 @@ pub fn group_latency_exact(
     }
 }
 
+/// Model-time hedge deadline for one worker of a group: the `quantile`-th
+/// quantile of the worker's shifted-exponential runtime law, floored at
+/// `floor`.
+///
+/// The quantile falls out of the group completion law already in this
+/// module: a single worker's runtime CDF is `F(t) = 1 - e^{-μ'(t-α')}`
+/// (with `(μ', α')` the load-scaled parameters), so its `q`-quantile is
+/// `α' - ln(1-q)/μ'` — and since `ln(N/(N-qN)) = -ln(1-q)`, that is
+/// exactly [`group_latency`] evaluated at `r = q·N` for *any* `N`. The
+/// deadline is therefore literally "a configurable quantile of the
+/// analytic per-group completion law", computed here in pure model time
+/// (no clock reads — rule D4 bans wall time in `model/`); callers scale
+/// to wall seconds via `JobConfig::time_scale`.
+///
+/// `quantile` must lie in `(0, 1)`; `floor` (also model time) guards
+/// against degenerate deadlines when a worker's load rounds to a few
+/// rows.
+pub fn hedge_deadline(
+    model: LatencyModel,
+    load: f64,
+    k: f64,
+    quantile: f64,
+    mu: f64,
+    alpha: f64,
+    floor: f64,
+) -> f64 {
+    assert!(
+        quantile > 0.0 && quantile < 1.0,
+        "hedge quantile must be in (0, 1), got {quantile}"
+    );
+    // Any N works — the law only depends on r/N = quantile; use N = 1.
+    group_latency(model, load, k, 1.0, quantile, mu, alpha).max(floor)
+}
+
 /// CLT variance of the central order statistic (Proposition 1):
 /// `σ² = q(1-q) / (N f(η)²)` where `η = F⁻¹(q)`.
 ///
@@ -149,6 +183,42 @@ mod tests {
         let a1 = group_latency(LatencyModel::B, 10.0, 1.0, 100.0, 50.0, 2.0, 1.0);
         let a2 = group_latency(LatencyModel::B, 20.0, 1.0, 100.0, 50.0, 2.0, 1.0);
         assert!((a2 / a1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hedge_deadline_is_the_quantile_of_the_group_law() {
+        // The q-quantile of one worker's shifted-exponential runtime is
+        // the group completion law at r = q·N — check against the direct
+        // inverse-CDF form alpha' - ln(1-q)/mu' for both models.
+        let (load, k, mu, alpha) = (25.0, 1000.0, 3.0, 1.0);
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let d = hedge_deadline(LatencyModel::A, load, k, q, mu, alpha, 0.0);
+            let scale = load / k;
+            let direct = scale * (alpha - (1.0 - q).ln() / mu);
+            assert!((d - direct).abs() < 1e-12, "q={q}: {d} vs {direct}");
+            let db = hedge_deadline(LatencyModel::B, load, k, q, mu, alpha, 0.0);
+            assert!((db - load * (alpha - (1.0 - q).ln() / mu)).abs() < 1e-9);
+        }
+        // Agrees with group_latency at r = q·N for a non-trivial N too.
+        let q = 0.95;
+        let via_group =
+            group_latency(LatencyModel::A, load, k, 40.0, q * 40.0, mu, alpha);
+        let via_hedge =
+            hedge_deadline(LatencyModel::A, load, k, q, mu, alpha, 0.0);
+        assert!((via_group - via_hedge).abs() < 1e-12);
+        // The floor wins when the analytic quantile is tiny.
+        assert_eq!(
+            hedge_deadline(LatencyModel::A, 1.0, 1e9, 0.5, mu, alpha, 7.5),
+            7.5
+        );
+        // Quantiles are sampled from the worker's own runtime law: the
+        // empirical exceedance rate at the p95 deadline is ~5%.
+        let dist = RuntimeDist::new(LatencyModel::A, load, k, mu, alpha);
+        let dl = hedge_deadline(LatencyModel::A, load, k, 0.95, mu, alpha, 0.0);
+        let mut rng = Rng::new(17);
+        let blown = (0..20_000).filter(|_| dist.sample(&mut rng) > dl).count();
+        let rate = blown as f64 / 20_000.0;
+        assert!((rate - 0.05).abs() < 0.01, "exceedance {rate}");
     }
 
     #[test]

@@ -56,6 +56,12 @@
 //! the streamed collection loop behind `run --code rateless-rlc --loss`
 //! (per-group loss scenarios live in [`crate::coordinator::failures`]).
 //!
+//! Deadline-driven hedging has a queueing mirror too:
+//! [`hedged_service_sampler`] replaces the clean any-`k` law `S` with the
+//! first-completion law `min(S₁, trigger + S₂)` — one fresh re-dispatch
+//! fired when a job outlives its hedge trigger, the static analogue of
+//! the live [`crate::coordinator::recovery`] engine's repair waves.
+//!
 //! # Example
 //!
 //! ```no_run
@@ -103,6 +109,6 @@ pub use queue::{
     WorkloadConfig, WorkloadReport,
 };
 pub use service::{
-    lossy_service_sampler, mean_service, saturation_rate, service_sampler,
-    service_sampler_for, ServiceSampler,
+    hedged_service_sampler, lossy_service_sampler, mean_service,
+    saturation_rate, service_sampler, service_sampler_for, ServiceSampler,
 };

@@ -35,6 +35,21 @@ pub enum ServiceSampler {
         /// Expected streamed-rows-per-useful-row factor `1/(1-p)`.
         inflation: f64,
     },
+    /// Hedged any-`k` serving: if the primary fan-out has not completed by
+    /// `trigger` (the hedge deadline), the job is speculatively re-issued
+    /// to spare capacity and the first completion wins —
+    /// `S = min(S₁, trigger + S₂)` with `S₁, S₂` i.i.d. draws of the
+    /// clean any-`k` law. The queueing-layer mirror of the live in-batch
+    /// recovery engine ([`crate::coordinator::recovery`]), with the same
+    /// idealization the [`ServiceSampler::LossyAnyK`] mirror makes for
+    /// streamed loss: retry *waves* are folded into one independent
+    /// re-draw rather than simulated wave by wave.
+    Hedged {
+        /// The clean any-`k` sampler over the policy's allocation.
+        inner: AnyKSampler,
+        /// Model-time hedge trigger (e.g. the p95 of the completion law).
+        trigger: f64,
+    },
 }
 
 impl ServiceSampler {
@@ -45,6 +60,16 @@ impl ServiceSampler {
             ServiceSampler::GroupMax(s) => s.sample(rng),
             ServiceSampler::LossyAnyK { inner, inflation } => {
                 *inflation * inner.sample(rng)
+            }
+            ServiceSampler::Hedged { inner, trigger } => {
+                let s1 = inner.sample(rng);
+                if s1 <= *trigger {
+                    // The hedge never fires — one draw, like the clean law
+                    // (and the RNG stream stays aligned with it).
+                    s1
+                } else {
+                    s1.min(*trigger + inner.sample(rng))
+                }
             }
         }
     }
@@ -124,6 +149,42 @@ pub fn lossy_service_sampler(
     Ok((alloc, ServiceSampler::LossyAnyK { inner, inflation }))
 }
 
+/// Build a policy's allocation together with its service-time law under
+/// hedged serving ([`ServiceSampler::Hedged`]): one speculative re-issue
+/// at `trigger` model-time units, first completion wins. `trigger` is the
+/// hedge deadline in the same model-time units the samplers draw in —
+/// derive it from the completion law's quantile (e.g.
+/// [`crate::model::order_stats::hedge_deadline`]) to mirror the live
+/// engine's deadline staging.
+///
+/// Hedging re-dispatches through the any-`k` decode (spare MDS rows /
+/// fresh rateless rows), so group-decode policies are rejected like they
+/// are for the lossy mirror.
+pub fn hedged_service_sampler(
+    spec: &ClusterSpec,
+    policy: &dyn Policy,
+    model: LatencyModel,
+    trigger: f64,
+) -> Result<(Allocation, ServiceSampler)> {
+    if !trigger.is_finite() || trigger <= 0.0 {
+        return Err(Error::InvalidSpec(format!(
+            "hedge trigger must be positive and finite, got {trigger}"
+        )));
+    }
+    let (alloc, base) = service_sampler_for(spec, policy, model)?;
+    let inner = match base {
+        ServiceSampler::AnyK(s) => s,
+        _ => {
+            return Err(Error::InvalidSpec(
+                "group-decode policies have no hedged mirror: hedges \
+                 re-dispatch through the any-k decode"
+                    .into(),
+            ))
+        }
+    };
+    Ok((alloc, ServiceSampler::Hedged { inner, trigger }))
+}
+
 /// Estimate the mean service time `E[S]` with `samples` deterministic
 /// draws. Used to convert offered-load fractions `ρ` into absolute arrival
 /// rates `λ = ρ / E[S]` before a sweep.
@@ -191,6 +252,82 @@ mod tests {
         for _ in 0..200 {
             let c = clean.sample(&mut a);
             assert_eq!(lossy.sample(&mut b), inflation * c);
+        }
+    }
+
+    #[test]
+    fn hedged_sampler_is_first_completion_of_two_clean_draws() {
+        // Same seed drives both samplers: every hedged draw must equal
+        // min(s1, trigger + s2) computed from the clean law by hand —
+        // with the second draw consumed only when the hedge fires, so
+        // hedge-free samples leave the RNG stream aligned with the clean
+        // sampler's.
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let (_, mut clean) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        // Trigger near the clean median so both branches get exercised.
+        let trigger = mean_service(&mut clean, 2_000, 5);
+        let (_, mut hedged) = hedged_service_sampler(
+            &spec,
+            &*Scheme::Proposed.policy(),
+            LatencyModel::A,
+            trigger,
+        )
+        .unwrap();
+        let (mut a, mut b) = (Rng::new(43), Rng::new(43));
+        let (mut fired, mut skipped) = (0usize, 0usize);
+        for _ in 0..500 {
+            let s1 = clean.sample(&mut a);
+            let want = if s1 <= trigger {
+                skipped += 1;
+                s1
+            } else {
+                fired += 1;
+                s1.min(trigger + clean.sample(&mut a))
+            };
+            let got = hedged.sample(&mut b);
+            assert_eq!(got, want);
+            assert!(got <= s1, "hedging never hurts a single job");
+        }
+        assert!(fired > 0 && skipped > 0, "fired {fired} skipped {skipped}");
+        // A hedged draw never exceeds trigger + a fresh service time, so
+        // the tail is capped: E[S_hedged] <= E[S_clean].
+        let (_, mut h2) = hedged_service_sampler(
+            &spec,
+            &*Scheme::Proposed.policy(),
+            LatencyModel::A,
+            trigger,
+        )
+        .unwrap();
+        let (_, mut c2) =
+            service_sampler(&spec, Scheme::Proposed, LatencyModel::A).unwrap();
+        let eh = mean_service(&mut h2, 4_000, 11);
+        let ec = mean_service(&mut c2, 4_000, 11);
+        assert!(eh <= ec, "hedged mean {eh} vs clean {ec}");
+    }
+
+    #[test]
+    fn hedged_sampler_rejects_group_decode_and_bad_triggers() {
+        let spec = ClusterSpec::paper_two_group(10_000);
+        let err = hedged_service_sampler(
+            &spec,
+            &*Scheme::GroupCode(100.0).policy(),
+            LatencyModel::A,
+            1.0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("any-k"), "{err}");
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                hedged_service_sampler(
+                    &spec,
+                    &*Scheme::Proposed.policy(),
+                    LatencyModel::A,
+                    bad,
+                )
+                .is_err(),
+                "trigger {bad} must be rejected"
+            );
         }
     }
 

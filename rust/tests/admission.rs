@@ -166,6 +166,19 @@ fn live_front_end_degenerate_matches_plain_arrivals_bit_for_bit() {
     assert_eq!(front.cross_shard_batches, 0);
     assert_eq!(front.max_batch_used, 4);
     assert_eq!(front.final_batch_limit, 4, "mode max_batch is the limit");
+    // The live steals counter mirrors the admission simulator's: under
+    // the degenerate single-shard config neither layer can ever drain a
+    // non-home shard, and the two counts are equal (both provably 0).
+    let sim_cfg = AdmissionConfig::fifo_parity(
+        ArrivalProcess::Poisson { rate: 2.5 },
+        100,
+        1,
+        0x90_1D,
+    );
+    let p = policy::resolve("proposed").unwrap();
+    let adm = run_admission(&spec, &*p, LatencyModel::A, &sim_cfg).unwrap();
+    assert_eq!(front.steals, adm.steals);
+    assert_eq!(front.steals, 0);
 }
 
 #[test]

@@ -1,0 +1,12 @@
+//! D4 fixture (call form): hedge-deadline math against a private
+//! wall-clock read in the coordinator — must trip. Deadlines and
+//! timestamps must come from `runtime::wall_now()`, the one audited
+//! `Instant::now` site in the crate; a direct read here would be
+//! invisible to the recovery layer's determinism arguments.
+
+use std::time::{Duration, Instant};
+
+pub fn hedge_deadline_blown(deadline: Duration) -> bool {
+    let armed = Instant::now();
+    armed.elapsed() > deadline
+}

@@ -63,6 +63,8 @@ pub fn check_file(relpath: &str, src: &str) -> Vec<Violation> {
     let is_pool = relpath == POOL || relpath.ends_with(&format!("/{POOL}"));
     let in_sim_or_model =
         relpath.starts_with("sim/") || relpath.starts_with("model/");
+    let in_runtime =
+        relpath.starts_with("runtime/") || relpath.contains("/runtime/");
     let in_math = relpath.starts_with("math/");
 
     for (i, tok) in tokens.iter().enumerate() {
@@ -144,6 +146,35 @@ pub fn check_file(relpath: &str, src: &str) -> Vec<Violation> {
                 message: format!(
                     "{id} in sim/model code — these trees run on virtual \
                      time; wall-clock reads make runs irreproducible"
+                ),
+            });
+        }
+
+        // D4 (call form) — outside sim/model, the clock may be *carried*
+        // (`Instant` as a field or signature type is fine) but only
+        // runtime/ may *read* it: a direct `Instant::now()` /
+        // `SystemTime::now()` call anywhere else — hedge-deadline math
+        // being the motivating offender — bypasses `runtime::wall_now`,
+        // the single audited read site the recovery determinism
+        // arguments lean on. (Scoped out of sim/model to avoid
+        // double-reporting: the clause above already bans the bare
+        // ident there.)
+        if !in_sim_or_model
+            && !in_runtime
+            && matches!(id, "Instant" | "SystemTime")
+            && next_is(1, ':')
+            && next_is(2, ':')
+            && next_ident(3) == Some("now")
+        {
+            out.push(Violation {
+                rule: "D4",
+                path: relpath.to_string(),
+                line: tok.line,
+                snippet: snippet(i),
+                message: format!(
+                    "direct {id}::now() read outside runtime/ — take \
+                     timestamps and deadlines from runtime::wall_now() so \
+                     every wall-clock read stays at one auditable site"
                 ),
             });
         }
@@ -298,9 +329,27 @@ mod tests {
         let src = "fn f() { let t = Instant::now(); }";
         assert_eq!(rules_hit("sim/queue.rs", src), vec!["D4"]);
         assert_eq!(rules_hit("model/latency.rs", src), vec!["D4"]);
-        assert!(rules_hit("coordinator/metrics.rs", src).is_empty());
         let src2 = "fn f() { let t = wall_now(); }";
         assert_eq!(rules_hit("sim/queue.rs", src2), vec!["D4"]);
+    }
+
+    #[test]
+    fn d4_bans_direct_clock_reads_outside_runtime() {
+        // The call is the read: `Instant::now()` / `SystemTime::now()`
+        // trip everywhere but runtime/ (home of the wall_now wrapper).
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_hit("coordinator/recovery.rs", src), vec!["D4"]);
+        let sys = "fn f() { let t = SystemTime::now(); }";
+        assert_eq!(rules_hit("coordinator/metrics.rs", sys), vec!["D4"]);
+        assert!(rules_hit("runtime/clock.rs", src).is_empty());
+        // `Instant` as a plain type (fields, signatures, elapsed math on
+        // a stored stamp) stays legal outside sim/model, and wall_now()
+        // is the sanctioned read.
+        let typed =
+            "pub struct T { at: Instant }\nfn f(t: &T) -> Instant { t.at }";
+        assert!(rules_hit("coordinator/metrics.rs", typed).is_empty());
+        let sanctioned = "fn f() { let t = wall_now(); }";
+        assert!(rules_hit("coordinator/prepared.rs", sanctioned).is_empty());
     }
 
     #[test]

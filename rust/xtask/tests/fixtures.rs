@@ -26,10 +26,11 @@ fn every_rule_trips_on_its_bad_fixture() {
         }
     }
 
-    let expected: [(&str, &[&str]); 9] = [
+    let expected: [(&str, &[&str]); 10] = [
         ("allocation/d1_float_sort.rs", &["D1"]),
         ("coding/d5_row_hasher.rs", &["D5"]),
         ("coordinator/d2_hash_iter.rs", &["D2"]),
+        ("coordinator/d4_deadline_instant.rs", &["D4"]),
         ("workload/d3_thread_spawn.rs", &["D3"]),
         ("sim/d4_wall_clock.rs", &["D4"]),
         ("model/d5_adhoc_rng.rs", &["D5"]),
